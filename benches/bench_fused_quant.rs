@@ -1,0 +1,33 @@
+//! Fused-quantization hot-path bench: reorder + primary + residual quant
+//! (the Rust mirror of the L1 kernel), across S — the online cost
+//! ARCQuant adds per request.
+
+use arcquant::formats::Format;
+use arcquant::quant::{ArcQuantizer, LayerPlan, Permutation};
+use arcquant::tensor::Mat;
+use arcquant::util::bench::Bencher;
+use arcquant::util::Prng;
+
+fn main() {
+    let b = Bencher::default();
+    let (n, k) = (64usize, 1024usize);
+    let mut rng = Prng::new(0);
+    let x = Mat::from_fn(n, k, |_, c| {
+        let v = rng.normal();
+        if c % 31 == 2 { v * 40.0 } else { v }
+    });
+    for s in [0usize, 64, 256, 512] {
+        let plan = LayerPlan {
+            perm: Permutation::sort_desc(&x.col_absmax()),
+            s,
+            fmt: Format::Nvfp4,
+        };
+        let q = ArcQuantizer::new(plan);
+        b.run(&format!("fused_quant_n{n}_k{k}_s{s}"), || {
+            q.quantize_activations(&x)
+        });
+    }
+    // block quantization alone (the primary stage) for the breakdown
+    let rq = arcquant::formats::RowQuantizer::new(Format::Nvfp4);
+    b.run("primary_qdq_only", || rq.qdq_mat(&x));
+}

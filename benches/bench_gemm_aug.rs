@@ -1,0 +1,39 @@
+//! Figure 8a bench: augmented-GEMM latency vs S on the host, plus the
+//! calibrated Blackwell cost-model series. Latency must be linear in K+S.
+
+use arcquant::costmodel::{gemm_us, GemmPath, Gpu};
+use arcquant::tensor::{matmul_nt, Mat};
+use arcquant::util::bench::Bencher;
+use arcquant::util::Prng;
+
+fn main() {
+    let b = Bencher::default();
+    let (n, k, m) = (64usize, 1024usize, 256usize);
+    let mut rng = Prng::new(0);
+    println!("# host GEMM (N={n}, K=1024+S, M={m}) + modeled RTX 5090 GEMM (8192x4096x4096)");
+    let mut prev = 0.0;
+    for s in [0usize, 128, 256, 512, 1024] {
+        let mut x = Mat::zeros(n, k + s);
+        let mut w = Mat::zeros(m, k + s);
+        x.fill_random_normal(&mut rng, 1.0);
+        w.fill_random_normal(&mut rng, 1.0);
+        let r = b.run(&format!("gemm_aug_host_s{s}"), || matmul_nt(&x, &w));
+        let modeled = gemm_us(Gpu::Rtx5090, GemmPath::Nvfp4Aug { s }, 8192, 4096, 4096);
+        println!("MODEL gemm_aug_5090_s{s} latency_us={modeled:.1}");
+        if s > 0 {
+            let delta = r.median_us - prev;
+            println!("#   host delta vs previous S: {delta:+.1}us (linear-in-S check)");
+        }
+        prev = r.median_us;
+    }
+    // comparison points (Fig 8a inset): W4A8 and MXFP8 modeled
+    for (name, path) in [
+        ("nvfp4", GemmPath::Nvfp4),
+        ("w4a8", GemmPath::W4A8),
+        ("mxfp8", GemmPath::Mxfp8),
+        ("fp16", GemmPath::Fp16),
+    ] {
+        let t = gemm_us(Gpu::Rtx5090, path, 8192, 4096, 4096);
+        println!("MODEL gemm_{name}_5090 latency_us={t:.1}");
+    }
+}

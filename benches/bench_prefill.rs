@@ -1,0 +1,53 @@
+//! Table 8 / Figure 6 bench: Rust-native engine prefill latency per
+//! method (measured, this host) + modeled paper-scale GPU estimates.
+
+use arcquant::baselines::Method;
+use arcquant::costmodel::{prefill_estimate, GemmPath, Gpu};
+use arcquant::formats::Format;
+use arcquant::model::{Engine, EngineMode, ModelConfig, Weights};
+use arcquant::util::bench::Bencher;
+use std::collections::BTreeMap;
+
+fn main() {
+    let cfg = ModelConfig::tiny_test();
+    let weights = Weights::synthetic(&cfg, 7);
+    let toks: Vec<u16> = (0..128u16).map(|i| (i * 37) % 256).collect();
+
+    // calibration once
+    let fp = Engine::new(cfg.clone(), weights.clone(), EngineMode::Fp32, None).unwrap();
+    let mut calib = BTreeMap::new();
+    fp.forward(&toks, Some(&mut calib), None);
+
+    let b = Bencher::quick();
+    let methods: Vec<(&str, EngineMode)> = vec![
+        ("fp32", EngineMode::Fp32),
+        ("nvfp4_rtn", EngineMode::Quantized(Method::Rtn { fmt: Format::Nvfp4 })),
+        (
+            "arcquant",
+            EngineMode::Quantized(Method::ArcQuant { fmt: Format::Nvfp4, max_s: Some(128) }),
+        ),
+        ("w4a8", EngineMode::Quantized(Method::W4A8Rtn)),
+        ("atom", EngineMode::Quantized(Method::Atom { outlier_channels: 128 })),
+    ];
+    for (name, mode) in methods {
+        let e = Engine::new(cfg.clone(), weights.clone(), mode, Some(&calib)).unwrap();
+        b.run(&format!("prefill_host_{name}_t128"), || {
+            e.forward(&toks, None, None)
+        });
+    }
+
+    println!("# modeled paper-scale prefill (Table 8 rows):");
+    for (gpu, model, bsz, len) in [
+        (Gpu::Rtx5090, "qwen7b-sim", 4usize, 2048usize),
+        (Gpu::RtxPro6000, "qwen7b-sim", 32, 2048),
+        (Gpu::RtxPro6000, "qwen32b-sim", 8, 2048),
+    ] {
+        let fp = prefill_estimate(gpu, model, GemmPath::Fp16, bsz, len, 0);
+        let arc = prefill_estimate(gpu, model, GemmPath::Nvfp4Aug { s: 256 }, bsz, len, 256);
+        println!(
+            "MODEL prefill {} {model} {bsz}/{len}: fp16={:.0}ms arc={:.0}ms speedup={:.2}x mem {:.1}->{:.1}GB",
+            gpu.spec().name, fp.latency_ms, arc.latency_ms, fp.latency_ms / arc.latency_ms,
+            fp.memory_gb, arc.memory_gb
+        );
+    }
+}

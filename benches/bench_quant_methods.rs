@@ -1,0 +1,36 @@
+//! Per-layer quantization-method bench (Tables 1/2 cost side): online
+//! forward latency of one linear under every method, identical input.
+
+use arcquant::baselines::{LayerCalib, Method, PreparedLinear};
+use arcquant::formats::Format;
+use arcquant::tensor::Mat;
+use arcquant::util::bench::Bencher;
+use arcquant::util::Prng;
+
+fn main() {
+    let b = Bencher::default();
+    let (n, k, m) = (64usize, 1024usize, 1024usize);
+    let mut rng = Prng::new(0);
+    let x = Mat::from_fn(n, k, |_, c| {
+        let v = rng.normal();
+        if c % 29 == 3 { v * 50.0 } else { v }
+    });
+    let mut w = Mat::zeros(m, k);
+    w.fill_random_normal(&mut rng, 0.3);
+    let calib = LayerCalib::from_activations(&x);
+
+    let methods: Vec<(&str, Method)> = vec![
+        ("fp16", Method::Fp16),
+        ("nvfp4_rtn", Method::Rtn { fmt: Format::Nvfp4 }),
+        ("w4a8_rtn", Method::W4A8Rtn),
+        ("smooth", Method::Smooth { fmt: Format::Nvfp4, alpha: 0.5 }),
+        ("quarot", Method::QuaRot { fmt: Format::Nvfp4, seed: 0 }),
+        ("flatquant", Method::FlatQuant { fmt: Format::Nvfp4 }),
+        ("atom", Method::Atom { outlier_channels: 128 }),
+        ("arcquant", Method::ArcQuant { fmt: Format::Nvfp4, max_s: Some(512) }),
+    ];
+    for (name, method) in methods {
+        let lin = PreparedLinear::prepare(&method, &w, &calib);
+        b.run(&format!("linear_fwd_{name}_{n}x{k}x{m}"), || lin.forward(&x));
+    }
+}

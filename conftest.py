@@ -1,0 +1,8 @@
+"""Repo-root pytest shim: make `pytest python/tests/` work from the root
+by putting python/ on sys.path (the package layout keeps the build-time
+Python strictly under python/)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

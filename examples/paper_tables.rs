@@ -1,0 +1,50 @@
+//! Regenerate every table and figure from the paper's evaluation section
+//! (equivalent to `arcquant report --all`). Results also land as JSON in
+//! artifacts/results/.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example paper_tables [--quick]
+
+use arcquant::report::{figures, tables, Ctx, EvalBudget};
+use arcquant::util::Timer;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let ctx = Ctx::new(
+        "artifacts",
+        if quick {
+            EvalBudget::quick()
+        } else {
+            EvalBudget::default()
+        },
+    );
+
+    println!("{}", figures::bounds_report());
+
+    let all: Vec<(&str, &dyn Fn(&Ctx) -> Result<String, String>)> = vec![
+        ("Table 1", &tables::table1),
+        ("Table 2", &tables::table2),
+        ("Table 3", &tables::table3),
+        ("Table 4", &tables::table4),
+        ("Table 5", &tables::table5),
+        ("Table 6", &tables::table6),
+        ("Table 7", &tables::table7),
+        ("Table 8", &tables::table8),
+        ("Figure 1", &figures::figure1),
+        ("Figure 2", &figures::figure2),
+        ("Figure 3", &figures::figure3),
+        ("Figure 6", &figures::figure6),
+        ("Figure 7", &figures::figure7),
+        ("Figure 8", &figures::figure8),
+        ("Figure 9", &figures::figure9),
+    ];
+    let total = Timer::start();
+    for (name, f) in all {
+        let t = Timer::start();
+        match f(&ctx) {
+            Ok(s) => println!("{s}  [{name} regenerated in {:.1}s]\n", t.ms() / 1e3),
+            Err(e) => eprintln!("!! {name} failed: {e}\n"),
+        }
+    }
+    println!("total: {:.1}s", total.ms() / 1e3);
+}

@@ -1,0 +1,94 @@
+//! Full PTQ pipeline on a trained model: calibrate → derive plans →
+//! quantize → evaluate PPL + zero-shot tasks, for every method in the
+//! paper's comparison set (Tables 1 & 2 workflow on one model).
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example quantize_eval [model] [--quick]
+
+use arcquant::baselines::Method;
+use arcquant::formats::Format;
+use arcquant::report::{Ctx, EvalBudget};
+use arcquant::util::Timer;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .cloned()
+        .unwrap_or_else(|| "qwen7b-sim".to_string());
+    let quick = args.iter().any(|a| a == "--quick");
+    let budget = if quick {
+        EvalBudget::quick()
+    } else {
+        EvalBudget::default()
+    };
+    let ctx = Ctx::new("artifacts", budget);
+
+    // Rust-side calibration (the paper's offline phase), then evaluate
+    // the full method sweep with the shipped Python calibration so the
+    // two pipelines cross-check.
+    let (cfg, w) = match ctx.model(&model) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("cannot load model ({e}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    let stream = ctx
+        .corpus(arcquant::report::ctx::model_domain(&model))
+        .unwrap();
+    let t = Timer::start();
+    let calib = arcquant::calib::run_calibration(&cfg, &w, &stream, 8, 128).unwrap();
+    println!(
+        "calibrated {} sites in {:.2}s (8 windows x 128 tokens)",
+        calib.sites.len(),
+        t.ms() / 1e3
+    );
+    for kind in ["attn_in", "mlp_in"] {
+        println!(
+            "  S per layer ({kind}): {:?}",
+            calib.s_series(kind, Format::Nvfp4, 512)
+        );
+    }
+    println!();
+
+    let methods: Vec<(&str, Option<Method>)> = vec![
+        ("FP16", None),
+        ("W4A8 + RTN", Some(Method::W4A8Rtn)),
+        ("NVFP4 + RTN", Some(Method::Rtn { fmt: Format::Nvfp4 })),
+        (
+            "NVFP4 + Smooth",
+            Some(Method::Smooth { fmt: Format::Nvfp4, alpha: 0.5 }),
+        ),
+        (
+            "NVFP4 + QuaRot",
+            Some(Method::QuaRot { fmt: Format::Nvfp4, seed: 0 }),
+        ),
+        ("FlatQuant", Some(Method::FlatQuant { fmt: Format::Nvfp4 })),
+        ("Atom", Some(Method::Atom { outlier_channels: 128 })),
+        (
+            "ARCQuant",
+            Some(Method::ArcQuant { fmt: Format::Nvfp4, max_s: Some(512) }),
+        ),
+    ];
+    println!(
+        "{:16} {:>8} {:>8} {:>8} {:>7} {:>8}",
+        "method", "avg acc", "PPL", "MMLU", "avg S", "prep(s)"
+    );
+    for (label, m) in methods {
+        let t = Timer::start();
+        match ctx.eval_row(&model, m) {
+            Ok(r) => println!(
+                "{label:16} {:8.2} {:8.3} {:8.2} {:7} {:8.2}  [{:.0}s]",
+                r.avg,
+                r.ppl,
+                r.mmlu,
+                r.avg_s,
+                r.prep_seconds,
+                t.ms() / 1e3
+            ),
+            Err(e) => println!("{label:16} failed: {e}"),
+        }
+    }
+}

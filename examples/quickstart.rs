@@ -1,0 +1,77 @@
+//! Quickstart: ARCQuant on a single linear layer, no artifacts needed.
+//!
+//! Builds an outlier-heavy activation matrix, quantizes it with NVFP4
+//! RTN and with ARCQuant's augmented residual channels, and prints the
+//! reconstruction errors plus the §3.4 worst-case bounds.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use arcquant::formats::Format;
+use arcquant::quant::{error, ArcQuantLinear, LayerPlan};
+use arcquant::tensor::{matmul_nt, Mat};
+use arcquant::util::{stats, Prng};
+
+fn main() {
+    let mut rng = Prng::new(arcquant::DEFAULT_SEED);
+
+    // Activations with a few dominant outlier channels — the LLM
+    // phenomenon ARCQuant targets (paper Figure 2).
+    let (n, k, m) = (64, 512, 128);
+    let x = Mat::from_fn(n, k, |_, c| {
+        let v = rng.normal();
+        if c % 37 == 5 {
+            v * 60.0
+        } else {
+            v
+        }
+    });
+    let mut w = Mat::zeros(m, k);
+    w.fill_random_normal(&mut rng, 0.3);
+    let y_ref = matmul_nt(&x, &w);
+
+    // --- NVFP4 RTN (no compensation) ---
+    let rtn = ArcQuantLinear::prepare(&w, LayerPlan::rtn(k, Format::Nvfp4));
+    let y_rtn = rtn.forward(&x);
+
+    // --- ARCQuant: calibrate → reorder → top-S residual channels ---
+    let plan = LayerPlan::from_calibration(&x.col_absmax(), Format::Nvfp4);
+    println!(
+        "calibration selected S = {} of {} channels (tau = 2^-3 M rule, 16-aligned)",
+        plan.s, k
+    );
+    let arc = ArcQuantLinear::prepare(&w, plan);
+    let y_arc = arc.forward(&x);
+
+    let e_rtn = stats::mse(&y_rtn.data, &y_ref.data);
+    let e_arc = stats::mse(&y_arc.data, &y_ref.data);
+    println!("reconstruction MSE   NVFP4+RTN: {e_rtn:.4}");
+    println!(
+        "reconstruction MSE   ARCQuant : {e_arc:.4}  ({:.1}x lower)",
+        e_rtn / e_arc
+    );
+    println!(
+        "GEMM shape: ({n}, {k}, {m}) -> augmented ({n}, {}, {m})",
+        k + arc.s()
+    );
+
+    // --- §3.4 bounds ---
+    println!();
+    println!("3.4 worst-case bounds (per unit dynamic range M):");
+    println!(
+        "  B_mx  (MXFP8, E8M0 scales)       = {:.4} M",
+        error::mxfp8_bound(1.0)
+    );
+    println!(
+        "  B_arc (dual-stage NVFP4, E4M3)   = {:.4} M  (< B_mx)",
+        error::arcquant_bound(1.0)
+    );
+    let sample: Vec<f32> = (0..2048).map(|_| rng.normal() * 4.0).collect();
+    println!(
+        "  empirical dual-stage rel err     = {:.5}",
+        error::empirical_dual_stage_rel_err(&sample)
+    );
+    println!(
+        "  empirical MXFP8 rel err          = {:.5}",
+        error::empirical_single_stage_rel_err(&sample, Format::Mxfp8E4M3)
+    );
+}

@@ -1,0 +1,343 @@
+"""AOT build driver: corpora -> trained weights -> calibration plans ->
+HLO-text artifacts. Runs ONCE at build time (`make artifacts`); the Rust
+binary is self-contained afterwards.
+
+Interchange is HLO *text* (not serialized HloModuleProto): jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts written to ../artifacts/:
+  corpus_{wiki,c4,code,math}.bin        u16-LE token streams
+  {model}.weights.bin / .config.json    ARCW weights + config
+  {model}.plans.json                    per-site calibration plans
+  {model}.fp32.hlo.txt                  full-precision prefill forward
+  {model}.arcquant.hlo.txt              W4A4 ARCQuant forward (Pallas)
+  kernel_fused_quant.hlo.txt            standalone L1 kernel
+  kernel_gemm_aug_s{S}.hlo.txt          augmented GEMM at several S
+  manifest.json                         shapes + index for the runtime
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data
+from .kernels.fused_quant import fused_quant
+from .kernels.gemm_aug import gemm_aug
+from .model import CONFIGS, calibrate, forward, rtn_plans_from
+from .train import flatten_params
+from .train import (
+    MODEL_DOMAIN,
+    train_model,
+    write_config,
+    write_weights,
+)
+
+# Prefill artifact shape (batch, seq). Kept modest: the ARCQuant artifact
+# embeds interpret-mode Pallas loops which the CPU PJRT executes slowly.
+AOT_BATCH = 4
+AOT_SEQ = 64
+
+# Models that get HLO forward artifacts (the serving demo pair).
+HLO_MODELS = ["llama8b-sim", "qwen7b-sim"]
+# Models trained + calibrated for the Rust-native engine.
+ALL_MODELS = ["llama8b-sim", "qwen7b-sim", "qwen32b-sim", "coder7b-sim", "math7b-sim"]
+
+CALIB_BATCHES = 8  # x (4 x 64) = 2048 calibration tokens per batch
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides arrays as
+    # `constant({...})`, which silently zeroes them after a text
+    # round-trip. Weights/perms travel as *parameters* (below), so only
+    # small trace constants (causal mask, boost vector) are printed here.
+    return comp.as_hlo_text(True)
+
+
+def save_hlo(path, fn, *example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)//1024} KiB)", flush=True)
+
+
+def load_params(path, cfg):
+    """Read an ARCW weight file back into the model param pytree."""
+    import struct
+
+    blob = open(path, "rb").read()
+    assert blob[:4] == b"ARCW"
+    (n,) = struct.unpack_from("<I", blob, 4)
+    off = 8
+    flat = {}
+    for _ in range(n):
+        (nl,) = struct.unpack_from("<I", blob, off)
+        off += 4
+        tname = blob[off : off + nl].decode()
+        off += nl
+        (nd,) = struct.unpack_from("<I", blob, off)
+        off += 4
+        dims = struct.unpack_from(f"<{nd}I", blob, off)
+        off += 4 * nd
+        cnt = int(np.prod(dims))
+        flat[tname] = jnp.asarray(
+            np.frombuffer(blob, dtype="<f4", count=cnt, offset=off).reshape(dims)
+        )
+        off += 4 * cnt
+    p = {"embed": flat["embed"], "final_norm": flat["final_norm"], "layers": []}
+    for i in range(cfg.l):
+        p["layers"].append(
+            {k: flat[f"layers.{i}.{k}"] for k in
+             ["attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w1", "w3", "w2"]}
+        )
+    return p
+
+
+def load_plans(path):
+    with open(path) as f:
+        blob = json.load(f)
+    plans = {}
+    for site, p in blob["sites"].items():
+        plans[site] = {
+            "perm": jnp.asarray(np.asarray(p["perm"], dtype=np.int32)),
+            "s": int(p["s"]),
+            "ts_main": float(p["ts_main"]),
+            "ts_res": float(p["ts_res"]),
+            "col_absmax": np.asarray(p["col_absmax"], dtype=np.float32),
+        }
+    return plans
+
+
+def plans_to_json(plans):
+    out = {}
+    for site, p in plans.items():
+        out[site] = {
+            "perm": np.asarray(p["perm"]).tolist(),
+            "s": int(p["s"]),
+            "ts_main": float(p["ts_main"]),
+            "ts_res": float(p["ts_res"]),
+            "col_absmax": np.asarray(p["col_absmax"]).astype(float).tolist(),
+        }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="tiny training run (CI)")
+    ap.add_argument("--retrain", action="store_true", help="ignore cached weights/plans")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    t_start = time.time()
+
+    # ---- 1. corpora -------------------------------------------------------
+    print("== corpora ==", flush=True)
+    for domain in ["wiki", "c4", "code", "math"]:
+        path = os.path.join(out, f"corpus_{domain}.bin")
+        if not os.path.exists(path):
+            data.write_stream(path, data.generate(domain, 400_000))
+            print(f"  {path}", flush=True)
+
+    # ---- 2. training (incremental: reuse existing weight files) -----------
+    print("== training ==", flush=True)
+    params_by_model = {}
+    base_params = None
+    for name in ALL_MODELS:
+        wpath = os.path.join(out, f"{name}.weights.bin")
+        cfg = CONFIGS[name]
+        if os.path.exists(wpath) and not args.retrain:
+            params_by_model[name] = load_params(wpath, cfg)
+            if name == "llama8b-sim":
+                base_params = params_by_model[name]
+            print(f"  {name}: reusing {wpath}", flush=True)
+            continue
+        steps = 30 if args.quick else None
+        init_from = None
+        if name in ("coder7b-sim", "math7b-sim"):
+            init_from = base_params  # fine-tune from llama8b-sim
+        t0 = time.time()
+        params, _ = train_model(name, steps=steps, init_from=init_from)
+        params_by_model[name] = params
+        if name == "llama8b-sim":
+            base_params = params
+        write_weights(wpath, params, cfg)
+        write_config(
+            os.path.join(out, f"{name}.config.json"),
+            cfg,
+            extra={"train_seconds": round(time.time() - t0, 1)},
+        )
+        print(f"  {name}: {time.time()-t0:.0f}s", flush=True)
+
+    # ---- 3. calibration plans --------------------------------------------
+    print("== calibration ==", flush=True)
+    plans_by_model = {}
+    for name in ALL_MODELS:
+        cfg = CONFIGS[name]
+        ppath = os.path.join(out, f"{name}.plans.json")
+        if os.path.exists(ppath) and not args.retrain:
+            plans_by_model[name] = load_plans(ppath)
+            print(f"  {name}: reusing {ppath}", flush=True)
+            continue
+        domain = MODEL_DOMAIN[name]
+        toks = data.read_stream(os.path.join(out, f"corpus_{domain}.bin"))
+        calib = [
+            jnp.asarray(x)
+            for x, _ in data.batches(toks, AOT_BATCH, AOT_SEQ, CALIB_BATCHES, seed=7)
+        ]
+        t0 = time.time()
+        plans = calibrate(params_by_model[name], cfg, calib)
+        plans_by_model[name] = plans
+        blob = {
+            "model": name,
+            "calib_domain": domain,
+            "calib_seconds": round(time.time() - t0, 2),
+            "sites": plans_to_json(plans),
+        }
+        with open(os.path.join(out, f"{name}.plans.json"), "w") as f:
+            json.dump(blob, f)
+        svals = [p["s"] for p in plans.values()]
+        print(
+            f"  {name}: {time.time()-t0:.0f}s  S range [{min(svals)}, {max(svals)}]",
+            flush=True,
+        )
+
+    # ---- 4. HLO artifacts --------------------------------------------------
+    # Weights and reorder permutations are *parameters* of the lowered
+    # computation (fed by the Rust runtime from the ARCW / plans.json
+    # files), not baked constants: the artifact stays small, and the
+    # serving engine can hot-swap weight versions without relowering.
+    # Parameter order = [tokens] + weights (sorted by tensor name, the
+    # ARCW file order) + per-site perms (sorted by site name) + ts[n,2].
+    print("== HLO lowering ==", flush=True)
+    tokens_spec = jax.ShapeDtypeStruct((AOT_BATCH, AOT_SEQ), jnp.int32)
+
+    def rebuild_params(named, cfg):
+        p = {"embed": named["embed"], "final_norm": named["final_norm"], "layers": []}
+        for i in range(cfg.l):
+            p["layers"].append(
+                {k: named[f"layers.{i}.{k}"] for k in
+                 ["attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w1", "w3", "w2"]}
+            )
+        return p
+
+    for name in HLO_MODELS:
+        cfg = CONFIGS[name]
+        params = params_by_model[name]
+        plans = plans_by_model[name]
+        flat = flatten_params(params, cfg)
+        wnames = sorted(flat)
+        w_specs = [jax.ShapeDtypeStruct(flat[n].shape, flat[n].dtype) for n in wnames]
+
+        def fp32_fn(tokens, ws, wnames=wnames, cfg=cfg):
+            p = rebuild_params(dict(zip(wnames, ws)), cfg)
+            return (forward(p, tokens, cfg=cfg),)
+
+        save_hlo(
+            os.path.join(out, f"{name}.fp32.hlo.txt"), fp32_fn, tokens_spec, w_specs
+        )
+
+        for variant, vplans in [("arcquant", plans), ("nvfp4rtn", rtn_plans_from(plans))]:
+            sites = sorted(vplans)
+            s_static = {s: int(vplans[s]["s"]) for s in sites}
+            perm_specs = [
+                jax.ShapeDtypeStruct(np.asarray(vplans[s]["perm"]).shape, jnp.int32)
+                for s in sites
+            ]
+            ts_spec = jax.ShapeDtypeStruct((len(sites), 2), jnp.float32)
+
+            def q_fn(tokens, ws, perms, ts, wnames=wnames, cfg=cfg,
+                     sites=sites, s_static=s_static):
+                p = rebuild_params(dict(zip(wnames, ws)), cfg)
+                plans_rt = {
+                    site: {
+                        "perm": perms[i],
+                        "s": s_static[site],
+                        "ts_main": ts[i, 0],
+                        "ts_res": ts[i, 1],
+                    }
+                    for i, site in enumerate(sites)
+                }
+                return (forward(p, tokens, cfg=cfg, plans=plans_rt),)
+
+            save_hlo(
+                os.path.join(out, f"{name}.{variant}.hlo.txt"),
+                q_fn,
+                tokens_spec,
+                w_specs,
+                perm_specs,
+                ts_spec,
+            )
+
+    # Standalone kernels for the runtime kernel benches (Figure 8a).
+    k = 256
+    n = 64
+    x_spec = jax.ShapeDtypeStruct((n, k), jnp.float32)
+    gamma = jnp.ones((k,), jnp.float32)
+    perm = jnp.arange(k, dtype=jnp.int32)
+    save_hlo(
+        os.path.join(out, "kernel_fused_quant.hlo.txt"),
+        lambda x: (
+            fused_quant(
+                x, gamma, perm, jnp.float32(0.01), jnp.float32(0.001), s=64
+            ),
+        ),
+        x_spec,
+    )
+    for s in [0, 128, 512]:
+        ks = k * 4 + s
+        xa = jax.ShapeDtypeStruct((n, ks), jnp.float32)
+        wa = jax.ShapeDtypeStruct((128, ks), jnp.float32)
+        save_hlo(
+            os.path.join(out, f"kernel_gemm_aug_s{s}.hlo.txt"),
+            lambda a, b: (gemm_aug(a, b),),
+            xa,
+            wa,
+        )
+
+    # ---- 5. manifest --------------------------------------------------------
+    manifest = {
+        "batch": AOT_BATCH,
+        "seq": AOT_SEQ,
+        "vocab": 256,
+        "models": {
+            name: {
+                "config": f"{name}.config.json",
+                "weights": f"{name}.weights.bin",
+                "plans": f"{name}.plans.json",
+                "hlo": {
+                    "fp32": f"{name}.fp32.hlo.txt",
+                    "arcquant": f"{name}.arcquant.hlo.txt",
+                    "nvfp4rtn": f"{name}.nvfp4rtn.hlo.txt",
+                }
+                if name in HLO_MODELS
+                else {},
+            }
+            for name in ALL_MODELS
+        },
+        "kernels": {
+            "fused_quant": "kernel_fused_quant.hlo.txt",
+            "gemm_aug": {str(s): f"kernel_gemm_aug_s{s}.hlo.txt" for s in [0, 128, 512]},
+        },
+        "corpora": {d: f"corpus_{d}.bin" for d in ["wiki", "c4", "code", "math"]},
+        "build_seconds": round(time.time() - t_start, 1),
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"== done in {time.time()-t_start:.0f}s ==", flush=True)
+
+
+if __name__ == "__main__":
+    main()

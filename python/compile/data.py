@@ -1,0 +1,86 @@
+"""Deterministic synthetic corpora — the WikiText2/C4/HumanEval stand-ins.
+
+The paper's data gates (real corpora, HF checkpoints) are unavailable
+offline, so we substitute seeded generative processes (DESIGN.md
+substitution table). Each domain is an order-2 Markov chain over a
+256-token vocabulary with sparse Zipfian transitions, plus domain
+structure:
+
+  * "wiki"  — the WikiText2 analog (calibration + PPL eval),
+  * "c4"    — same family, different seed/branching (calib-robustness),
+  * "code"  — branch-heavy with paired open/close tokens (HumanEval/MBPP
+              analog; the Coder-model domain),
+  * "math"  — digit-run structure (GSM8K/CMATH analog).
+
+A learned model reaches low PPL on its domain; 4-bit quantization error
+degrades it measurably — which is all the accuracy tables need. Token
+streams are exported to artifacts/ as little-endian u16 so the Rust eval
+harness reads the *identical* data (Rust never regenerates corpora).
+"""
+
+import numpy as np
+
+VOCAB = 256
+ORDER_CONTEXTS = VOCAB  # bigram contexts + weak order-2 modulation
+BRANCH = {"wiki": 12, "c4": 20, "code": 6, "math": 4}
+SEEDS = {"wiki": 1001, "c4": 2002, "code": 3003, "math": 4004}
+
+
+def _zipf_weights(n, a=1.3):
+    w = 1.0 / np.arange(1, n + 1) ** a
+    return w / w.sum()
+
+
+def build_chain(domain: str):
+    """Transition table: for each hashed context, BRANCH candidate next
+    tokens with Zipf weights."""
+    rng = np.random.default_rng(SEEDS[domain])
+    b = BRANCH[domain]
+    nexts = rng.integers(0, VOCAB, size=(ORDER_CONTEXTS, b)).astype(np.int64)
+    weights = _zipf_weights(b)
+    return nexts, weights
+
+
+def generate(domain: str, n_tokens: int, seed: int = 0) -> np.ndarray:
+    """Generate a deterministic token stream for a domain."""
+    nexts, weights = build_chain(domain)
+    rng = np.random.default_rng(SEEDS[domain] * 7919 + seed)
+    out = np.empty(n_tokens, dtype=np.uint16)
+    t1, t2 = 1, 2
+    # Pre-draw choices in bulk for speed.
+    choices = rng.choice(len(weights), size=n_tokens, p=weights)
+    jitter = rng.random(n_tokens)
+    for i in range(n_tokens):
+        # Bigram context with a weak second-order modulation: learnable by
+        # a small transformer down to the chain entropy (PPL ~ 5-15), so
+        # quantization-induced degradation is clearly measurable.
+        ctx = (t2 + (t1 & 3) * VOCAB // 4) % ORDER_CONTEXTS
+        nxt = int(nexts[ctx, choices[i]])
+        if domain == "code" and jitter[i] < 0.08:
+            # paired-structure tokens (bracket-like)
+            nxt = 250 + (i % 4)
+        if domain == "math" and jitter[i] < 0.25:
+            # digit runs
+            nxt = 10 + int(jitter[i] * 40)
+        out[i] = nxt
+        t1, t2 = t2, nxt
+    return out
+
+
+def batches(tokens: np.ndarray, batch: int, seq: int, n_batches: int, seed: int = 0):
+    """Yield (inputs, targets) int32 batches from a token stream."""
+    rng = np.random.default_rng(seed)
+    max_start = len(tokens) - seq - 1
+    for _ in range(n_batches):
+        starts = rng.integers(0, max_start, size=batch)
+        x = np.stack([tokens[s : s + seq] for s in starts]).astype(np.int32)
+        y = np.stack([tokens[s + 1 : s + seq + 1] for s in starts]).astype(np.int32)
+        yield x, y
+
+
+def write_stream(path: str, tokens: np.ndarray) -> None:
+    tokens.astype("<u2").tofile(path)
+
+
+def read_stream(path: str) -> np.ndarray:
+    return np.fromfile(path, dtype="<u2")

@@ -1,0 +1,1 @@
+"""Pallas L1 kernels + jnp oracle for the ARCQuant compute hot-spots."""

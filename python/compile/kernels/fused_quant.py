@@ -1,0 +1,122 @@
+"""L1 Pallas kernel: the Fused Quantization Kernel (paper §3.3).
+
+One pallas_call fuses Channel Reordering + RMSNorm + Primary NVFP4
+Quantization + Residual Quantization and emits the augmented activation
+[Q_X | Q_{R_o}] of shape [N, K+S] in a single pass over the input.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the CUDA original
+uses coalesced global-memory gathers + register-resident block math; on
+TPU the same schedule maps to one VMEM-resident row tile per grid step
+(BlockSpec pins the lane dim to K, a multiple of the 128-lane register
+width for all model sizes used here), per-block amax via lane reductions,
+and a contiguous K+S write-back — the DMA-friendly analog of the paper's
+Interleaved Channel Layout.
+
+NVFP4's per-*tensor* scale is a global reduction, which would force a
+two-pass kernel. Like the paper's kernel (which computes it from the
+calibration pass), we treat the tensor scales as *static calibrated
+constants* baked at AOT time; tests cover both the calibrated-constant
+and self-derived paths.
+
+interpret=True throughout: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU perf is *estimated* in DESIGN.md §Perf from the
+VMEM footprint (K·4B + (K+S)·4B per row-block ≈ 41 KiB at K=4096, S=512
+⇒ 8 rows/core fit comfortably) and MXU idle (this kernel is VPU-bound;
+the GEMM kernel owns the MXU).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import numerics as nx
+from .ref import RMS_EPS
+
+# Rows processed per grid step (one VMEM tile of the activation).
+ROW_BLOCK = 8
+
+
+def _fused_quant_kernel(x_ref, gamma_ref, perm_ref, ts_ref, o_ref, *, k, s, use_norm):
+    """Kernel body: one ROW_BLOCK x K tile -> ROW_BLOCK x (K+S) tile."""
+    x = x_ref[...].astype(jnp.float32)  # [R, K]
+    gamma = gamma_ref[...]  # [K]
+    perm = perm_ref[...]  # [K] int32
+    ts_main = ts_ref[0]
+    ts_res = ts_ref[1]
+
+    if use_norm:
+        # RMSNorm (lane reduction per row).
+        ms = jnp.mean(x * x, axis=-1, keepdims=True)
+        h = x * (1.0 / jnp.sqrt(ms + RMS_EPS)) * gamma
+    else:
+        # Norm-free quant sites (o_proj / down_proj inputs): gamma unused.
+        h = x
+
+    # Channel reorder (gather along lanes).
+    hr = jnp.take(h, perm, axis=1)
+
+    # Primary NVFP4 block quantization with the calibrated tensor scale.
+    primary = nx.nvfp4_qdq_rows(hr, ts_main)
+
+    # Residual quantization of the outlier prefix.
+    if s > 0:
+        resid = (hr - primary)[:, :s]
+        resid_q = nx.nvfp4_qdq_rows(resid, ts_res)
+        out = jnp.concatenate([primary, resid_q], axis=1)
+    else:
+        out = primary
+    o_ref[...] = out
+
+
+def fused_quant(x, gamma, perm, ts_main, ts_res, *, s, use_norm=True):
+    """Run the fused quantization kernel.
+
+    x: [N, K] (N a multiple of ROW_BLOCK or padded by caller),
+    gamma: [K], perm: [K] int32, ts_main/ts_res: scalar calibrated
+    tensor scales (pass 0-d arrays), s: static outlier count,
+    use_norm: statically include the RMSNorm stage (False at the
+    o_proj / down_proj quant sites, which have no preceding norm).
+    Returns [N, K+S].
+    """
+    n, k = x.shape
+    assert s % nx.NVFP4_BLOCK == 0 and 0 <= s <= k
+    assert k % nx.NVFP4_BLOCK == 0
+    rb = min(ROW_BLOCK, n)
+    assert n % rb == 0, f"N={n} not a multiple of row block {rb}"
+    ts = jnp.stack(
+        [jnp.asarray(ts_main, jnp.float32), jnp.asarray(ts_res, jnp.float32)]
+    )
+    kernel = functools.partial(_fused_quant_kernel, k=k, s=s, use_norm=use_norm)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, k), lambda i: (i, 0)),  # x row tile
+            pl.BlockSpec((k,), lambda i: (0,)),  # gamma (replicated)
+            pl.BlockSpec((k,), lambda i: (0,)),  # perm (replicated)
+            pl.BlockSpec((2,), lambda i: (0,)),  # tensor scales
+        ],
+        out_specs=pl.BlockSpec((rb, k + s), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k + s), jnp.float32),
+        interpret=True,
+    )(x, gamma, perm.astype(jnp.int32), ts)
+
+
+def fused_quant_auto_ts(x, gamma, perm, *, s):
+    """Convenience wrapper deriving tensor scales from this batch (used by
+    tests to compare against the oracle, which self-derives too)."""
+    h = jnp.take(
+        x * (1.0 / jnp.sqrt(jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True) + RMS_EPS)) * gamma,
+        perm,
+        axis=1,
+    )
+    ts_main = nx.nvfp4_tensor_scale(jnp.max(jnp.abs(h)))
+    primary = nx.nvfp4_qdq_rows(h, ts_main)
+    if s > 0:
+        resid = (h - primary)[:, :s]
+        ts_res = nx.nvfp4_tensor_scale(jnp.max(jnp.abs(resid)))
+    else:
+        ts_res = jnp.float32(1.0)
+    return fused_quant(x, gamma, perm, ts_main, ts_res, s=s)

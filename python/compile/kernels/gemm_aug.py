@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: the unified augmented GEMM (paper §3.2 Eq. 2).
+
+Computes Y = X_aug · W_augᵀ over the *extended* reduction dimension
+K+S. Because the compensation lives entirely in the input data space,
+this is a completely standard blocked matmul — exactly the paper's point:
+no inner-loop modification, any high-performance GEMM works.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): grid over (M-tiles,
+N-tiles, K-tiles); each step DMAs an [bn, bk] activation tile and a
+[bm, bk] weight tile into VMEM and issues an MXU contraction, f32
+accumulation in the output tile (revisited across the K grid dim —
+the standard Pallas accumulation pattern). Block sizes default to
+(128, 128, 512): 128 matches the MXU systolic edge, bk=512 amortizes
+the accumulator revisit while keeping the VMEM footprint at
+(128·512 + 128·512 + 128·128)·4B ≈ 576 KiB « 16 MiB.
+
+interpret=True (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref):
+    """One (bn x bk) · (bm x bk)ᵀ tile-contraction, accumulated over the
+    K grid dimension (grid dim 2)."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    o_ref[...] += jax.lax.dot_general(
+        x,
+        w,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _pick(total, want):
+    """Largest divisor of `total` that is <= want (tile-size helper)."""
+    t = min(want, total)
+    while total % t != 0:
+        t -= 1
+    return t
+
+
+def gemm_aug(x_aug, w_aug, *, bn=128, bm=128, bk=512):
+    """Y = X_aug · W_augᵀ; x_aug [N, K+S], w_aug [M, K+S] -> [N, M]."""
+    n, kk = x_aug.shape
+    m, kk2 = w_aug.shape
+    assert kk == kk2, f"reduction mismatch {kk} vs {kk2}"
+    bn = _pick(n, bn)
+    bm = _pick(m, bm)
+    bk = _pick(kk, bk)
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel),
+        grid=(n // bn, m // bm, kk // bk),
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, t: (i, t)),
+            pl.BlockSpec((bm, bk), lambda i, j, t: (j, t)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(x_aug, w_aug)

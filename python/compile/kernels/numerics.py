@@ -1,0 +1,205 @@
+"""Shared low-precision numerics for the Pallas kernels and the jnp oracle.
+
+Bit-exact with the Rust codecs in ``rust/src/numerics``:
+  * E2M1 snap with round-to-nearest-even onto the 8-point grid,
+  * E4M3 ceil-rounding for NVFP4 block scales (alpha in [1, 1.125]),
+  * E8M0 ceil for MX block scales (alpha in [1, 2)),
+  * the NVFP4 hierarchical Element -> E4M3 block scale -> FP32 tensor
+    scale structure (paper Appendix A).
+
+The functions used *inside* Pallas kernel bodies (e2m1_snap_rne,
+e4m3_round_up, nvfp4_*) are written in pure arithmetic — Pallas forbids
+captured array constants, so no table lookups there. The table-based
+variants (snap_to_grid_rne over the E4M3 grid, used by the MXFP8
+reference) exist only on the oracle path; tests pin the arithmetic and
+table versions against each other.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Constants
+# ---------------------------------------------------------------------------
+
+# Positive representable magnitudes of E2M1 (code order).
+E2M1_GRID = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], dtype=np.float32)
+E2M1_MID = (E2M1_GRID[:-1] + E2M1_GRID[1:]) / 2.0
+
+E2M1_MAX = 6.0
+NVFP4_BLOCK = 16
+MX_BLOCK = 32
+E4M3_MAX = 448.0
+
+
+def _build_minifloat_grid(exp_bits: int, man_bits: int, bias: int, n_drop: int) -> np.ndarray:
+    """Positive value grid of a minifloat (matches rust FpKind tables)."""
+    n = (1 << (exp_bits + man_bits)) - n_drop
+    vals = []
+    for code in range(n):
+        e = code >> man_bits
+        m = code & ((1 << man_bits) - 1)
+        if e == 0:
+            v = (m / (1 << man_bits)) * 2.0 ** (1 - bias)
+        else:
+            v = (1.0 + m / (1 << man_bits)) * 2.0 ** (e - bias)
+        vals.append(v)
+    return np.array(vals, dtype=np.float32)
+
+
+# E4M3: 1-4-3, bias 7, NaN code dropped -> 127 values, top 448.
+E4M3_GRID = _build_minifloat_grid(4, 3, 7, 1)
+assert E4M3_GRID[-1] == 448.0
+E4M3_MID = (E4M3_GRID[:-1] + E4M3_GRID[1:]) / 2.0
+
+
+# ---------------------------------------------------------------------------
+# Arithmetic codecs (Pallas-safe: no array constants)
+# ---------------------------------------------------------------------------
+
+
+def e2m1_snap_rne(x):
+    """Snap x onto the signed E2M1 grid with round-to-nearest-even,
+    saturating at +-6. Pure arithmetic; bit-exact with the table codec.
+
+    Grid structure: subnormals {0, 0.5} (step 0.5 below 1.0) and binades
+    (1,1.5)*2^e for e in {0,1,2} (step 2^(e-1)). jnp.round is RNE.
+    """
+    a = jnp.abs(x)
+    a = jnp.minimum(a, E2M1_MAX)
+    # Exponent of the binade, clipped: values below 1.0 use the
+    # subnormal step 0.5 (same as e=0's step), so clip to [0, 2].
+    e = jnp.floor(jnp.log2(jnp.maximum(a, 1e-30)))
+    e = jnp.clip(e, 0.0, 2.0)
+    step = jnp.exp2(e - 1.0)
+    q = jnp.round(a / step) * step
+    # Rounding can overshoot 6 only via the clamp above; keep safe anyway.
+    q = jnp.minimum(q, E2M1_MAX)
+    return jnp.where(jnp.signbit(x), -q, q).astype(jnp.float32)
+
+
+def e4m3_round_up(x):
+    """Smallest E4M3 value >= x (x >= 0), saturating at 448.
+    Pure arithmetic ceil onto the E4M3 grid (subnormal step 2^-9,
+    normals (1+m/8)*2^e for e in [-6, 8])."""
+    x = jnp.asarray(x, jnp.float32)
+    tiny = 2.0 ** (-9)
+    min_normal = 2.0 ** (-6)
+    # subnormal region: ceil to multiples of 2^-9
+    sub = jnp.ceil(x / tiny) * tiny
+    # normal region
+    e = jnp.floor(jnp.log2(jnp.maximum(x, min_normal)))
+    e = jnp.clip(e, -6.0, 8.0)
+    pw = jnp.exp2(e)
+    frac = jnp.clip(x / pw, 1.0, 2.0)
+    m = jnp.ceil((frac - 1.0) * 8.0) / 8.0
+    normal = (1.0 + m) * pw  # m == 1 rolls into the next binade exactly
+    v = jnp.where(x < min_normal, sub, normal)
+    v = jnp.minimum(v, E4M3_MAX)
+    return jnp.where(x <= 0.0, 0.0, v).astype(jnp.float32)
+
+
+def e8m0_ceil(x):
+    """Smallest power of two >= x (x > 0), clamped to 2**+-127."""
+    safe = jnp.maximum(x, 2.0 ** (-126))
+    e = jnp.ceil(jnp.log2(safe))
+    e = jnp.clip(e, -127.0, 127.0)
+    v = jnp.exp2(e).astype(jnp.float32)
+    # guard against log2 rounding down
+    v = jnp.where(v < x, v * 2.0, v)
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Table codec (oracle-only paths)
+# ---------------------------------------------------------------------------
+
+
+def snap_to_grid_rne(x, grid, mid):
+    """Snap |x| onto an ascending grid with round-to-nearest-even,
+    saturating at grid[-1]; sign preserved. Ties resolve to the even
+    (lower-LSB) code, matching the Rust codec."""
+    a = jnp.abs(x)
+    gridj = jnp.asarray(grid)
+    midj = jnp.asarray(mid)
+    cnt_lt = jnp.sum(a[..., None] > midj, axis=-1)
+    cnt_le = jnp.sum(a[..., None] >= midj, axis=-1)
+    tie = cnt_le > cnt_lt
+    i = cnt_lt
+    idx_tie = jnp.where(i % 2 == 0, i, i + 1)
+    idx = jnp.where(tie, idx_tie, i)
+    idx = jnp.clip(idx, 0, len(grid) - 1)
+    mag = gridj[idx]
+    return jnp.where(jnp.signbit(x), -mag, mag)
+
+
+# ---------------------------------------------------------------------------
+# NVFP4 block quantization (QDQ semantics) — Pallas-safe
+# ---------------------------------------------------------------------------
+
+
+def nvfp4_tensor_scale(absmax):
+    """Per-tensor FP32 scale: largest block scale lands at E4M3's top."""
+    return jnp.where(absmax == 0.0, 1.0, absmax / (448.0 * 6.0))
+
+
+def nvfp4_block_scale(block_amax, tensor_scale):
+    """Effective per-block scale: ceil-E4M3(amax/6/ts) * ts."""
+    req = block_amax / (6.0 * tensor_scale)
+    enc = e4m3_round_up(req)
+    # underflow to 0 while amax > 0: use the smallest E4M3 subnormal
+    enc = jnp.where((enc == 0.0) & (block_amax > 0.0), 2.0 ** (-9), enc)
+    return jnp.where(block_amax == 0.0, 0.0, enc * tensor_scale)
+
+
+def nvfp4_qdq_rows(x, tensor_scale):
+    """Fused quantize-dequantize of a [..., K] array in NVFP4 blocks of
+    16. K must be a multiple of 16; `tensor_scale` is a scalar."""
+    orig_shape = x.shape
+    k = orig_shape[-1]
+    assert k % NVFP4_BLOCK == 0, f"K={k} not a multiple of {NVFP4_BLOCK}"
+    xb = x.reshape(orig_shape[:-1] + (k // NVFP4_BLOCK, NVFP4_BLOCK))
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    s = nvfp4_block_scale(amax, tensor_scale)
+    scaled = jnp.where(s > 0.0, xb / jnp.where(s > 0.0, s, 1.0), 0.0)
+    q = e2m1_snap_rne(scaled)
+    return (q * s).reshape(orig_shape)
+
+
+def nvfp4_qdq(x):
+    """QDQ with the tensor scale derived from x itself."""
+    ts = nvfp4_tensor_scale(jnp.max(jnp.abs(x)))
+    return nvfp4_qdq_rows(x, ts)
+
+
+# ---------------------------------------------------------------------------
+# MX formats (oracle / W4A8 baseline paths)
+# ---------------------------------------------------------------------------
+
+
+def mxfp8_qdq(x):
+    """MXFP8-E4M3 QDQ in blocks of 32 with ceil-E8M0 scales."""
+    orig_shape = x.shape
+    k = orig_shape[-1]
+    assert k % MX_BLOCK == 0, f"K={k} not a multiple of {MX_BLOCK}"
+    xb = x.reshape(orig_shape[:-1] + (k // MX_BLOCK, MX_BLOCK))
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    s = e8m0_ceil(amax / 448.0)
+    s = jnp.where(amax == 0.0, 0.0, s)
+    scaled = jnp.where(s > 0.0, xb / jnp.where(s > 0.0, s, 1.0), 0.0)
+    q = snap_to_grid_rne(scaled, E4M3_GRID, E4M3_MID)
+    return (q * s).reshape(orig_shape)
+
+
+def mxfp4_qdq(x):
+    """MXFP4 QDQ in blocks of 32 with ceil-E8M0 scales."""
+    orig_shape = x.shape
+    k = orig_shape[-1]
+    assert k % MX_BLOCK == 0
+    xb = x.reshape(orig_shape[:-1] + (k // MX_BLOCK, MX_BLOCK))
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    s = e8m0_ceil(amax / 6.0)
+    s = jnp.where(amax == 0.0, 0.0, s)
+    scaled = jnp.where(s > 0.0, xb / jnp.where(s > 0.0, s, 1.0), 0.0)
+    q = e2m1_snap_rne(scaled)
+    return (q * s).reshape(orig_shape)

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: standalone NVFP4 block quantize-dequantize.
+
+The building block under the fused kernel, exposed separately for
+kernel-level tests and the Figure 8(a) kernel-latency sweeps. One grid
+step QDQs a ROW_BLOCK x K tile: per-16-lane amax, ceil-E4M3 block scale
+against the calibrated tensor scale, E2M1 RNE snap, rescale.
+
+interpret=True — see fused_quant.py for the TPU mapping notes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import numerics as nx
+
+ROW_BLOCK = 8
+
+
+def _nvfp4_kernel(x_ref, ts_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = nx.nvfp4_qdq_rows(x, ts_ref[0])
+
+
+def nvfp4_qdq_kernel(x, tensor_scale):
+    """QDQ a [N, K] array (K multiple of 16) with a given tensor scale."""
+    n, k = x.shape
+    assert k % nx.NVFP4_BLOCK == 0
+    rb = min(ROW_BLOCK, n)
+    assert n % rb == 0
+    ts = jnp.reshape(tensor_scale.astype(jnp.float32), (1,))
+    return pl.pallas_call(
+        functools.partial(_nvfp4_kernel),
+        grid=(n // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, k), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rb, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=True,
+    )(x, ts)
+
+
+def nvfp4_qdq_auto(x):
+    """QDQ with the tensor scale derived from x (matches ref nvfp4_qdq)."""
+    ts = nx.nvfp4_tensor_scale(jnp.max(jnp.abs(x)))
+    return nvfp4_qdq_kernel(x, ts)

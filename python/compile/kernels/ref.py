@@ -1,0 +1,76 @@
+"""Pure-jnp oracle for the Pallas kernels — the CORE correctness signal.
+
+Implements the paper's online path (§3.2) with plain jnp ops:
+  reorder -> RMSNorm -> primary NVFP4 quant -> residual quant of the
+  top-S channels -> augmentation along K — plus the augmented GEMM
+  (Eq. 2). pytest asserts the Pallas kernels match these bit-for-bit
+  (they share the numerics helpers but differ in memory scheduling).
+"""
+
+import jax.numpy as jnp
+
+from . import numerics as nx
+
+RMS_EPS = 1e-5
+
+
+def rmsnorm_ref(x, gamma, eps=RMS_EPS):
+    """RMSNorm over the last dim: x / rms(x) * gamma."""
+    ms = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return (x * (1.0 / jnp.sqrt(ms + eps))) * gamma
+
+
+def fused_quant_ref(x, gamma, perm, s):
+    """Reference of the Fused Quantization Kernel (§3.3).
+
+    x: [N, K] activations; gamma: [K] RMSNorm gains; perm: [K] int32
+    reorder indices (position j reads original channel perm[j]);
+    s: static outlier-channel count (multiple of 16).
+
+    Returns the augmented QDQ activation [N, K+S] = [Q_X | Q_{R_o}].
+    """
+    n, k = x.shape
+    assert s % nx.NVFP4_BLOCK == 0 and 0 <= s <= k
+    h = rmsnorm_ref(x, gamma)
+    hr = jnp.take(h, perm, axis=1)  # reorder channels
+    ts = nx.nvfp4_tensor_scale(jnp.max(jnp.abs(hr)))
+    primary = nx.nvfp4_qdq_rows(hr, ts)
+    if s == 0:
+        return primary
+    resid = (hr - primary)[:, :s]
+    ts_r = nx.nvfp4_tensor_scale(jnp.max(jnp.abs(resid)))
+    resid_q = nx.nvfp4_qdq_rows(resid, ts_r)
+    return jnp.concatenate([primary, resid_q], axis=1)
+
+
+def weight_augment_ref(w, perm, s):
+    """Offline weight path: reorder columns, NVFP4-QDQ, duplicate the
+    quantized outlier columns. w: [M, K] -> [M, K+S]."""
+    wr = jnp.take(w, perm, axis=1)
+    wq = nx.nvfp4_qdq(wr)
+    if s == 0:
+        return wq
+    return jnp.concatenate([wq, wq[:, :s]], axis=1)
+
+
+def gemm_aug_ref(x_aug, w_aug):
+    """Unified GEMM on the extended reduction dim: Y = X_aug · W_augᵀ
+    (Eq. 2). Accumulation in f32, matching the Tensor-Core accumulator."""
+    return jnp.dot(
+        x_aug.astype(jnp.float32),
+        w_aug.astype(jnp.float32).T,
+        precision="highest",
+    )
+
+
+def arcquant_linear_ref(x, gamma, w, perm, s):
+    """End-to-end reference: fused quant + augmented GEMM."""
+    x_aug = fused_quant_ref(x, gamma, perm, s)
+    w_aug = weight_augment_ref(w, perm, s)
+    return gemm_aug_ref(x_aug, w_aug)
+
+
+def rtn_linear_ref(x, gamma, w):
+    """NVFP4 RTN baseline: no reorder, no residual."""
+    h = rmsnorm_ref(x, gamma)
+    return gemm_aug_ref(nx.nvfp4_qdq(h), nx.nvfp4_qdq(w))

@@ -1,0 +1,351 @@
+"""L2: tiny-LLaMA forward pass in JAX, with ARCQuant QDQ linears.
+
+Architecture (a faithful scale-down of the paper's eval models): token
+embedding -> L x [RMSNorm -> MHA(RoPE, causal) -> residual -> RMSNorm ->
+SwiGLU MLP -> residual] -> final RMSNorm -> tied LM head.
+
+Quantization sites per layer (exactly the paper's W4A4 linears; attention
+score/context matmuls stay high-precision as in the paper):
+  * ``layers.{i}.attn_in``  — q/k/v projections (post-attn-norm input)
+  * ``layers.{i}.attn_out`` — o_proj (no preceding norm)
+  * ``layers.{i}.mlp_in``   — gate/up projections (post-mlp-norm input)
+  * ``layers.{i}.mlp_out``  — down_proj (no preceding norm)
+
+The quantized forward calls the L1 Pallas kernels (fused_quant +
+gemm_aug, interpret=True) so the AOT artifact contains the actual kernel
+lowering. Plans (perm, S, calibrated tensor scales) are produced by
+``calibrate()`` below and baked into the artifact as constants —
+mirroring the paper's offline calibration.
+
+The ``outlier_boost`` config entry multiplies a fixed, sparse set of
+embedding channels by a constant gain *inside the model function* (both
+in training and in every inference mode). This reproduces the massive-
+activation channel phenomenon of large LLMs at tiny scale — the
+phenomenon ARCQuant exists to handle. Documented as a substitution in
+DESIGN.md.
+"""
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import numerics as nx
+from .kernels import ref
+from .kernels.fused_quant import fused_quant
+from .kernels.gemm_aug import gemm_aug
+
+RMS_EPS = ref.RMS_EPS
+MAX_S = 512  # the paper's typical operating range (Fig. 8a inset)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d: int  # model width (multiple of 128 keeps Pallas tiles aligned)
+    l: int  # layers
+    h: int  # heads
+    f: int  # SwiGLU hidden width (multiple of 16)
+    vocab: int = 256
+    # (channel, gain) pairs applied to the embedding output — the
+    # outlier-channel phenomenon knob.
+    outlier_boost: tuple = ((7, 12.0), (33, 20.0), (61, 8.0), (100, 16.0))
+
+    @property
+    def head_dim(self):
+        return self.d // self.h
+
+    def params_count(self):
+        per_layer = 4 * self.d * self.d + 3 * self.d * self.f + 2 * self.d
+        return self.vocab * self.d + self.l * per_layer + self.d
+
+
+# The paper's model zoo, scaled down (DESIGN.md substitution table).
+CONFIGS = {
+    "llama8b-sim": ModelConfig("llama8b-sim", d=256, l=6, h=8, f=768),
+    "qwen7b-sim": ModelConfig("qwen7b-sim", d=256, l=5, h=4, f=640),
+    "qwen32b-sim": ModelConfig("qwen32b-sim", d=384, l=6, h=8, f=1024),
+    # Domain models share the llama8b-sim architecture, fine-tuned on the
+    # code/math corpora.
+    "coder7b-sim": ModelConfig("coder7b-sim", d=256, l=6, h=8, f=768),
+    "math7b-sim": ModelConfig("math7b-sim", d=256, l=6, h=8, f=768),
+}
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Deterministic init (scaled-normal, GPT-style residual scaling)."""
+    rng = np.random.default_rng(seed)
+
+    def mat(out_d, in_d, scale):
+        return jnp.asarray(
+            rng.normal(0.0, scale, size=(out_d, in_d)).astype(np.float32)
+        )
+
+    d, f = cfg.d, cfg.f
+    resid_scale = 1.0 / math.sqrt(2 * cfg.l)
+    params = {
+        "embed": mat(cfg.vocab, d, 0.05),  # [V, D]
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "layers": [],
+    }
+    for _ in range(cfg.l):
+        params["layers"].append(
+            {
+                "attn_norm": jnp.ones((d,), jnp.float32),
+                "wq": mat(d, d, 1.0 / math.sqrt(d)),
+                "wk": mat(d, d, 1.0 / math.sqrt(d)),
+                "wv": mat(d, d, 1.0 / math.sqrt(d)),
+                "wo": mat(d, d, resid_scale / math.sqrt(d)),
+                "mlp_norm": jnp.ones((d,), jnp.float32),
+                "w1": mat(f, d, 1.0 / math.sqrt(d)),  # gate
+                "w3": mat(f, d, 1.0 / math.sqrt(d)),  # up
+                "w2": mat(d, f, resid_scale / math.sqrt(f)),  # down
+            }
+        )
+    return params
+
+
+def boost_vector(cfg: ModelConfig):
+    v = np.ones((cfg.d,), dtype=np.float32)
+    for ch, gain in cfg.outlier_boost:
+        v[ch % cfg.d] = gain
+    return jnp.asarray(v)
+
+
+def rope(x, *, base=10000.0):
+    """Rotary embedding over [B, T, H, Hd]."""
+    b, t, h, hd = x.shape
+    half = hd // 2
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    freq = jnp.exp(-math.log(base) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos * freq  # [T, half]
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def rmsnorm(x, gamma):
+    ms = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(ms + RMS_EPS)) * gamma
+
+
+# ---------------------------------------------------------------------------
+# Linear dispatch: fp32 / collect / quantized
+# ---------------------------------------------------------------------------
+
+
+def _quant_linear(x2d, gammas, weights, plan, use_norm):
+    """One ARCQuant quant site: fused quant once, then one augmented GEMM
+    per weight sharing the same augmented activation (q/k/v and gate/up
+    share their site's quantization, like the paper's kernel)."""
+    perm = plan["perm"]
+    s = int(plan["s"])
+    x_aug = fused_quant(
+        x2d,
+        gammas,
+        perm,
+        jnp.float32(plan["ts_main"]),
+        jnp.float32(plan["ts_res"]),
+        s=s,
+        use_norm=use_norm,
+    )
+    outs = []
+    for w in weights:
+        w_aug = ref.weight_augment_ref(w, perm, s)
+        outs.append(gemm_aug(x_aug, w_aug))
+    return outs
+
+
+def forward(params, tokens, cfg: ModelConfig, *, plans=None, collect=False):
+    """Forward pass.
+
+    plans=None      -> full-precision (FP16-analog) path.
+    plans={site:..} -> W4A4 ARCQuant path through the Pallas kernels
+                       (s=0 plans degrade to NVFP4 RTN).
+    collect=True    -> additionally return {site: activation [N, K]}
+                       (pre-quant inputs; post-norm at norm sites) for
+                       calibration.
+
+    tokens: [B, T] int32. Returns logits [B, T, V] (and the collect dict).
+    """
+    b, t = tokens.shape
+    d = cfg.d
+    n = b * t
+    acts = {}
+
+    h = jnp.take(params["embed"], tokens, axis=0)  # [B, T, D]
+    h = h * boost_vector(cfg)  # outlier-channel phenomenon (see module doc)
+
+    for i, lp in enumerate(params["layers"]):
+        # ---- attention ----
+        site = f"layers.{i}.attn_in"
+        hn = rmsnorm(h, lp["attn_norm"])
+        x2d = hn.reshape(n, d)
+        if collect:
+            acts[site] = x2d
+        if plans is None:
+            q = x2d @ lp["wq"].T
+            k = x2d @ lp["wk"].T
+            v = x2d @ lp["wv"].T
+        else:
+            q, k, v = _quant_linear(
+                h.reshape(n, d),
+                lp["attn_norm"],
+                [lp["wq"], lp["wk"], lp["wv"]],
+                plans[site],
+                use_norm=True,
+            )
+        q = rope(q.reshape(b, t, cfg.h, cfg.head_dim))
+        k = rope(k.reshape(b, t, cfg.h, cfg.head_dim))
+        v = v.reshape(b, t, cfg.h, cfg.head_dim)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(cfg.head_dim)
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(n, d)
+
+        site = f"layers.{i}.attn_out"
+        if collect:
+            acts[site] = ctx
+        if plans is None:
+            attn_out = ctx @ lp["wo"].T
+        else:
+            (attn_out,) = _quant_linear(
+                ctx,
+                jnp.ones((d,), jnp.float32),
+                [lp["wo"]],
+                plans[site],
+                use_norm=False,
+            )
+        h = h + attn_out.reshape(b, t, d)
+
+        # ---- MLP ----
+        site = f"layers.{i}.mlp_in"
+        hn = rmsnorm(h, lp["mlp_norm"])
+        x2d = hn.reshape(n, d)
+        if collect:
+            acts[site] = x2d
+        if plans is None:
+            g = x2d @ lp["w1"].T
+            u = x2d @ lp["w3"].T
+        else:
+            g, u = _quant_linear(
+                h.reshape(n, d),
+                lp["mlp_norm"],
+                [lp["w1"], lp["w3"]],
+                plans[site],
+                use_norm=True,
+            )
+        act = jax.nn.silu(g) * u  # [N, F]
+
+        site = f"layers.{i}.mlp_out"
+        if collect:
+            acts[site] = act
+        if plans is None:
+            mlp_out = act @ lp["w2"].T
+        else:
+            (mlp_out,) = _quant_linear(
+                act,
+                jnp.ones((cfg.f,), jnp.float32),
+                [lp["w2"]],
+                plans[site],
+                use_norm=False,
+            )
+        h = h + mlp_out.reshape(b, t, d)
+
+    h = rmsnorm(h, params["final_norm"])
+    logits = h.reshape(n, d) @ params["embed"].T  # tied head
+    logits = logits.reshape(b, t, cfg.vocab)
+    if collect:
+        return logits, acts
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Calibration (paper §3.2 offline phase; Python mirror of rust/src/calib)
+# ---------------------------------------------------------------------------
+
+
+def site_names(cfg: ModelConfig):
+    out = []
+    for i in range(cfg.l):
+        out += [
+            f"layers.{i}.attn_in",
+            f"layers.{i}.attn_out",
+            f"layers.{i}.mlp_in",
+            f"layers.{i}.mlp_out",
+        ]
+    return out
+
+
+def calibrate(params, cfg: ModelConfig, calib_batches, *, max_s=MAX_S):
+    """Run calibration batches and derive per-site plans: reorder perm
+    (absmax desc), S (tau = M/8 rule, 16-aligned, capped at max_s), and
+    calibrated tensor scales for the primary and residual stages."""
+    fwd = jax.jit(functools.partial(forward, cfg=cfg, collect=True))
+    absmax = {}
+    samples = {}
+    for tokens in calib_batches:
+        _, acts = fwd(params, tokens)
+        for site, a in acts.items():
+            am = np.abs(np.asarray(a)).max(axis=0)
+            absmax[site] = np.maximum(absmax.get(site, 0.0), am)
+            if site not in samples:  # one retained batch per site for ts_res
+                samples[site] = np.asarray(a)
+
+    plans = {}
+    for site, am in absmax.items():
+        k = len(am)
+        perm = np.argsort(-am, kind="stable").astype(np.int32)
+        m = float(am.max())
+        tau = m / 8.0
+        s_raw = int((am[perm] > tau).sum())
+        s = 0 if s_raw == 0 else min(((s_raw + 15) // 16) * 16, k, max_s)
+        # Calibrated tensor scales (slightly padded: online batches can
+        # exceed the calibration max — ceil scales keep this safe).
+        a = samples[site][:, perm]
+        ts_main = float(nx.nvfp4_tensor_scale(jnp.float32(np.abs(a).max())))
+        if s > 0:
+            prim = np.asarray(
+                nx.nvfp4_qdq_rows(jnp.asarray(a), jnp.float32(ts_main))
+            )
+            resid = (a - prim)[:, :s]
+            ts_res = float(
+                nx.nvfp4_tensor_scale(jnp.float32(np.abs(resid).max()))
+            )
+        else:
+            ts_res = 1.0
+        plans[site] = {
+            "perm": jnp.asarray(perm),
+            "s": s,
+            "ts_main": ts_main,
+            "ts_res": ts_res,
+            "col_absmax": am,  # kept for reports (Figure 7)
+        }
+    return plans
+
+
+def rtn_plans_from(plans):
+    """Derive S=0 identity plans reusing calibrated tensor scales — the
+    NVFP4 RTN baseline through the identical kernel path."""
+    out = {}
+    for site, p in plans.items():
+        k = len(p["perm"])
+        out[site] = {
+            "perm": jnp.arange(k, dtype=jnp.int32),
+            "s": 0,
+            "ts_main": p["ts_main"],
+            "ts_res": 1.0,
+        }
+    return out
+
+
+def loss_fn(params, tokens, targets, cfg: ModelConfig):
+    logits = forward(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)

@@ -1,0 +1,172 @@
+"""Tiny-corpus pretraining for the model zoo (build-time only).
+
+Trains each ModelConfig on its synthetic domain corpus with a hand-rolled
+AdamW (optax is unavailable offline) and exports raw-f32 weight files the
+Rust engine loads. Deterministic: seed 0 everywhere, matching the paper's
+reproducibility statement.
+
+Run via ``make artifacts`` (aot.py drives this); standalone:
+    python -m compile.train --model llama8b-sim --steps 300
+"""
+
+import functools
+import json
+import os
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .model import CONFIGS, ModelConfig, forward, init_params, loss_fn
+
+# domain each model trains on
+MODEL_DOMAIN = {
+    "llama8b-sim": "wiki",
+    "qwen7b-sim": "wiki",
+    "qwen32b-sim": "wiki",
+    "coder7b-sim": "code",
+    "math7b-sim": "math",
+}
+
+DEFAULT_STEPS = {
+    "llama8b-sim": 350,
+    "qwen7b-sim": 350,
+    "qwen32b-sim": 250,
+    "coder7b-sim": 150,  # fine-tune from llama8b-sim
+    "math7b-sim": 150,
+}
+
+BATCH, SEQ = 8, 64
+
+
+# ---------------------------------------------------------------------------
+# AdamW (hand-rolled, tree-mapped)
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adamw_step(params, grads, state, lr, *, b1=0.9, b2=0.95, eps=1e-8, wd=0.01):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mh_scale = 1.0 / (1 - b1**t)
+    vh_scale = 1.0 / (1 - b2**t)
+
+    def upd(p, m_, v_):
+        step = lr * (m_ * mh_scale) / (jnp.sqrt(v_ * vh_scale) + eps)
+        return p - step - lr * wd * p
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def cosine_lr(step, total, base=3e-3, warmup=20):
+    if step < warmup:
+        return base * (step + 1) / warmup
+    frac = (step - warmup) / max(1, total - warmup)
+    return base * 0.5 * (1 + np.cos(np.pi * frac))
+
+
+# ---------------------------------------------------------------------------
+# Training loop
+# ---------------------------------------------------------------------------
+
+
+def train_model(name: str, steps: int | None = None, init_from=None, log_every=50):
+    cfg = CONFIGS[name]
+    steps = steps or DEFAULT_STEPS[name]
+    domain = MODEL_DOMAIN[name]
+    tokens = data.generate(domain, 400_000)
+    params = init_from if init_from is not None else init_params(cfg, seed=0)
+
+    @jax.jit
+    def step_fn(params, opt, x, y, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y, cfg)
+        params, opt = adamw_step(params, grads, opt, lr)
+        return params, opt, loss
+
+    opt = adamw_init(params)
+    t0 = time.time()
+    losses = []
+    for i, (x, y) in enumerate(data.batches(tokens, BATCH, SEQ, steps, seed=42)):
+        lr = jnp.float32(cosine_lr(i, steps))
+        params, opt, loss = step_fn(params, opt, jnp.asarray(x), jnp.asarray(y), lr)
+        losses.append(float(loss))
+        if i % log_every == 0 or i == steps - 1:
+            print(
+                f"[train {name}] step {i:4d}/{steps} loss {float(loss):.4f} "
+                f"ppl {np.exp(float(loss)):.2f} ({time.time()-t0:.0f}s)",
+                flush=True,
+            )
+    return params, losses
+
+
+# ---------------------------------------------------------------------------
+# Weight export (the ARCW container the Rust loader reads)
+# ---------------------------------------------------------------------------
+
+
+def flatten_params(params, cfg: ModelConfig):
+    """Stable name -> array mapping."""
+    out = {"embed": params["embed"], "final_norm": params["final_norm"]}
+    for i, lp in enumerate(params["layers"]):
+        for k, v in lp.items():
+            out[f"layers.{i}.{k}"] = v
+    return out
+
+
+def write_weights(path: str, params, cfg: ModelConfig):
+    """ARCW v1: magic, tensor count, then per tensor
+    (name_len u32, name, ndim u32, dims u32..., f32 LE data)."""
+    flat = flatten_params(params, cfg)
+    with open(path, "wb") as f:
+        f.write(b"ARCW")
+        f.write(struct.pack("<I", len(flat)))
+        for name in sorted(flat):
+            arr = np.asarray(flat[name], dtype="<f4")
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def write_config(path: str, cfg: ModelConfig, extra=None):
+    blob = {
+        "name": cfg.name,
+        "d": cfg.d,
+        "l": cfg.l,
+        "h": cfg.h,
+        "f": cfg.f,
+        "vocab": cfg.vocab,
+        "outlier_boost": [list(p) for p in cfg.outlier_boost],
+        "rms_eps": 1e-5,
+    }
+    blob.update(extra or {})
+    with open(path, "w") as fp:
+        json.dump(blob, fp, indent=1)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="llama8b-sim")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    params, _ = train_model(args.model, args.steps)
+    cfg = CONFIGS[args.model]
+    write_weights(os.path.join(args.out, f"{args.model}.weights.bin"), params, cfg)
+    write_config(os.path.join(args.out, f"{args.model}.config.json"), cfg)
+    print("saved", args.model)

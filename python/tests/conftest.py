@@ -1,0 +1,13 @@
+"""Shared pytest config: a bounded hypothesis profile so the full suite
+stays CI-fast; set ARCQ_HYP_EXAMPLES to raise coverage locally."""
+
+import os
+
+from hypothesis import settings
+
+settings.register_profile(
+    "arcq",
+    max_examples=int(os.environ.get("ARCQ_HYP_EXAMPLES", "10")),
+    deadline=None,
+)
+settings.load_profile("arcq")

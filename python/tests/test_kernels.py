@@ -1,0 +1,181 @@
+"""Pallas kernels vs the pure-jnp oracle (ref.py) — the CORE correctness
+signal. Hypothesis sweeps shapes and S; assert_allclose everywhere (the
+kernels share numerics with the oracle so most checks are exact)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import numerics as nx
+from compile.kernels import ref
+from compile.kernels.fused_quant import fused_quant, fused_quant_auto_ts
+from compile.kernels.gemm_aug import gemm_aug
+from compile.kernels.nvfp4 import nvfp4_qdq_auto, nvfp4_qdq_kernel
+
+
+def _acts(rng, n, k, outlier_every=23):
+    x = rng.normal(size=(n, k)).astype(np.float32)
+    x[:, ::outlier_every] *= 40.0
+    return jnp.asarray(x)
+
+
+def _plan(x, gamma, s_blocks):
+    h = np.asarray(ref.rmsnorm_ref(x, gamma))
+    perm = np.argsort(-np.abs(h).max(axis=0), kind="stable").astype(np.int32)
+    return jnp.asarray(perm), 16 * s_blocks
+
+
+# ---------------------------------------------------------------------------
+# nvfp4 standalone kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    rows=st.sampled_from([1, 2, 4, 8, 16]),
+    kblocks=st.integers(1, 12),
+)
+def test_nvfp4_kernel_matches_oracle(seed, rows, kblocks):
+    rng = np.random.default_rng(seed)
+    x = _acts(rng, rows, 16 * kblocks)
+    got = nvfp4_qdq_auto(x)
+    want = nx.nvfp4_qdq(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+def test_nvfp4_kernel_explicit_tensor_scale():
+    rng = np.random.default_rng(0)
+    x = _acts(rng, 8, 64)
+    ts = jnp.float32(0.05)
+    got = nvfp4_qdq_kernel(x, ts)
+    want = nx.nvfp4_qdq_rows(x, ts)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# fused quantization kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    rows=st.sampled_from([8, 16, 32]),
+    kblocks=st.sampled_from([4, 8, 16]),
+    s_blocks=st.integers(0, 4),
+)
+def test_fused_quant_matches_oracle(seed, rows, kblocks, s_blocks):
+    rng = np.random.default_rng(seed)
+    k = 16 * kblocks
+    x = _acts(rng, rows, k)
+    gamma = jnp.asarray(rng.normal(size=(k,)).astype(np.float32) * 0.1 + 1.0)
+    perm, s = _plan(x, gamma, min(s_blocks, kblocks))
+    got = fused_quant_auto_ts(x, gamma, perm, s=s)
+    want = ref.fused_quant_ref(x, gamma, perm, s)
+    assert got.shape == (rows, k + s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=1e-6)
+
+
+def test_fused_quant_no_norm_variant():
+    """o_proj/down_proj sites skip the RMSNorm stage."""
+    rng = np.random.default_rng(1)
+    k = 64
+    x = _acts(rng, 8, k)
+    gamma = jnp.ones((k,), jnp.float32)
+    perm = jnp.asarray(
+        np.argsort(-np.abs(np.asarray(x)).max(axis=0)).astype(np.int32)
+    )
+    s = 16
+    xr = jnp.take(x, perm, axis=1)
+    ts_main = nx.nvfp4_tensor_scale(jnp.max(jnp.abs(xr)))
+    primary = nx.nvfp4_qdq_rows(xr, ts_main)
+    resid = (xr - primary)[:, :s]
+    ts_res = nx.nvfp4_tensor_scale(jnp.max(jnp.abs(resid)))
+    got = fused_quant(x, gamma, perm, ts_main, ts_res, s=s, use_norm=False)
+    want = jnp.concatenate([primary, nx.nvfp4_qdq_rows(resid, ts_res)], axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_fused_quant_s_zero_is_rtn():
+    rng = np.random.default_rng(2)
+    k = 128
+    x = _acts(rng, 8, k)
+    gamma = jnp.ones((k,), jnp.float32)
+    perm = jnp.arange(k, dtype=jnp.int32)
+    got = fused_quant_auto_ts(x, gamma, perm, s=0)
+    h = ref.rmsnorm_ref(x, gamma)
+    want = nx.nvfp4_qdq(h)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_fused_quant_residual_improves_outlier_channels():
+    """The compensation property: primary+residual reconstructs outlier
+    channels better than primary alone."""
+    rng = np.random.default_rng(3)
+    k = 128
+    x = _acts(rng, 16, k, outlier_every=17)
+    gamma = jnp.ones((k,), jnp.float32)
+    perm, s = _plan(x, gamma, 2)
+    out = np.asarray(fused_quant_auto_ts(x, gamma, perm, s=s))
+    h = np.asarray(ref.rmsnorm_ref(x, gamma))[:, np.asarray(perm)]
+    primary, resid_q = out[:, :k], out[:, k:]
+    recon = primary[:, :s] + resid_q
+    e_primary = ((h[:, :s] - primary[:, :s]) ** 2).mean()
+    e_recon = ((h[:, :s] - recon) ** 2).mean()
+    assert e_recon < e_primary * 0.5
+
+
+# ---------------------------------------------------------------------------
+# augmented GEMM kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.sampled_from([1, 4, 16, 64]),
+    m=st.sampled_from([8, 32, 128]),
+    kk=st.sampled_from([64, 160, 512]),
+)
+def test_gemm_aug_matches_oracle(seed, n, m, kk):
+    rng = np.random.default_rng(seed)
+    xa = jnp.asarray(rng.normal(size=(n, kk)).astype(np.float32))
+    wa = jnp.asarray(rng.normal(size=(m, kk)).astype(np.float32))
+    got = np.asarray(gemm_aug(xa, wa))
+    want = np.asarray(ref.gemm_aug_ref(xa, wa))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_aug_eq2_decomposition():
+    """Eq. 2: the augmented GEMM equals main + correction computed apart."""
+    rng = np.random.default_rng(4)
+    n, m, k, s = 16, 32, 128, 32
+    x = _acts(rng, n, k)
+    gamma = jnp.ones((k,), jnp.float32)
+    perm, _ = _plan(x, gamma, 0)
+    x_aug = ref.fused_quant_ref(x, gamma, perm, s)
+    w = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w_aug = ref.weight_augment_ref(w, perm, s)
+    y = np.asarray(gemm_aug(x_aug, w_aug))
+    main = np.asarray(ref.gemm_aug_ref(x_aug[:, :k], w_aug[:, :k]))
+    corr = np.asarray(ref.gemm_aug_ref(x_aug[:, k:], w_aug[:, k:]))
+    np.testing.assert_allclose(y, main + corr, rtol=1e-4, atol=1e-4)
+
+
+def test_arcquant_beats_rtn_reconstruction():
+    """End-to-end: ||Y_arc - Y_fp||_F < ||Y_rtn - Y_fp||_F on outlier data."""
+    rng = np.random.default_rng(5)
+    n, m, k = 32, 32, 256
+    x = _acts(rng, n, k, outlier_every=19)
+    gamma = jnp.asarray(rng.normal(size=(k,)).astype(np.float32) * 0.05 + 1.0)
+    w = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32) * 0.3)
+    perm, s = _plan(x, gamma, 4)
+    y_fp = np.asarray(ref.gemm_aug_ref(ref.rmsnorm_ref(x, gamma), w))
+    y_arc = np.asarray(ref.arcquant_linear_ref(x, gamma, w, perm, s))
+    y_rtn = np.asarray(ref.rtn_linear_ref(x, gamma, w))
+    e_arc = ((y_arc - y_fp) ** 2).mean()
+    e_rtn = ((y_rtn - y_fp) ** 2).mean()
+    assert e_arc < e_rtn, (e_arc, e_rtn)

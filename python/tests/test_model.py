@@ -1,0 +1,175 @@
+"""L2 model tests: shapes, determinism, quantized-vs-fp32 consistency,
+calibration plan structure, and the data/weight export formats."""
+
+import json
+import os
+import struct
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data
+from compile.model import (
+    CONFIGS,
+    ModelConfig,
+    boost_vector,
+    calibrate,
+    forward,
+    init_params,
+    rtn_plans_from,
+    site_names,
+)
+from compile.train import flatten_params, write_weights
+
+TINY = ModelConfig("tiny-test", d=128, l=2, h=4, f=256)
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    params = init_params(TINY, seed=0)
+    toks = data.generate("wiki", 30_000)
+    batches = [jnp.asarray(x) for x, _ in data.batches(toks, 2, 32, 3, seed=1)]
+    plans = calibrate(params, TINY, batches, max_s=64)
+    return params, batches, plans
+
+
+def test_forward_shapes_and_finite(tiny_setup):
+    params, batches, _ = tiny_setup
+    logits = forward(params, batches[0], TINY)
+    assert logits.shape == (2, 32, 256)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_forward_deterministic(tiny_setup):
+    params, batches, _ = tiny_setup
+    a = forward(params, batches[0], TINY)
+    b = forward(params, batches[0], TINY)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_outlier_boost_creates_outlier_channels(tiny_setup):
+    params, batches, _ = tiny_setup
+    _, acts = forward(params, batches[0], TINY, collect=True)
+    a = np.abs(np.asarray(acts["layers.0.attn_in"])).max(axis=0)
+    med = np.median(a)
+    assert a.max() > 5 * med, "boosted channels should dominate"
+    bv = np.asarray(boost_vector(TINY))
+    assert (bv > 1).sum() == len(TINY.outlier_boost)
+
+
+def test_calibration_plans_structure(tiny_setup):
+    _, _, plans = tiny_setup
+    assert set(plans) == set(site_names(TINY))
+    for site, p in plans.items():
+        k = TINY.f if site.endswith("mlp_out") else TINY.d
+        perm = np.asarray(p["perm"])
+        assert sorted(perm.tolist()) == list(range(k))
+        assert p["s"] % 16 == 0 and 0 <= p["s"] <= 64
+        assert p["ts_main"] > 0
+        # perm sorts col_absmax descending
+        am = np.asarray(p["col_absmax"])
+        assert (np.diff(am[perm]) <= 1e-6).all()
+
+
+def test_quantized_forward_close_to_fp32(tiny_setup):
+    params, batches, plans = tiny_setup
+    x = batches[0]
+    lf = np.asarray(forward(params, x, TINY))
+    la = np.asarray(forward(params, x, TINY, plans=plans))
+    # An untrained model has near-flat logits, so top-1 flips easily;
+    # require majority agreement plus small relative logit error.
+    agree = (lf.argmax(-1) == la.argmax(-1)).mean()
+    assert agree > 0.5, f"top-1 agreement {agree}"
+    rel = np.linalg.norm(la - lf) / np.linalg.norm(lf)
+    assert rel < 0.5, f"relative logit error {rel}"
+
+
+def test_arcquant_at_least_as_good_as_rtn(tiny_setup):
+    params, batches, plans = tiny_setup
+    x = batches[1]
+    lf = np.asarray(forward(params, x, TINY))
+    la = np.asarray(forward(params, x, TINY, plans=plans))
+    lr = np.asarray(forward(params, x, TINY, plans=rtn_plans_from(plans)))
+    e_arc = ((la - lf) ** 2).mean()
+    e_rtn = ((lr - lf) ** 2).mean()
+    assert e_arc <= e_rtn * 1.05, (e_arc, e_rtn)
+
+
+def test_configs_dims_kernel_aligned():
+    for cfg in CONFIGS.values():
+        assert cfg.d % 128 == 0 or cfg.d % 64 == 0
+        assert cfg.d % cfg.h == 0
+        assert cfg.f % 16 == 0
+        assert cfg.params_count() > 0
+
+
+# ---------------------------------------------------------------------------
+# data + export formats
+# ---------------------------------------------------------------------------
+
+
+def test_corpus_deterministic_and_in_vocab():
+    a = data.generate("wiki", 5000)
+    b = data.generate("wiki", 5000)
+    np.testing.assert_array_equal(a, b)
+    assert a.max() < 256
+    c = data.generate("c4", 5000)
+    assert not np.array_equal(a, c)
+
+
+def test_corpus_domains_distinct():
+    code = data.generate("code", 20000)
+    math_ = data.generate("math", 20000)
+    # code has bracket-band tokens, math has digit-band mass
+    assert (code >= 250).mean() > 0.04
+    assert ((math_ >= 10) & (math_ < 50)).mean() > 0.2
+
+
+def test_stream_roundtrip(tmp_path):
+    toks = data.generate("wiki", 1000)
+    p = str(tmp_path / "s.bin")
+    data.write_stream(p, toks)
+    np.testing.assert_array_equal(data.read_stream(p), toks)
+
+
+def test_weights_container_format(tmp_path):
+    params = init_params(TINY, seed=0)
+    p = str(tmp_path / "w.bin")
+    write_weights(p, params, TINY)
+    with open(p, "rb") as f:
+        blob = f.read()
+    assert blob[:4] == b"ARCW"
+    (n,) = struct.unpack_from("<I", blob, 4)
+    flat = flatten_params(params, TINY)
+    assert n == len(flat)
+    # walk the container and verify one tensor round-trips
+    off = 8
+    seen = {}
+    for _ in range(n):
+        (nl,) = struct.unpack_from("<I", blob, off)
+        off += 4
+        name = blob[off : off + nl].decode()
+        off += nl
+        (nd,) = struct.unpack_from("<I", blob, off)
+        off += 4
+        dims = struct.unpack_from(f"<{nd}I", blob, off)
+        off += 4 * nd
+        cnt = int(np.prod(dims))
+        arr = np.frombuffer(blob, dtype="<f4", count=cnt, offset=off).reshape(dims)
+        off += 4 * cnt
+        seen[name] = arr
+    assert off == len(blob)
+    np.testing.assert_array_equal(seen["embed"], np.asarray(flat["embed"]))
+    np.testing.assert_array_equal(
+        seen["layers.1.w2"], np.asarray(flat["layers.1.w2"])
+    )
+
+
+def test_batches_shapes_and_shift():
+    toks = data.generate("wiki", 10_000)
+    for x, y in data.batches(toks, 3, 16, 2, seed=5):
+        assert x.shape == (3, 16) and y.shape == (3, 16)
+        np.testing.assert_array_equal(x[:, 1:], y[:, :-1])

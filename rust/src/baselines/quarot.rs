@@ -1,0 +1,169 @@
+//! QuaRot-style randomized rotation baseline (Ashkboos et al., 2024).
+//!
+//! QuaRot rotates the channel dimension with Q = H·D where D is a random
+//! ±1 diagonal and H the normalized Hadamard matrix. Q is orthogonal, so
+//! rotating both activations and weight columns preserves X·Wᵀ while
+//! flattening the activation distribution. The paper's §3.1 argument —
+//! which Figure 2 visualizes and Table 2 confirms — is that this helps
+//! per-tensor INT4 but *hurts* fine-grained NVFP4, because the linear
+//! combination propagates outlier magnitude into every 16-element block,
+//! inflating local dynamic ranges.
+//!
+//! For non-power-of-two channel counts we rotate the largest
+//! power-of-two-size prefix blocks (standard practice: blocked Hadamard).
+
+use super::hadamard::{fwht_normalized, pow2_floor};
+use crate::tensor::Mat;
+use crate::util::Prng;
+
+/// A blocked random-Hadamard rotation over `k` channels.
+#[derive(Clone, Debug)]
+pub struct BlockRotation {
+    pub k: usize,
+    /// Random ±1 diagonal (length k).
+    pub signs: Vec<f32>,
+    /// Hadamard block sizes covering [0, k): each a power of two.
+    pub blocks: Vec<(usize, usize)>, // (start, len)
+}
+
+impl BlockRotation {
+    pub fn new(k: usize, seed: u64) -> BlockRotation {
+        let mut rng = Prng::new(seed ^ 0x51A_207);
+        let signs = (0..k).map(|_| rng.sign()).collect();
+        // Cover k with descending power-of-two blocks (e.g. 96 → 64+32).
+        let mut blocks = Vec::new();
+        let mut start = 0;
+        while start < k {
+            let len = pow2_floor(k - start);
+            blocks.push((start, len));
+            start += len;
+        }
+        BlockRotation { k, signs, blocks }
+    }
+
+    /// Rotate one row in place: x ← H·D·x (per block).
+    pub fn apply_row(&self, row: &mut [f32]) {
+        assert_eq!(row.len(), self.k);
+        for (v, s) in row.iter_mut().zip(&self.signs) {
+            *v *= s;
+        }
+        for &(start, len) in &self.blocks {
+            fwht_normalized(&mut row[start..start + len]);
+        }
+    }
+
+    /// Rotate every row of a matrix (column/channel dimension).
+    pub fn apply_cols(&self, m: &Mat) -> Mat {
+        let mut out = m.clone();
+        for r in 0..out.rows {
+            self.apply_row(out.row_mut(r));
+        }
+        out
+    }
+
+    /// Inverse rotation: x ← D·H·x (H self-inverse, then undo signs).
+    pub fn apply_inverse_row(&self, row: &mut [f32]) {
+        assert_eq!(row.len(), self.k);
+        for &(start, len) in &self.blocks {
+            fwht_normalized(&mut row[start..start + len]);
+        }
+        for (v, s) in row.iter_mut().zip(&self.signs) {
+            *v *= s; // signs are ±1, self-inverse
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{Format, RowQuantizer};
+    use crate::tensor::matmul_nt;
+    use crate::util::{stats, Prng};
+
+    #[test]
+    fn rotation_is_orthogonal() {
+        let rot = BlockRotation::new(96, 0); // 64 + 32 blocks
+        let mut rng = Prng::new(80);
+        let orig: Vec<f32> = (0..96).map(|_| rng.normal()).collect();
+        let mut x = orig.clone();
+        rot.apply_row(&mut x);
+        // norm preserved
+        let n0: f32 = orig.iter().map(|v| v * v).sum();
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-3 * n0);
+        // inverse recovers
+        rot.apply_inverse_row(&mut x);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gemm_invariance() {
+        let mut rng = Prng::new(81);
+        let (n, k, m) = (4, 64, 8);
+        let mut x = Mat::zeros(n, k);
+        let mut w = Mat::zeros(m, k);
+        x.fill_random_normal(&mut rng, 1.0);
+        w.fill_random_normal(&mut rng, 1.0);
+        let rot = BlockRotation::new(k, 3);
+        let y0 = matmul_nt(&x, &w);
+        let y1 = matmul_nt(&rot.apply_cols(&x), &rot.apply_cols(&w));
+        for (a, b) in y0.data.iter().zip(&y1.data) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()));
+        }
+    }
+
+    #[test]
+    fn flattens_global_peak() {
+        // QuaRot's selling point: the global row max drops.
+        let mut rng = Prng::new(82);
+        let x = Mat::from_fn(8, 128, |_, c| {
+            let v = rng.normal();
+            if c == 5 {
+                v * 100.0
+            } else {
+                v
+            }
+        });
+        let rot = BlockRotation::new(128, 0);
+        let xr = rot.apply_cols(&x);
+        assert!(xr.absmax() < x.absmax() * 0.5);
+    }
+
+    #[test]
+    fn inflates_block_ranges_hurting_nvfp4() {
+        // The paper's core motivation (Figure 2 / §3.1): on outlier-heavy
+        // data, rotating *increases* fine-grained NVFP4 quantization error
+        // of the non-outlier mass relative to not rotating.
+        let mut rng = Prng::new(83);
+        let x = Mat::from_fn(32, 256, |_, c| {
+            let v = rng.normal() * 0.05; // low-magnitude bulk
+            if c % 64 == 3 {
+                v + rng.normal() * 60.0 // a few huge channels
+            } else {
+                v
+            }
+        });
+        let q = RowQuantizer::new(Format::Nvfp4);
+
+        // Direct NVFP4 error:
+        let direct = q.qdq_mat(&x);
+        let e_direct = stats::mse(&direct.data, &x.data);
+
+        // Rotated NVFP4 error, measured in the original domain (rotate,
+        // quantize, un-rotate — orthogonality preserves MSE):
+        let rot = BlockRotation::new(256, 0);
+        let xr = rot.apply_cols(&x);
+        let mut back = q.qdq_mat(&xr);
+        for r in 0..back.rows {
+            rot.apply_inverse_row(back.row_mut(r));
+        }
+        let e_rot = stats::mse(&back.data, &x.data);
+
+        assert!(
+            e_rot > e_direct,
+            "rotation should hurt fine-grained NVFP4 here: rot {e_rot} vs direct {e_direct}"
+        );
+    }
+}

@@ -1,0 +1,140 @@
+//! SmoothQuant baseline (Xiao et al., 2024).
+//!
+//! Migrates quantization difficulty from activations to weights with a
+//! per-channel scale s_j = amax_X(j)^α / amax_W(j)^(1−α):
+//! Y = (X·diag(s)⁻¹)(diag(s)·W)ᵀ. Effective at 8-bit; at 4-bit the paper
+//! (Table 2) finds only marginal gains because the weights have no spare
+//! capacity to absorb the migrated range — which our eval reproduces.
+
+use crate::formats::{Format, RowQuantizer};
+use crate::tensor::Mat;
+
+/// Offline preparation: returns the quantized migrated weight and the
+/// per-channel activation divisor (as the multiplier 1/s applied online).
+pub fn prepare(w: &Mat, act_absmax: &[f32], alpha: f32, fmt: Format) -> (Mat, Vec<f32>) {
+    assert_eq!(w.cols, act_absmax.len());
+    let w_absmax = {
+        // per input-channel absmax over the output dim
+        let mut m = vec![0.0f32; w.cols];
+        for r in 0..w.rows {
+            for (c, &v) in w.row(r).iter().enumerate() {
+                m[c] = m[c].max(v.abs());
+            }
+        }
+        m
+    };
+    let mut s = vec![1.0f32; w.cols];
+    for j in 0..w.cols {
+        let a = act_absmax[j].max(1e-8);
+        let ww = w_absmax[j].max(1e-8);
+        s[j] = (a.powf(alpha) / ww.powf(1.0 - alpha)).max(1e-6);
+    }
+    // Migrate into weights: W' = diag(s)·W along input channels.
+    let mut wm = w.clone();
+    wm.scale_cols(&s);
+    let wq = RowQuantizer::new(fmt).qdq_mat(&wm);
+    let inv_s: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+    (wq, inv_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul_nt;
+    use crate::util::{stats, Prng};
+
+    #[test]
+    fn migration_preserves_product_unquantized() {
+        let mut rng = Prng::new(90);
+        let mut x = Mat::zeros(4, 32);
+        let mut w = Mat::zeros(8, 32);
+        x.fill_random_normal(&mut rng, 2.0);
+        w.fill_random_normal(&mut rng, 0.5);
+        let act_absmax = x.col_absmax();
+        // α = 0.5, no quantization: verify X·diag(1/s)·(diag(s)·W)ᵀ = X·Wᵀ
+        let w_absmax = {
+            let mut m = vec![0.0f32; w.cols];
+            for r in 0..w.rows {
+                for (c, &v) in w.row(r).iter().enumerate() {
+                    m[c] = m[c].max(v.abs());
+                }
+            }
+            m
+        };
+        let s: Vec<f32> = (0..32)
+            .map(|j| (act_absmax[j].max(1e-8).powf(0.5) / w_absmax[j].max(1e-8).powf(0.5)).max(1e-6))
+            .collect();
+        let mut xs = x.clone();
+        xs.scale_cols(&s.iter().map(|v| 1.0 / v).collect::<Vec<_>>());
+        let mut wm = w.clone();
+        wm.scale_cols(&s);
+        let y0 = matmul_nt(&x, &w);
+        let y1 = matmul_nt(&xs, &wm);
+        for (a, b) in y0.data.iter().zip(&y1.data) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()));
+        }
+    }
+
+    #[test]
+    fn smoothing_helps_int8_style_per_tensor_error() {
+        // SmoothQuant's home turf: outlier activations, 8-bit. After
+        // migration the activation absmax drops substantially.
+        let mut rng = Prng::new(91);
+        let x = Mat::from_fn(16, 64, |_, c| {
+            let v = rng.normal();
+            if c == 7 {
+                v * 50.0
+            } else {
+                v
+            }
+        });
+        let mut w = Mat::zeros(16, 64);
+        w.fill_random_normal(&mut rng, 0.5);
+        let (_, inv_s) = prepare(&w, &x.col_absmax(), 0.5, Format::Mxfp8E4M3);
+        let mut xs = x.clone();
+        xs.scale_cols(&inv_s);
+        assert!(xs.absmax() < x.absmax() * 0.5);
+    }
+
+    #[test]
+    fn end_to_end_error_reasonable_at_4bit() {
+        // At 4-bit, smoothing should at least not catastrophically hurt
+        // vs RTN (paper: marginal gains).
+        let mut rng = Prng::new(92);
+        let x = Mat::from_fn(16, 128, |_, c| {
+            let v = rng.normal();
+            if c % 33 == 2 {
+                v * 30.0
+            } else {
+                v
+            }
+        });
+        let mut w = Mat::zeros(16, 128);
+        w.fill_random_normal(&mut rng, 0.4);
+        let y_ref = matmul_nt(&x, &w);
+
+        let q = RowQuantizer::new(Format::Nvfp4);
+        let rtn = matmul_nt(&q.qdq_mat(&x), &q.qdq_mat(&w));
+        let e_rtn = stats::mse(&rtn.data, &y_ref.data);
+
+        let (wq, inv_s) = prepare(&w, &x.col_absmax(), 0.5, Format::Nvfp4);
+        let mut xs = x.clone();
+        xs.scale_cols(&inv_s);
+        let sm = matmul_nt(&q.qdq_mat(&xs), &wq);
+        let e_sm = stats::mse(&sm.data, &y_ref.data);
+
+        assert!(
+            e_sm < e_rtn * 3.0,
+            "smooth {e_sm} catastrophically worse than rtn {e_rtn}"
+        );
+    }
+
+    #[test]
+    fn zero_channels_handled() {
+        let x_absmax = vec![0.0f32; 16];
+        let w = Mat::zeros(4, 16);
+        let (wq, inv_s) = prepare(&w, &x_absmax, 0.5, Format::Nvfp4);
+        assert!(wq.data.iter().all(|v| v.is_finite()));
+        assert!(inv_s.iter().all(|v| v.is_finite()));
+    }
+}

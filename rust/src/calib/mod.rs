@@ -1,0 +1,193 @@
+//! Calibration pipeline (paper §3.2 offline phase + Appendix B.1).
+//!
+//! Runs calibration token windows through the FP32 engine in collect
+//! mode, merges per-site per-channel absolute maxima, and serializes the
+//! result (plus derived reorder/S plans) to JSON — the same schema the
+//! Python AOT path writes, so either side can consume either file.
+//! Timing is recorded for the Table 4 reproduction.
+
+use crate::baselines::LayerCalib;
+use crate::model::{Engine, EngineMode, ModelConfig, Weights};
+use crate::quant::{LayerPlan, Permutation};
+use crate::util::json::Json;
+use crate::util::Timer;
+use std::collections::BTreeMap;
+
+/// Calibration outcome for a model.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    pub sites: BTreeMap<String, LayerCalib>,
+    pub seconds: f64,
+    pub windows: usize,
+    pub window_len: usize,
+}
+
+/// Run calibration: `windows` windows of `window_len` tokens from the
+/// calibration stream (mirrors the paper's 128 x 2048 setup, scaled).
+pub fn run_calibration(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    stream: &[u16],
+    windows: usize,
+    window_len: usize,
+) -> Result<Calibration, String> {
+    let engine = Engine::new(cfg.clone(), weights.clone(), EngineMode::Fp32, None)?;
+    let mut sites: BTreeMap<String, LayerCalib> = BTreeMap::new();
+    let t = Timer::start();
+    let stride = (stream.len().saturating_sub(window_len + 1)) / windows.max(1);
+    for w in 0..windows {
+        let start = (w * stride.max(1)) % stream.len().saturating_sub(window_len).max(1);
+        let toks = &stream[start..start + window_len];
+        engine.forward(toks, Some(&mut sites), None);
+    }
+    Ok(Calibration {
+        sites,
+        seconds: t.ms() / 1e3,
+        windows,
+        window_len,
+    })
+}
+
+impl Calibration {
+    /// Derive per-site plans with the τ = 2⁻³·M rule (Figure 7 data).
+    pub fn plans(&self, fmt: crate::formats::Format, max_s: usize) -> BTreeMap<String, LayerPlan> {
+        self.sites
+            .iter()
+            .map(|(name, c)| {
+                (
+                    name.clone(),
+                    LayerPlan::from_calibration_capped(&c.col_absmax, fmt, max_s),
+                )
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut sites = Json::obj();
+        for (name, c) in &self.sites {
+            let mut site = Json::obj();
+            let plan = LayerPlan::from_calibration(&c.col_absmax, crate::formats::Format::Nvfp4);
+            site.set("col_absmax", Json::from_f32s(&c.col_absmax))
+                .set("perm", Json::from_usizes(&plan.perm.idx))
+                .set("s", Json::Num(plan.s as f64));
+            sites.set(name, site);
+        }
+        let mut j = Json::obj();
+        j.set("sites", sites)
+            .set("calib_seconds", Json::Num(self.seconds))
+            .set("windows", Json::Num(self.windows as f64))
+            .set("window_len", Json::Num(self.window_len as f64));
+        j
+    }
+
+    pub fn save(&self, path: &str) -> Result<(), String> {
+        std::fs::write(path, self.to_json().dump()).map_err(|e| e.to_string())
+    }
+
+    /// Load calibration stats from either the Rust or the Python
+    /// (`{model}.plans.json`) schema.
+    pub fn load(path: &str) -> Result<Calibration, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let j = Json::parse(&text)?;
+        let sites_j = j.get("sites").ok_or("missing 'sites'")?;
+        let mut sites = BTreeMap::new();
+        if let Json::Obj(m) = sites_j {
+            for (name, site) in m {
+                let absmax = site
+                    .get("col_absmax")
+                    .and_then(|v| v.to_f32s())
+                    .ok_or_else(|| format!("{name}: missing col_absmax"))?;
+                sites.insert(
+                    name.clone(),
+                    LayerCalib { col_absmax: absmax, sample: None },
+                );
+            }
+        }
+        Ok(Calibration {
+            sites,
+            seconds: j
+                .get("calib_seconds")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+            windows: j.get("windows").and_then(|v| v.as_usize()).unwrap_or(0),
+            window_len: j
+                .get("window_len")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0),
+        })
+    }
+
+    /// Per-layer S values in layer order for a site kind (Figure 7).
+    pub fn s_series(&self, kind: &str, fmt: crate::formats::Format, max_s: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        loop {
+            let name = format!("layers.{i}.{kind}");
+            match self.sites.get(&name) {
+                Some(c) => {
+                    let perm = Permutation::sort_desc(&c.col_absmax);
+                    let sel = crate::quant::select_outliers(&c.col_absmax, &perm, fmt.group());
+                    out.push(sel.s.min(max_s));
+                    i += 1;
+                }
+                None => break,
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Format;
+
+    fn setup() -> (ModelConfig, Weights, Vec<u16>) {
+        let cfg = ModelConfig::tiny_test();
+        let weights = Weights::synthetic(&cfg, 5);
+        let stream: Vec<u16> = (0..4000u32).map(|i| ((i * 37 + 11) % 256) as u16).collect();
+        (cfg, weights, stream)
+    }
+
+    #[test]
+    fn calibration_covers_all_sites() {
+        let (cfg, w, stream) = setup();
+        let c = run_calibration(&cfg, &w, &stream, 3, 32).unwrap();
+        assert_eq!(c.sites.len(), cfg.l * 4);
+        assert!(c.seconds > 0.0);
+    }
+
+    #[test]
+    fn plans_have_aligned_s() {
+        let (cfg, w, stream) = setup();
+        let c = run_calibration(&cfg, &w, &stream, 2, 32).unwrap();
+        let plans = c.plans(Format::Nvfp4, 512);
+        for (name, p) in &plans {
+            assert!(p.s % 16 == 0 || p.s == p.perm.len(), "{name}: s={}", p.s);
+            assert!(p.perm.is_valid());
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let (cfg, w, stream) = setup();
+        let c = run_calibration(&cfg, &w, &stream, 2, 32).unwrap();
+        let dir = std::env::temp_dir().join("arcquant_calib_test.json");
+        let path = dir.to_str().unwrap();
+        c.save(path).unwrap();
+        let back = Calibration::load(path).unwrap();
+        assert_eq!(back.sites.len(), c.sites.len());
+        for (name, lc) in &c.sites {
+            assert_eq!(back.sites[name].col_absmax, lc.col_absmax);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn s_series_per_layer() {
+        let (cfg, w, stream) = setup();
+        let c = run_calibration(&cfg, &w, &stream, 2, 32).unwrap();
+        let series = c.s_series("attn_in", Format::Nvfp4, 512);
+        assert_eq!(series.len(), cfg.l);
+    }
+}

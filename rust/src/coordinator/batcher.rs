@@ -1,0 +1,290 @@
+//! Continuous batcher: groups compatible requests (same variant) into
+//! fixed-size execution batches, flushing when the batch fills or the
+//! oldest request has waited `max_wait`.
+//!
+//! The AOT artifacts have a fixed [batch, seq] shape, so the batcher also
+//! owns padding policy: short sequences are left-padded with token 0 and
+//! the executor slices NLL accounting to the real length.
+
+use super::request::{PrefillRequest, Variant};
+use std::collections::VecDeque;
+use std::time::Duration;
+
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// slots per execution batch (the artifact's batch dim)
+    pub batch_size: usize,
+    /// artifact sequence length (pad/truncate to this)
+    pub seq_len: usize,
+    /// flush a non-full batch once its head has waited this long
+    pub max_wait: Duration,
+    /// maximum queued requests before the router sheds load
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            batch_size: 4,
+            seq_len: 64,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 256,
+        }
+    }
+}
+
+/// A ready-to-execute batch.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub variant: Variant,
+    pub requests: Vec<PrefillRequest>,
+    /// flattened padded tokens [batch_size * seq_len]
+    pub tokens: Vec<i32>,
+    /// per-slot real lengths (for NLL slicing)
+    pub lengths: Vec<usize>,
+}
+
+pub struct Batcher {
+    pub cfg: BatcherConfig,
+    queues: [VecDeque<PrefillRequest>; 3],
+}
+
+fn qidx(v: Variant) -> usize {
+    match v {
+        Variant::Fp32 => 0,
+        Variant::ArcQuant => 1,
+        Variant::Nvfp4Rtn => 2,
+    }
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        Batcher {
+            cfg,
+            queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+        }
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Enqueue; Err(request) if the queue is at capacity (backpressure).
+    pub fn push(&mut self, req: PrefillRequest) -> Result<(), PrefillRequest> {
+        if self.queued() >= self.cfg.queue_cap {
+            return Err(req);
+        }
+        self.queues[qidx(req.variant)].push_back(req);
+        Ok(())
+    }
+
+    /// Pop the next batch if one is ready (full, or head waited past
+    /// max_wait). FIFO within a variant; variants round-robin by
+    /// oldest-head to prevent starvation.
+    pub fn pop_ready(&mut self) -> Option<Batch> {
+        let now = std::time::Instant::now();
+        // pick the variant whose head is oldest among ready queues
+        let mut pick: Option<(usize, std::time::Instant)> = None;
+        for (i, q) in self.queues.iter().enumerate() {
+            if let Some(head) = q.front() {
+                let ready = q.len() >= self.cfg.batch_size
+                    || now.duration_since(head.t_submit) >= self.cfg.max_wait;
+                if ready {
+                    match pick {
+                        Some((_, t)) if head.t_submit >= t => {}
+                        _ => pick = Some((i, head.t_submit)),
+                    }
+                }
+            }
+        }
+        let (i, _) = pick?;
+        let variant = match i {
+            0 => Variant::Fp32,
+            1 => Variant::ArcQuant,
+            _ => Variant::Nvfp4Rtn,
+        };
+        let q = &mut self.queues[i];
+        let n = q.len().min(self.cfg.batch_size);
+        let requests: Vec<PrefillRequest> = q.drain(..n).collect();
+        Some(self.assemble(variant, requests))
+    }
+
+    /// Drain everything unconditionally (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for i in 0..3 {
+            while !self.queues[i].is_empty() {
+                let n = self.queues[i].len().min(self.cfg.batch_size);
+                let reqs: Vec<PrefillRequest> = self.queues[i].drain(..n).collect();
+                let variant = match i {
+                    0 => Variant::Fp32,
+                    1 => Variant::ArcQuant,
+                    _ => Variant::Nvfp4Rtn,
+                };
+                out.push(self.assemble(variant, reqs));
+            }
+        }
+        out
+    }
+
+    fn assemble(&self, variant: Variant, requests: Vec<PrefillRequest>) -> Batch {
+        let bs = self.cfg.batch_size;
+        let sl = self.cfg.seq_len;
+        let mut tokens = vec![0i32; bs * sl];
+        let mut lengths = vec![0usize; bs];
+        for (slot, req) in requests.iter().enumerate() {
+            let take = req.tokens.len().min(sl);
+            lengths[slot] = take;
+            for (j, &t) in req.tokens[..take].iter().enumerate() {
+                tokens[slot * sl + j] = t as i32;
+            }
+        }
+        Batch {
+            variant,
+            requests,
+            tokens,
+            lengths,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn req(id: u64, len: usize, v: Variant) -> PrefillRequest {
+        PrefillRequest::new(id, vec![1u16; len], v)
+    }
+
+    #[test]
+    fn full_batch_pops_immediately() {
+        let mut b = Batcher::new(BatcherConfig {
+            batch_size: 2,
+            ..Default::default()
+        });
+        b.push(req(1, 8, Variant::ArcQuant)).unwrap();
+        assert!(b.pop_ready().is_none(), "not full, not timed out");
+        b.push(req(2, 8, Variant::ArcQuant)).unwrap();
+        let batch = b.pop_ready().expect("full batch ready");
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(batch.variant, Variant::ArcQuant);
+        assert_eq!(batch.requests[0].id, 1); // FIFO
+    }
+
+    #[test]
+    fn timeout_flushes_partial_batch() {
+        let mut b = Batcher::new(BatcherConfig {
+            batch_size: 4,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        });
+        b.push(req(1, 8, Variant::Fp32)).unwrap();
+        std::thread::sleep(Duration::from_millis(3));
+        let batch = b.pop_ready().expect("timed-out batch");
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.lengths[0], 8);
+        assert_eq!(batch.lengths[1], 0); // empty slot
+    }
+
+    #[test]
+    fn variants_never_mix() {
+        let mut b = Batcher::new(BatcherConfig {
+            batch_size: 2,
+            ..Default::default()
+        });
+        b.push(req(1, 4, Variant::Fp32)).unwrap();
+        b.push(req(2, 4, Variant::ArcQuant)).unwrap();
+        b.push(req(3, 4, Variant::Fp32)).unwrap();
+        let batch = b.pop_ready().unwrap();
+        assert!(batch.requests.iter().all(|r| r.variant == batch.variant));
+    }
+
+    #[test]
+    fn queue_cap_backpressure() {
+        let mut b = Batcher::new(BatcherConfig {
+            queue_cap: 2,
+            ..Default::default()
+        });
+        b.push(req(1, 4, Variant::Fp32)).unwrap();
+        b.push(req(2, 4, Variant::Fp32)).unwrap();
+        assert!(b.push(req(3, 4, Variant::Fp32)).is_err());
+    }
+
+    #[test]
+    fn padding_and_truncation() {
+        let mut b = Batcher::new(BatcherConfig {
+            batch_size: 1,
+            seq_len: 4,
+            ..Default::default()
+        });
+        b.push(PrefillRequest::new(1, vec![9, 8, 7, 6, 5, 4], Variant::Fp32))
+            .unwrap();
+        let batch = b.pop_ready().unwrap();
+        assert_eq!(batch.tokens, vec![9, 8, 7, 6]); // truncated to seq_len
+        assert_eq!(batch.lengths[0], 4);
+    }
+
+    #[test]
+    fn prop_batcher_invariants() {
+        // Arbitrary push/pop interleavings: (a) never lose or duplicate a
+        // request, (b) batches never exceed batch_size, (c) FIFO per
+        // variant.
+        prop::forall(
+            "batcher_invariants",
+            prop::Config { cases: 64, ..Default::default() },
+            |rng| {
+                let ops: Vec<(bool, u8)> = (0..rng.below(60) + 10)
+                    .map(|_| (rng.f32() < 0.7, rng.below(3) as u8))
+                    .collect();
+                ops
+            },
+            |ops| {
+                let mut b = Batcher::new(BatcherConfig {
+                    batch_size: 3,
+                    max_wait: Duration::from_secs(1000), // only full batches pop
+                    queue_cap: 1000,
+                    ..Default::default()
+                });
+                let mut next_id = 0u64;
+                let mut popped: Vec<u64> = Vec::new();
+                let mut last_popped_per_variant = [0u64; 3];
+                for &(is_push, v) in ops {
+                    let variant = match v {
+                        0 => Variant::Fp32,
+                        1 => Variant::ArcQuant,
+                        _ => Variant::Nvfp4Rtn,
+                    };
+                    if is_push {
+                        next_id += 1;
+                        b.push(PrefillRequest::new(next_id, vec![1; 4], variant))
+                            .map_err(|_| "unexpected backpressure")?;
+                    } else if let Some(batch) = b.pop_ready() {
+                        if batch.requests.len() > 3 {
+                            return Err("batch too large".into());
+                        }
+                        let vi = super::qidx(batch.variant);
+                        for r in &batch.requests {
+                            if r.id <= last_popped_per_variant[vi] {
+                                return Err(format!("FIFO violated: {}", r.id));
+                            }
+                            last_popped_per_variant[vi] = r.id;
+                            popped.push(r.id);
+                        }
+                    }
+                }
+                for batch in b.drain_all() {
+                    for r in &batch.requests {
+                        popped.push(r.id);
+                    }
+                }
+                popped.sort_unstable();
+                let want: Vec<u64> = (1..=next_id).collect();
+                if popped != want {
+                    return Err(format!("lost/dup requests: {popped:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,218 @@
+//! Paged KV-cache manager (vLLM-style block allocator).
+//!
+//! Owns page accounting for decode sessions: fixed-size token pages,
+//! per-sequence page tables, allocation/free with an LRU-evictable
+//! freelist, and admission checks so the executor never over-commits
+//! memory. The actual K/V tensors live in the engine's `KvCache`; this
+//! module is the bookkeeping layer the coordinator uses for admission
+//! and backpressure.
+
+use std::collections::BTreeMap;
+
+pub const PAGE_TOKENS: usize = 16;
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum PageError {
+    OutOfPages,
+    UnknownSequence,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct SeqAlloc {
+    pub pages: Vec<usize>,
+    pub tokens: usize,
+}
+
+pub struct KvPageManager {
+    total_pages: usize,
+    free: Vec<usize>,
+    seqs: BTreeMap<u64, SeqAlloc>,
+    /// bytes per page = 2 (K,V) * page_tokens * d * layers * 4 bytes
+    pub bytes_per_page: u64,
+}
+
+impl KvPageManager {
+    pub fn new(total_pages: usize, d: usize, layers: usize) -> KvPageManager {
+        KvPageManager {
+            total_pages,
+            free: (0..total_pages).rev().collect(),
+            seqs: BTreeMap::new(),
+            bytes_per_page: (2 * PAGE_TOKENS * d * layers * 4) as u64,
+        }
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.total_pages - self.free.len()
+    }
+
+    pub fn bytes_used(&self) -> u64 {
+        self.used_pages() as u64 * self.bytes_per_page
+    }
+
+    /// Pages needed to hold `tokens` tokens.
+    pub fn pages_for(tokens: usize) -> usize {
+        tokens.div_ceil(PAGE_TOKENS)
+    }
+
+    /// Can a sequence of `tokens` tokens be admitted right now?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        Self::pages_for(tokens) <= self.free.len()
+    }
+
+    /// Reserve pages for a new sequence. All-or-nothing.
+    pub fn admit(&mut self, seq_id: u64, tokens: usize) -> Result<(), PageError> {
+        let need = Self::pages_for(tokens);
+        if need > self.free.len() {
+            return Err(PageError::OutOfPages);
+        }
+        let pages: Vec<usize> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.seqs.insert(seq_id, SeqAlloc { pages, tokens });
+        Ok(())
+    }
+
+    /// Extend a sequence by `new_tokens` (decode steps), allocating pages
+    /// as page boundaries are crossed.
+    pub fn extend(&mut self, seq_id: u64, new_tokens: usize) -> Result<(), PageError> {
+        let alloc = self
+            .seqs
+            .get_mut(&seq_id)
+            .ok_or(PageError::UnknownSequence)?;
+        let need_total = Self::pages_for(alloc.tokens + new_tokens);
+        let extra = need_total.saturating_sub(alloc.pages.len());
+        if extra > self.free.len() {
+            return Err(PageError::OutOfPages);
+        }
+        for _ in 0..extra {
+            alloc.pages.push(self.free.pop().unwrap());
+        }
+        alloc.tokens += new_tokens;
+        Ok(())
+    }
+
+    /// Release a sequence's pages.
+    pub fn release(&mut self, seq_id: u64) -> Result<usize, PageError> {
+        let alloc = self.seqs.remove(&seq_id).ok_or(PageError::UnknownSequence)?;
+        let n = alloc.pages.len();
+        self.free.extend(alloc.pages);
+        Ok(n)
+    }
+
+    pub fn seq_tokens(&self, seq_id: u64) -> Option<usize> {
+        self.seqs.get(&seq_id).map(|a| a.tokens)
+    }
+
+    /// Internal consistency: every page is either free or owned by
+    /// exactly one sequence.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.total_pages];
+        for &p in &self.free {
+            if seen[p] {
+                return Err(format!("page {p} double-listed in freelist"));
+            }
+            seen[p] = true;
+        }
+        for (id, alloc) in &self.seqs {
+            if alloc.pages.len() != Self::pages_for(alloc.tokens) {
+                return Err(format!("seq {id}: page count mismatch"));
+            }
+            for &p in &alloc.pages {
+                if seen[p] {
+                    return Err(format!("page {p} aliased (seq {id})"));
+                }
+                seen[p] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("leaked pages".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn admit_extend_release_cycle() {
+        let mut m = KvPageManager::new(8, 128, 2);
+        assert!(m.can_admit(64)); // 4 pages
+        m.admit(1, 64).unwrap();
+        assert_eq!(m.used_pages(), 4);
+        m.extend(1, 15).unwrap(); // 79 tokens → 5 pages
+        assert_eq!(m.used_pages(), 5);
+        m.extend(1, 1).unwrap(); // 80 tokens → exactly 5 pages
+        assert_eq!(m.used_pages(), 5);
+        m.extend(1, 1).unwrap(); // 81 tokens → 6 pages
+        assert_eq!(m.used_pages(), 6);
+        assert_eq!(m.release(1).unwrap(), 6);
+        assert_eq!(m.free_pages(), 8);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn out_of_pages_is_all_or_nothing() {
+        let mut m = KvPageManager::new(4, 128, 2);
+        m.admit(1, 48).unwrap(); // 3 pages
+        assert_eq!(m.admit(2, 32), Err(PageError::OutOfPages)); // needs 2
+        assert_eq!(m.used_pages(), 3, "failed admit must not leak");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn unknown_sequence_errors() {
+        let mut m = KvPageManager::new(4, 128, 2);
+        assert_eq!(m.release(9), Err(PageError::UnknownSequence));
+        assert_eq!(m.extend(9, 1), Err(PageError::UnknownSequence));
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let m = KvPageManager::new(10, 256, 4);
+        assert_eq!(m.bytes_per_page, (2 * 16 * 256 * 4 * 4) as u64);
+        assert_eq!(m.bytes_used(), 0);
+    }
+
+    #[test]
+    fn prop_no_alias_no_leak() {
+        // Random admit/extend/release traffic: pages never alias, never
+        // leak, and failures never mutate state.
+        prop::forall(
+            "kv_pages_invariant",
+            prop::Config { cases: 48, ..Default::default() },
+            |rng| {
+                (0..rng.below(80) + 20)
+                    .map(|_| (rng.below(3) as u8, rng.below(6) as u64, rng.below(70) + 1))
+                    .collect::<Vec<(u8, u64, usize)>>()
+            },
+            |ops| {
+                let mut m = KvPageManager::new(16, 64, 2);
+                let mut live: Vec<u64> = Vec::new();
+                for &(op, id, tokens) in ops {
+                    match op {
+                        0 => {
+                            if !live.contains(&id) && m.admit(id, tokens).is_ok() {
+                                live.push(id);
+                            }
+                        }
+                        1 => {
+                            let _ = m.extend(id, tokens);
+                        }
+                        _ => {
+                            if m.release(id).is_ok() {
+                                live.retain(|&x| x != id);
+                            }
+                        }
+                    }
+                    m.check_invariants()?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,109 @@
+//! Metrics registry: counters + stage latency accumulators.
+//!
+//! Thread-safe via atomics/mutex; the Figure 8b prefill breakdown and the
+//! serving report read from here.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    /// stage name -> (total_ms, samples)
+    stages: Mutex<BTreeMap<String, (f64, u64)>>,
+    latencies_ms: Mutex<Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_stage(&self, stage: &str, ms: f64) {
+        let mut m = self.stages.lock().unwrap();
+        let e = m.entry(stage.to_string()).or_insert((0.0, 0));
+        e.0 += ms;
+        e.1 += 1;
+    }
+
+    pub fn record_latency(&self, ms: f64) {
+        self.latencies_ms.lock().unwrap().push(ms);
+    }
+
+    pub fn stage_totals(&self) -> BTreeMap<String, (f64, u64)> {
+        self.stages.lock().unwrap().clone()
+    }
+
+    pub fn latency_percentiles(&self) -> (f64, f64, f64) {
+        let l = self.latencies_ms.lock().unwrap();
+        (
+            crate::util::stats::percentile(&l, 50.0),
+            crate::util::stats::percentile(&l, 90.0),
+            crate::util::stats::percentile(&l, 99.0),
+        )
+    }
+
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn get(counter: &AtomicU64) -> u64 {
+        counter.load(Ordering::Relaxed)
+    }
+
+    /// Figure 8b-style breakdown: share of total time per stage.
+    pub fn breakdown(&self) -> Vec<(String, f64, f64)> {
+        let m = self.stage_totals();
+        let total: f64 = m.values().map(|(ms, _)| ms).sum();
+        m.into_iter()
+            .map(|(name, (ms, _))| {
+                let share = if total > 0.0 { ms / total * 100.0 } else { 0.0 };
+                (name, ms, share)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_stages() {
+        let m = Metrics::new();
+        Metrics::inc(&m.submitted);
+        Metrics::inc(&m.submitted);
+        assert_eq!(Metrics::get(&m.submitted), 2);
+        m.record_stage("gemm", 10.0);
+        m.record_stage("gemm", 20.0);
+        m.record_stage("quant", 3.0);
+        let t = m.stage_totals();
+        assert_eq!(t["gemm"], (30.0, 2));
+        assert_eq!(t["quant"], (3.0, 1));
+    }
+
+    #[test]
+    fn breakdown_shares_sum_to_100() {
+        let m = Metrics::new();
+        m.record_stage("a", 75.0);
+        m.record_stage("b", 25.0);
+        let b = m.breakdown();
+        let total: f64 = b.iter().map(|(_, _, s)| s).sum();
+        assert!((total - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.record_latency(i as f64);
+        }
+        let (p50, p90, p99) = m.latency_percentiles();
+        assert!(p50 <= p90 && p90 <= p99);
+        assert!((p50 - 50.0).abs() <= 1.0);
+    }
+}

@@ -1,0 +1,36 @@
+//! L3 serving coordinator — the request path.
+//!
+//! A vLLM-router-style prefill serving stack, scaled to this repo:
+//!
+//! ```text
+//!   clients ──► Router (admission, variant selection, backpressure)
+//!                  │
+//!                  ▼
+//!            Batcher (continuous batching: fill-or-timeout windows)
+//!                  │  mpsc
+//!                  ▼
+//!            Executor thread (owns the PJRT Runtime — the xla client is
+//!            Rc-based, so exactly one thread touches the device; this is
+//!            the "GPU-owning" thread of a real deployment)
+//!                  │
+//!                  ▼
+//!            per-request responses + Metrics (stage timers → Fig. 8b)
+//! ```
+//!
+//! The KV-cache manager ([`kvcache`]) provides paged allocation for the
+//! Rust-native decode path (the engine's `KvCache` holds the tensors;
+//! the manager owns page accounting, admission and eviction).
+
+pub mod batcher;
+pub mod kvcache;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use kvcache::{KvPageManager, PageError};
+pub use metrics::Metrics;
+pub use request::{PrefillRequest, PrefillResponse, Variant};
+pub use router::{Router, RouterConfig, RouterDecision};
+pub use server::{serve_workload, ServeConfig, ServeReport};

@@ -1,0 +1,82 @@
+//! Request/response types of the serving path.
+
+/// Which compiled model variant a request runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    Fp32,
+    ArcQuant,
+    Nvfp4Rtn,
+}
+
+impl Variant {
+    pub fn artifact_key(self) -> &'static str {
+        match self {
+            Variant::Fp32 => "fp32",
+            Variant::ArcQuant => "arcquant",
+            Variant::Nvfp4Rtn => "nvfp4rtn",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s {
+            "fp32" | "fp16" => Some(Variant::Fp32),
+            "arcquant" | "arc" => Some(Variant::ArcQuant),
+            "nvfp4rtn" | "rtn" | "nvfp4" => Some(Variant::Nvfp4Rtn),
+            _ => None,
+        }
+    }
+}
+
+/// One prefill request: a token sequence to run through the model.
+#[derive(Clone, Debug)]
+pub struct PrefillRequest {
+    pub id: u64,
+    pub tokens: Vec<u16>,
+    pub variant: Variant,
+    /// enqueue timestamp for latency accounting
+    pub t_submit: std::time::Instant,
+}
+
+impl PrefillRequest {
+    pub fn new(id: u64, tokens: Vec<u16>, variant: Variant) -> Self {
+        PrefillRequest {
+            id,
+            tokens,
+            variant,
+            t_submit: std::time::Instant::now(),
+        }
+    }
+}
+
+/// Response: last-position logits + timing breakdown.
+#[derive(Clone, Debug)]
+pub struct PrefillResponse {
+    pub id: u64,
+    pub last_logits: Vec<f32>,
+    /// sum of next-token NLLs the executor computed for PPL accounting
+    /// (0.0 when targets are unknown)
+    pub nll: f64,
+    pub nll_tokens: usize,
+    pub queue_ms: f64,
+    pub execute_ms: f64,
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_parse() {
+        assert_eq!(Variant::parse("arc"), Some(Variant::ArcQuant));
+        assert_eq!(Variant::parse("fp16"), Some(Variant::Fp32));
+        assert_eq!(Variant::parse("nvfp4"), Some(Variant::Nvfp4Rtn));
+        assert_eq!(Variant::parse("bogus"), None);
+    }
+
+    #[test]
+    fn artifact_keys_stable() {
+        assert_eq!(Variant::ArcQuant.artifact_key(), "arcquant");
+        assert_eq!(Variant::Fp32.artifact_key(), "fp32");
+    }
+}

@@ -1,0 +1,112 @@
+//! Admission router: variant selection, length validation, and
+//! queue-depth backpressure — the front door of the serving stack.
+
+use super::batcher::BatcherConfig;
+use super::request::{PrefillRequest, Variant};
+
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// max tokens accepted per request (artifact seq len)
+    pub max_len: usize,
+    /// reject when the queue is fuller than this fraction of capacity
+    pub shed_threshold: f64,
+    /// default variant when the client doesn't pin one
+    pub default_variant: Variant,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            max_len: 64,
+            shed_threshold: 0.9,
+            default_variant: Variant::ArcQuant,
+        }
+    }
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum RouterDecision {
+    Accept,
+    /// request rejected, with a reason the client sees
+    Reject(&'static str),
+}
+
+pub struct Router {
+    pub cfg: RouterConfig,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Router {
+        Router { cfg }
+    }
+
+    /// Admission decision given current queue depth.
+    pub fn admit(
+        &self,
+        req: &PrefillRequest,
+        queued: usize,
+        batcher_cfg: &BatcherConfig,
+    ) -> RouterDecision {
+        if req.tokens.is_empty() {
+            return RouterDecision::Reject("empty prompt");
+        }
+        if req.tokens.len() > self.cfg.max_len {
+            return RouterDecision::Reject("prompt exceeds max length");
+        }
+        let cap = batcher_cfg.queue_cap as f64;
+        if queued as f64 >= cap * self.cfg.shed_threshold {
+            return RouterDecision::Reject("overloaded — shedding load");
+        }
+        RouterDecision::Accept
+    }
+
+    /// Fill in the default variant if unset-style sentinel used by CLI.
+    pub fn resolve_variant(&self, requested: Option<Variant>) -> Variant {
+        requested.unwrap_or(self.cfg.default_variant)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(len: usize) -> PrefillRequest {
+        PrefillRequest::new(1, vec![1; len], Variant::ArcQuant)
+    }
+
+    #[test]
+    fn accepts_normal_request() {
+        let r = Router::new(RouterConfig::default());
+        let b = BatcherConfig::default();
+        assert_eq!(r.admit(&req(32), 0, &b), RouterDecision::Accept);
+    }
+
+    #[test]
+    fn rejects_empty_and_oversized() {
+        let r = Router::new(RouterConfig::default());
+        let b = BatcherConfig::default();
+        assert!(matches!(r.admit(&req(0), 0, &b), RouterDecision::Reject(_)));
+        assert!(matches!(
+            r.admit(&req(1000), 0, &b),
+            RouterDecision::Reject(_)
+        ));
+    }
+
+    #[test]
+    fn sheds_load_near_capacity() {
+        let r = Router::new(RouterConfig::default());
+        let b = BatcherConfig {
+            queue_cap: 100,
+            ..Default::default()
+        };
+        assert_eq!(r.admit(&req(8), 50, &b), RouterDecision::Accept);
+        assert!(matches!(r.admit(&req(8), 95, &b), RouterDecision::Reject(_)));
+    }
+
+    #[test]
+    fn default_variant_applied() {
+        let r = Router::new(RouterConfig::default());
+        assert_eq!(r.resolve_variant(None), Variant::ArcQuant);
+        assert_eq!(r.resolve_variant(Some(Variant::Fp32)), Variant::Fp32);
+    }
+}

@@ -1,0 +1,266 @@
+//! The serving loop: router → batcher → executor thread (PJRT) →
+//! responses. Drives the end-to-end example and the Table 8 / Figure 8b
+//! measured rows.
+//!
+//! The executor thread constructs the [`crate::runtime::Runtime`] itself
+//! (the PJRT client is not `Send`) and is the only thread that touches
+//! compiled executables — the "device-owning thread" of a real stack.
+
+use super::batcher::{Batch, Batcher, BatcherConfig};
+use super::metrics::Metrics;
+use super::request::{PrefillRequest, PrefillResponse, Variant};
+use super::router::{Router, RouterConfig, RouterDecision};
+use crate::eval::ppl::token_nll;
+use crate::runtime::{Manifest, ModelBundle, Runtime};
+use crate::util::Timer;
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub artifacts: String,
+    pub model: String,
+    /// (variant, number of requests) mix
+    pub workload: Vec<(Variant, usize)>,
+    /// request length in tokens (≤ artifact seq)
+    pub req_len: usize,
+    pub batcher: BatcherConfig,
+    pub router: RouterConfig,
+}
+
+#[derive(Clone, Debug)]
+pub struct VariantStats {
+    pub requests: usize,
+    pub mean_execute_ms: f64,
+    pub ppl: f64,
+    pub throughput_tok_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub completed: usize,
+    pub rejected: usize,
+    pub wall_ms: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+    pub per_variant: BTreeMap<&'static str, VariantStats>,
+    pub stage_breakdown: Vec<(String, f64, f64)>,
+    pub platform: String,
+}
+
+/// Run a closed-loop serving workload against the AOT artifacts.
+/// Requests are drawn from the model's eval corpus so PPL is meaningful.
+pub fn serve_workload(cfg: &ServeConfig, stream: &[u16]) -> Result<ServeReport, String> {
+    let metrics = Arc::new(Metrics::new());
+    let (tx_batch, rx_batch) = mpsc::channel::<Batch>();
+    let (tx_resp, rx_resp) = mpsc::channel::<PrefillResponse>();
+
+    // ---- executor thread (owns the PJRT runtime) ----
+    let exec_metrics = metrics.clone();
+    let artifacts = cfg.artifacts.clone();
+    let model = cfg.model.clone();
+    let seq_len = cfg.batcher.seq_len;
+    let executor = std::thread::spawn(move || -> Result<String, String> {
+        let rt = Runtime::new(&artifacts).map_err(|e| e.to_string())?;
+        let manifest =
+            Manifest::load(rt.root()).map_err(|e| e.to_string())?;
+        let platform = rt.platform();
+        let bundle = ModelBundle::load(rt.root(), &model).map_err(|e| e.to_string())?;
+        // Pre-compile all variants we might see (compile once, off the
+        // hot path).
+        let mut exes = BTreeMap::new();
+        for v in [Variant::Fp32, Variant::ArcQuant, Variant::Nvfp4Rtn] {
+            if let Some(path) = manifest.model_hlo(&model, v.artifact_key()) {
+                let t = Timer::start();
+                let exe = rt.load(&path).map_err(|e| e.to_string())?;
+                exec_metrics.record_stage(
+                    &format!("compile:{}", v.artifact_key()),
+                    t.ms(),
+                );
+                exes.insert(v.artifact_key(), exe);
+            }
+        }
+        while let Ok(batch) = rx_batch.recv() {
+            let key = batch.variant.artifact_key();
+            let exe = match exes.get(key) {
+                Some(e) => e,
+                None => {
+                    // variant without an artifact: report failure upstream
+                    for req in batch.requests {
+                        let _ = tx_resp.send(PrefillResponse {
+                            id: req.id,
+                            last_logits: Vec::new(),
+                            nll: f64::NAN,
+                            nll_tokens: 0,
+                            queue_ms: 0.0,
+                            execute_ms: 0.0,
+                            batch_size: 0,
+                        });
+                    }
+                    continue;
+                }
+            };
+            // Assemble the parameterized inputs (weights + plans). The
+            // marshalling cost is measured as its own stage (a §Perf
+            // optimization target: device-resident weight buffers).
+            let tm = Timer::start();
+            let mut extra = bundle.weight_literals().map_err(|e| e.to_string())?;
+            match batch.variant {
+                Variant::Fp32 => {}
+                Variant::ArcQuant => extra
+                    .extend(bundle.plan_literals(false).map_err(|e| e.to_string())?),
+                Variant::Nvfp4Rtn => extra
+                    .extend(bundle.plan_literals(true).map_err(|e| e.to_string())?),
+            }
+            exec_metrics.record_stage(&format!("marshal:{key}"), tm.ms());
+            let t = Timer::start();
+            let (logits, dims) = rt
+                .run_tokens(exe, &batch.tokens, batch.lengths.len(), seq_len, extra)
+                .map_err(|e| e.to_string())?;
+            let execute_ms = t.ms();
+            exec_metrics.record_stage(&format!("execute:{key}"), execute_ms);
+            Metrics::inc(&exec_metrics.batches);
+            let vocab = dims[2];
+            for (slot, req) in batch.requests.iter().enumerate() {
+                let len = batch.lengths[slot];
+                // NLL of next-token targets within the real length.
+                let mut nll = 0.0;
+                let mut cnt = 0;
+                for pos in 0..len.saturating_sub(1) {
+                    let off = (slot * seq_len + pos) * vocab;
+                    let row = &logits[off..off + vocab];
+                    let target = batch.tokens[slot * seq_len + pos + 1] as usize;
+                    nll += token_nll(row, target);
+                    cnt += 1;
+                }
+                let last_off = (slot * seq_len + len.saturating_sub(1)) * vocab;
+                let queue_ms =
+                    t.ms().max(0.0) * 0.0 + req.t_submit.elapsed().as_secs_f64() * 1e3
+                        - execute_ms;
+                let resp = PrefillResponse {
+                    id: req.id,
+                    last_logits: logits[last_off..last_off + vocab].to_vec(),
+                    nll,
+                    nll_tokens: cnt,
+                    queue_ms: queue_ms.max(0.0),
+                    execute_ms,
+                    batch_size: batch
+                        .lengths
+                        .iter()
+                        .filter(|&&l| l > 0)
+                        .count(),
+                };
+                exec_metrics.record_latency(req.t_submit.elapsed().as_secs_f64() * 1e3);
+                Metrics::inc(&exec_metrics.completed);
+                let _ = tx_resp.send(resp);
+            }
+        }
+        Ok(platform)
+    });
+
+    // ---- submission side ----
+    let router = Router::new(cfg.router.clone());
+    let mut batcher = Batcher::new(cfg.batcher.clone());
+    let wall = Timer::start();
+    let mut next_id = 0u64;
+    let mut id_variant: BTreeMap<u64, Variant> = BTreeMap::new();
+    let mut rejected = 0usize;
+
+    for &(variant, count) in &cfg.workload {
+        for r in 0..count {
+            next_id += 1;
+            let start = (r * (cfg.req_len + 3)) % (stream.len() - cfg.req_len - 1);
+            let tokens = stream[start..start + cfg.req_len].to_vec();
+            let req = PrefillRequest::new(next_id, tokens, variant);
+            Metrics::inc(&metrics.submitted);
+            match router.admit(&req, batcher.queued(), &cfg.batcher) {
+                RouterDecision::Accept => {
+                    id_variant.insert(next_id, variant);
+                    if batcher.push(req).is_err() {
+                        rejected += 1;
+                        Metrics::inc(&metrics.rejected);
+                        id_variant.remove(&next_id);
+                    }
+                }
+                RouterDecision::Reject(_) => {
+                    rejected += 1;
+                    Metrics::inc(&metrics.rejected);
+                }
+            }
+            // opportunistically ship ready batches
+            while let Some(b) = batcher.pop_ready() {
+                tx_batch.send(b).map_err(|e| e.to_string())?;
+            }
+        }
+    }
+    for b in batcher.drain_all() {
+        tx_batch.send(b).map_err(|e| e.to_string())?;
+    }
+    drop(tx_batch);
+
+    // ---- collect ----
+    let mut responses: Vec<PrefillResponse> = Vec::new();
+    while let Ok(resp) = rx_resp.recv() {
+        responses.push(resp);
+    }
+    let platform = executor
+        .join()
+        .map_err(|_| "executor panicked".to_string())??;
+    let wall_ms = wall.ms();
+
+    // ---- aggregate ----
+    let mut per_variant: BTreeMap<&'static str, VariantStats> = BTreeMap::new();
+    for v in [Variant::Fp32, Variant::ArcQuant, Variant::Nvfp4Rtn] {
+        let key = v.artifact_key();
+        let rs: Vec<&PrefillResponse> = responses
+            .iter()
+            .filter(|r| id_variant.get(&r.id) == Some(&v) && !r.last_logits.is_empty())
+            .collect();
+        if rs.is_empty() {
+            continue;
+        }
+        let total_nll: f64 = rs.iter().map(|r| r.nll).sum();
+        let total_tok: usize = rs.iter().map(|r| r.nll_tokens).sum();
+        let mean_exec =
+            rs.iter().map(|r| r.execute_ms).sum::<f64>() / rs.len() as f64;
+        // distinct batches' execute time for throughput
+        let exec_total: f64 = {
+            let mut seen = std::collections::BTreeSet::new();
+            rs.iter()
+                .filter(|r| seen.insert((r.execute_ms * 1e6) as u64))
+                .map(|r| r.execute_ms)
+                .sum()
+        };
+        per_variant.insert(
+            key,
+            VariantStats {
+                requests: rs.len(),
+                mean_execute_ms: mean_exec,
+                ppl: (total_nll / total_tok.max(1) as f64).exp(),
+                throughput_tok_s: (rs.len() * cfg.req_len) as f64
+                    / (exec_total / 1e3).max(1e-9),
+            },
+        );
+    }
+    let (p50, p90, p99) = metrics.latency_percentiles();
+    Ok(ServeReport {
+        completed: responses.len(),
+        rejected,
+        wall_ms,
+        p50_ms: p50,
+        p90_ms: p90,
+        p99_ms: p99,
+        per_variant,
+        stage_breakdown: metrics.breakdown(),
+        platform,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    // serve_workload needs compiled artifacts; its tests live in
+    // rust/tests/integration_serving.rs. Pure aggregation pieces are
+    // covered by the batcher/router/metrics unit tests.
+}

@@ -1,0 +1,357 @@
+//! Blackwell roofline cost model — the simulated hardware substrate.
+//!
+//! The paper's efficiency numbers (Figures 1, 6, 8a; Table 8) come from
+//! RTX 5090 / RTX PRO 6000 GPUs we don't have. This module models them
+//! with a standard roofline: per-GEMM latency = max(flops/peak_flops,
+//! bytes/bandwidth) + fixed launch overhead, with format-dependent peak
+//! throughput (NVFP4 Tensor Cores ≈ 4× FP16 dense; MXFP8 ≈ 2×) and
+//! format-dependent operand bytes. Atom-style mixed precision pays the
+//! paper's §3.1 penalty: its heterogeneous group sizes break the unified
+//! MMA pipeline, so its GEMM runs at the *higher-precision* path rate
+//! plus a permute/merge overhead.
+//!
+//! Constants are calibrated so the *shape* of the paper's results holds
+//! (who wins, by what factor, where crossovers fall); absolute numbers
+//! are explicitly modeled, and EXPERIMENTS.md labels them as such.
+
+use crate::model::ModelConfig;
+
+/// GPU presets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gpu {
+    Rtx5090,
+    RtxPro6000,
+}
+
+#[derive(Clone, Debug)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// dense FP16 Tensor-Core TFLOP/s
+    pub fp16_tflops: f64,
+    /// HBM bandwidth GB/s
+    pub bw_gbs: f64,
+    /// kernel launch + epilogue overhead per GEMM (µs)
+    pub launch_us: f64,
+}
+
+impl Gpu {
+    pub fn spec(self) -> GpuSpec {
+        match self {
+            // RTX 5090: ~210 TFLOPs FP16 dense, 1792 GB/s GDDR7.
+            Gpu::Rtx5090 => GpuSpec {
+                name: "RTX 5090",
+                fp16_tflops: 210.0,
+                bw_gbs: 1792.0,
+                launch_us: 6.0,
+            },
+            // RTX PRO 6000 (Blackwell): ~126 TFLOPs FP16 dense, 1790 GB/s,
+            // larger VRAM; slightly higher overheads at big batch.
+            Gpu::RtxPro6000 => GpuSpec {
+                name: "RTX PRO 6000",
+                fp16_tflops: 126.0,
+                bw_gbs: 1790.0,
+                launch_us: 6.0,
+            },
+        }
+    }
+}
+
+/// Datapath the GEMM runs on.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GemmPath {
+    Fp16,
+    Nvfp4,
+    /// NVFP4 with S augmented channels (ARCQuant)
+    Nvfp4Aug { s: usize },
+    Mxfp8,
+    /// W4A8: MXFP4 weights, MXFP8 activations — runs on the FP8 pipe.
+    W4A8,
+    /// Atom mixed precision: INT4 bulk + INT8 outliers, non-uniform
+    /// granularity ⇒ no unified MMA (paper §3.1).
+    AtomMixed { outliers: usize },
+}
+
+impl GemmPath {
+    /// Compute-throughput multiplier vs dense FP16.
+    fn flops_mult(self) -> f64 {
+        match self {
+            GemmPath::Fp16 => 1.0,
+            GemmPath::Nvfp4 | GemmPath::Nvfp4Aug { .. } => 4.0,
+            GemmPath::Mxfp8 | GemmPath::W4A8 => 2.0,
+            // Atom: INT4 MMA exists but the mixed granularity forces the
+            // slower path + extra kernel logic; net ≈ FP8-class with a
+            // fixed merge penalty applied in `gemm_us`.
+            GemmPath::AtomMixed { .. } => 2.0,
+        }
+    }
+
+    /// Effective bytes per activation element (weights analogous).
+    fn act_bytes(self) -> f64 {
+        match self {
+            GemmPath::Fp16 => 2.0,
+            GemmPath::Nvfp4 | GemmPath::Nvfp4Aug { .. } => 0.5 + 1.0 / 16.0, // elems + E4M3 scales
+            GemmPath::Mxfp8 | GemmPath::W4A8 => 1.0 + 1.0 / 32.0,
+            GemmPath::AtomMixed { .. } => 0.5 + 4.0 / 128.0,
+        }
+    }
+
+    fn weight_bytes(self) -> f64 {
+        match self {
+            GemmPath::Fp16 => 2.0,
+            GemmPath::W4A8 => 0.5 + 1.0 / 32.0, // MXFP4 weights
+            other => other.act_bytes(),
+        }
+    }
+
+    /// Extra reduction channels (ARCQuant's K+S).
+    fn extra_k(self) -> usize {
+        match self {
+            GemmPath::Nvfp4Aug { s } => s,
+            _ => 0,
+        }
+    }
+}
+
+/// Modeled latency (µs) of Y[n, m] = X[n, k] · W[m, k]ᵀ on `gpu`.
+pub fn gemm_us(gpu: Gpu, path: GemmPath, n: usize, k: usize, m: usize) -> f64 {
+    let spec = gpu.spec();
+    let k_eff = (k + path.extra_k()) as f64;
+    let flops = 2.0 * n as f64 * k_eff * m as f64;
+    let peak = spec.fp16_tflops * path.flops_mult() * 1e12;
+    let t_compute = flops / peak * 1e6;
+    let bytes = n as f64 * k_eff * path.act_bytes()
+        + m as f64 * k_eff * path.weight_bytes()
+        + n as f64 * m as f64 * 2.0; // f16 output
+    let t_mem = bytes / (spec.bw_gbs * 1e9) * 1e6;
+    let mut t = t_compute.max(t_mem) + spec.launch_us;
+    if let GemmPath::AtomMixed { outliers } = path {
+        // two GEMMs + gather/merge epilogue (paper §3.1 penalty)
+        t += spec.launch_us + 0.02 * outliers as f64;
+    }
+    t
+}
+
+/// Modeled latency of the fused quantization kernel (µs): bandwidth-bound
+/// single pass over [n, k] f16 in + [n, k+s] packed out.
+pub fn fused_quant_us(gpu: Gpu, n: usize, k: usize, s: usize) -> f64 {
+    let spec = gpu.spec();
+    let bytes = n as f64 * (k as f64 * 2.0 + (k + s) as f64 * 0.5625);
+    bytes / (spec.bw_gbs * 1e9) * 1e6 + spec.launch_us * 0.5
+}
+
+/// Per-method prefill latency (ms) + peak memory (GB) of one model
+/// forward at (batch, seq) — the Table 8 / Figure 6 generator.
+#[derive(Clone, Debug)]
+pub struct PrefillEstimate {
+    pub latency_ms: f64,
+    pub memory_gb: f64,
+    /// share of latency spent in the quant kernel (Fig. 8b)
+    pub quant_overhead_ms: f64,
+    pub attn_ms: f64,
+    pub gemm_ms: f64,
+}
+
+/// Scale factor mapping our tiny sim configs to the paper's model sizes:
+/// the cost model evaluates the *paper-scale* architecture named by the
+/// config (e.g. qwen7b-sim → 3584/28/18944-ish dims) so Table 8 rows are
+/// comparable. We embed the real dims here.
+pub fn paper_dims(name: &str) -> Option<(usize, usize, usize, usize)> {
+    // (d, layers, ffn, vocab)
+    match name {
+        n if n.starts_with("llama8b") => Some((4096, 32, 14336, 128256)),
+        n if n.starts_with("qwen7b") || n.starts_with("coder7b") || n.starts_with("math7b") => {
+            Some((3584, 28, 18944, 152064))
+        }
+        n if n.starts_with("qwen14b") => Some((5120, 48, 13824, 152064)),
+        n if n.starts_with("qwen32b") => Some((5120, 64, 27648, 152064)),
+        _ => None,
+    }
+}
+
+/// Prefill estimate at paper scale for a named model.
+pub fn prefill_estimate(
+    gpu: Gpu,
+    model: &str,
+    path: GemmPath,
+    batch: usize,
+    seq: usize,
+    avg_s: usize,
+) -> PrefillEstimate {
+    let (d, layers, ffn, vocab) = paper_dims(model).unwrap_or((4096, 32, 14336, 128256));
+    let n = batch * seq;
+    let eff_path = |k: usize| match path {
+        GemmPath::Nvfp4Aug { .. } => GemmPath::Nvfp4Aug { s: avg_s.min(k) },
+        p => p,
+    };
+    let mut gemm = 0.0;
+    let mut quant = 0.0;
+    for _ in 0..layers {
+        // qkv (fused as one [n,d]x[3d,d]), o, gate+up, down
+        gemm += gemm_us(gpu, eff_path(d), n, d, 3 * d);
+        gemm += gemm_us(gpu, eff_path(d), n, d, d);
+        gemm += gemm_us(gpu, eff_path(d), n, d, 2 * ffn);
+        gemm += gemm_us(gpu, eff_path(ffn), n, ffn, d);
+        if matches!(path, GemmPath::Nvfp4 | GemmPath::Nvfp4Aug { .. } | GemmPath::W4A8 | GemmPath::Mxfp8 | GemmPath::AtomMixed { .. }) {
+            let s = if matches!(path, GemmPath::Nvfp4Aug { .. }) { avg_s } else { 0 };
+            quant += fused_quant_us(gpu, n, d, s) * 3.0 + fused_quant_us(gpu, n, ffn, s);
+        }
+    }
+    // attention: 2 batched matmuls per layer per head block, FP16 path
+    let attn_flops = 2.0 * 2.0 * batch as f64 * (seq as f64) * (seq as f64) * d as f64 * layers as f64;
+    let attn_ms = (attn_flops / (gpu.spec().fp16_tflops * 1e12) * 1e3)
+        .max(1e-3 * layers as f64 * gpu.spec().launch_us);
+    // lm head
+    let head = gemm_us(gpu, GemmPath::Fp16, n, d, vocab);
+
+    let latency_ms = (gemm + quant + head) / 1e3 + attn_ms;
+
+    // memory: weights + kv cache + activations + embeddings
+    let wbytes_per = path.weight_bytes();
+    let wparams = layers as f64 * (4.0 * d as f64 * d as f64 + 3.0 * d as f64 * ffn as f64);
+    let embed_bytes = vocab as f64 * d as f64 * 2.0;
+    let kv = 2.0 * layers as f64 * n as f64 * d as f64 * 2.0;
+    let act = n as f64 * (d + ffn) as f64 * 2.0 * 2.0;
+    let memory_gb = (wparams * wbytes_per + embed_bytes + kv + act) / 1e9;
+
+    PrefillEstimate {
+        latency_ms,
+        memory_gb,
+        quant_overhead_ms: quant / 1e3,
+        attn_ms,
+        gemm_ms: gemm / 1e3,
+    }
+}
+
+/// Convenience: the method → datapath mapping used by reports.
+pub fn path_for_method(method: &str, avg_s: usize) -> GemmPath {
+    match method {
+        "FP16" => GemmPath::Fp16,
+        "NVFP4" | "NVFP4 + RTN" | "NVFP4 + Smooth" | "NVFP4 + QuaRot" => GemmPath::Nvfp4,
+        "ARCQuant" => GemmPath::Nvfp4Aug { s: avg_s },
+        "MXFP8" => GemmPath::Mxfp8,
+        "W4A8" | "W4A8 + RTN" => GemmPath::W4A8,
+        "Atom" => GemmPath::AtomMixed { outliers: 128 },
+        _ => GemmPath::Fp16,
+    }
+}
+
+/// Model-level average S for cost purposes, from an engine's plan.
+pub fn avg_s(engine: &crate::model::Engine) -> usize {
+    let per = engine.s_per_site();
+    if per.is_empty() {
+        return 0;
+    }
+    per.iter().map(|(_, s)| s).sum::<usize>() / per.len()
+}
+
+#[allow(unused)]
+fn _unused(_: &ModelConfig) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nvfp4_faster_than_fp16() {
+        let t4 = gemm_us(Gpu::Rtx5090, GemmPath::Nvfp4, 4096, 4096, 4096);
+        let t16 = gemm_us(Gpu::Rtx5090, GemmPath::Fp16, 4096, 4096, 4096);
+        assert!(t16 / t4 > 2.0, "expected big NVFP4 win, got {}", t16 / t4);
+    }
+
+    #[test]
+    fn latency_linear_in_s() {
+        // Figure 8a: GEMM latency strictly linear in S.
+        let t = |s| gemm_us(Gpu::Rtx5090, GemmPath::Nvfp4Aug { s }, 4096, 4096, 4096);
+        let d1 = t(256) - t(0);
+        let d2 = t(512) - t(256);
+        assert!((d1 - d2).abs() < 1e-9 * t(0).max(1.0) + 1e-6);
+        assert!(d1 > 0.0);
+    }
+
+    #[test]
+    fn arcquant_overhead_marginal_at_s512() {
+        // Fig 8a inset: ARCQuant (S<=512) ≪ W4A8 and MXFP8 latency.
+        let arc = gemm_us(Gpu::Rtx5090, GemmPath::Nvfp4Aug { s: 512 }, 8192, 4096, 4096);
+        let nv = gemm_us(Gpu::Rtx5090, GemmPath::Nvfp4, 8192, 4096, 4096);
+        let w4a8 = gemm_us(Gpu::Rtx5090, GemmPath::W4A8, 8192, 4096, 4096);
+        let mx8 = gemm_us(Gpu::Rtx5090, GemmPath::Mxfp8, 8192, 4096, 4096);
+        assert!(arc < w4a8 && arc < mx8);
+        assert!(arc / nv < 1.25, "overhead {}", arc / nv);
+    }
+
+    #[test]
+    fn atom_pays_mixed_precision_penalty() {
+        let atom = gemm_us(Gpu::Rtx5090, GemmPath::AtomMixed { outliers: 128 }, 8192, 4096, 4096);
+        let arc = gemm_us(Gpu::Rtx5090, GemmPath::Nvfp4Aug { s: 128 }, 8192, 4096, 4096);
+        assert!(atom > arc * 1.5, "atom {atom} vs arc {arc}");
+    }
+
+    #[test]
+    fn prefill_speedup_matches_paper_band() {
+        // Table 8, Qwen2.5-7B @ 4/2048 on RTX 5090: FP16 888ms vs
+        // ARCQuant 251ms → 3.5x; our model should land in a 2-5x band.
+        let fp = prefill_estimate(Gpu::Rtx5090, "qwen7b-sim", GemmPath::Fp16, 4, 2048, 0);
+        let arc = prefill_estimate(
+            Gpu::Rtx5090,
+            "qwen7b-sim",
+            GemmPath::Nvfp4Aug { s: 256 },
+            4,
+            2048,
+            256,
+        );
+        let speedup = fp.latency_ms / arc.latency_ms;
+        assert!(
+            (2.0..5.0).contains(&speedup),
+            "speedup {speedup} out of band (fp {} arc {})",
+            fp.latency_ms,
+            arc.latency_ms
+        );
+        // memory drops by 1.5-3x (paper: 1.5-2.8x)
+        let mem_ratio = fp.memory_gb / arc.memory_gb;
+        assert!((1.3..3.5).contains(&mem_ratio), "mem ratio {mem_ratio}");
+    }
+
+    #[test]
+    fn arc_vs_nvfp4_latency_overhead_3_to_9_pct() {
+        // Paper §4.3: "compared to uncompensated NVFP4, latency increases
+        // by only 3%-9%".
+        for (bsz, len) in [(4usize, 2048usize), (32, 512)] {
+            let nv = prefill_estimate(Gpu::Rtx5090, "qwen7b-sim", GemmPath::Nvfp4, bsz, len, 0);
+            let arc = prefill_estimate(
+                Gpu::Rtx5090,
+                "qwen7b-sim",
+                GemmPath::Nvfp4Aug { s: 256 },
+                bsz,
+                len,
+                256,
+            );
+            let overhead = arc.latency_ms / nv.latency_ms - 1.0;
+            assert!(
+                (0.0..0.15).contains(&overhead),
+                "overhead {overhead} at ({bsz},{len})"
+            );
+        }
+    }
+
+    #[test]
+    fn quant_kernel_share_is_small() {
+        // Fig 8b: fused-quant cost is a small share of total (4.9% total
+        // ARCQuant overhead, quant kernel a fraction of that).
+        let arc = prefill_estimate(
+            Gpu::RtxPro6000,
+            "qwen7b-sim",
+            GemmPath::Nvfp4Aug { s: 256 },
+            32,
+            2048,
+            256,
+        );
+        assert!(arc.quant_overhead_ms / arc.latency_ms < 0.15);
+    }
+
+    #[test]
+    fn paper_dims_known_models() {
+        assert!(paper_dims("llama8b-sim").is_some());
+        assert!(paper_dims("qwen32b-sim").is_some());
+        assert!(paper_dims("mystery").is_none());
+    }
+}

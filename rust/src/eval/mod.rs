@@ -1,0 +1,14 @@
+//! Evaluation harness: perplexity + synthetic task suite.
+//!
+//! [`ppl`] computes windowed perplexity over a token stream — the
+//! WikiText2 PPL column of Tables 1/2/5/6. [`tasks`] builds the
+//! zero-shot / few-shot multiple-choice analogs of the paper's task
+//! suite (ARC-C, HellaSwag, Lambada, PIQA, Winogrande; 5-shot MMLU;
+//! HumanEval/MBPP/GSM8K/CMATH domain tasks) from held-out synthetic
+//! corpora.
+
+pub mod ppl;
+pub mod tasks;
+
+pub use ppl::{perplexity, PplResult};
+pub use tasks::{task_suite, TaskResult, TaskSpec};

@@ -1,0 +1,208 @@
+//! Synthetic multiple-choice task suite — the lm-eval stand-in.
+//!
+//! Each task instance: a context window from a held-out corpus region,
+//! the true continuation token, and 3 deterministic distractors. The
+//! model scores each candidate by next-token log-probability; accuracy =
+//! fraction ranked first. Task variants differ in context length and
+//! corpus domain, mirroring the paper's suite:
+//!
+//!   Arc-C  → short context (harder)      Hella → medium context
+//!   Lamba  → long context (word pred.)   PIQA  → medium, shifted region
+//!   Wino   → short, shifted region       MMLU  → 5-shot: 5 demo windows
+//!   HumanEval/MBPP (HE/Mbpp)  → code domain, pass@1 analog
+//!   GSM8K/CMATH               → math domain
+//!
+//! Distractors are drawn from the corpus' own unigram distribution
+//! (excluding the answer), which keeps chance at 25% and makes the task
+//! sensitive to model quality — quantization error shows up directly.
+
+use crate::model::Engine;
+use crate::util::{pool, Prng};
+
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub name: &'static str,
+    pub context_len: usize,
+    /// offset multiplier into the eval stream (keeps tasks disjoint)
+    pub region: usize,
+    pub n_items: usize,
+    /// few-shot demos prepended (MMLU analog uses 5)
+    pub shots: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct TaskResult {
+    pub name: &'static str,
+    pub accuracy: f64,
+    pub items: usize,
+}
+
+/// The paper's zero-shot suite + MMLU analog.
+pub fn zero_shot_specs() -> Vec<TaskSpec> {
+    vec![
+        TaskSpec { name: "Arc-C", context_len: 12, region: 0, n_items: 64, shots: 0 },
+        TaskSpec { name: "Hella", context_len: 24, region: 1, n_items: 64, shots: 0 },
+        TaskSpec { name: "Lamba", context_len: 48, region: 2, n_items: 64, shots: 0 },
+        TaskSpec { name: "PIQA", context_len: 24, region: 3, n_items: 64, shots: 0 },
+        TaskSpec { name: "Wino", context_len: 16, region: 4, n_items: 64, shots: 0 },
+    ]
+}
+
+pub fn mmlu_spec() -> TaskSpec {
+    TaskSpec { name: "MMLU", context_len: 16, region: 5, n_items: 64, shots: 5 }
+}
+
+/// Domain tasks (code / math corpora).
+pub fn domain_specs(prefix: &'static str) -> Vec<TaskSpec> {
+    // HE / HE+ / Mbpp / Mbpp+ analog: same domain, increasing difficulty
+    // (shorter context = harder), disjoint regions.
+    match prefix {
+        "code" => vec![
+            TaskSpec { name: "HE", context_len: 24, region: 0, n_items: 64, shots: 0 },
+            TaskSpec { name: "HE+", context_len: 12, region: 1, n_items: 64, shots: 0 },
+            TaskSpec { name: "Mbpp", context_len: 24, region: 2, n_items: 64, shots: 0 },
+            TaskSpec { name: "Mbpp+", context_len: 12, region: 3, n_items: 64, shots: 0 },
+        ],
+        _ => vec![
+            TaskSpec { name: "GSM8K", context_len: 24, region: 0, n_items: 64, shots: 0 },
+            TaskSpec { name: "CMATH", context_len: 12, region: 1, n_items: 64, shots: 0 },
+        ],
+    }
+}
+
+/// Unigram counts for distractor sampling.
+fn unigram(stream: &[u16], vocab: usize) -> Vec<f32> {
+    let mut counts = vec![1.0f32; vocab];
+    for &t in stream {
+        counts[t as usize % vocab] += 1.0;
+    }
+    counts
+}
+
+/// Run one task on an eval stream.
+pub fn run_task(engine: &Engine, stream: &[u16], spec: &TaskSpec, seed: u64) -> TaskResult {
+    let vocab = engine.cfg.vocab;
+    let uni = unigram(stream, vocab);
+    let item_stride = spec.context_len * (spec.shots + 1) + 8;
+    let region_off = spec.region * spec.n_items * item_stride % (stream.len() / 2);
+
+    let correct: Vec<bool> = pool::par_map(spec.n_items, |i| {
+        let mut rng = Prng::new(seed ^ (spec.region as u64) << 32 ^ i as u64);
+        let start = (region_off + i * item_stride) % (stream.len() - item_stride - 1);
+        // few-shot demos + context, contiguous from the stream
+        let ctx_len = spec.context_len * (spec.shots + 1);
+        let ctx = &stream[start..start + ctx_len];
+        let answer = stream[start + ctx_len] as usize;
+        // 3 distractors from the unigram distribution, != answer
+        let mut cands = vec![answer];
+        while cands.len() < 4 {
+            let d = rng.categorical(&uni);
+            if d != answer && !cands.contains(&d) {
+                cands.push(d);
+            }
+        }
+        let logits = engine.forward(ctx, None, None);
+        let last = logits.row(logits.rows - 1);
+        // model answers correctly if the true token has the max logit
+        // among candidates
+        let best = cands
+            .iter()
+            .max_by(|&&a, &&b| last[a].partial_cmp(&last[b]).unwrap())
+            .copied()
+            .unwrap();
+        best == answer
+    });
+    let acc = correct.iter().filter(|&&c| c).count() as f64 / spec.n_items as f64;
+    TaskResult {
+        name: spec.name,
+        accuracy: 100.0 * acc,
+        items: spec.n_items,
+    }
+}
+
+/// Run the full zero-shot suite + average.
+pub fn task_suite(
+    engine: &Engine,
+    stream: &[u16],
+    specs: &[TaskSpec],
+    seed: u64,
+) -> (Vec<TaskResult>, f64) {
+    let results: Vec<TaskResult> = specs
+        .iter()
+        .map(|s| run_task(engine, stream, s, seed))
+        .collect();
+    let avg = results.iter().map(|r| r.accuracy).sum::<f64>() / results.len().max(1) as f64;
+    (results, avg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Engine, EngineMode, ModelConfig, Weights};
+
+    fn engine() -> Engine {
+        let cfg = ModelConfig::tiny_test();
+        let w = Weights::synthetic(&cfg, 11);
+        Engine::new(cfg, w, EngineMode::Fp32, None).unwrap()
+    }
+
+    fn stream() -> Vec<u16> {
+        (0..20_000u32).map(|i| ((i * 37 + i / 7) % 256) as u16).collect()
+    }
+
+    #[test]
+    fn task_accuracy_in_range_and_deterministic() {
+        let e = engine();
+        let s = stream();
+        let spec = TaskSpec { name: "Arc-C", context_len: 8, region: 0, n_items: 16, shots: 0 };
+        let a = run_task(&e, &s, &spec, 0);
+        let b = run_task(&e, &s, &spec, 0);
+        assert_eq!(a.accuracy, b.accuracy);
+        assert!((0.0..=100.0).contains(&a.accuracy));
+        assert_eq!(a.items, 16);
+    }
+
+    #[test]
+    fn untrained_model_near_chance() {
+        // 4 candidates → chance = 25%; untrained model should be broadly
+        // near chance (wide band, it's a random function).
+        let e = engine();
+        let s = stream();
+        let spec = TaskSpec { name: "Hella", context_len: 8, region: 1, n_items: 48, shots: 0 };
+        let r = run_task(&e, &s, &spec, 0);
+        assert!(r.accuracy >= 2.0 && r.accuracy <= 80.0, "acc={}", r.accuracy);
+    }
+
+    #[test]
+    fn suite_reports_average() {
+        let e = engine();
+        let s = stream();
+        let specs = vec![
+            TaskSpec { name: "Arc-C", context_len: 8, region: 0, n_items: 8, shots: 0 },
+            TaskSpec { name: "Wino", context_len: 8, region: 4, n_items: 8, shots: 0 },
+        ];
+        let (results, avg) = task_suite(&e, &s, &specs, 0);
+        assert_eq!(results.len(), 2);
+        let manual = (results[0].accuracy + results[1].accuracy) / 2.0;
+        assert!((avg - manual).abs() < 1e-9);
+    }
+
+    #[test]
+    fn few_shot_uses_longer_context() {
+        let e = engine();
+        let s = stream();
+        let spec = mmlu_spec();
+        // just verifies the 5-shot path runs (context = 6x16 tokens)
+        let r = run_task(&e, &s, &TaskSpec { n_items: 4, ..spec }, 0);
+        assert_eq!(r.items, 4);
+    }
+
+    #[test]
+    fn specs_cover_paper_suite() {
+        let names: Vec<&str> = zero_shot_specs().iter().map(|s| s.name).collect();
+        assert_eq!(names, vec!["Arc-C", "Hella", "Lamba", "PIQA", "Wino"]);
+        assert_eq!(mmlu_spec().shots, 5);
+        assert_eq!(domain_specs("code").len(), 4);
+        assert_eq!(domain_specs("math").len(), 2);
+    }
+}

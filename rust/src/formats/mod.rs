@@ -1,0 +1,161 @@
+//! Block-scaled quantization formats (paper Appendix A, Table 7).
+//!
+//! * **NVFP4** — g=16 E2M1 elements, E4M3 block scale, plus a per-tensor
+//!   FP32 scale (the hierarchical Element → Block Scale → Tensor Scale
+//!   structure unique to NVFP4).
+//! * **MXFP4 / MXFP6 / MXFP8** — OCP Microscaling: g=32 elements with an
+//!   exponent-only E8M0 block scale.
+//! * **INT4-g128** — symmetric integer groups (Atom-style), for the
+//!   generalizability ablation (Table 6).
+//!
+//! Quantization is performed row-wise along the channel (reduction)
+//! dimension, matching how activations X[N, K] and weights W[M, K] are
+//! blocked for the NVFP4 GEMM.
+
+pub mod blockquant;
+pub mod spec;
+
+pub use blockquant::{QuantizedMat, RowQuantizer};
+pub use spec::{format_spec, table7_formats, FormatSpec};
+
+use crate::numerics::FpKind;
+
+/// Every quantization format exercised by the paper's experiments.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Format {
+    /// NVFP4: g=16, E2M1 elements, E4M3 block scale + FP32 tensor scale.
+    Nvfp4,
+    /// MXFP4: g=32, E2M1 elements, E8M0 block scale.
+    Mxfp4,
+    /// MXFP6 (E2M3 variant): g=32, E8M0 scale.
+    Mxfp6E2M3,
+    /// MXFP6 (E3M2 variant): g=32, E8M0 scale.
+    Mxfp6E3M2,
+    /// MXFP8 (E4M3 variant): g=32, E8M0 scale — the paper's W4A8
+    /// activation format and §3.4 comparison point.
+    Mxfp8E4M3,
+    /// MXFP8 (E5M2 variant): g=32, E8M0 scale.
+    Mxfp8E5M2,
+    /// Symmetric INT4 with configurable group (Atom uses 128).
+    Int4 { group: usize },
+}
+
+impl Format {
+    /// Block/group size g.
+    pub fn group(self) -> usize {
+        match self {
+            Format::Nvfp4 => 16,
+            Format::Int4 { group } => group,
+            _ => 32,
+        }
+    }
+
+    /// Element minifloat kind (None for integer formats).
+    pub fn element(self) -> Option<FpKind> {
+        match self {
+            Format::Nvfp4 | Format::Mxfp4 => Some(FpKind::E2M1),
+            Format::Mxfp6E2M3 => Some(FpKind::E2M3),
+            Format::Mxfp6E3M2 => Some(FpKind::E3M2),
+            Format::Mxfp8E4M3 => Some(FpKind::E4M3),
+            Format::Mxfp8E5M2 => Some(FpKind::E5M2),
+            Format::Int4 { .. } => None,
+        }
+    }
+
+    /// Bits per element.
+    pub fn element_bits(self) -> u32 {
+        match self {
+            Format::Nvfp4 | Format::Mxfp4 | Format::Int4 { .. } => 4,
+            Format::Mxfp6E2M3 | Format::Mxfp6E3M2 => 6,
+            Format::Mxfp8E4M3 | Format::Mxfp8E5M2 => 8,
+        }
+    }
+
+    /// Bits per block scale.
+    pub fn scale_bits(self) -> u32 {
+        match self {
+            Format::Int4 { .. } => 32, // f32 group scales in our sim
+            _ => 8,
+        }
+    }
+
+    /// Does the format carry an additional per-tensor FP32 scale?
+    pub fn has_tensor_scale(self) -> bool {
+        matches!(self, Format::Nvfp4)
+    }
+
+    /// Max representable element magnitude (q_max in Eq. 1).
+    pub fn qmax(self) -> f32 {
+        match self.element() {
+            Some(k) => k.max_normal(),
+            None => 7.0, // INT4 symmetric
+        }
+    }
+
+    /// Storage bytes for an [rows, cols] matrix in this format, including
+    /// block scales and the tensor scale. cols padded up to the group.
+    pub fn storage_bytes(self, rows: usize, cols: usize) -> u64 {
+        let g = self.group();
+        let blocks_per_row = cols.div_ceil(g) as u64;
+        let padded_cols = blocks_per_row * g as u64;
+        let elem_bits = rows as u64 * padded_cols * self.element_bits() as u64;
+        let scale_bits = rows as u64 * blocks_per_row * self.scale_bits() as u64;
+        let tensor_bits = if self.has_tensor_scale() { 32 } else { 0 };
+        (elem_bits + scale_bits + tensor_bits).div_ceil(8)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Format::Nvfp4 => "NVFP4",
+            Format::Mxfp4 => "MXFP4",
+            Format::Mxfp6E2M3 => "MXFP6-E2M3",
+            Format::Mxfp6E3M2 => "MXFP6-E3M2",
+            Format::Mxfp8E4M3 => "MXFP8-E4M3",
+            Format::Mxfp8E5M2 => "MXFP8-E5M2",
+            Format::Int4 { .. } => "INT4",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn groups_match_table7() {
+        assert_eq!(Format::Nvfp4.group(), 16);
+        assert_eq!(Format::Mxfp4.group(), 32);
+        assert_eq!(Format::Mxfp8E4M3.group(), 32);
+        assert_eq!(Format::Int4 { group: 128 }.group(), 128);
+    }
+
+    #[test]
+    fn qmax_matches_table7() {
+        assert_eq!(Format::Nvfp4.qmax(), 6.0);
+        assert_eq!(Format::Mxfp4.qmax(), 6.0);
+        assert_eq!(Format::Mxfp6E2M3.qmax(), 7.5);
+        assert_eq!(Format::Mxfp6E3M2.qmax(), 28.0);
+        assert_eq!(Format::Mxfp8E4M3.qmax(), 448.0);
+        assert_eq!(Format::Mxfp8E5M2.qmax(), 57344.0);
+    }
+
+    #[test]
+    fn storage_accounting() {
+        // 1 row of 32 cols in NVFP4: 32 elems * 4b + 2 scales * 8b + 32b
+        // tensor scale = 128 + 16 + 32 = 176 bits = 22 bytes.
+        assert_eq!(Format::Nvfp4.storage_bytes(1, 32), 22);
+        // MXFP8: 32*8 + 8 = 264 bits = 33 bytes.
+        assert_eq!(Format::Mxfp8E4M3.storage_bytes(1, 32), 33);
+        // NVFP4 is ~2x smaller than MXFP8 at scale.
+        let nv = Format::Nvfp4.storage_bytes(4096, 4096);
+        let mx8 = Format::Mxfp8E4M3.storage_bytes(4096, 4096);
+        assert!((mx8 as f64 / nv as f64) > 1.8);
+    }
+
+    #[test]
+    fn padding_rounds_up_to_group() {
+        // 17 cols in NVFP4 → padded to 32 (2 blocks).
+        let b = Format::Nvfp4.storage_bytes(1, 17);
+        assert_eq!(b, Format::Nvfp4.storage_bytes(1, 32));
+    }
+}

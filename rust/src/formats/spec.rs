@@ -1,0 +1,104 @@
+//! Format parameter registry — the paper's Appendix A Table 7 as code.
+//! `report::table7` prints this verbatim; tests pin every row.
+
+use super::Format;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct FormatSpec {
+    pub family: &'static str,
+    pub element_bits: u32,
+    pub element_type: &'static str,
+    pub bias: i32,
+    pub max_normal: f32,
+    pub block_size: usize,
+    pub scale_type: &'static str,
+    pub scale_bits: u32,
+    pub tensor_scale: Option<&'static str>,
+}
+
+/// Table 7 row for one format.
+pub fn format_spec(fmt: Format) -> FormatSpec {
+    let (family, element_type, bias) = match fmt {
+        Format::Nvfp4 => ("NVFP4", "FP4 (E2M1)", 1),
+        Format::Mxfp4 => ("MXFP4", "FP4 (E2M1)", 1),
+        Format::Mxfp6E2M3 => ("MXFP6", "FP6 (E2M3)", 1),
+        Format::Mxfp6E3M2 => ("MXFP6", "FP6 (E3M2)", 3),
+        Format::Mxfp8E4M3 => ("MXFP8", "FP8 (E4M3)", 7),
+        Format::Mxfp8E5M2 => ("MXFP8", "FP8 (E5M2)", 15),
+        Format::Int4 { .. } => ("INT4", "INT4 (sym)", 0),
+    };
+    FormatSpec {
+        family,
+        element_bits: fmt.element_bits(),
+        element_type,
+        bias,
+        max_normal: fmt.qmax(),
+        block_size: fmt.group(),
+        scale_type: match fmt {
+            Format::Nvfp4 => "E4M3",
+            Format::Int4 { .. } => "FP32",
+            _ => "E8M0",
+        },
+        scale_bits: fmt.scale_bits(),
+        tensor_scale: if fmt.has_tensor_scale() {
+            Some("FP32")
+        } else {
+            None
+        },
+    }
+}
+
+/// All formats in Table 7 order.
+pub fn table7_formats() -> Vec<Format> {
+    vec![
+        Format::Mxfp8E5M2,
+        Format::Mxfp8E4M3,
+        Format::Mxfp6E3M2,
+        Format::Mxfp6E2M3,
+        Format::Mxfp4,
+        Format::Nvfp4,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table7_rows_pinned() {
+        // Spot-check every cell the paper prints.
+        let nv = format_spec(Format::Nvfp4);
+        assert_eq!(
+            nv,
+            FormatSpec {
+                family: "NVFP4",
+                element_bits: 4,
+                element_type: "FP4 (E2M1)",
+                bias: 1,
+                max_normal: 6.0,
+                block_size: 16,
+                scale_type: "E4M3",
+                scale_bits: 8,
+                tensor_scale: Some("FP32"),
+            }
+        );
+        let mx8 = format_spec(Format::Mxfp8E5M2);
+        assert_eq!(mx8.bias, 15);
+        assert_eq!(mx8.max_normal, 57344.0);
+        assert_eq!(mx8.block_size, 32);
+        assert_eq!(mx8.scale_type, "E8M0");
+        assert_eq!(mx8.tensor_scale, None);
+
+        let mx6 = format_spec(Format::Mxfp6E3M2);
+        assert_eq!((mx6.bias, mx6.max_normal), (3, 28.0));
+        let mx6b = format_spec(Format::Mxfp6E2M3);
+        assert_eq!((mx6b.bias, mx6b.max_normal), (1, 7.5));
+        let mx4 = format_spec(Format::Mxfp4);
+        assert_eq!((mx4.bias, mx4.max_normal, mx4.block_size), (1, 6.0, 32));
+    }
+
+    #[test]
+    fn table7_has_six_rows() {
+        assert_eq!(table7_formats().len(), 6);
+    }
+}

@@ -1,0 +1,38 @@
+//! # ARCQuant — NVFP4 quantization with Augmented Residual Channels
+//!
+//! Full-system reproduction of *"ARCQuant: Boosting NVFP4 Quantization
+//! with Augmented Residual Channels for LLMs"* (ACL 2026) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — serving coordinator, quantization substrate,
+//!   baselines, calibration, eval harness, Blackwell cost model, report
+//!   generators, and the PJRT runtime that executes AOT-compiled JAX
+//!   artifacts. Python is never on the request path.
+//! * **L2 (`python/compile/model.py`)** — tiny-LLaMA forward pass with
+//!   ARCQuant QDQ linears, lowered once to HLO text.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels: NVFP4 block
+//!   quantization, the fused reorder+RMSNorm+primary+residual kernel, and
+//!   the augmented (K+S) GEMM.
+//!
+//! See `DESIGN.md` for the experiment-by-experiment reproduction map and
+//! `EXPERIMENTS.md` for measured results.
+
+pub mod baselines;
+pub mod calib;
+pub mod coordinator;
+pub mod costmodel;
+pub mod eval;
+pub mod formats;
+pub mod model;
+pub mod numerics;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Library version, used in artifact metadata and the CLI banner.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Default random seed — the paper fixes seed 0 for all experiments.
+pub const DEFAULT_SEED: u64 = 0;

@@ -1,0 +1,375 @@
+//! `arcquant` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   report     regenerate paper tables/figures (`--table N`, `--figure N`,
+//!              `--bounds`, `--all`)
+//!   serve      run the serving coordinator on the AOT artifacts
+//!   calibrate  run the Rust calibration pipeline and save plans
+//!   eval       evaluate one (model, method) pair
+//!   bench-kernels  PJRT kernel-latency sweep (Fig. 8a measured rows)
+//!   info       artifact/manifest summary
+
+use arcquant::baselines::Method;
+use arcquant::coordinator::{serve_workload, BatcherConfig, RouterConfig, ServeConfig, Variant};
+use arcquant::formats::Format;
+use arcquant::report::{ctx::model_domain, figures, tables, Ctx, EvalBudget};
+use arcquant::util::cli::Args;
+use arcquant::util::Timer;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("report") => cmd_report(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("calibrate") => cmd_calibrate(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("bench-kernels") => cmd_bench_kernels(&args),
+        Some("info") => cmd_info(&args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand '{o}'\n");
+            }
+            print_help();
+            if other.is_none() { 0 } else { 2 }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "arcquant {} — ARCQuant (NVFP4 + Augmented Residual Channels) reproduction
+
+USAGE: arcquant <subcommand> [--flags]
+
+  report    --table 1..8 | --figure 1|2|3|6|7|8|9 | --bounds | --all
+            [--artifacts DIR] [--quick]
+  serve     [--model llama8b-sim] [--requests 24] [--variant arc|fp32|rtn|mix]
+            [--artifacts DIR]
+  calibrate --model NAME [--windows 8] [--window-len 128] [--out FILE]
+  eval      --model NAME --method fp16|rtn|smooth|quarot|atom|flatquant|w4a8|arcquant
+            [--format nvfp4|mxfp4|int4]
+  bench-kernels [--artifacts DIR]
+  info      [--artifacts DIR]",
+        arcquant::VERSION
+    );
+}
+
+fn budget(args: &Args) -> EvalBudget {
+    if args.bool_flag("quick") {
+        EvalBudget::quick()
+    } else {
+        EvalBudget::default()
+    }
+}
+
+fn cmd_report(args: &Args) -> i32 {
+    let ctx = Ctx::new(&args.str_or("artifacts", "artifacts"), budget(args));
+    let run = |name: &str, f: &dyn Fn(&Ctx) -> Result<String, String>| {
+        let t = Timer::start();
+        match f(&ctx) {
+            Ok(s) => println!("{s}  [{name} in {:.1}s]\n", t.ms() / 1e3),
+            Err(e) => eprintln!("{name} failed: {e}"),
+        }
+    };
+    let all = args.bool_flag("all");
+    if args.bool_flag("bounds") || all {
+        println!("{}", figures::bounds_report());
+    }
+    let table = args.str_flag("table").map(|s| s.to_string());
+    let figure = args.str_flag("figure").map(|s| s.to_string());
+    let tables_list: Vec<(&str, &dyn Fn(&Ctx) -> Result<String, String>)> = vec![
+        ("table1", &tables::table1),
+        ("table2", &tables::table2),
+        ("table3", &tables::table3),
+        ("table4", &tables::table4),
+        ("table5", &tables::table5),
+        ("table6", &tables::table6),
+        ("table7", &tables::table7),
+        ("table8", &tables::table8),
+    ];
+    let figures_list: Vec<(&str, &dyn Fn(&Ctx) -> Result<String, String>)> = vec![
+        ("figure1", &figures::figure1),
+        ("figure2", &figures::figure2),
+        ("figure3", &figures::figure3),
+        ("figure6", &figures::figure6),
+        ("figure7", &figures::figure7),
+        ("figure8", &figures::figure8),
+        ("figure9", &figures::figure9),
+    ];
+    if all {
+        for (n, f) in &tables_list {
+            run(n, *f);
+        }
+        for (n, f) in &figures_list {
+            run(n, *f);
+        }
+        return 0;
+    }
+    if let Some(t) = table {
+        let key = format!("table{t}");
+        match tables_list.iter().find(|(n, _)| *n == key) {
+            Some((n, f)) => run(n, *f),
+            None => {
+                eprintln!("unknown table {t}");
+                return 2;
+            }
+        }
+        return 0;
+    }
+    if let Some(fg) = figure {
+        let key = format!("figure{fg}");
+        match figures_list.iter().find(|(n, _)| *n == key) {
+            Some((n, f)) => run(n, *f),
+            None => {
+                eprintln!("unknown figure {fg}");
+                return 2;
+            }
+        }
+        return 0;
+    }
+    if !args.bool_flag("bounds") {
+        eprintln!("specify --table N, --figure N, --bounds or --all");
+        return 2;
+    }
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let model = args.str_or("model", "llama8b-sim");
+    let n = args.usize_or("requests", 24).unwrap_or(24);
+    let variant = args.str_or("variant", "mix");
+    let workload = match variant.as_str() {
+        "mix" => vec![
+            (Variant::Fp32, n / 3),
+            (Variant::ArcQuant, n / 3),
+            (Variant::Nvfp4Rtn, n - 2 * (n / 3)),
+        ],
+        v => match Variant::parse(v) {
+            Some(v) => vec![(v, n)],
+            None => {
+                eprintln!("unknown variant {v}");
+                return 2;
+            }
+        },
+    };
+    let ctx = Ctx::new(&artifacts, EvalBudget::quick());
+    let stream = match ctx.eval_stream(model_domain(&model)) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let cfg = ServeConfig {
+        artifacts,
+        model,
+        workload,
+        req_len: 64,
+        batcher: BatcherConfig::default(),
+        router: RouterConfig::default(),
+    };
+    match serve_workload(&cfg, &stream) {
+        Ok(r) => {
+            println!("platform: {}", r.platform);
+            println!(
+                "completed {} rejected {} wall {:.1}ms p50 {:.1}ms p90 {:.1}ms p99 {:.1}ms",
+                r.completed, r.rejected, r.wall_ms, r.p50_ms, r.p90_ms, r.p99_ms
+            );
+            for (v, s) in &r.per_variant {
+                println!(
+                    "  {v:9} requests {:3}  mean exec {:8.1}ms  ppl {:7.3}  throughput {:8.1} tok/s",
+                    s.requests, s.mean_execute_ms, s.ppl, s.throughput_tok_s
+                );
+            }
+            println!("stage breakdown:");
+            for (stage, ms, share) in &r.stage_breakdown {
+                println!("  {stage:22} {ms:10.1}ms {share:5.1}%");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("serve failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_calibrate(args: &Args) -> i32 {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let model = args.str_or("model", "llama8b-sim");
+    let windows = args.usize_or("windows", 8).unwrap_or(8);
+    let wlen = args.usize_or("window-len", 128).unwrap_or(128);
+    let ctx = Ctx::new(&artifacts, EvalBudget::quick());
+    let (cfg, w) = match ctx.model(&model) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let stream = ctx.corpus(model_domain(&model)).unwrap();
+    match arcquant::calib::run_calibration(&cfg, &w, &stream, windows, wlen) {
+        Ok(c) => {
+            let out = args.str_or("out", &format!("{artifacts}/{model}.rust-calib.json"));
+            if let Err(e) = c.save(&out) {
+                eprintln!("save failed: {e}");
+                return 1;
+            }
+            println!(
+                "calibrated {model}: {} sites in {:.2}s → {out}",
+                c.sites.len(),
+                c.seconds
+            );
+            for kind in ["attn_in", "attn_out", "mlp_in", "mlp_out"] {
+                println!(
+                    "  S per layer ({kind}): {:?}",
+                    c.s_series(kind, Format::Nvfp4, 512)
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("calibration failed: {e}");
+            1
+        }
+    }
+}
+
+fn parse_method(args: &Args) -> Result<Option<Method>, String> {
+    let fmt = match args.str_or("format", "nvfp4").as_str() {
+        "nvfp4" => Format::Nvfp4,
+        "mxfp4" => Format::Mxfp4,
+        "int4" => Format::Int4 { group: 128 },
+        other => return Err(format!("unknown format {other}")),
+    };
+    Ok(match args.str_or("method", "arcquant").as_str() {
+        "fp16" | "fp32" => None,
+        "rtn" => Some(Method::Rtn { fmt }),
+        "smooth" => Some(Method::Smooth { fmt, alpha: 0.5 }),
+        "quarot" => Some(Method::QuaRot { fmt, seed: 0 }),
+        "atom" => Some(Method::Atom { outlier_channels: 128 }),
+        "flatquant" => Some(Method::FlatQuant { fmt }),
+        "w4a8" => Some(Method::W4A8Rtn),
+        "arcquant" => Some(Method::ArcQuant { fmt, max_s: Some(512) }),
+        other => return Err(format!("unknown method {other}")),
+    })
+}
+
+fn cmd_eval(args: &Args) -> i32 {
+    let ctx = Ctx::new(&args.str_or("artifacts", "artifacts"), budget(args));
+    let model = args.str_or("model", "llama8b-sim");
+    let method = match parse_method(args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    match ctx.eval_row(&model, method) {
+        Ok(r) => {
+            println!("model {model} method {}", r.method);
+            for (task, acc) in &r.zero_shot {
+                println!("  {task:6} {acc:6.2}");
+            }
+            println!("  avg    {:6.2}", r.avg);
+            println!("  ppl    {:6.2}", r.ppl);
+            println!("  mmlu   {:6.2}", r.mmlu);
+            println!("  avg S  {}", r.avg_s);
+            0
+        }
+        Err(e) => {
+            eprintln!("eval failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_bench_kernels(args: &Args) -> i32 {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let rt = match arcquant::runtime::Runtime::new(&artifacts) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e:#}");
+            return 1;
+        }
+    };
+    let manifest = match arcquant::runtime::Manifest::load(rt.root()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e:#}");
+            return 1;
+        }
+    };
+    // Figure 8a measured rows: the standalone augmented-GEMM artifacts.
+    println!("kernel-latency sweep (PJRT CPU, measured):");
+    for s in ["0", "128", "512"] {
+        let Some(path) = manifest
+            .raw
+            .get("kernels")
+            .and_then(|k| k.get("gemm_aug"))
+            .and_then(|g| g.get(s))
+            .and_then(|p| p.as_str())
+        else {
+            continue;
+        };
+        let exe = match rt.load(path) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("load {path}: {e:#}");
+                continue;
+            }
+        };
+        let kk = 256 * 4 + s.parse::<usize>().unwrap();
+        let x = vec![0.5f32; 64 * kk];
+        let w = vec![0.25f32; 128 * kk];
+        // warmup + timed runs
+        let _ = rt.run_f32(&exe, &[(&x, &[64, kk]), (&w, &[128, kk])]);
+        let t = Timer::start();
+        let iters = 5;
+        for _ in 0..iters {
+            let _ = rt.run_f32(&exe, &[(&x, &[64, kk]), (&w, &[128, kk])]);
+        }
+        println!(
+            "  gemm_aug S={s:4}  K+S={kk:5}  {:8.2} ms/iter",
+            t.ms() / iters as f64
+        );
+    }
+    if let Some(path) = manifest.kernel_hlo("fused_quant") {
+        if let Ok(exe) = rt.load(&path) {
+            let x = vec![0.1f32; 64 * 256];
+            let _ = rt.run_f32(&exe, &[(&x, &[64, 256])]);
+            let t = Timer::start();
+            for _ in 0..5 {
+                let _ = rt.run_f32(&exe, &[(&x, &[64, 256])]);
+            }
+            println!("  fused_quant (64x256, S=64): {:8.2} ms/iter", t.ms() / 5.0);
+        }
+    }
+    0
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    match arcquant::runtime::Manifest::load(std::path::Path::new(&artifacts)) {
+        Ok(m) => {
+            println!(
+                "artifacts: {artifacts}\n  batch={} seq={} vocab={}",
+                m.batch, m.seq, m.vocab
+            );
+            println!("  manifest bytes: {}", m.raw.dump().len());
+            0
+        }
+        Err(e) => {
+            eprintln!("{e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Model configuration — parsed from the `{model}.config.json` emitted by
+//! the Python trainer (single source of truth for architecture shapes).
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d: usize,
+    pub l: usize,
+    pub h: usize,
+    pub f: usize,
+    pub vocab: usize,
+    /// (channel, gain) pairs applied to the embedding output — the
+    /// outlier-channel phenomenon knob (see DESIGN.md substitutions).
+    pub outlier_boost: Vec<(usize, f32)>,
+    pub rms_eps: f32,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d / self.h
+    }
+
+    pub fn params_count(&self) -> usize {
+        let per_layer = 4 * self.d * self.d + 3 * self.d * self.f + 2 * self.d;
+        self.vocab * self.d + self.l * per_layer + self.d
+    }
+
+    pub fn from_json(text: &str) -> Result<ModelConfig, String> {
+        let j = Json::parse(text)?;
+        let get_usize = |k: &str| -> Result<usize, String> {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| format!("config missing '{k}'"))
+        };
+        let boost = j
+            .get("outlier_boost")
+            .and_then(|v| v.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|p| {
+                        let pair = p.as_arr()?;
+                        Some((pair[0].as_usize()?, pair[1].as_f64()? as f32))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(ModelConfig {
+            name: j
+                .get("name")
+                .and_then(|v| v.as_str())
+                .unwrap_or("unknown")
+                .to_string(),
+            d: get_usize("d")?,
+            l: get_usize("l")?,
+            h: get_usize("h")?,
+            f: get_usize("f")?,
+            vocab: get_usize("vocab")?,
+            outlier_boost: boost,
+            rms_eps: j
+                .get("rms_eps")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(1e-5) as f32,
+        })
+    }
+
+    pub fn load(path: &str) -> Result<ModelConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {path}: {e}"))?;
+        Self::from_json(&text)
+    }
+
+    /// The boost vector applied to embedding outputs.
+    pub fn boost_vector(&self) -> Vec<f32> {
+        let mut v = vec![1.0f32; self.d];
+        for &(ch, gain) in &self.outlier_boost {
+            v[ch % self.d] = gain;
+        }
+        v
+    }
+
+    /// A small config for unit tests (matches python tests' TINY).
+    pub fn tiny_test() -> ModelConfig {
+        ModelConfig {
+            name: "tiny-test".into(),
+            d: 128,
+            l: 2,
+            h: 4,
+            f: 256,
+            vocab: 256,
+            outlier_boost: vec![(7, 12.0), (33, 20.0), (61, 8.0), (100, 16.0)],
+            rms_eps: 1e-5,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let text = r#"{"name":"llama8b-sim","d":256,"l":6,"h":8,"f":768,
+                       "vocab":256,"outlier_boost":[[7,12.0],[33,20.0]],
+                       "rms_eps":1e-5}"#;
+        let c = ModelConfig::from_json(text).unwrap();
+        assert_eq!(c.d, 256);
+        assert_eq!(c.l, 6);
+        assert_eq!(c.head_dim(), 32);
+        assert_eq!(c.outlier_boost, vec![(7, 12.0), (33, 20.0)]);
+        let b = c.boost_vector();
+        assert_eq!(b[7], 12.0);
+        assert_eq!(b[0], 1.0);
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        assert!(ModelConfig::from_json(r#"{"name":"x"}"#).is_err());
+    }
+
+    #[test]
+    fn params_count_positive() {
+        assert!(ModelConfig::tiny_test().params_count() > 100_000);
+    }
+}

@@ -1,0 +1,503 @@
+//! Inference engine: full-sequence prefill (PPL / tasks / serving) and
+//! single-token decode with a KV cache, under any quantization method.
+//!
+//! The engine prepares one [`PreparedLinear`] per weight matrix offline
+//! (quantized weights, reorder permutations, augmented outlier columns)
+//! and runs the online path per forward. `EngineMode::Collect` exposes
+//! pre-quantization activations per site, which is how the calibration
+//! pipeline ([`crate::calib`]) gathers its statistics.
+
+use super::{site_names, ModelConfig, Weights};
+use crate::baselines::{LayerCalib, Method, PreparedLinear};
+use crate::tensor::{matmul_nt, Mat};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum EngineMode {
+    /// Plain f32 (the FP16 row of the tables).
+    Fp32,
+    /// Quantized with a method, using per-site calibration.
+    Quantized(Method),
+}
+
+/// One quantization site: the (1..=3) linears fed by the same activation.
+struct Site {
+    linears: Vec<PreparedLinear>,
+}
+
+pub struct Engine {
+    pub cfg: ModelConfig,
+    pub weights: Weights,
+    pub mode: EngineMode,
+    /// site name -> prepared linears (empty map in Fp32 mode).
+    sites: BTreeMap<String, Site>,
+    boost: Vec<f32>,
+}
+
+/// KV cache for incremental decode: per layer, K and V as [T_cur, D]
+/// row-appended matrices (single sequence; the coordinator batches at a
+/// higher level).
+pub struct KvCache {
+    pub k: Vec<Mat>,
+    pub v: Vec<Mat>,
+    pub capacity: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig, capacity: usize) -> KvCache {
+        KvCache {
+            k: (0..cfg.l).map(|_| Mat::zeros(0, cfg.d)).collect(),
+            v: (0..cfg.l).map(|_| Mat::zeros(0, cfg.d)).collect(),
+            capacity,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.k[0].rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn append(&mut self, layer: usize, k_rows: &Mat, v_rows: &Mat) {
+        let push = |dst: &mut Mat, src: &Mat| {
+            dst.data.extend_from_slice(&src.data);
+            dst.rows += src.rows;
+        };
+        push(&mut self.k[layer], k_rows);
+        push(&mut self.v[layer], v_rows);
+    }
+
+    /// Bytes held (Table 8 memory accounting).
+    pub fn bytes(&self) -> u64 {
+        self.k
+            .iter()
+            .zip(&self.v)
+            .map(|(k, v)| (k.data.len() + v.data.len()) as u64 * 4)
+            .sum()
+    }
+}
+
+impl Engine {
+    /// Prepare the engine. For quantized modes, `calib` must hold one
+    /// [`LayerCalib`] per site (from [`crate::calib::run_calibration`]).
+    pub fn new(
+        cfg: ModelConfig,
+        weights: Weights,
+        mode: EngineMode,
+        calib: Option<&BTreeMap<String, LayerCalib>>,
+    ) -> Result<Engine, String> {
+        let boost = cfg.boost_vector();
+        let mut sites = BTreeMap::new();
+        if let EngineMode::Quantized(method) = &mode {
+            let calib = calib.ok_or("quantized mode requires calibration")?;
+            for (i, lw) in weights.layers.iter().enumerate() {
+                let mk = |name: String, ws: Vec<&Mat>| -> Result<(String, Site), String> {
+                    let c = calib
+                        .get(&name)
+                        .ok_or_else(|| format!("missing calibration for {name}"))?;
+                    Ok((
+                        name,
+                        Site {
+                            linears: ws
+                                .into_iter()
+                                .map(|w| PreparedLinear::prepare(method, w, c))
+                                .collect(),
+                        },
+                    ))
+                };
+                for (name, site) in [
+                    mk(format!("layers.{i}.attn_in"), vec![&lw.wq, &lw.wk, &lw.wv])?,
+                    mk(format!("layers.{i}.attn_out"), vec![&lw.wo])?,
+                    mk(format!("layers.{i}.mlp_in"), vec![&lw.w1, &lw.w3])?,
+                    mk(format!("layers.{i}.mlp_out"), vec![&lw.w2])?,
+                ] {
+                    sites.insert(name, site);
+                }
+            }
+        }
+        Ok(Engine {
+            cfg,
+            weights,
+            mode,
+            sites,
+            boost,
+        })
+    }
+
+    fn site_forward(&self, name: &str, x: &Mat, fallback: &[&Mat]) -> Vec<Mat> {
+        match self.sites.get(name) {
+            Some(site) => site.linears.iter().map(|l| l.forward(x)).collect(),
+            None => fallback.iter().map(|w| matmul_nt(x, w)).collect(),
+        }
+    }
+
+    fn rmsnorm(&self, x: &Mat, gamma: &[f32]) -> Mat {
+        let mut out = x.clone();
+        for r in 0..out.rows {
+            let row = out.row_mut(r);
+            let ms: f32 =
+                row.iter().map(|&v| v * v).sum::<f32>() / row.len() as f32;
+            let inv = 1.0 / (ms + self.cfg.rms_eps).sqrt();
+            for (v, g) in row.iter_mut().zip(gamma) {
+                *v *= inv * g;
+            }
+        }
+        out
+    }
+
+    fn embed(&self, tokens: &[u16]) -> Mat {
+        let mut h = Mat::zeros(tokens.len(), self.cfg.d);
+        for (r, &t) in tokens.iter().enumerate() {
+            let src = self.weights.embed.row(t as usize % self.cfg.vocab);
+            let dst = h.row_mut(r);
+            for c in 0..self.cfg.d {
+                dst[c] = src[c] * self.boost[c];
+            }
+        }
+        h
+    }
+
+    /// RoPE over a [T, D] matrix laid out as H heads × head_dim,
+    /// positions `pos0..pos0+T`.
+    fn rope(&self, m: &mut Mat, pos0: usize) {
+        let hd = self.cfg.head_dim();
+        let half = hd / 2;
+        for r in 0..m.rows {
+            let pos = (pos0 + r) as f32;
+            let row = m.row_mut(r);
+            for h in 0..self.cfg.h {
+                let base = h * hd;
+                for i in 0..half {
+                    let freq = (-(10000f32).ln() * i as f32 / half as f32).exp();
+                    let ang = pos * freq;
+                    let (sin, cos) = ang.sin_cos();
+                    let a = row[base + i];
+                    let b = row[base + half + i];
+                    row[base + i] = a * cos - b * sin;
+                    row[base + half + i] = a * sin + b * cos;
+                }
+            }
+        }
+    }
+
+    /// Causal attention for one sequence: q,k,v are [T, D]; kv optionally
+    /// prepended from a cache (decode). Returns [T, D] context.
+    fn attention(&self, q: &Mat, k_all: &Mat, v_all: &Mat, pos0: usize) -> Mat {
+        let hd = self.cfg.head_dim();
+        let scale = 1.0 / (hd as f32).sqrt();
+        let t_q = q.rows;
+        let t_k = k_all.rows;
+        let mut ctx = Mat::zeros(t_q, self.cfg.d);
+        for h in 0..self.cfg.h {
+            let base = h * hd;
+            for i in 0..t_q {
+                let visible = pos0 + i + 1; // causal: keys [0, pos0+i]
+                let visible = visible.min(t_k);
+                // scores
+                let qi = &q.row(i)[base..base + hd];
+                let mut scores = Vec::with_capacity(visible);
+                let mut max_s = f32::NEG_INFINITY;
+                for j in 0..visible {
+                    let kj = &k_all.row(j)[base..base + hd];
+                    let s = crate::tensor::gemm::dot(qi, kj) * scale;
+                    max_s = max_s.max(s);
+                    scores.push(s);
+                }
+                // softmax
+                let mut denom = 0f32;
+                for s in scores.iter_mut() {
+                    *s = (*s - max_s).exp();
+                    denom += *s;
+                }
+                let inv = 1.0 / denom;
+                // weighted sum of V
+                let out = ctx.row_mut(i);
+                for (j, &p) in scores.iter().enumerate() {
+                    let vj = &v_all.row(j)[base..base + hd];
+                    let w = p * inv;
+                    for c in 0..hd {
+                        out[base + c] += w * vj[c];
+                    }
+                }
+            }
+        }
+        ctx
+    }
+
+    /// Full-sequence forward for one sequence of tokens. Returns logits
+    /// [T, V]. If `collect` is Some, pre-quant activations per site are
+    /// max-merged into it (calibration path). If `cache` is Some, K/V are
+    /// appended (prefill-for-decode path).
+    pub fn forward(
+        &self,
+        tokens: &[u16],
+        mut collect: Option<&mut BTreeMap<String, LayerCalib>>,
+        mut cache: Option<&mut KvCache>,
+    ) -> Mat {
+        let pos0 = cache.as_ref().map(|c| c.len()).unwrap_or(0);
+        let mut h = self.embed(tokens);
+        for (i, lw) in self.weights.layers.iter().enumerate() {
+            // ---- attention ----
+            let site = format!("layers.{i}.attn_in");
+            let xn = self.rmsnorm(&h, &lw.attn_norm);
+            if let Some(ref mut coll) = collect {
+                coll.entry(site.clone())
+                    .or_default()
+                    .merge(&LayerCalib::from_activations(&xn));
+            }
+            let mut qkv = self.site_forward(&site, &xn, &[&lw.wq, &lw.wk, &lw.wv]);
+            let mut v = qkv.pop().unwrap();
+            let mut k = qkv.pop().unwrap();
+            let mut q = qkv.pop().unwrap();
+            let _ = &mut v;
+            self.rope(&mut q, pos0);
+            self.rope(&mut k, pos0);
+
+            let ctx = match cache.as_mut() {
+                Some(c) => {
+                    c.append(i, &k, &v);
+                    self.attention(&q, &c.k[i], &c.v[i], pos0)
+                }
+                None => self.attention(&q, &k, &v, 0),
+            };
+
+            let site = format!("layers.{i}.attn_out");
+            if let Some(ref mut coll) = collect {
+                coll.entry(site.clone())
+                    .or_default()
+                    .merge(&LayerCalib::from_activations(&ctx));
+            }
+            let attn_out = self
+                .site_forward(&site, &ctx, &[&lw.wo])
+                .pop()
+                .unwrap();
+            for (a, b) in h.data.iter_mut().zip(&attn_out.data) {
+                *a += b;
+            }
+
+            // ---- MLP ----
+            let site = format!("layers.{i}.mlp_in");
+            let xn = self.rmsnorm(&h, &lw.mlp_norm);
+            if let Some(ref mut coll) = collect {
+                coll.entry(site.clone())
+                    .or_default()
+                    .merge(&LayerCalib::from_activations(&xn));
+            }
+            let mut gu = self.site_forward(&site, &xn, &[&lw.w1, &lw.w3]);
+            let u = gu.pop().unwrap();
+            let g = gu.pop().unwrap();
+            let mut act = Mat::zeros(h.rows, self.cfg.f);
+            for idx in 0..act.data.len() {
+                let gv = g.data[idx];
+                let silu = gv / (1.0 + (-gv).exp());
+                act.data[idx] = silu * u.data[idx];
+            }
+
+            let site = format!("layers.{i}.mlp_out");
+            if let Some(ref mut coll) = collect {
+                coll.entry(site.clone())
+                    .or_default()
+                    .merge(&LayerCalib::from_activations(&act));
+            }
+            let mlp_out = self
+                .site_forward(&site, &act, &[&lw.w2])
+                .pop()
+                .unwrap();
+            for (a, b) in h.data.iter_mut().zip(&mlp_out.data) {
+                *a += b;
+            }
+        }
+        let hn = self.rmsnorm(&h, &self.weights.final_norm);
+        matmul_nt(&hn, &self.weights.embed) // tied head: [T, V]
+    }
+
+    /// Prefill + return logits of the last position only.
+    pub fn prefill(&self, tokens: &[u16], cache: &mut KvCache) -> Vec<f32> {
+        let logits = self.forward(tokens, None, Some(cache));
+        logits.row(logits.rows - 1).to_vec()
+    }
+
+    /// Decode one token given the cache.
+    pub fn decode_step(&self, token: u16, cache: &mut KvCache) -> Vec<f32> {
+        let logits = self.forward(&[token], None, Some(cache));
+        logits.row(0).to_vec()
+    }
+
+    /// Average S (augmented channels) across sites — Figure 7 / Table
+    /// reporting. Returns per-site (name, s).
+    pub fn s_per_site(&self) -> Vec<(String, usize)> {
+        site_names(self.cfg.l)
+            .into_iter()
+            .map(|n| {
+                let s = self.sites.get(&n).map(|st| st.linears[0].s()).unwrap_or(0);
+                (n, s)
+            })
+            .collect()
+    }
+
+    /// Model weight memory footprint in bytes under the engine's mode
+    /// (Table 4 / Table 8 accounting).
+    pub fn weight_bytes(&self) -> u64 {
+        use crate::formats::Format;
+        let fmt_bytes = |m: &Mat, fmt: Option<Format>| -> u64 {
+            match fmt {
+                Some(f) => f.storage_bytes(m.rows, m.cols),
+                None => (m.data.len() * 2) as u64, // fp16 baseline storage
+            }
+        };
+        let fmt = match &self.mode {
+            EngineMode::Fp32 => None,
+            EngineMode::Quantized(m) => match m {
+                Method::Fp16 => None,
+                Method::Rtn { fmt } | Method::Smooth { fmt, .. } | Method::QuaRot { fmt, .. } | Method::FlatQuant { fmt } | Method::ArcQuant { fmt, .. } => Some(*fmt),
+                Method::W4A8Rtn => Some(Format::Mxfp4),
+                Method::Atom { .. } => Some(Format::Int4 { group: 128 }),
+            },
+        };
+        let mut total = (self.weights.embed.data.len() * 2) as u64; // embeddings fp16
+        for l in &self.weights.layers {
+            for m in [&l.wq, &l.wk, &l.wv, &l.wo, &l.w1, &l.w3, &l.w2] {
+                total += fmt_bytes(m, fmt);
+            }
+            total += ((l.attn_norm.len() + l.mlp_norm.len()) * 2) as u64;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Format;
+
+    fn tiny_engine(mode: EngineMode) -> Engine {
+        let cfg = ModelConfig::tiny_test();
+        let weights = Weights::synthetic(&cfg, 3);
+        let calib = if matches!(mode, EngineMode::Quantized(_)) {
+            // calibrate with the fp32 engine on a synthetic stream
+            let fp = Engine::new(cfg.clone(), weights.clone(), EngineMode::Fp32, None)
+                .unwrap();
+            let mut coll = BTreeMap::new();
+            let toks: Vec<u16> = (0..64u16).map(|i| (i * 37) % 256).collect();
+            fp.forward(&toks, Some(&mut coll), None);
+            Some(coll)
+        } else {
+            None
+        };
+        Engine::new(cfg, weights, mode, calib.as_ref()).unwrap()
+    }
+
+    #[test]
+    fn fp32_forward_shapes() {
+        let e = tiny_engine(EngineMode::Fp32);
+        let toks: Vec<u16> = (0..16).collect();
+        let logits = e.forward(&toks, None, None);
+        assert_eq!((logits.rows, logits.cols), (16, 256));
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn forward_deterministic() {
+        let e = tiny_engine(EngineMode::Fp32);
+        let toks: Vec<u16> = (0..8).collect();
+        let a = e.forward(&toks, None, None);
+        let b = e.forward(&toks, None, None);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn prefill_then_decode_matches_full_forward() {
+        // KV-cache correctness: prefill(t0..t5) + decode(t6) last-logits
+        // == forward(t0..t6) last-row logits.
+        let e = tiny_engine(EngineMode::Fp32);
+        let toks: Vec<u16> = vec![5, 9, 100, 7, 42, 13, 77];
+        let full = e.forward(&toks, None, None);
+        let want = full.row(toks.len() - 1);
+
+        let mut cache = KvCache::new(&e.cfg, 128);
+        e.prefill(&toks[..6], &mut cache);
+        let got = e.decode_step(toks[6], &mut cache);
+        for (a, b) in got.iter().zip(want) {
+            assert!(
+                (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+                "decode mismatch: {a} vs {b}"
+            );
+        }
+        assert_eq!(cache.len(), 7);
+        assert!(cache.bytes() > 0);
+    }
+
+    #[test]
+    fn quantized_engine_close_to_fp32() {
+        let fp = tiny_engine(EngineMode::Fp32);
+        let qe = tiny_engine(EngineMode::Quantized(Method::ArcQuant {
+            fmt: Format::Nvfp4,
+            max_s: Some(64),
+        }));
+        let toks: Vec<u16> = (0..32u16).map(|i| (i * 91) % 256).collect();
+        let lf = fp.forward(&toks, None, None);
+        let lq = qe.forward(&toks, None, None);
+        // top-1 agreement under W4A4 should be high
+        let mut agree = 0;
+        for r in 0..lf.rows {
+            let am = |m: &Mat| {
+                m.row(r)
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            };
+            if am(&lf) == am(&lq) {
+                agree += 1;
+            }
+        }
+        // Untrained random weights have near-flat logits, so top-1 flips
+        // easily; require majority agreement plus small relative error.
+        assert!(agree * 2 >= lf.rows, "agreement {agree}/{}", lf.rows);
+        let rel = crate::util::stats::rel_frob_err(&lq.data, &lf.data);
+        assert!(rel < 0.5, "relative logit error {rel}");
+    }
+
+    #[test]
+    fn collect_mode_gathers_all_sites() {
+        let e = tiny_engine(EngineMode::Fp32);
+        let mut coll = BTreeMap::new();
+        e.forward(&[1, 2, 3, 4], Some(&mut coll), None);
+        assert_eq!(coll.len(), e.cfg.l * 4);
+        for (name, c) in &coll {
+            let want = if name.ends_with("mlp_out") { e.cfg.f } else { e.cfg.d };
+            assert_eq!(c.col_absmax.len(), want, "{name}");
+        }
+    }
+
+    #[test]
+    fn outlier_boost_visible_in_activations() {
+        let e = tiny_engine(EngineMode::Fp32);
+        let mut coll = BTreeMap::new();
+        let toks: Vec<u16> = (0..64u16).map(|i| (i * 7) % 256).collect();
+        e.forward(&toks, Some(&mut coll), None);
+        let am = &coll["layers.0.attn_in"].col_absmax;
+        let mut sorted = am.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = sorted[sorted.len() / 2];
+        let max = sorted[sorted.len() - 1];
+        assert!(max > 4.0 * med, "outlier channels should dominate: {max} vs {med}");
+    }
+
+    #[test]
+    fn weight_bytes_ordering() {
+        let fp = tiny_engine(EngineMode::Fp32);
+        let arc = tiny_engine(EngineMode::Quantized(Method::ArcQuant {
+            fmt: Format::Nvfp4,
+            max_s: Some(64),
+        }));
+        let w4a8 = tiny_engine(EngineMode::Quantized(Method::W4A8Rtn));
+        assert!(arc.weight_bytes() < fp.weight_bytes());
+        // NVFP4 and MXFP4 weights are both ~4.25 bits/elem
+        let ratio = arc.weight_bytes() as f64 / w4a8.weight_bytes() as f64;
+        assert!((0.8..1.2).contains(&ratio));
+    }
+}

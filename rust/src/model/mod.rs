@@ -1,0 +1,41 @@
+//! Pure-Rust tiny-LLaMA inference substrate.
+//!
+//! Mirrors `python/compile/model.py` exactly (RMSNorm → MHA with RoPE →
+//! SwiGLU, tied embeddings, the outlier-boost vector) so the two stacks
+//! can be cross-checked numerically. Every linear runs through a
+//! pluggable [`crate::baselines::PreparedLinear`], which is how all the
+//! accuracy experiments (Tables 1, 2, 3, 5, 6) sweep quantization
+//! methods without touching the model code.
+
+pub mod config;
+pub mod engine;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use engine::{Engine, EngineMode};
+pub use weights::Weights;
+
+/// Per-layer quantization-site identifiers, matching the Python side.
+pub fn site_names(layers: usize) -> Vec<String> {
+    let mut out = Vec::with_capacity(layers * 4);
+    for i in 0..layers {
+        out.push(format!("layers.{i}.attn_in"));
+        out.push(format!("layers.{i}.attn_out"));
+        out.push(format!("layers.{i}.mlp_in"));
+        out.push(format!("layers.{i}.mlp_out"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn site_names_layout() {
+        let s = site_names(2);
+        assert_eq!(s.len(), 8);
+        assert_eq!(s[0], "layers.0.attn_in");
+        assert_eq!(s[7], "layers.1.mlp_out");
+    }
+}

@@ -1,0 +1,232 @@
+//! ARCW weight-container loader (the format `python/compile/train.py`
+//! writes): magic "ARCW", u32 tensor count, then per tensor
+//! (u32 name_len, name, u32 ndim, u32 dims..., f32-LE data).
+
+use super::ModelConfig;
+use crate::tensor::Mat;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub attn_norm: Vec<f32>,
+    pub wq: Mat,
+    pub wk: Mat,
+    pub wv: Mat,
+    pub wo: Mat,
+    pub mlp_norm: Vec<f32>,
+    pub w1: Mat,
+    pub w3: Mat,
+    pub w2: Mat,
+}
+
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub embed: Mat, // [V, D]
+    pub final_norm: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+}
+
+/// Raw tensor map parsed from an ARCW file.
+pub fn parse_arcw(blob: &[u8]) -> Result<BTreeMap<String, (Vec<usize>, Vec<f32>)>, String> {
+    if blob.len() < 8 || &blob[..4] != b"ARCW" {
+        return Err("not an ARCW container".into());
+    }
+    let mut off = 4usize;
+    let rd_u32 = |b: &[u8], o: &mut usize| -> Result<u32, String> {
+        let v = b
+            .get(*o..*o + 4)
+            .ok_or("truncated")?
+            .try_into()
+            .map_err(|_| "truncated")?;
+        *o += 4;
+        Ok(u32::from_le_bytes(v))
+    };
+    let n = rd_u32(blob, &mut off)? as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..n {
+        let nl = rd_u32(blob, &mut off)? as usize;
+        let name = String::from_utf8(
+            blob.get(off..off + nl).ok_or("truncated name")?.to_vec(),
+        )
+        .map_err(|e| e.to_string())?;
+        off += nl;
+        let nd = rd_u32(blob, &mut off)? as usize;
+        let mut dims = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            dims.push(rd_u32(blob, &mut off)? as usize);
+        }
+        let count: usize = dims.iter().product();
+        let bytes = blob
+            .get(off..off + 4 * count)
+            .ok_or_else(|| format!("truncated data for {name}"))?;
+        off += 4 * count;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        out.insert(name, (dims, data));
+    }
+    if off != blob.len() {
+        return Err(format!("trailing bytes: {} != {}", off, blob.len()));
+    }
+    Ok(out)
+}
+
+impl Weights {
+    pub fn load(path: &str, cfg: &ModelConfig) -> Result<Weights, String> {
+        let blob = std::fs::read(path).map_err(|e| format!("read {path}: {e}"))?;
+        Self::from_bytes(&blob, cfg)
+    }
+
+    pub fn from_bytes(blob: &[u8], cfg: &ModelConfig) -> Result<Weights, String> {
+        let mut map = parse_arcw(blob)?;
+        fn take_mat(
+            map: &mut BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+            name: &str,
+            rows: usize,
+            cols: usize,
+        ) -> Result<Mat, String> {
+            let (dims, data) = map
+                .remove(name)
+                .ok_or_else(|| format!("missing tensor {name}"))?;
+            if dims != vec![rows, cols] {
+                return Err(format!("{name}: expected [{rows}, {cols}], got {dims:?}"));
+            }
+            Ok(Mat::from_vec(rows, cols, data))
+        }
+        fn take_vec(
+            map: &mut BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+            name: &str,
+            len: usize,
+        ) -> Result<Vec<f32>, String> {
+            let (dims, data) = map
+                .remove(name)
+                .ok_or_else(|| format!("missing tensor {name}"))?;
+            if dims != vec![len] {
+                return Err(format!("{name}: expected [{len}], got {dims:?}"));
+            }
+            Ok(data)
+        }
+        let embed = take_mat(&mut map, "embed", cfg.vocab, cfg.d)?;
+        let mut layers = Vec::with_capacity(cfg.l);
+        for i in 0..cfg.l {
+            layers.push(LayerWeights {
+                attn_norm: take_vec(&mut map, &format!("layers.{i}.attn_norm"), cfg.d)?,
+                wq: take_mat(&mut map, &format!("layers.{i}.wq"), cfg.d, cfg.d)?,
+                wk: take_mat(&mut map, &format!("layers.{i}.wk"), cfg.d, cfg.d)?,
+                wv: take_mat(&mut map, &format!("layers.{i}.wv"), cfg.d, cfg.d)?,
+                wo: take_mat(&mut map, &format!("layers.{i}.wo"), cfg.d, cfg.d)?,
+                mlp_norm: take_vec(&mut map, &format!("layers.{i}.mlp_norm"), cfg.d)?,
+                w1: take_mat(&mut map, &format!("layers.{i}.w1"), cfg.f, cfg.d)?,
+                w3: take_mat(&mut map, &format!("layers.{i}.w3"), cfg.f, cfg.d)?,
+                w2: take_mat(&mut map, &format!("layers.{i}.w2"), cfg.d, cfg.f)?,
+            });
+        }
+        let final_norm = take_vec(&mut map, "final_norm", cfg.d)?;
+        Ok(Weights {
+            embed,
+            final_norm,
+            layers,
+        })
+    }
+
+    /// Deterministic random weights for tests (no file needed).
+    pub fn synthetic(cfg: &ModelConfig, seed: u64) -> Weights {
+        let mut rng = crate::util::Prng::new(seed);
+        let scale_attn = 1.0 / (cfg.d as f32).sqrt();
+        let resid = 1.0 / ((2 * cfg.l) as f32).sqrt();
+        let mut mat = |rows: usize, cols: usize, s: f32| {
+            let mut m = Mat::zeros(rows, cols);
+            m.fill_random_normal(&mut rng, s);
+            m
+        };
+        let embed = mat(cfg.vocab, cfg.d, 0.05);
+        let layers = (0..cfg.l)
+            .map(|_| LayerWeights {
+                attn_norm: vec![1.0; cfg.d],
+                wq: mat(cfg.d, cfg.d, scale_attn),
+                wk: mat(cfg.d, cfg.d, scale_attn),
+                wv: mat(cfg.d, cfg.d, scale_attn),
+                wo: mat(cfg.d, cfg.d, scale_attn * resid),
+                mlp_norm: vec![1.0; cfg.d],
+                w1: mat(cfg.f, cfg.d, scale_attn),
+                w3: mat(cfg.f, cfg.d, scale_attn),
+                w2: mat(cfg.d, cfg.f, resid / (cfg.f as f32).sqrt()),
+            })
+            .collect();
+        Weights {
+            embed,
+            final_norm: vec![1.0; cfg.d],
+            layers,
+        }
+    }
+
+    /// Total parameter count (sanity checks + Table 4 memory accounting).
+    pub fn params_count(&self) -> usize {
+        let mut n = self.embed.data.len() + self.final_norm.len();
+        for l in &self.layers {
+            n += l.attn_norm.len()
+                + l.mlp_norm.len()
+                + l.wq.data.len()
+                + l.wk.data.len()
+                + l.wv.data.len()
+                + l.wo.data.len()
+                + l.w1.data.len()
+                + l.w3.data.len()
+                + l.w2.data.len();
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_arcw() -> Vec<u8> {
+        // hand-build a container with one tensor
+        let mut b = Vec::new();
+        b.extend_from_slice(b"ARCW");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        let name = b"embed";
+        b.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        b.extend_from_slice(name);
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&3u32.to_le_bytes());
+        for v in [1f32, 2.0, 3.0, 4.0, 5.0, 6.0] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn parse_single_tensor() {
+        let map = parse_arcw(&tiny_arcw()).unwrap();
+        let (dims, data) = &map["embed"];
+        assert_eq!(dims, &vec![2, 3]);
+        assert_eq!(data, &vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut b = tiny_arcw();
+        b[0] = b'X';
+        assert!(parse_arcw(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let b = tiny_arcw();
+        assert!(parse_arcw(&b[..b.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn synthetic_weights_shape() {
+        let cfg = ModelConfig::tiny_test();
+        let w = Weights::synthetic(&cfg, 1);
+        assert_eq!(w.layers.len(), cfg.l);
+        assert_eq!(w.embed.rows, cfg.vocab);
+        assert_eq!(w.params_count(), cfg.params_count());
+    }
+}

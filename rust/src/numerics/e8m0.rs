@@ -1,0 +1,100 @@
+//! E8M0 — the OCP Microscaling block-scale type: an 8-bit biased exponent
+//! with no sign and no mantissa. A code `e` represents 2^(e-127);
+//! code 255 is NaN (unused here — we saturate).
+//!
+//! Two rounding modes are provided:
+//! * `ceil` — smallest power of two ≥ x. This keeps the scale alignment
+//!   overhead α = s/M in [1, 2), exactly the paper's §3.4 MXFP8 model
+//!   (sup α_mx = 2). Used by default for block scales.
+//! * `floor` — the OCP-spec `floor(log2(amax)) - emax` convention is
+//!   expressed by callers via `from_exp`.
+
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct E8M0(pub u8);
+
+pub const E8M0_MIN_EXP: i32 = -127;
+pub const E8M0_MAX_EXP: i32 = 127;
+
+impl E8M0 {
+    /// Encode the smallest representable power of two ≥ x (x > 0).
+    /// Saturates at 2^±127. x ≤ 0 encodes the minimum scale.
+    pub fn ceil_from(x: f32) -> E8M0 {
+        if !(x > 0.0) || !x.is_finite() {
+            return E8M0::from_exp(E8M0_MIN_EXP);
+        }
+        let e = x.log2().ceil() as i32;
+        // Guard against log2 rounding: ensure 2^e >= x.
+        let mut e = e;
+        while 2f32.powi(e.min(E8M0_MAX_EXP)) < x && e < E8M0_MAX_EXP {
+            e += 1;
+        }
+        E8M0::from_exp(e)
+    }
+
+    /// Encode from an explicit exponent (clamped to the representable range).
+    pub fn from_exp(e: i32) -> E8M0 {
+        let e = e.clamp(E8M0_MIN_EXP, E8M0_MAX_EXP);
+        E8M0((e + 127) as u8)
+    }
+
+    pub fn exp(self) -> i32 {
+        self.0 as i32 - 127
+    }
+
+    pub fn value(self) -> f32 {
+        // 2^-127 underflows f32 normals but is fine as subnormal;
+        // use powi on f64 then narrow for exactness at the extremes.
+        (2f64.powi(self.exp())) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_powers_fixed() {
+        for e in [-10, -1, 0, 1, 10, 100] {
+            let s = E8M0::ceil_from(2f32.powi(e));
+            assert_eq!(s.exp(), e);
+            assert_eq!(s.value(), 2f32.powi(e));
+        }
+    }
+
+    #[test]
+    fn ceil_rounds_up() {
+        assert_eq!(E8M0::ceil_from(3.0).value(), 4.0);
+        assert_eq!(E8M0::ceil_from(1.0001).value(), 2.0);
+        assert_eq!(E8M0::ceil_from(0.75).value(), 1.0);
+        // alignment overhead α = s/x ∈ [1, 2) — paper §3.4
+        let mut x = 1e-6f32;
+        while x < 1e6 {
+            let a = E8M0::ceil_from(x).value() / x;
+            assert!((1.0..2.0 + 1e-6).contains(&a), "α={a} at x={x}");
+            x *= 1.618;
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(E8M0::ceil_from(0.0).exp(), -127);
+        assert_eq!(E8M0::ceil_from(-5.0).exp(), -127);
+        assert_eq!(E8M0::ceil_from(f32::NAN).exp(), -127);
+        assert_eq!(E8M0::ceil_from(f32::INFINITY).exp(), -127);
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(E8M0::ceil_from(1e38).exp(), 127);
+        assert_eq!(E8M0::from_exp(500).exp(), 127);
+        assert_eq!(E8M0::from_exp(-500).exp(), -127);
+    }
+
+    #[test]
+    fn code_roundtrip() {
+        for code in 0..=254u8 {
+            let s = E8M0(code);
+            assert_eq!(E8M0::from_exp(s.exp()), s);
+        }
+    }
+}

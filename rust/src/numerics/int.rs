@@ -1,0 +1,122 @@
+//! Symmetric integer quantization (INT4 / INT8) — the element types used
+//! by the paper's INT4 generalizability ablation (Table 6) and by the
+//! Atom baseline's mixed-precision scheme (INT4 bulk + INT8 outliers).
+
+/// Symmetric signed integer codec with `bits` total bits.
+/// Range: [-(2^(bits-1)-1), 2^(bits-1)-1] (no -2^(bits-1), keeping the
+/// grid symmetric as standard for weight/activation PTQ).
+#[derive(Copy, Clone, Debug)]
+pub struct IntCodec {
+    pub bits: u32,
+}
+
+pub const INT4: IntCodec = IntCodec { bits: 4 };
+pub const INT8: IntCodec = IntCodec { bits: 8 };
+
+impl IntCodec {
+    pub const fn qmax(self) -> i32 {
+        (1 << (self.bits - 1)) - 1
+    }
+
+    /// Round-half-to-even integer quantization of x/scale, clamped.
+    #[inline]
+    pub fn quantize_code(self, x: f32, scale: f32) -> i32 {
+        if scale == 0.0 {
+            return 0;
+        }
+        let v = (x / scale) as f64;
+        let r = round_half_even(v);
+        (r as i32).clamp(-self.qmax(), self.qmax())
+    }
+
+    #[inline]
+    pub fn dequantize(self, code: i32, scale: f32) -> f32 {
+        code as f32 * scale
+    }
+
+    /// Fake-quantize (QDQ) one value given a scale.
+    #[inline]
+    pub fn qdq(self, x: f32, scale: f32) -> f32 {
+        self.dequantize(self.quantize_code(x, scale), scale)
+    }
+
+    /// Per-group symmetric scale from the group's absolute maximum.
+    #[inline]
+    pub fn scale_for(self, amax: f32) -> f32 {
+        if amax == 0.0 {
+            0.0
+        } else {
+            amax / self.qmax() as f32
+        }
+    }
+}
+
+#[inline]
+fn round_half_even(v: f64) -> f64 {
+    let r = v.round();
+    if (v - v.trunc()).abs() == 0.5 {
+        // Ties: pick the even integer.
+        let down = v.trunc();
+        let up = down + v.signum();
+        if (down as i64) % 2 == 0 {
+            down
+        } else {
+            up
+        }
+    } else {
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(INT4.qmax(), 7);
+        assert_eq!(INT8.qmax(), 127);
+    }
+
+    #[test]
+    fn symmetric_roundtrip() {
+        let scale = INT4.scale_for(3.5);
+        for code in -7..=7 {
+            let v = INT4.dequantize(code, scale);
+            assert_eq!(INT4.quantize_code(v, scale), code);
+        }
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        assert_eq!(INT4.quantize_code(100.0, 1.0), 7);
+        assert_eq!(INT4.quantize_code(-100.0, 1.0), -7);
+    }
+
+    #[test]
+    fn zero_scale_zero_code() {
+        assert_eq!(INT4.quantize_code(1.0, 0.0), 0);
+        assert_eq!(INT4.scale_for(0.0), 0.0);
+    }
+
+    #[test]
+    fn ties_to_even() {
+        // 0.5/1.0 = 0.5 → even 0; 1.5 → 2; 2.5 → 2
+        assert_eq!(INT4.quantize_code(0.5, 1.0), 0);
+        assert_eq!(INT4.quantize_code(1.5, 1.0), 2);
+        assert_eq!(INT4.quantize_code(2.5, 1.0), 2);
+        assert_eq!(INT4.quantize_code(-1.5, 1.0), -2);
+    }
+
+    #[test]
+    fn qdq_error_bounded() {
+        let amax = 5.0f32;
+        let scale = INT4.scale_for(amax);
+        let mut x = -amax;
+        while x <= amax {
+            let e = (INT4.qdq(x, scale) - x).abs();
+            assert!(e <= scale / 2.0 + 1e-6, "err {e} at {x}");
+            x += 0.01;
+        }
+    }
+}

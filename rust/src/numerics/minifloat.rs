@@ -1,0 +1,397 @@
+//! Generic minifloat codec: sign + `E` exponent bits + `M` mantissa bits.
+//!
+//! Encode is round-to-nearest-even onto the representable grid with
+//! saturation at ±max_normal (Tensor-Core conversion semantics — no
+//! inf/NaN are produced on overflow for the block-scaled formats). The
+//! representable-value table per format is tiny (≤ 128 positive points),
+//! so encoding is a branch-free binary search over precomputed midpoints,
+//! which is bit-exact RNE because the grid is sorted and ties resolve to
+//! the even (lower-LSB) code.
+
+/// The element data types from the paper's Table 7.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum FpKind {
+    /// FP4: 1-2-1, bias 1, max ±6 (NVFP4 / MXFP4 element)
+    E2M1,
+    /// FP6: 1-2-3, bias 1, max ±7.5
+    E2M3,
+    /// FP6: 1-3-2, bias 3, max ±28
+    E3M2,
+    /// FP8: 1-4-3, bias 7, max ±448 (MXFP8 element; NVFP4 block scale)
+    E4M3,
+    /// FP8: 1-5-2, bias 15, max ±57344 (the paper's outlier-threshold
+    /// reference format)
+    E5M2,
+}
+
+pub const E2M1: FpKind = FpKind::E2M1;
+pub const E2M3: FpKind = FpKind::E2M3;
+pub const E3M2: FpKind = FpKind::E3M2;
+pub const E4M3: FpKind = FpKind::E4M3;
+pub const E5M2: FpKind = FpKind::E5M2;
+
+impl FpKind {
+    pub const fn exp_bits(self) -> u32 {
+        match self {
+            FpKind::E2M1 | FpKind::E2M3 => 2,
+            FpKind::E3M2 => 3,
+            FpKind::E4M3 => 4,
+            FpKind::E5M2 => 5,
+        }
+    }
+
+    pub const fn man_bits(self) -> u32 {
+        match self {
+            FpKind::E2M1 => 1,
+            FpKind::E3M2 | FpKind::E5M2 => 2,
+            FpKind::E2M3 | FpKind::E4M3 => 3,
+        }
+    }
+
+    pub const fn bias(self) -> i32 {
+        match self {
+            FpKind::E2M1 | FpKind::E2M3 => 1,
+            FpKind::E3M2 => 3,
+            FpKind::E4M3 => 7,
+            FpKind::E5M2 => 15,
+        }
+    }
+
+    /// Largest finite magnitude (paper Table 7 "Max Normal").
+    pub const fn max_normal(self) -> f32 {
+        match self {
+            FpKind::E2M1 => 6.0,
+            FpKind::E2M3 => 7.5,
+            FpKind::E3M2 => 28.0,
+            FpKind::E4M3 => 448.0,
+            FpKind::E5M2 => 57344.0,
+        }
+    }
+
+    /// Machine epsilon of the format: ulp(1.0)/2 = 2^-(M+1). The paper's
+    /// §3.4 uses ε₄ = 2⁻² (E2M1) and ε₈ = 2⁻⁴ (E4M3).
+    pub const fn eps(self) -> f32 {
+        match self.man_bits() {
+            1 => 0.25,    // 2^-2
+            2 => 0.125,   // 2^-3
+            3 => 0.0625,  // 2^-4
+            _ => unreachable!(),
+        }
+    }
+
+    /// Total storage bits including sign.
+    pub const fn bits(self) -> u32 {
+        1 + self.exp_bits() + self.man_bits()
+    }
+
+    /// Number of non-negative representable values (0 .. max_normal).
+    fn n_pos(self) -> usize {
+        // For E4M3, code S.1111.111 is NaN, so the top mantissa code of the
+        // top exponent is excluded; for E5M2, exponent 11111 encodes
+        // inf/NaN and is excluded entirely. FP4/FP6 have no inf/NaN.
+        let full = 1usize << (self.exp_bits() + self.man_bits());
+        match self {
+            FpKind::E4M3 => full - 1,
+            FpKind::E5M2 => full - (1 << self.man_bits()),
+            _ => full,
+        }
+    }
+}
+
+/// Precomputed codec tables for one format.
+#[derive(Clone, Debug)]
+pub struct Minifloat {
+    pub kind: FpKind,
+    /// Positive representable magnitudes, ascending; values[0] == 0.
+    values: Vec<f32>,
+    /// midpoints[i] is the RNE decision boundary between values[i] and
+    /// values[i+1]: x <= midpoints[i] rounds down iff tie goes to even i.
+    midpoints: Vec<f32>,
+    /// tie_down[i]: on exact tie at midpoints[i], round to values[i]
+    /// (true when code i is even).
+    tie_down: Vec<bool>,
+}
+
+impl Minifloat {
+    pub fn new(kind: FpKind) -> Self {
+        let m = kind.man_bits();
+        let bias = kind.bias();
+        let n = kind.n_pos();
+        let mut values = Vec::with_capacity(n);
+        for code in 0..n as u32 {
+            let exp_field = code >> m;
+            let man_field = code & ((1 << m) - 1);
+            let v = if exp_field == 0 {
+                // subnormal: m/2^M * 2^(1-bias)
+                (man_field as f32 / (1u32 << m) as f32) * 2f32.powi(1 - bias)
+            } else {
+                (1.0 + man_field as f32 / (1u32 << m) as f32)
+                    * 2f32.powi(exp_field as i32 - bias)
+            };
+            values.push(v);
+        }
+        debug_assert!((values[n - 1] - kind.max_normal()).abs() < 1e-6 * kind.max_normal().max(1.0));
+        let mut midpoints = Vec::with_capacity(n - 1);
+        let mut tie_down = Vec::with_capacity(n - 1);
+        for i in 0..n - 1 {
+            // f64 midpoint avoids double-rounding on coarse grids.
+            midpoints.push(((values[i] as f64 + values[i + 1] as f64) / 2.0) as f32);
+            tie_down.push(i % 2 == 0);
+        }
+        Minifloat {
+            kind,
+            values,
+            midpoints,
+            tie_down,
+        }
+    }
+
+    /// All positive representable magnitudes (ascending, starts at 0).
+    pub fn grid(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// Quantize: snap to nearest representable value (RNE), saturating.
+    /// Returns the *dequantized* value; see [`Minifloat::encode`] for codes.
+    #[inline]
+    pub fn quantize(&self, x: f32) -> f32 {
+        let (mag, _) = self.quantize_mag(x.abs());
+        if x.is_sign_negative() {
+            -mag
+        } else {
+            mag
+        }
+    }
+
+    /// Encode to (code, sign) where code indexes the positive grid.
+    #[inline]
+    pub fn encode(&self, x: f32) -> (u8, bool) {
+        let (_, code) = self.quantize_mag(x.abs());
+        (code, x.is_sign_negative())
+    }
+
+    /// Decode a (code, sign) pair.
+    #[inline]
+    pub fn decode(&self, code: u8, neg: bool) -> f32 {
+        let v = self.values[code as usize];
+        if neg {
+            -v
+        } else {
+            v
+        }
+    }
+
+    #[inline]
+    fn quantize_mag(&self, a: f32) -> (f32, u8) {
+        if a.is_nan() {
+            return (0.0, 0);
+        }
+        let n = self.values.len();
+        if a >= self.values[n - 1] {
+            return (self.values[n - 1], (n - 1) as u8); // saturate
+        }
+        // Binary search over midpoints: find first midpoint >= a.
+        let mut lo = 0usize;
+        let mut hi = self.midpoints.len(); // == n-1
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.midpoints[mid] < a {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        // lo == index of first midpoint >= a; candidate codes lo, lo+1.
+        if lo < self.midpoints.len() && a == self.midpoints[lo] && !self.tie_down[lo] {
+            return (self.values[lo + 1], (lo + 1) as u8);
+        }
+        if lo < self.midpoints.len() && a > self.midpoints[lo] {
+            return (self.values[lo + 1], (lo + 1) as u8);
+        }
+        (self.values[lo], lo as u8)
+    }
+
+    /// Smallest representable value y on the grid with y >= x
+    /// (saturates at max_normal). Used for ceil-rounded scales, which keep
+    /// the paper's α = s/M ≥ 1 alignment-overhead model.
+    pub fn round_up(&self, x: f32) -> f32 {
+        debug_assert!(x >= 0.0);
+        let n = self.values.len();
+        if x > self.values[n - 1] {
+            return self.values[n - 1];
+        }
+        let idx = self.values.partition_point(|&v| v < x);
+        self.values[idx.min(n - 1)]
+    }
+}
+
+use std::sync::OnceLock;
+
+/// Global codec cache — formats are tiny and immutable.
+pub fn codec(kind: FpKind) -> &'static Minifloat {
+    static CACHE: OnceLock<[Minifloat; 5]> = OnceLock::new();
+    let all = CACHE.get_or_init(|| {
+        [
+            Minifloat::new(FpKind::E2M1),
+            Minifloat::new(FpKind::E2M3),
+            Minifloat::new(FpKind::E3M2),
+            Minifloat::new(FpKind::E4M3),
+            Minifloat::new(FpKind::E5M2),
+        ]
+    });
+    match kind {
+        FpKind::E2M1 => &all[0],
+        FpKind::E2M3 => &all[1],
+        FpKind::E3M2 => &all[2],
+        FpKind::E4M3 => &all[3],
+        FpKind::E5M2 => &all[4],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e2m1_grid_matches_spec() {
+        // The canonical FP4 value set.
+        let c = codec(FpKind::E2M1);
+        assert_eq!(c.grid(), &[0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn table7_max_normals() {
+        assert_eq!(codec(FpKind::E2M1).grid().last(), Some(&6.0));
+        assert_eq!(codec(FpKind::E2M3).grid().last(), Some(&7.5));
+        assert_eq!(codec(FpKind::E3M2).grid().last(), Some(&28.0));
+        assert_eq!(codec(FpKind::E4M3).grid().last(), Some(&448.0));
+        assert_eq!(codec(FpKind::E5M2).grid().last(), Some(&57344.0));
+    }
+
+    #[test]
+    fn representable_values_fixed_points() {
+        for kind in [FpKind::E2M1, FpKind::E2M3, FpKind::E3M2, FpKind::E4M3, FpKind::E5M2] {
+            let c = codec(kind);
+            for &v in c.grid() {
+                assert_eq!(c.quantize(v), v, "{kind:?} value {v} not a fixed point");
+                assert_eq!(c.quantize(-v), -v);
+            }
+        }
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        let c = codec(FpKind::E2M1);
+        // midpoint between 2.0 (code 4, even) and 3.0 (code 5, odd) is 2.5
+        // → ties to even → 2.0
+        assert_eq!(c.quantize(2.5), 2.0);
+        // midpoint between 3.0 (code 5) and 4.0 (code 6, even) is 3.5 → 4.0
+        assert_eq!(c.quantize(3.5), 4.0);
+        // midpoint between 0.0 (code 0, even) and 0.5 is 0.25 → 0.0
+        assert_eq!(c.quantize(0.25), 0.0);
+        // 0.75 is midpoint of 0.5 (code1) / 1.0 (code2 even) → 1.0
+        assert_eq!(c.quantize(0.75), 1.0);
+    }
+
+    #[test]
+    fn saturation_not_inf() {
+        let c = codec(FpKind::E4M3);
+        assert_eq!(c.quantize(1e9), 448.0);
+        assert_eq!(c.quantize(-1e9), -448.0);
+        assert_eq!(c.quantize(f32::INFINITY), 448.0);
+    }
+
+    #[test]
+    fn nan_maps_to_zero() {
+        assert_eq!(codec(FpKind::E2M1).quantize(f32::NAN), 0.0);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for kind in [FpKind::E2M1, FpKind::E4M3, FpKind::E5M2] {
+            let c = codec(kind);
+            for code in 0..c.grid().len() as u8 {
+                for neg in [false, true] {
+                    let v = c.decode(code, neg);
+                    let (c2, n2) = c.encode(v);
+                    assert_eq!((c2, n2 && v != 0.0), (code, neg && v != 0.0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn error_bounded_by_half_ulp() {
+        // |x - Q(x)| <= eps * 2^floor(log2(|x|)) for normal-range x,
+        // i.e. relative error <= eps for |x| in [min_normal, max_normal].
+        for kind in [FpKind::E2M1, FpKind::E4M3, FpKind::E5M2] {
+            let c = codec(kind);
+            let eps = kind.eps();
+            let min_normal = 2f32.powi(1 - kind.bias());
+            let mut x = min_normal;
+            while x < kind.max_normal() {
+                let q = c.quantize(x);
+                let exp = x.log2().floor();
+                let bound = eps * 2f32.powf(exp) * (1.0 + 1e-5);
+                assert!(
+                    (x - q).abs() <= bound,
+                    "{kind:?}: |{x} - {q}| > {bound}"
+                );
+                x *= 1.37; // sample the range
+            }
+        }
+    }
+
+    #[test]
+    fn e4m3_subnormal_step() {
+        // E4M3 subnormal step = 2^-3 * 2^-6 = 2^-9
+        let c = codec(FpKind::E4M3);
+        let step = c.grid()[1];
+        assert!((step - 2f32.powi(-9)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn round_up_is_ceiling() {
+        let c = codec(FpKind::E2M1);
+        assert_eq!(c.round_up(2.1), 3.0);
+        assert_eq!(c.round_up(3.0), 3.0);
+        assert_eq!(c.round_up(0.0), 0.0);
+        assert_eq!(c.round_up(100.0), 6.0); // saturates
+        // never rounds below input (except saturation)
+        for i in 0..1000 {
+            let x = i as f32 * 0.006;
+            assert!(c.round_up(x) >= x.min(6.0) - 1e-6);
+        }
+    }
+
+    #[test]
+    fn eps_matches_paper() {
+        // §3.4: ε₄ = 2⁻², ε₈ = 2⁻⁴, ε₄² = ε₈.
+        assert_eq!(FpKind::E2M1.eps(), 0.25);
+        assert_eq!(FpKind::E4M3.eps(), 0.0625);
+        assert_eq!(FpKind::E2M1.eps() * FpKind::E2M1.eps(), FpKind::E4M3.eps());
+    }
+
+    #[test]
+    fn grid_sizes() {
+        assert_eq!(codec(FpKind::E2M1).grid().len(), 8);
+        assert_eq!(codec(FpKind::E4M3).grid().len(), 127); // 128 - NaN code
+        assert_eq!(codec(FpKind::E5M2).grid().len(), 124); // 128 - inf/NaN exp
+    }
+
+    #[test]
+    fn monotone_quantization() {
+        // Quantization must be monotone non-decreasing.
+        for kind in [FpKind::E2M1, FpKind::E4M3] {
+            let c = codec(kind);
+            let mut prev = f32::NEG_INFINITY;
+            let mut x = -kind.max_normal() * 1.2;
+            while x < kind.max_normal() * 1.2 {
+                let q = c.quantize(x);
+                assert!(q >= prev, "{kind:?} non-monotone at {x}");
+                prev = q;
+                x += kind.max_normal() / 300.0;
+            }
+        }
+    }
+}

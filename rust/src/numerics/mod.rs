@@ -1,0 +1,16 @@
+//! Bit-exact low-precision numeric codecs.
+//!
+//! Implements every element and scale data type from the paper's
+//! Appendix A (Table 7): E2M1 (FP4), E2M3/E3M2 (FP6), E4M3/E5M2 (FP8),
+//! the exponent-only E8M0 block-scale type, and symmetric INT4 — all with
+//! round-to-nearest-even and saturating overflow, matching Tensor-Core
+//! conversion semantics. These codecs are the foundation the block-scaled
+//! formats in [`crate::formats`] are built on.
+
+pub mod e8m0;
+pub mod int;
+pub mod minifloat;
+
+pub use e8m0::E8M0;
+pub use int::{IntCodec, INT4, INT8};
+pub use minifloat::{codec, FpKind, Minifloat, E2M1, E2M3, E3M2, E4M3, E5M2};

@@ -1,0 +1,341 @@
+//! The ARCQuant method proper: augmented residual channels (§3.2–§3.3).
+//!
+//! * [`ArcQuantizer::quantize_activations`] — the *online* path the fused
+//!   CUDA kernel implements: reorder → primary block quant → residual
+//!   quant of the top-S channels → concatenate along K.
+//! * [`ArcQuantLinear`] — a prepared linear layer: weights reordered,
+//!   quantized and augmented *offline* (outlier columns duplicated), so
+//!   the forward pass is one unified GEMM on (N, K+S, M) — Eq. 2.
+//! * Interleaved channel layout (Appendix D): primary block i of the
+//!   outlier region immediately followed by its residual block, so the
+//!   GEMM streams contiguous memory. Since both X and W use the same
+//!   K-dim layout, the result is bit-identical to plain concatenation —
+//!   tested below.
+
+use super::LayerPlan;
+use crate::formats::RowQuantizer;
+use crate::tensor::{matmul_nt, Mat};
+
+/// The online activation-quantization result: the augmented matrix
+/// [Q_X | Q_{R_o}] of shape [N, K+S] (values already dequantized — the
+/// QDQ simulation of the NVFP4 datapath).
+#[derive(Clone, Debug)]
+pub struct AugmentedActivation {
+    pub data: Mat,
+    /// K (original channel count) — the first K columns are the primary.
+    pub k: usize,
+    /// S (augmented residual channels).
+    pub s: usize,
+}
+
+/// Stateless quantizer bound to a [`LayerPlan`].
+#[derive(Clone, Debug)]
+pub struct ArcQuantizer {
+    pub plan: LayerPlan,
+}
+
+impl ArcQuantizer {
+    pub fn new(plan: LayerPlan) -> Self {
+        ArcQuantizer { plan }
+    }
+
+    /// Online activation path (the Fused Quantization Kernel's semantics):
+    /// reorder, primary quant, residual quant of the first S channels,
+    /// augment along K.
+    pub fn quantize_activations(&self, x: &Mat) -> AugmentedActivation {
+        let q = RowQuantizer::new(self.plan.fmt);
+        let xr = self.plan.perm.apply_cols(x);
+        let primary = q.qdq_mat(&xr);
+        let s = self.plan.s.min(x.cols);
+        if s == 0 {
+            return AugmentedActivation {
+                data: primary,
+                k: x.cols,
+                s: 0,
+            };
+        }
+        // Residuals of the outlier prefix only.
+        let mut resid = Mat::zeros(x.rows, s);
+        for r in 0..x.rows {
+            let xrow = xr.row(r);
+            let prow = primary.row(r);
+            let rrow = resid.row_mut(r);
+            for j in 0..s {
+                rrow[j] = xrow[j] - prow[j];
+            }
+        }
+        // Stage-2 quantization of the residual (its own tensor scale).
+        let resid_q = q.qdq_mat(&resid);
+        AugmentedActivation {
+            data: primary.hcat(&resid_q),
+            k: x.cols,
+            s,
+        }
+    }
+}
+
+/// A linear layer prepared for ARCQuant inference.
+///
+/// Holds the offline artifacts: the augmented quantized weight matrix
+/// `W_aug = [Q_W | Q_{W_o}]` of shape [M, K+S] (already dequantized for
+/// the QDQ simulation) and the layer plan for the online path.
+#[derive(Clone, Debug)]
+pub struct ArcQuantLinear {
+    pub quantizer: ArcQuantizer,
+    /// [M, K+S] — reordered, quantized, outlier columns duplicated.
+    pub w_aug: Mat,
+    /// Original output dim M and input dim K.
+    pub out_dim: usize,
+    pub in_dim: usize,
+}
+
+impl ArcQuantLinear {
+    /// Offline weight preparation (§3.2 "Offline Weight Quantization").
+    pub fn prepare(w: &Mat, plan: LayerPlan) -> ArcQuantLinear {
+        assert_eq!(w.cols, plan.perm.len(), "weight in_dim != plan channels");
+        let q = RowQuantizer::new(plan.fmt);
+        let wr = plan.perm.apply_cols(w);
+        let wq = q.qdq_mat(&wr);
+        let s = plan.s.min(w.cols);
+        let w_aug = if s == 0 {
+            wq
+        } else {
+            // Duplicate the *quantized* outlier weight columns — the GEMM
+            // then computes R_o · Q(W_o)ᵀ as the correction term.
+            let wo: Vec<usize> = (0..s).collect();
+            let dup = wq.select_cols(&wo);
+            wq.hcat(&dup)
+        };
+        ArcQuantLinear {
+            out_dim: w.rows,
+            in_dim: w.cols,
+            quantizer: ArcQuantizer::new(plan),
+            w_aug,
+        }
+    }
+
+    /// Forward pass: one unified GEMM on the extended reduction dimension
+    /// (N, K+S, M) — Eq. 2.
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let aug = self.quantizer.quantize_activations(x);
+        debug_assert_eq!(aug.data.cols, self.w_aug.cols);
+        matmul_nt(&aug.data, &self.w_aug)
+    }
+
+    /// The S actually in effect.
+    pub fn s(&self) -> usize {
+        self.quantizer.plan.s.min(self.in_dim)
+    }
+}
+
+/// Interleaved channel layout (Appendix D): permute the augmented K+S
+/// columns so each 16-wide outlier primary block is immediately followed
+/// by its residual block. Returns the column permutation over K+S.
+pub fn interleaved_layout(k: usize, s: usize, block: usize) -> Vec<usize> {
+    assert!(s <= k);
+    let mut order = Vec::with_capacity(k + s);
+    let outlier_blocks = s.div_ceil(block);
+    for b in 0..outlier_blocks {
+        let lo = b * block;
+        let hi = ((b + 1) * block).min(s);
+        // primary block b
+        order.extend(lo..hi);
+        // its residual block (stored at k + lo .. k + hi in concat layout)
+        order.extend(k + lo..k + hi);
+    }
+    // remaining non-compensated primary channels
+    order.extend(s..k);
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Format;
+    use crate::quant::Permutation;
+    use crate::util::{prop, stats, Prng};
+
+    fn outlier_mat(rng: &mut Prng, rows: usize, cols: usize) -> Mat {
+        Mat::from_fn(rows, cols, |_, c| {
+            let v = rng.normal();
+            if c % 23 == 7 {
+                v * 50.0
+            } else {
+                v
+            }
+        })
+    }
+
+    fn plan_for(x: &Mat, fmt: Format) -> LayerPlan {
+        LayerPlan::from_calibration(&x.col_absmax(), fmt)
+    }
+
+    #[test]
+    fn augmented_shape_is_k_plus_s() {
+        let mut rng = Prng::new(40);
+        let x = outlier_mat(&mut rng, 8, 128);
+        let plan = plan_for(&x, Format::Nvfp4);
+        assert!(plan.s > 0 && plan.s % 16 == 0);
+        let aug = ArcQuantizer::new(plan.clone()).quantize_activations(&x);
+        assert_eq!(aug.data.rows, 8);
+        assert_eq!(aug.data.cols, 128 + plan.s);
+    }
+
+    #[test]
+    fn eq2_augmented_gemm_equals_main_plus_correction() {
+        // Y_aug = Q(X)Q(W)ᵀ + Q(R_o)Q(W_o)ᵀ — the algebraic identity that
+        // lets ARCQuant ride a single unified GEMM.
+        let mut rng = Prng::new(41);
+        let x = outlier_mat(&mut rng, 6, 96);
+        let mut w = Mat::zeros(10, 96);
+        w.fill_random_normal(&mut rng, 0.5);
+        let plan = plan_for(&x, Format::Nvfp4);
+        let s = plan.s;
+        let lin = ArcQuantLinear::prepare(&w, plan.clone());
+        let y_aug = lin.forward(&x);
+
+        // Manual two-GEMM computation:
+        let aug = ArcQuantizer::new(plan.clone()).quantize_activations(&x);
+        let qx = Mat::from_fn(6, 96, |r, c| aug.data.at(r, c));
+        let qr = Mat::from_fn(6, s, |r, c| aug.data.at(r, 96 + c));
+        let wq_full = Mat::from_fn(10, 96, |r, c| lin.w_aug.at(r, c));
+        let wq_out = Mat::from_fn(10, s, |r, c| lin.w_aug.at(r, 96 + c));
+        let main = matmul_nt(&qx, &wq_full);
+        let corr = matmul_nt(&qr, &wq_out);
+        for i in 0..y_aug.data.len() {
+            let want = main.data[i] + corr.data[i];
+            assert!(
+                (y_aug.data[i] - want).abs() <= 1e-3 * (1.0 + want.abs()),
+                "{} vs {}",
+                y_aug.data[i],
+                want
+            );
+        }
+    }
+
+    #[test]
+    fn arcquant_beats_rtn_on_outlier_data() {
+        // End-to-end reconstruction: ||Y - Ŷ||² must drop vs plain RTN.
+        let mut rng = Prng::new(42);
+        let x = outlier_mat(&mut rng, 16, 256);
+        let mut w = Mat::zeros(32, 256);
+        w.fill_random_normal(&mut rng, 0.3);
+        let y_ref = matmul_nt(&x, &w);
+
+        let plan = plan_for(&x, Format::Nvfp4);
+        assert!(plan.s >= 16);
+        let arc = ArcQuantLinear::prepare(&w, plan).forward(&x);
+
+        let rtn_plan = LayerPlan::rtn(256, Format::Nvfp4);
+        let rtn = ArcQuantLinear::prepare(&w, rtn_plan).forward(&x);
+
+        let e_arc = stats::mse(&arc.data, &y_ref.data);
+        let e_rtn = stats::mse(&rtn.data, &y_ref.data);
+        assert!(
+            e_arc < e_rtn,
+            "ARCQuant mse {e_arc} not better than RTN {e_rtn}"
+        );
+    }
+
+    #[test]
+    fn s_zero_reduces_to_rtn() {
+        let mut rng = Prng::new(43);
+        let x = outlier_mat(&mut rng, 4, 64);
+        let mut w = Mat::zeros(8, 64);
+        w.fill_random_normal(&mut rng, 1.0);
+        let plan = LayerPlan::rtn(64, Format::Nvfp4);
+        let lin = ArcQuantLinear::prepare(&w, plan);
+        assert_eq!(lin.w_aug.cols, 64);
+        let y = lin.forward(&x);
+        // equals plain QDQ GEMM
+        let q = RowQuantizer::new(Format::Nvfp4);
+        let want = matmul_nt(&q.qdq_mat(&x), &q.qdq_mat(&w));
+        for (a, b) in y.data.iter().zip(&want.data) {
+            assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn interleaved_layout_is_permutation_and_preserves_gemm() {
+        let (k, s, block) = (64, 32, 16);
+        let order = interleaved_layout(k, s, block);
+        assert_eq!(order.len(), k + s);
+        let mut seen = vec![false; k + s];
+        for &i in &order {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        // layout: [P0 R0 P1 R1 | rest]
+        assert_eq!(&order[..16], &(0..16).collect::<Vec<_>>()[..]);
+        assert_eq!(&order[16..32], &(64..80).collect::<Vec<_>>()[..]);
+        assert_eq!(&order[32..48], &(16..32).collect::<Vec<_>>()[..]);
+        assert_eq!(&order[48..64], &(80..96).collect::<Vec<_>>()[..]);
+
+        // GEMM invariance when both operands use the interleaved layout.
+        let mut rng = Prng::new(44);
+        let x = outlier_mat(&mut rng, 4, k);
+        let mut w = Mat::zeros(6, k);
+        w.fill_random_normal(&mut rng, 1.0);
+        let plan = LayerPlan {
+            perm: Permutation::identity(k),
+            s,
+            fmt: Format::Nvfp4,
+        };
+        let lin = ArcQuantLinear::prepare(&w, plan.clone());
+        let aug = ArcQuantizer::new(plan).quantize_activations(&x);
+        let y_concat = matmul_nt(&aug.data, &lin.w_aug);
+        let y_inter = matmul_nt(
+            &aug.data.select_cols(&order),
+            &lin.w_aug.select_cols(&order),
+        );
+        for (a, b) in y_concat.data.iter().zip(&y_inter.data) {
+            assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn generalizes_to_int4_and_mxfp4() {
+        // Table 6: the residual mechanism helps INT4 and MXFP4 too.
+        let mut rng = Prng::new(45);
+        let x = outlier_mat(&mut rng, 16, 256);
+        let mut w = Mat::zeros(16, 256);
+        w.fill_random_normal(&mut rng, 0.4);
+        let y_ref = matmul_nt(&x, &w);
+        for fmt in [Format::Int4 { group: 128 }, Format::Mxfp4] {
+            let plan = plan_for(&x, fmt);
+            let arc = ArcQuantLinear::prepare(&w, plan).forward(&x);
+            let rtn = ArcQuantLinear::prepare(&w, LayerPlan::rtn(256, fmt)).forward(&x);
+            let e_arc = stats::mse(&arc.data, &y_ref.data);
+            let e_rtn = stats::mse(&rtn.data, &y_ref.data);
+            assert!(e_arc < e_rtn, "{fmt:?}: {e_arc} !< {e_rtn}");
+        }
+    }
+
+    #[test]
+    fn prop_forward_finite_and_shaped() {
+        prop::forall(
+            "arcquant_forward_sane",
+            prop::Config { cases: 16, ..Default::default() },
+            |rng| {
+                let k = prop::gens::dim_mult(rng, 16, 128);
+                let n = 1 + rng.below(8);
+                let m = 1 + rng.below(16);
+                let x = Mat::from_vec(n, k, prop::gens::activation_vec(rng, n * k));
+                let w = Mat::from_vec(m, k, prop::gens::uniform_vec(rng, m * k, 1.0));
+                (x, w)
+            },
+            |(x, w)| {
+                let plan = LayerPlan::from_calibration(&x.col_absmax(), Format::Nvfp4);
+                let lin = ArcQuantLinear::prepare(w, plan);
+                let y = lin.forward(x);
+                if y.rows != x.rows || y.cols != w.rows {
+                    return Err("bad output shape".into());
+                }
+                if y.data.iter().any(|v| !v.is_finite()) {
+                    return Err("non-finite output".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,100 @@
+//! ARCQuant's quantization core (paper §3.2–§3.4).
+//!
+//! Pipeline (activations, online):
+//! 1. **Reorder** channels by calibrated absolute maximum ([`reorder`]).
+//! 2. **Primary quantization** — block-wise NVFP4 of the full matrix.
+//! 3. **Residual compensation** — isolate the top-S outlier channels,
+//!    compute residuals `R_o = X_o − Q(X_o)`, quantize them again
+//!    ([`residual`]).
+//! 4. **Augmentation** — concatenate along the reduction dim:
+//!    `Q_aug = [Q_X | Q_{R_o}]` ([`arcquant`]).
+//!
+//! Weights (offline): reorder to match, quantize, and *duplicate* the
+//! quantized outlier columns so the standard GEMM computes the correction
+//! term `R_o·Q(W_o)ᵀ` (Eq. 2).
+//!
+//! [`outlier`] implements the adaptive τ = 2⁻³·M selection rule and
+//! [`error`] the §3.4 worst-case bounds.
+
+pub mod arcquant;
+pub mod error;
+pub mod outlier;
+pub mod reorder;
+pub mod residual;
+
+pub use arcquant::{interleaved_layout, ArcQuantLinear, ArcQuantizer, AugmentedActivation};
+pub use outlier::{select_outliers, OutlierSelection, TAU_COEFF};
+pub use reorder::Permutation;
+pub use residual::{dual_stage_qdq, dual_stage_reconstruct};
+
+use crate::formats::Format;
+
+/// Static per-layer quantization plan, derived offline from calibration
+/// (reorder indices + outlier count S), applied online to activations.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    /// Channel permutation: position j in the reordered matrix reads
+    /// original channel `perm.idx[j]`. Sorted by calibrated absmax, desc.
+    pub perm: Permutation,
+    /// Number of augmented residual channels (multiple of the block size).
+    pub s: usize,
+    /// Base element format (NVFP4 in the paper's main results; INT4 and
+    /// MXFP4 in the Table 6 ablation).
+    pub fmt: Format,
+}
+
+impl LayerPlan {
+    /// Build a plan from calibrated per-channel absolute maxima.
+    pub fn from_calibration(col_absmax: &[f32], fmt: Format) -> LayerPlan {
+        let perm = Permutation::sort_desc(col_absmax);
+        let sel = select_outliers(col_absmax, &perm, fmt.group());
+        LayerPlan { perm, s: sel.s, fmt }
+    }
+
+    /// Like `from_calibration` but with S clamped to `max_s` (the paper
+    /// caps the operating range at S ≤ 512 — Figure 8a inset).
+    pub fn from_calibration_capped(col_absmax: &[f32], fmt: Format, max_s: usize) -> LayerPlan {
+        let mut p = Self::from_calibration(col_absmax, fmt);
+        p.s = p.s.min(max_s);
+        p
+    }
+
+    /// A plan that disables compensation (S = 0) — the RTN baseline path.
+    pub fn rtn(k: usize, fmt: Format) -> LayerPlan {
+        LayerPlan {
+            perm: Permutation::identity(k),
+            s: 0,
+            fmt,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_from_calibration_selects_outliers() {
+        let mut stats = vec![0.05f32; 64];
+        stats[10] = 4.0;
+        stats[20] = 3.0;
+        let plan = LayerPlan::from_calibration(&stats, Format::Nvfp4);
+        assert_eq!(plan.perm.idx[0], 10);
+        assert_eq!(plan.perm.idx[1], 20);
+        assert_eq!(plan.s, 16);
+    }
+
+    #[test]
+    fn capped_plan_clamps_s() {
+        let stats = vec![1.0f32; 1024];
+        let plan = LayerPlan::from_calibration_capped(&stats, Format::Nvfp4, 512);
+        assert_eq!(plan.s, 512);
+    }
+
+    #[test]
+    fn rtn_plan_is_identity_no_s() {
+        let plan = LayerPlan::rtn(128, Format::Mxfp4);
+        assert!(plan.perm.is_identity());
+        assert_eq!(plan.s, 0);
+    }
+}

@@ -1,0 +1,150 @@
+//! Adaptive outlier identification (paper §3.2).
+//!
+//! Given calibrated per-channel absolute maxima, the selection threshold
+//! is τ = 2⁻³·M where M is the layer-wise maximum. The 2⁻³ reflects the
+//! 3-bit exponent-width gap between the per-tensor FP8 E5M2 reference
+//! (5 exponent bits) and the E2M1 target (2 bits): channels with
+//! |x| ≤ τ sit in the lower range of the FP8 format where NVFP4's
+//! fine-grained scaling already matches the baseline precision, so only
+//! channels above τ receive residual compensation.
+
+use super::reorder::Permutation;
+
+/// The paper's threshold coefficient: 2⁻³ (E5M2 vs E2M1 exponent gap).
+pub const TAU_COEFF: f32 = 0.125;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct OutlierSelection {
+    /// Number of channels selected for compensation (rounded up to the
+    /// block size so residual blocks stay aligned; capped at K).
+    pub s: usize,
+    /// Raw count before block alignment.
+    pub s_raw: usize,
+    /// The threshold τ = 2⁻³·M used.
+    pub tau: f32,
+    /// Layer-wise maximum M.
+    pub layer_max: f32,
+}
+
+/// Select the number of outlier channels for one layer.
+///
+/// `col_absmax` are calibration statistics in *original* channel order;
+/// `perm` must be the descending-absmax reorder of those stats, so the
+/// selected channels are exactly the first `s` reordered positions.
+pub fn select_outliers(
+    col_absmax: &[f32],
+    perm: &Permutation,
+    block: usize,
+) -> OutlierSelection {
+    assert_eq!(col_absmax.len(), perm.len());
+    let k = col_absmax.len();
+    let layer_max = col_absmax.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let tau = TAU_COEFF * layer_max;
+    // Channels are sorted descending, so count the prefix above τ.
+    let reordered = perm.apply_vec(col_absmax);
+    let s_raw = reordered.partition_point(|&v| v > tau);
+    // Align to the block size (the kernel groups outliers into NVFP4
+    // blocks of 16 — Appendix D), cap at K.
+    let s = if s_raw == 0 {
+        0
+    } else {
+        (s_raw.div_ceil(block) * block).min(k)
+    };
+    OutlierSelection {
+        s,
+        s_raw,
+        tau,
+        layer_max,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn select(stats: &[f32], block: usize) -> OutlierSelection {
+        let perm = Permutation::sort_desc(stats);
+        select_outliers(stats, &perm, block)
+    }
+
+    #[test]
+    fn threshold_is_eighth_of_max() {
+        let stats = [8.0f32, 0.9, 1.1, 0.5];
+        let sel = select(&stats, 1);
+        assert_eq!(sel.layer_max, 8.0);
+        assert_eq!(sel.tau, 1.0);
+        // strictly above τ: 8.0 and 1.1
+        assert_eq!(sel.s_raw, 2);
+    }
+
+    #[test]
+    fn block_alignment_rounds_up() {
+        let mut stats = vec![0.01f32; 64];
+        stats[0] = 10.0;
+        stats[1] = 9.0;
+        stats[2] = 8.0;
+        let sel = select(&stats, 16);
+        assert_eq!(sel.s_raw, 3);
+        assert_eq!(sel.s, 16);
+    }
+
+    #[test]
+    fn s_capped_at_k() {
+        // All channels equal → all above τ (τ = max/8 < every channel).
+        let stats = vec![1.0f32; 24];
+        let sel = select(&stats, 16);
+        assert_eq!(sel.s_raw, 24);
+        assert_eq!(sel.s, 24); // 32 would exceed K=24 → capped
+    }
+
+    #[test]
+    fn uniform_small_activations_no_outliers() {
+        // If the max itself is the only channel above τ... a single spike:
+        let mut stats = vec![0.05f32; 128];
+        stats[77] = 100.0;
+        let sel = select(&stats, 16);
+        assert_eq!(sel.s_raw, 1);
+        assert_eq!(sel.s, 16);
+        // And verify the spike is first in the reorder:
+        let perm = Permutation::sort_desc(&stats);
+        assert_eq!(perm.idx[0], 77);
+    }
+
+    #[test]
+    fn all_zero_layer() {
+        let stats = vec![0.0f32; 32];
+        let sel = select(&stats, 16);
+        assert_eq!(sel.s, 0);
+        assert_eq!(sel.tau, 0.0);
+    }
+
+    #[test]
+    fn prop_selected_prefix_above_tau_rest_below() {
+        prop::forall(
+            "outlier_prefix_partition",
+            prop::Config { cases: 64, ..Default::default() },
+            |rng| {
+                let n = 32 + rng.below(512);
+                prop::gens::activation_vec(rng, n).iter().map(|v| v.abs()).collect::<Vec<f32>>()
+            },
+            |stats| {
+                let perm = Permutation::sort_desc(stats);
+                let sel = select_outliers(stats, &perm, 16);
+                let reordered = perm.apply_vec(stats);
+                for (j, &v) in reordered.iter().enumerate() {
+                    if j < sel.s_raw && v <= sel.tau {
+                        return Err(format!("pos {j} in prefix but {v} <= τ={}", sel.tau));
+                    }
+                    if j >= sel.s_raw && v > sel.tau {
+                        return Err(format!("pos {j} outside prefix but {v} > τ"));
+                    }
+                }
+                if sel.s < sel.s_raw || (sel.s > 0 && sel.s % 16 != 0 && sel.s != stats.len()) {
+                    return Err(format!("bad alignment: s={} s_raw={}", sel.s, sel.s_raw));
+                }
+                Ok(())
+            },
+        );
+    }
+}

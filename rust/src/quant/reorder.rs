@@ -1,0 +1,171 @@
+//! Channel reordering (paper §3.2, "Adaptive Outlier Identification").
+//!
+//! ARCQuant reorders activation channels by their calibrated absolute
+//! maximum (descending), adopting Atom's sorting strategy, so the top-S
+//! outlier channels form a contiguous prefix that the fused kernel can
+//! compensate. The same permutation is applied offline to weight columns,
+//! which leaves `X Wᵀ` mathematically invariant.
+
+use crate::tensor::Mat;
+
+/// A channel permutation. `idx[j]` = original channel index placed at
+/// reordered position `j`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Permutation {
+    pub idx: Vec<usize>,
+}
+
+impl Permutation {
+    pub fn identity(k: usize) -> Permutation {
+        Permutation {
+            idx: (0..k).collect(),
+        }
+    }
+
+    /// Sort channels by key descending (stable, so equal-magnitude
+    /// channels keep their original relative order — deterministic).
+    pub fn sort_desc(keys: &[f32]) -> Permutation {
+        let mut idx: Vec<usize> = (0..keys.len()).collect();
+        idx.sort_by(|&a, &b| {
+            keys[b]
+                .partial_cmp(&keys[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        Permutation { idx }
+    }
+
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.idx.iter().enumerate().all(|(i, &j)| i == j)
+    }
+
+    /// The inverse permutation: `inv[orig] = reordered position`.
+    pub fn inverse(&self) -> Permutation {
+        let mut inv = vec![0usize; self.idx.len()];
+        for (pos, &orig) in self.idx.iter().enumerate() {
+            inv[orig] = pos;
+        }
+        Permutation { idx: inv }
+    }
+
+    /// Gather columns of `m` into reordered positions:
+    /// `out[:, j] = m[:, idx[j]]`.
+    pub fn apply_cols(&self, m: &Mat) -> Mat {
+        assert_eq!(m.cols, self.idx.len(), "permutation length != cols");
+        m.select_cols(&self.idx)
+    }
+
+    /// Reorder a per-channel vector the same way.
+    pub fn apply_vec(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(v.len(), self.idx.len());
+        self.idx.iter().map(|&i| v[i]).collect()
+    }
+
+    /// Validity check: `idx` must be a bijection on [0, len).
+    pub fn is_valid(&self) -> bool {
+        let mut seen = vec![false; self.idx.len()];
+        for &i in &self.idx {
+            if i >= self.idx.len() || seen[i] {
+                return false;
+            }
+            seen[i] = true;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Prng};
+
+    #[test]
+    fn sort_desc_orders_keys() {
+        let keys = [1.0f32, 9.0, 3.0, 9.0, 0.5];
+        let p = Permutation::sort_desc(&keys);
+        // stable: the two 9.0s keep original order (1 before 3)
+        assert_eq!(p.idx, vec![1, 3, 2, 0, 4]);
+        assert!(p.is_valid());
+    }
+
+    #[test]
+    fn inverse_composes_to_identity() {
+        let keys = [0.3f32, 2.0, 1.5, 0.1, 5.0, 4.0];
+        let p = Permutation::sort_desc(&keys);
+        let inv = p.inverse();
+        for orig in 0..keys.len() {
+            assert_eq!(p.idx[inv.idx[orig]], orig);
+        }
+    }
+
+    #[test]
+    fn apply_cols_gathers() {
+        let m = Mat::from_fn(2, 3, |r, c| (r * 3 + c) as f32);
+        let p = Permutation { idx: vec![2, 0, 1] };
+        let g = p.apply_cols(&m);
+        assert_eq!(g.row(0), &[2.0, 0.0, 1.0]);
+        assert_eq!(g.row(1), &[5.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn reorder_preserves_gemm() {
+        // X Wᵀ must be invariant when the same permutation is applied to
+        // activation channels and weight columns — the algebraic fact the
+        // offline weight reordering relies on.
+        let mut rng = Prng::new(21);
+        let (n, k, m) = (4, 32, 8);
+        let mut x = Mat::zeros(n, k);
+        let mut w = Mat::zeros(m, k);
+        x.fill_random_normal(&mut rng, 1.0);
+        w.fill_random_normal(&mut rng, 1.0);
+        let keys: Vec<f32> = (0..k).map(|_| rng.f32()).collect();
+        let p = Permutation::sort_desc(&keys);
+
+        let y0 = crate::tensor::matmul_nt(&x, &w);
+        let y1 = crate::tensor::matmul_nt(&p.apply_cols(&x), &p.apply_cols(&w));
+        for (a, b) in y0.data.iter().zip(&y1.data) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + a.abs()));
+        }
+    }
+
+    #[test]
+    fn prop_sort_desc_is_monotone_permutation() {
+        prop::forall(
+            "sort_desc_valid",
+            prop::Config { cases: 64, ..Default::default() },
+            |rng| {
+                let n = 1 + rng.below(200);
+                prop::gens::activation_vec(rng, n)
+            },
+            |keys| {
+                let p = Permutation::sort_desc(keys);
+                if !p.is_valid() {
+                    return Err("not a bijection".into());
+                }
+                for w in p.idx.windows(2) {
+                    if keys[w[0]] < keys[w[1]] {
+                        return Err(format!(
+                            "not descending: {} < {}",
+                            keys[w[0]], keys[w[1]]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn identity_detection() {
+        assert!(Permutation::identity(5).is_identity());
+        assert!(!Permutation { idx: vec![1, 0] }.is_identity());
+    }
+}

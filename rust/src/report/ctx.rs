@@ -1,0 +1,294 @@
+//! Shared evaluation context: loads models/corpora/calibrations from
+//! artifacts once, runs (model × method) evaluations with caching.
+
+use crate::baselines::{LayerCalib, Method};
+use crate::eval::tasks::{domain_specs, mmlu_spec, run_task, zero_shot_specs};
+use crate::eval::{perplexity, task_suite};
+use crate::formats::Format;
+use crate::model::{Engine, EngineMode, ModelConfig, Weights};
+use crate::runtime::ModelBundle;
+use crate::util::json::Json;
+use crate::util::Timer;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+/// Evaluation budgets — scaled so the full table suite completes in
+/// minutes on CPU while keeping metric variance low.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalBudget {
+    pub ppl_windows: usize,
+    pub ppl_window_len: usize,
+    pub task_items: usize,
+}
+
+impl Default for EvalBudget {
+    fn default() -> Self {
+        EvalBudget {
+            ppl_windows: 12,
+            ppl_window_len: 64,
+            task_items: 48,
+        }
+    }
+}
+
+impl EvalBudget {
+    pub fn quick() -> Self {
+        EvalBudget {
+            ppl_windows: 4,
+            ppl_window_len: 32,
+            task_items: 12,
+        }
+    }
+}
+
+/// One accuracy-table row: the paper's Table 1/2 column set.
+#[derive(Clone, Debug)]
+pub struct EvalRow {
+    pub method: String,
+    pub zero_shot: Vec<(String, f64)>,
+    pub avg: f64,
+    pub ppl: f64,
+    pub mmlu: f64,
+    pub avg_s: usize,
+    pub prep_seconds: f64,
+}
+
+pub struct Ctx {
+    pub artifacts: PathBuf,
+    pub budget: EvalBudget,
+    models: Mutex<BTreeMap<String, (ModelConfig, Weights)>>,
+    corpora: Mutex<BTreeMap<String, Vec<u16>>>,
+    rows: Mutex<BTreeMap<String, EvalRow>>,
+}
+
+/// Model → eval/calibration corpus domain (mirrors train.py).
+pub fn model_domain(model: &str) -> &'static str {
+    match model {
+        m if m.starts_with("coder") => "code",
+        m if m.starts_with("math") => "math",
+        _ => "wiki",
+    }
+}
+
+/// The paper-facing display name of a sim model.
+pub fn display_name(model: &str) -> &'static str {
+    match model {
+        "llama8b-sim" => "Llama 3.1-8B (sim)",
+        "qwen7b-sim" => "Qwen2.5-7B (sim)",
+        "qwen32b-sim" => "Qwen2.5-32B (sim)",
+        "coder7b-sim" => "Qwen2.5-Coder-7B (sim)",
+        "math7b-sim" => "Qwen2.5-Math-7B (sim)",
+        _ => "unknown",
+    }
+}
+
+impl Ctx {
+    pub fn new(artifacts: &str, budget: EvalBudget) -> Ctx {
+        Ctx {
+            artifacts: PathBuf::from(artifacts),
+            budget,
+            models: Mutex::new(BTreeMap::new()),
+            corpora: Mutex::new(BTreeMap::new()),
+            rows: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn model(&self, name: &str) -> Result<(ModelConfig, Weights), String> {
+        if let Some(m) = self.models.lock().unwrap().get(name) {
+            return Ok(m.clone());
+        }
+        let cfg = ModelConfig::load(
+            self.artifacts
+                .join(format!("{name}.config.json"))
+                .to_str()
+                .unwrap(),
+        )?;
+        let w = Weights::load(
+            self.artifacts
+                .join(format!("{name}.weights.bin"))
+                .to_str()
+                .unwrap(),
+            &cfg,
+        )?;
+        self.models
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), (cfg.clone(), w.clone()));
+        Ok((cfg, w))
+    }
+
+    pub fn corpus(&self, domain: &str) -> Result<Vec<u16>, String> {
+        if let Some(c) = self.corpora.lock().unwrap().get(domain) {
+            return Ok(c.clone());
+        }
+        let path = self.artifacts.join(format!("corpus_{domain}.bin"));
+        let bytes = std::fs::read(&path).map_err(|e| format!("{path:?}: {e}"))?;
+        let toks: Vec<u16> = bytes
+            .chunks_exact(2)
+            .map(|c| u16::from_le_bytes([c[0], c[1]]))
+            .collect();
+        self.corpora
+            .lock()
+            .unwrap()
+            .insert(domain.to_string(), toks.clone());
+        Ok(toks)
+    }
+
+    /// Eval stream = tail of the corpus (training reads from random
+    /// windows over the whole stream; the tail region gives a held-out-ish
+    /// slice for PPL/tasks, and is identical across methods, which is
+    /// what the comparisons need).
+    pub fn eval_stream(&self, domain: &str) -> Result<Vec<u16>, String> {
+        let c = self.corpus(domain)?;
+        Ok(c[c.len() - c.len() / 5..].to_vec())
+    }
+
+    /// Per-site calibration from the Python plans.json (the shipped
+    /// calibration), as the engine expects it.
+    pub fn calibration(&self, model: &str) -> Result<BTreeMap<String, LayerCalib>, String> {
+        let bundle = ModelBundle::load(&self.artifacts, model).map_err(|e| e.to_string())?;
+        Ok(bundle
+            .plans
+            .into_iter()
+            .map(|(site, p)| {
+                (
+                    site,
+                    LayerCalib {
+                        col_absmax: p.col_absmax,
+                        sample: None,
+                    },
+                )
+            })
+            .collect())
+    }
+
+    /// Build an engine for (model, mode).
+    pub fn engine(&self, model: &str, mode: EngineMode) -> Result<(Engine, f64), String> {
+        let (cfg, w) = self.model(model)?;
+        let calib = if matches!(mode, EngineMode::Quantized(_)) {
+            Some(self.calibration(model)?)
+        } else {
+            None
+        };
+        let t = Timer::start();
+        let e = Engine::new(cfg, w, mode, calib.as_ref())?;
+        Ok((e, t.ms() / 1e3))
+    }
+
+    /// Full table row for (model, method), cached.
+    pub fn eval_row(&self, model: &str, method: Option<Method>) -> Result<EvalRow, String> {
+        let method_name = method
+            .as_ref()
+            .map(|m| m.name())
+            .unwrap_or_else(|| "FP16".to_string());
+        let key = format!("{model}|{method_name}");
+        if let Some(r) = self.rows.lock().unwrap().get(&key) {
+            return Ok(r.clone());
+        }
+        let mode = match method.clone() {
+            None => EngineMode::Fp32,
+            Some(m) => EngineMode::Quantized(m),
+        };
+        let (engine, prep_seconds) = self.engine(model, mode)?;
+        let domain = model_domain(model);
+        let stream = self.eval_stream(domain)?;
+        let b = self.budget;
+
+        let mut specs = zero_shot_specs();
+        for s in &mut specs {
+            s.n_items = b.task_items;
+        }
+        let (results, avg) = task_suite(&engine, &stream, &specs, 0);
+        let ppl = perplexity(&engine, &stream, b.ppl_window_len, b.ppl_windows).ppl;
+        let mut mmlu_s = mmlu_spec();
+        mmlu_s.n_items = b.task_items;
+        let mmlu = run_task(&engine, &stream, &mmlu_s, 0).accuracy;
+
+        let avg_s = crate::costmodel::avg_s(&engine);
+        let row = EvalRow {
+            method: method_name,
+            zero_shot: results
+                .iter()
+                .map(|r| (r.name.to_string(), r.accuracy))
+                .collect(),
+            avg,
+            ppl,
+            mmlu,
+            avg_s,
+            prep_seconds,
+        };
+        self.rows.lock().unwrap().insert(key, row.clone());
+        Ok(row)
+    }
+
+    /// Domain-task accuracies for (model, method) — Tables 3 / Figure 9.
+    pub fn domain_row(
+        &self,
+        model: &str,
+        method: Option<Method>,
+        domain: &'static str,
+    ) -> Result<Vec<(String, f64)>, String> {
+        let mode = match method {
+            None => EngineMode::Fp32,
+            Some(m) => EngineMode::Quantized(m),
+        };
+        let (engine, _) = self.engine(model, mode)?;
+        let stream = self.eval_stream(domain)?;
+        let mut out = Vec::new();
+        for mut spec in domain_specs(domain) {
+            spec.n_items = self.budget.task_items;
+            let r = run_task(&engine, &stream, &spec, 0);
+            out.push((r.name.to_string(), r.accuracy));
+        }
+        Ok(out)
+    }
+
+    /// Write a results JSON blob under artifacts/results/.
+    pub fn save_json(&self, name: &str, j: &Json) -> Result<(), String> {
+        let dir = self.artifacts.join("results");
+        std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+        std::fs::write(dir.join(format!("{name}.json")), j.dump())
+            .map_err(|e| e.to_string())
+    }
+}
+
+/// The standard method sets per table.
+pub fn table1_methods() -> Vec<Option<Method>> {
+    vec![
+        None,
+        Some(Method::W4A8Rtn),
+        Some(Method::FlatQuant { fmt: Format::Nvfp4 }),
+        Some(Method::Atom {
+            outlier_channels: crate::baselines::atom::ATOM_DEFAULT_OUTLIERS,
+        }),
+        Some(Method::ArcQuant { fmt: Format::Nvfp4, max_s: Some(512) }),
+    ]
+}
+
+pub fn table2_methods() -> Vec<Option<Method>> {
+    vec![
+        Some(Method::Rtn { fmt: Format::Nvfp4 }),
+        Some(Method::Smooth { fmt: Format::Nvfp4, alpha: 0.5 }),
+        Some(Method::QuaRot { fmt: Format::Nvfp4, seed: 0 }),
+        Some(Method::ArcQuant { fmt: Format::Nvfp4, max_s: Some(512) }),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn domains_and_names() {
+        assert_eq!(model_domain("coder7b-sim"), "code");
+        assert_eq!(model_domain("llama8b-sim"), "wiki");
+        assert!(display_name("qwen32b-sim").contains("32B"));
+    }
+
+    #[test]
+    fn method_sets_match_paper() {
+        assert_eq!(table1_methods().len(), 5); // FP16 + 4 methods
+        assert_eq!(table2_methods().len(), 4);
+    }
+}

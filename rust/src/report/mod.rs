@@ -1,0 +1,84 @@
+//! Report generators: one function per paper table/figure.
+//!
+//! Each generator returns formatted text (the same rows/series the paper
+//! prints) and writes a machine-readable JSON blob under
+//! `artifacts/results/`. `examples/paper_tables.rs` and the
+//! `arcquant report` CLI drive these. Absolute GPU numbers come from the
+//! calibrated cost model and are labeled `modeled`; everything else is
+//! measured on this host.
+
+pub mod ctx;
+pub mod figures;
+pub mod tables;
+
+pub use ctx::{Ctx, EvalBudget, EvalRow};
+
+/// Simple fixed-width table formatter.
+pub struct TextTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub title: String,
+}
+
+impl TextTable {
+    pub fn new(title: &str, header: &[&str]) -> TextTable {
+        TextTable {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate().take(ncols) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:width$}", c, width = widths.get(i).copied().unwrap_or(8)))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = TextTable::new("Demo", &["Method", "PPL"]);
+        t.row(vec!["FP16".into(), "6.24".into()]);
+        t.row(vec!["ARCQuant".into(), "6.87".into()]);
+        let s = t.render();
+        assert!(s.contains("== Demo =="));
+        assert!(s.contains("FP16"));
+        // columns aligned: both data rows have the PPL at same offset
+        let lines: Vec<&str> = s.lines().collect();
+        let off1 = lines[3].find("6.24").unwrap();
+        let off2 = lines[4].find("6.87").unwrap();
+        assert_eq!(off1, off2);
+    }
+}

@@ -1,0 +1,172 @@
+//! Model input bundle: assembles the PJRT parameter list for the
+//! parameterized model artifacts.
+//!
+//! The AOT artifacts take weights and calibration plans as *parameters*
+//! (see `python/compile/aot.py`): parameter order is
+//! `[tokens] + weights (sorted by tensor name = ARCW file order)
+//!  + per-site perms (sorted by site name) + ts[n_sites, 2]`.
+//! This module loads the ARCW + plans.json files once and builds the
+//! literal vectors the executor thread feeds per batch.
+
+use crate::model::weights::parse_arcw;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Per-site plan data as stored in {model}.plans.json.
+#[derive(Clone, Debug)]
+pub struct SitePlan {
+    pub perm: Vec<i32>,
+    pub s: usize,
+    pub ts_main: f32,
+    pub ts_res: f32,
+    pub col_absmax: Vec<f32>,
+}
+
+pub struct ModelBundle {
+    /// (name, dims, data) in ARCW (sorted-name) order.
+    pub weights: Vec<(String, Vec<usize>, Vec<f32>)>,
+    /// (site, plan) sorted by site name.
+    pub plans: Vec<(String, SitePlan)>,
+    pub calib_seconds: f64,
+}
+
+impl ModelBundle {
+    pub fn load(artifacts: &Path, model: &str) -> Result<ModelBundle> {
+        let wblob = std::fs::read(artifacts.join(format!("{model}.weights.bin")))
+            .with_context(|| format!("{model}.weights.bin"))?;
+        let map = parse_arcw(&wblob).map_err(|e| anyhow!(e))?;
+        // BTreeMap iteration = sorted by name = python `sorted(flat)`.
+        let weights = map
+            .into_iter()
+            .map(|(name, (dims, data))| (name, dims, data))
+            .collect();
+
+        let ptext = std::fs::read_to_string(artifacts.join(format!("{model}.plans.json")))
+            .with_context(|| format!("{model}.plans.json"))?;
+        let pj = Json::parse(&ptext).map_err(|e| anyhow!(e))?;
+        let mut plans = Vec::new();
+        if let Some(Json::Obj(sites)) = pj.get("sites") {
+            for (site, p) in sites {
+                let perm: Vec<i32> = p
+                    .get("perm")
+                    .and_then(|v| v.to_usizes())
+                    .ok_or_else(|| anyhow!("{site}: missing perm"))?
+                    .into_iter()
+                    .map(|v| v as i32)
+                    .collect();
+                plans.push((
+                    site.clone(),
+                    SitePlan {
+                        perm,
+                        s: p.get("s").and_then(|v| v.as_usize()).unwrap_or(0),
+                        ts_main: p
+                            .get("ts_main")
+                            .and_then(|v| v.as_f64())
+                            .unwrap_or(1.0) as f32,
+                        ts_res: p
+                            .get("ts_res")
+                            .and_then(|v| v.as_f64())
+                            .unwrap_or(1.0) as f32,
+                        col_absmax: p
+                            .get("col_absmax")
+                            .and_then(|v| v.to_f32s())
+                            .unwrap_or_default(),
+                    },
+                ));
+            }
+        }
+        // BTreeMap already sorted; keep explicit for clarity.
+        plans.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(ModelBundle {
+            weights,
+            plans,
+            calib_seconds: pj
+                .get("calib_seconds")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+        })
+    }
+
+    /// Weight literals in parameter order.
+    pub fn weight_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.weights
+            .iter()
+            .map(|(_, dims, data)| {
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+            })
+            .collect()
+    }
+
+    /// Plan literals: identity/calibrated perms + the ts matrix.
+    /// `rtn` replaces perms with identity and zeroes residual scales
+    /// (matching the nvfp4rtn artifact's plan parameters).
+    pub fn plan_literals(&self, rtn: bool) -> Result<Vec<xla::Literal>> {
+        let mut lits = Vec::with_capacity(self.plans.len() + 1);
+        for (_, p) in &self.plans {
+            let perm: Vec<i32> = if rtn {
+                (0..p.perm.len() as i32).collect()
+            } else {
+                p.perm.clone()
+            };
+            lits.push(xla::Literal::vec1(&perm).reshape(&[perm.len() as i64])?);
+        }
+        let mut ts = Vec::with_capacity(self.plans.len() * 2);
+        for (_, p) in &self.plans {
+            ts.push(p.ts_main);
+            ts.push(if rtn { 1.0 } else { p.ts_res });
+        }
+        lits.push(
+            xla::Literal::vec1(&ts).reshape(&[self.plans.len() as i64, 2])?,
+        );
+        Ok(lits)
+    }
+
+    /// Figure 7 series: per-layer S for one site kind.
+    pub fn s_series(&self, kind: &str) -> Vec<usize> {
+        let mut out: Vec<(usize, usize)> = self
+            .plans
+            .iter()
+            .filter_map(|(name, p)| {
+                let rest = name.strip_prefix("layers.")?;
+                let (idx, k) = rest.split_once('.')?;
+                if k == kind {
+                    Some((idx.parse().ok()?, p.s))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        out.sort_unstable();
+        out.into_iter().map(|(_, s)| s).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn s_series_orders_layers() {
+        let mk = |s| SitePlan {
+            perm: vec![0, 1],
+            s,
+            ts_main: 1.0,
+            ts_res: 1.0,
+            col_absmax: vec![],
+        };
+        let b = ModelBundle {
+            weights: vec![],
+            plans: vec![
+                ("layers.0.attn_in".into(), mk(16)),
+                ("layers.1.attn_in".into(), mk(32)),
+                ("layers.1.mlp_in".into(), mk(64)),
+            ],
+            calib_seconds: 0.0,
+        };
+        assert_eq!(b.s_series("attn_in"), vec![16, 32]);
+        assert_eq!(b.s_series("mlp_in"), vec![64]);
+        assert_eq!(b.s_series("mlp_out"), Vec::<usize>::new());
+    }
+}

@@ -1,0 +1,186 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Artifacts are jax-lowered with `return_tuple=True`, so outputs unwrap
+//! with `to_tuple1`. A compile cache keyed by path means a model variant
+//! compiles once; the serving hot path only executes.
+//!
+//! The PJRT client is `Rc`-based (not `Send`), so a [`Runtime`] is owned
+//! by exactly one thread. The coordinator runs it on a dedicated
+//! *executor thread* (the "GPU-owning" thread of a real serving stack)
+//! and talks to it over channels — see [`crate::coordinator::server`].
+
+pub mod bundle;
+pub use bundle::{ModelBundle, SitePlan};
+
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    root: PathBuf,
+}
+
+/// The artifacts/manifest.json index written by `python -m compile.aot`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub raw: crate::util::json::Json,
+}
+
+impl Manifest {
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(root.join("manifest.json"))
+            .context("reading artifacts/manifest.json — run `make artifacts` first")?;
+        let j = crate::util::json::Json::parse(&text).map_err(|e| anyhow!(e))?;
+        Ok(Manifest {
+            batch: j.get("batch").and_then(|v| v.as_usize()).unwrap_or(4),
+            seq: j.get("seq").and_then(|v| v.as_usize()).unwrap_or(64),
+            vocab: j.get("vocab").and_then(|v| v.as_usize()).unwrap_or(256),
+            raw: j,
+        })
+    }
+
+    /// Path of a model variant's HLO artifact, if present.
+    pub fn model_hlo(&self, model: &str, variant: &str) -> Option<String> {
+        self.raw
+            .get("models")?
+            .get(model)?
+            .get("hlo")?
+            .get(variant)?
+            .as_str()
+            .map(|s| s.to_string())
+    }
+
+    /// Kernel artifact path by name (e.g. "fused_quant").
+    pub fn kernel_hlo(&self, name: &str) -> Option<String> {
+        self.raw.get("kernels")?.get(name)?.as_str().map(|s| s.to_string())
+    }
+}
+
+impl Runtime {
+    pub fn new(artifacts_root: &str) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            cache: RefCell::new(HashMap::new()),
+            root: PathBuf::from(artifacts_root),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Load + compile an HLO text artifact (cached by relative path).
+    pub fn load(&self, rel_path: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(rel_path) {
+            return Ok(exe.clone());
+        }
+        let full = self.root.join(rel_path);
+        let full_str = full
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {full:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(full_str)
+            .with_context(|| format!("parsing HLO text {full_str}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {rel_path}"))?,
+        );
+        self.cache
+            .borrow_mut()
+            .insert(rel_path.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a model-forward artifact on an i32 token batch
+    /// [batch, seq] plus the parameterized model inputs (weights, perms,
+    /// ts — see [`ModelBundle`]); returns logits as (data, dims).
+    pub fn run_tokens(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        tokens: &[i32],
+        batch: usize,
+        seq: usize,
+        extra: Vec<xla::Literal>,
+    ) -> Result<(Vec<f32>, Vec<usize>)> {
+        anyhow::ensure!(tokens.len() == batch * seq, "token shape mismatch");
+        let lit = xla::Literal::vec1(tokens).reshape(&[batch as i64, seq as i64])?;
+        let mut args = Vec::with_capacity(1 + extra.len());
+        args.push(lit);
+        args.extend(extra);
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let shape = out.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = out.to_vec::<f32>()?;
+        Ok((data, dims))
+    }
+
+    /// Execute an f32-operand kernel artifact (standalone fused-quant /
+    /// GEMM kernels) and return (data, dims) of the single output.
+    pub fn run_f32(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        operands: &[(&[f32], &[usize])],
+    ) -> Result<(Vec<f32>, Vec<usize>)> {
+        let mut lits = Vec::with_capacity(operands.len());
+        for (data, dims) in operands {
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            lits.push(xla::Literal::vec1(data).reshape(&dims_i64)?);
+        }
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let shape = out.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        Ok((out.to_vec::<f32>()?, dims))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Tests that need compiled artifacts live in rust/tests/ (integration)
+    // so `cargo test --lib` stays artifact-free. Here: manifest parsing.
+    use super::*;
+
+    #[test]
+    fn manifest_parses_minimal_json() {
+        let dir = std::env::temp_dir().join("arcq_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"batch":2,"seq":8,"vocab":256,
+                "models":{"m":{"hlo":{"fp32":"m.fp32.hlo.txt"}}},
+                "kernels":{"fused_quant":"k.hlo.txt"}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!((m.batch, m.seq, m.vocab), (2, 8, 256));
+        assert_eq!(m.model_hlo("m", "fp32").as_deref(), Some("m.fp32.hlo.txt"));
+        assert_eq!(m.model_hlo("m", "arcquant"), None);
+        assert_eq!(m.kernel_hlo("fused_quant").as_deref(), Some("k.hlo.txt"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_missing_file_errors_helpfully() {
+        let dir = std::env::temp_dir().join("arcq_manifest_missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,170 @@
+//! Cache-blocked GEMM: C = A · Bᵀ (the linear-layer orientation the paper
+//! uses throughout, `Y = X Wᵀ`, with W stored row-major as [out, in]).
+//!
+//! The kernel is the L3 hot path for the pure-Rust model substrate, so it
+//! is written for the optimizer: row-major, unit-stride inner loops over
+//! the reduction dimension, parallelised over output rows, with a 4-wide
+//! accumulator block to expose ILP. The §Perf pass iterates here.
+
+use super::Mat;
+use crate::util::pool;
+
+/// C = A · Bᵀ where A is [n, k] and B is [m, k] → C is [n, m].
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(
+        a.cols, b.cols,
+        "reduction-dim mismatch: A[{},{}] · B[{},{}]ᵀ",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    let n = a.rows;
+    let m = b.rows;
+    let k = a.cols;
+    let mut c = Mat::zeros(n, m);
+
+    // Parallelise over rows of A (each worker owns whole output rows).
+    pool::par_chunks_mut(&mut c.data, m, |offset, c_row| {
+        let i = offset / m;
+        let a_row = &a.data[i * k..(i + 1) * k];
+        // 4-wide blocking over output columns.
+        let mut j = 0;
+        while j + 4 <= m {
+            let b0 = &b.data[j * k..(j + 1) * k];
+            let b1 = &b.data[(j + 1) * k..(j + 2) * k];
+            let b2 = &b.data[(j + 2) * k..(j + 3) * k];
+            let b3 = &b.data[(j + 3) * k..(j + 4) * k];
+            let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+            for t in 0..k {
+                let av = a_row[t];
+                s0 += av * b0[t];
+                s1 += av * b1[t];
+                s2 += av * b2[t];
+                s3 += av * b3[t];
+            }
+            c_row[j] = s0;
+            c_row[j + 1] = s1;
+            c_row[j + 2] = s2;
+            c_row[j + 3] = s3;
+            j += 4;
+        }
+        while j < m {
+            let b_row = &b.data[j * k..(j + 1) * k];
+            c_row[j] = dot(a_row, b_row);
+            j += 1;
+        }
+    });
+    c
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 8-wide unrolled accumulation — keeps the FP adds in 8 independent
+    // chains so the compiler can vectorise without -ffast-math.
+    let chunks = a.len() / 8;
+    let mut acc = [0f32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        for l in 0..8 {
+            acc[l] += a[i + l] * b[i + l];
+        }
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for i in chunks * 8..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Naive reference for tests.
+pub fn matmul_nt_ref(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols);
+    let mut c = Mat::zeros(a.rows, b.rows);
+    for i in 0..a.rows {
+        for j in 0..b.rows {
+            let mut s = 0f64;
+            for t in 0..a.cols {
+                s += (a.at(i, t) as f64) * (b.at(j, t) as f64);
+            }
+            *c.at_mut(i, j) = s as f32;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn matches_reference_various_shapes() {
+        let mut rng = Prng::new(1);
+        for &(n, k, m) in &[(1, 1, 1), (3, 7, 5), (8, 16, 4), (17, 33, 9), (2, 128, 64)] {
+            let mut a = Mat::zeros(n, k);
+            let mut b = Mat::zeros(m, k);
+            a.fill_random_normal(&mut rng, 1.0);
+            b.fill_random_normal(&mut rng, 1.0);
+            let fast = matmul_nt(&a, &b);
+            let slow = matmul_nt_ref(&a, &b);
+            for (x, y) in fast.data.iter().zip(&slow.data) {
+                assert!(
+                    (x - y).abs() <= 1e-4 * (1.0 + y.abs()),
+                    "({n},{k},{m}): {x} vs {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn identity_matmul() {
+        let n = 6;
+        let eye = Mat::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 });
+        let mut x = Mat::zeros(3, n);
+        let mut rng = Prng::new(2);
+        x.fill_random_normal(&mut rng, 2.0);
+        // X · Iᵀ = X
+        let y = matmul_nt(&x, &eye);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Prng::new(3);
+        for len in [0, 1, 7, 8, 9, 63, 64, 100] {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-4 * (1.0 + naive.abs()));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "reduction-dim mismatch")]
+    fn shape_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 4);
+        let _ = matmul_nt(&a, &b);
+    }
+
+    #[test]
+    fn augmented_linearity() {
+        // The property ARCQuant's unified GEMM relies on (Eq. 2):
+        // [A | A2] · [B | B2]ᵀ == A·Bᵀ + A2·B2ᵀ when concatenated along K.
+        let mut rng = Prng::new(4);
+        let (n, k, s, m) = (5, 32, 8, 6);
+        let mut a = Mat::zeros(n, k);
+        let mut a2 = Mat::zeros(n, s);
+        let mut b = Mat::zeros(m, k);
+        let mut b2 = Mat::zeros(m, s);
+        for t in [&mut a, &mut a2, &mut b, &mut b2] {
+            t.fill_random_normal(&mut rng, 1.0);
+        }
+        let aug = matmul_nt(&a.hcat(&a2), &b.hcat(&b2));
+        let main = matmul_nt(&a, &b);
+        let corr = matmul_nt(&a2, &b2);
+        for i in 0..n * m {
+            let want = main.data[i] + corr.data[i];
+            assert!((aug.data[i] - want).abs() < 1e-4 * (1.0 + want.abs()));
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Minimal dense row-major f32 matrix type with the handful of linear
+//! algebra operations the substrate needs (GEMM, transpose, row ops).
+//!
+//! This is deliberately a small, dependency-free core: the heavy compute
+//! in the reproduction runs either through the PJRT runtime (AOT JAX
+//! artifacts) or through the cache-blocked GEMM here, which the §Perf pass
+//! optimizes.
+
+pub mod gemm;
+
+pub use gemm::matmul_nt;
+
+/// Row-major 2-D matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Column-wise absolute maximum — the calibration statistic ARCQuant's
+    /// reordering is driven by (channel = column of the activation matrix).
+    pub fn col_absmax(&self) -> Vec<f32> {
+        let mut m = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for (c, &v) in row.iter().enumerate() {
+                let a = v.abs();
+                if a > m[c] {
+                    m[c] = a;
+                }
+            }
+        }
+        m
+    }
+
+    /// Global absolute maximum.
+    pub fn absmax(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Gather columns: out[:, j] = self[:, idx[j]].
+    pub fn select_cols(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(self.rows, idx.len());
+        for r in 0..self.rows {
+            let src = self.row(r);
+            let dst = out.row_mut(r);
+            for (j, &i) in idx.iter().enumerate() {
+                dst[j] = src[i];
+            }
+        }
+        out
+    }
+
+    /// Horizontally concatenate [self | other].
+    pub fn hcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Mat::zeros(self.rows, self.cols + other.cols);
+        for r in 0..self.rows {
+            out.row_mut(r)[..self.cols].copy_from_slice(self.row(r));
+            out.row_mut(r)[self.cols..].copy_from_slice(other.row(r));
+        }
+        out
+    }
+
+    pub fn scale_in_place(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// Multiply each column by a factor: self[:, c] *= f[c].
+    pub fn scale_cols(&mut self, f: &[f32]) {
+        assert_eq!(f.len(), self.cols);
+        for r in 0..self.rows {
+            let cols = self.cols;
+            let row = self.row_mut(r);
+            for c in 0..cols {
+                row[c] *= f[c];
+            }
+        }
+    }
+
+    pub fn fill_random_normal(&mut self, rng: &mut crate::util::Prng, std: f32) {
+        for v in &mut self.data {
+            *v = rng.normal() * std;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_and_rows() {
+        let m = Mat::from_fn(3, 4, |r, c| (r * 10 + c) as f32);
+        assert_eq!(m.at(2, 3), 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Mat::from_fn(3, 5, |r, c| (r * 5 + c) as f32);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().at(4, 2), m.at(2, 4));
+    }
+
+    #[test]
+    fn col_absmax_finds_outliers() {
+        let m = Mat::from_vec(2, 3, vec![1.0, -9.0, 0.5, -2.0, 3.0, 0.25]);
+        assert_eq!(m.col_absmax(), vec![2.0, 9.0, 0.5]);
+        assert_eq!(m.absmax(), 9.0);
+    }
+
+    #[test]
+    fn select_and_hcat() {
+        let m = Mat::from_fn(2, 4, |r, c| (r * 4 + c) as f32);
+        let sel = m.select_cols(&[3, 1]);
+        assert_eq!(sel.data, vec![3.0, 1.0, 7.0, 5.0]);
+        let cat = m.hcat(&sel);
+        assert_eq!(cat.cols, 6);
+        assert_eq!(cat.row(0), &[0.0, 1.0, 2.0, 3.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn scale_cols_applies_per_column() {
+        let mut m = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        m.scale_cols(&[10.0, 0.5]);
+        assert_eq!(m.data, vec![10.0, 1.0, 30.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_checked() {
+        let _ = Mat::from_vec(2, 2, vec![1.0]);
+    }
+}

@@ -1,0 +1,132 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Measures wall-clock over adaptive iteration counts, reports
+//! median / mean / p10 / p90 over multiple samples, and prints rows in a
+//! stable machine-grep-able format:
+//!
+//! `BENCH <name> median_us=<..> mean_us=<..> p10_us=<..> p90_us=<..> iters=<..>`
+
+use super::stats;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_us: f64,
+    pub mean_us: f64,
+    pub p10_us: f64,
+    pub p90_us: f64,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "BENCH {} median_us={:.3} mean_us={:.3} p10_us={:.3} p90_us={:.3} iters={}",
+            self.name, self.median_us, self.mean_us, self.p10_us, self.p90_us,
+            self.iters_per_sample
+        );
+    }
+}
+
+pub struct Bencher {
+    /// Target wall time per sample, seconds.
+    pub sample_target_s: f64,
+    /// Number of samples.
+    pub samples: usize,
+    /// Warmup time, seconds.
+    pub warmup_s: f64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Keep whole-suite runtime bounded; override per bench if needed.
+        Bencher {
+            sample_target_s: 0.05,
+            samples: 12,
+            warmup_s: 0.05,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            sample_target_s: 0.02,
+            samples: 7,
+            warmup_s: 0.02,
+        }
+    }
+
+    /// Benchmark `f`, using its return value to keep the work observable.
+    pub fn run<R, F: FnMut() -> R>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup + iteration-count calibration.
+        let mut iters: u64 = 1;
+        loop {
+            let t = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            let dt = t.elapsed().as_secs_f64();
+            if dt >= self.warmup_s {
+                // Scale iters so one sample ≈ sample_target_s.
+                let per_iter = dt / iters as f64;
+                iters = ((self.sample_target_s / per_iter).ceil() as u64).max(1);
+                break;
+            }
+            iters = iters.saturating_mul(2);
+        }
+
+        let mut per_iter_us = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            per_iter_us.push(t.elapsed().as_secs_f64() * 1e6 / iters as f64);
+        }
+
+        let res = BenchResult {
+            name: name.to_string(),
+            median_us: stats::median(&per_iter_us),
+            mean_us: stats::mean(&per_iter_us),
+            p10_us: stats::percentile(&per_iter_us, 10.0),
+            p90_us: stats::percentile(&per_iter_us, 90.0),
+            iters_per_sample: iters,
+            samples: self.samples,
+        };
+        res.print();
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bencher {
+            sample_target_s: 0.002,
+            samples: 3,
+            warmup_s: 0.001,
+        };
+        let r = b.run("noop_sum", || (0..100u64).sum::<u64>());
+        assert!(r.median_us > 0.0);
+        assert!(r.p90_us >= r.p10_us);
+        assert_eq!(r.samples, 3);
+    }
+
+    #[test]
+    fn slower_work_measures_slower() {
+        let b = Bencher {
+            sample_target_s: 0.002,
+            samples: 3,
+            warmup_s: 0.001,
+        };
+        let fast = b.run("fast", || (0..10u64).sum::<u64>());
+        let slow = b.run("slow", || (0..100_000u64).sum::<u64>());
+        assert!(slow.median_us > fast.median_us);
+    }
+}

@@ -1,0 +1,162 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `program <subcommand> --flag value --switch` style. Flags can
+//! be given as `--key value` or `--key=value`. Unknown flags are an error
+//! so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut it = raw.into_iter().peekable();
+        let mut args = Args {
+            subcommand: None,
+            flags: BTreeMap::new(),
+            positional: Vec::new(),
+        };
+        // First non-flag token is the subcommand.
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag
+                    // (then it's a boolean switch).
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            args.flags.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            args.flags.insert(stripped.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_flag(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|e| format!("--{key} expects an integer, got '{v}': {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<u64>()
+                .map_err(|e| format!("--{key} expects an integer, got '{v}': {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|e| format!("--{key} expects a number, got '{v}': {e}")),
+        }
+    }
+
+    pub fn bool_flag(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    /// Error if a flag outside `allowed` was supplied.
+    pub fn reject_unknown(&self, allowed: &[&str]) -> Result<(), String> {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown flag --{k}; allowed: {}",
+                    allowed.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["serve", "--port", "8080", "--verbose", "--name=m7b"]);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.usize_or("port", 0).unwrap(), 8080);
+        assert!(a.bool_flag("verbose"));
+        assert_eq!(a.str_flag("name"), Some("m7b"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["eval"]);
+        assert_eq!(a.usize_or("batch", 4).unwrap(), 4);
+        assert_eq!(a.f64_or("alpha", 0.5).unwrap(), 0.5);
+        assert_eq!(a.str_or("method", "arcquant"), "arcquant");
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse(&["x", "--offset", "-3"]);
+        // "-3" doesn't start with "--" so it's consumed as the value.
+        assert_eq!(a.str_flag("offset"), Some("-3"));
+    }
+
+    #[test]
+    fn bad_integer_errors() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn reject_unknown_flags() {
+        let a = parse(&["x", "--good", "1", "--oops", "2"]);
+        assert!(a.reject_unknown(&["good"]).is_err());
+        assert!(a.reject_unknown(&["good", "oops"]).is_ok());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = parse(&["run", "file1", "--k", "v", "file2"]);
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+}

@@ -1,0 +1,61 @@
+//! In-tree infrastructure substrate.
+//!
+//! This build environment is fully offline and vendors only the `xla` crate
+//! closure, so everything a production framework would normally pull from
+//! crates.io (CLI parsing, JSON, a thread pool, seeded PRNGs, a benchmark
+//! harness, a property-testing harness) is implemented here from scratch.
+//! Each sub-module is small, dependency-free and unit-tested.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+
+pub use prng::Prng;
+
+/// Format a float with a fixed number of decimals, paper-table style.
+pub fn fmt_f(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+/// Human-readable byte count (GiB with 2 decimals, matching paper tables).
+pub fn fmt_gb(bytes: u64) -> String {
+    format!("{:.2}", bytes as f64 / (1024.0 * 1024.0 * 1024.0))
+}
+
+/// Simple wall-clock timer returning milliseconds.
+pub struct Timer(std::time::Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(std::time::Instant::now())
+    }
+    pub fn ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+    pub fn us(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_f(1.23456, 2), "1.23");
+        assert_eq!(fmt_gb(1 << 30), "1.00");
+    }
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.ms() >= 1.0);
+        assert!(t.us() >= t.ms()); // us reading taken later, and 1000x scale
+    }
+}

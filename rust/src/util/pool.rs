@@ -1,0 +1,111 @@
+//! Scoped data-parallel helpers over std::thread (rayon is unavailable
+//! offline). Work is split into contiguous chunks, one per worker.
+
+/// Number of workers to use: respects `ARCQUANT_THREADS`, defaults to the
+/// available parallelism, capped at 16.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("ARCQUANT_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get().min(16))
+        .unwrap_or(4)
+}
+
+/// Apply `f(start, chunk)` to disjoint mutable chunks of `data` in parallel.
+/// `start` is the element offset of the chunk within `data`.
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let nt = num_threads();
+    if nt <= 1 || data.len() <= chunk_len {
+        for (ci, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(ci * chunk_len, chunk);
+        }
+        return;
+    }
+    let n_chunks = data.len().div_ceil(chunk_len);
+    let per_worker = n_chunks.div_ceil(nt);
+    std::thread::scope(|scope| {
+        for (wi, piece) in data.chunks_mut(per_worker * chunk_len).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                let base = wi * per_worker * chunk_len;
+                for (ci, chunk) in piece.chunks_mut(chunk_len).enumerate() {
+                    f(base + ci * chunk_len, chunk);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map over indices [0, n): returns `vec![f(0), f(1), ..]`.
+pub fn par_map<R: Send, F>(n: usize, f: F) -> Vec<R>
+where
+    F: Fn(usize) -> R + Sync,
+{
+    let nt = num_threads().min(n.max(1));
+    if nt <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let per = n.div_ceil(nt);
+    std::thread::scope(|scope| {
+        for (wi, slot_chunk) in results.chunks_mut(per).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                for (j, slot) in slot_chunk.iter_mut().enumerate() {
+                    *slot = Some(f(wi * per + j));
+                }
+            });
+        }
+    });
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_chunks_mut_covers_all() {
+        let mut v = vec![0usize; 1003];
+        par_chunks_mut(&mut v, 64, |start, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = start + i;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i);
+        }
+    }
+
+    #[test]
+    fn par_map_matches_serial() {
+        let out = par_map(257, |i| i * i);
+        for (i, &x) in out.iter().enumerate() {
+            assert_eq!(x, i * i);
+        }
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let out: Vec<usize> = par_map(0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn chunk_len_larger_than_data() {
+        let mut v = vec![1u32; 10];
+        par_chunks_mut(&mut v, 100, |start, chunk| {
+            assert_eq!(start, 0);
+            for x in chunk.iter_mut() {
+                *x = 2;
+            }
+        });
+        assert!(v.iter().all(|&x| x == 2));
+    }
+}

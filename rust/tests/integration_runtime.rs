@@ -1,0 +1,115 @@
+//! Integration: PJRT runtime loads + executes the AOT artifacts and the
+//! results agree with the pure-Rust engine / expectations.
+//! Requires `make artifacts` (skipped gracefully when absent).
+
+use arcquant::model::{Engine, EngineMode, ModelConfig, Weights};
+use arcquant::runtime::{Manifest, ModelBundle, Runtime};
+
+fn artifacts_root() -> Option<String> {
+    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(&format!("{root}/manifest.json")).exists() {
+        Some(root.to_string())
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+#[test]
+fn fp32_artifact_matches_rust_engine() {
+    let Some(root) = artifacts_root() else { return };
+    let rt = Runtime::new(&root).unwrap();
+    let m = Manifest::load(rt.root()).unwrap();
+    let exe = rt.load(&m.model_hlo("llama8b-sim", "fp32").unwrap()).unwrap();
+
+    let cfg = ModelConfig::load(&format!("{root}/llama8b-sim.config.json")).unwrap();
+    let w = Weights::load(&format!("{root}/llama8b-sim.weights.bin"), &cfg).unwrap();
+    let engine = Engine::new(cfg.clone(), w, EngineMode::Fp32, None).unwrap();
+
+    // one batch of the artifact's fixed shape
+    let toks: Vec<u16> = (0..(m.batch * m.seq) as u32).map(|i| ((i * 37 + 5) % 256) as u16).collect();
+    let toks_i32: Vec<i32> = toks.iter().map(|&t| t as i32).collect();
+    let bundle = ModelBundle::load(rt.root(), "llama8b-sim").unwrap();
+    let (logits, dims) = rt
+        .run_tokens(&exe, &toks_i32, m.batch, m.seq, bundle.weight_literals().unwrap())
+        .unwrap();
+    assert_eq!(dims, vec![m.batch, m.seq, m.vocab]);
+
+    // engine computes each sequence independently
+    for b in 0..m.batch {
+        let seq = &toks[b * m.seq..(b + 1) * m.seq];
+        let rust_logits = engine.forward(seq, None, None);
+        for t in (0..m.seq).step_by(17) {
+            for v in (0..m.vocab).step_by(31) {
+                let jax = logits[(b * m.seq + t) * m.vocab + v];
+                let rust = rust_logits.at(t, v);
+                assert!(
+                    (jax - rust).abs() < 2e-2 * (1.0 + rust.abs()),
+                    "b{b} t{t} v{v}: jax {jax} vs rust {rust}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn arcquant_artifact_executes_and_is_close_to_fp32() {
+    let Some(root) = artifacts_root() else { return };
+    let rt = Runtime::new(&root).unwrap();
+    let m = Manifest::load(rt.root()).unwrap();
+    let fp = rt.load(&m.model_hlo("llama8b-sim", "fp32").unwrap()).unwrap();
+    let arc = rt.load(&m.model_hlo("llama8b-sim", "arcquant").unwrap()).unwrap();
+    let toks: Vec<i32> = (0..(m.batch * m.seq) as i32).map(|i| (i * 91 + 3) % 256).collect();
+    let bundle = ModelBundle::load(rt.root(), "llama8b-sim").unwrap();
+    let (lf, _) = rt
+        .run_tokens(&fp, &toks, m.batch, m.seq, bundle.weight_literals().unwrap())
+        .unwrap();
+    let mut extra = bundle.weight_literals().unwrap();
+    extra.extend(bundle.plan_literals(false).unwrap());
+    let (la, _) = rt.run_tokens(&arc, &toks, m.batch, m.seq, extra).unwrap();
+    assert_eq!(lf.len(), la.len());
+    assert!(la.iter().all(|v| v.is_finite()));
+    // W4A4 with residual compensation: top-1 should mostly agree
+    let vocab = m.vocab;
+    let rows = lf.len() / vocab;
+    let mut agree = 0;
+    for r in 0..rows {
+        let am = |x: &[f32]| {
+            x[r * vocab..(r + 1) * vocab]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        if am(&lf) == am(&la) {
+            agree += 1;
+        }
+    }
+    assert!(agree * 10 >= rows * 6, "agreement {agree}/{rows}");
+}
+
+#[test]
+fn gemm_kernel_artifact_matches_rust_gemm() {
+    let Some(root) = artifacts_root() else { return };
+    let rt = Runtime::new(&root).unwrap();
+    let m = Manifest::load(rt.root()).unwrap();
+    let path = m.raw.get("kernels").unwrap().get("gemm_aug").unwrap()
+        .get("128").unwrap().as_str().unwrap().to_string();
+    let exe = rt.load(&path).unwrap();
+    // shapes from aot.py: x [64, 1152], w [128, 1152]
+    let (n, kk, mm) = (64usize, 256 * 4 + 128, 128usize);
+    let mut rng = arcquant::util::Prng::new(7);
+    let x: Vec<f32> = (0..n * kk).map(|_| rng.normal()).collect();
+    let w: Vec<f32> = (0..mm * kk).map(|_| rng.normal()).collect();
+    let (y, dims) = rt
+        .run_f32(&exe, &[(&x, &[n, kk]), (&w, &[mm, kk])])
+        .unwrap();
+    assert_eq!(dims, vec![n, mm]);
+    let xm = arcquant::tensor::Mat::from_vec(n, kk, x);
+    let wm = arcquant::tensor::Mat::from_vec(mm, kk, w);
+    let want = arcquant::tensor::matmul_nt(&xm, &wm);
+    for (a, b) in y.iter().zip(&want.data) {
+        assert!((a - b).abs() < 1e-2 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+}

@@ -1,0 +1,88 @@
+//! Integration: the full serving stack over the PJRT artifacts.
+//! Skips gracefully when artifacts are absent.
+
+use arcquant::coordinator::{
+    serve_workload, BatcherConfig, RouterConfig, ServeConfig, Variant,
+};
+
+fn artifacts_root() -> Option<String> {
+    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(&format!("{root}/manifest.json")).exists() {
+        Some(root.to_string())
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+fn stream() -> Vec<u16> {
+    // Use the model's actual eval corpus: a synthetic modular stream is
+    // out-of-distribution for the trained LM and its PPL is unbounded.
+    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let bytes = std::fs::read(format!("{root}/corpus_wiki.bin")).expect("corpus");
+    bytes
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+        .take(50_000)
+        .collect()
+}
+
+#[test]
+fn serving_completes_all_requests_and_reports_sane_stats() {
+    let Some(root) = artifacts_root() else { return };
+    let cfg = ServeConfig {
+        artifacts: root,
+        model: "llama8b-sim".into(),
+        workload: vec![(Variant::Fp32, 6), (Variant::ArcQuant, 3)],
+        req_len: 48,
+        batcher: BatcherConfig::default(),
+        router: RouterConfig::default(),
+    };
+    let r = serve_workload(&cfg, &stream()).unwrap();
+    assert_eq!(r.completed, 9);
+    assert_eq!(r.rejected, 0);
+    assert!(r.p50_ms > 0.0 && r.p99_ms >= r.p50_ms);
+    let fp = &r.per_variant["fp32"];
+    assert_eq!(fp.requests, 6);
+    assert!(fp.ppl.is_finite() && fp.ppl > 1.0 && fp.ppl < 200.0);
+    let arc = &r.per_variant["arcquant"];
+    assert_eq!(arc.requests, 3);
+    // W4A4 ARCQuant PPL within 25% of FP32 on this model
+    assert!(
+        (arc.ppl / fp.ppl - 1.0).abs() < 0.25,
+        "arc {} vs fp {}",
+        arc.ppl,
+        fp.ppl
+    );
+    // breakdown contains compile + execute stages
+    let stages: Vec<&str> = r.stage_breakdown.iter().map(|(s, _, _)| s.as_str()).collect();
+    assert!(stages.iter().any(|s| s.starts_with("execute:fp32")));
+    assert!(stages.iter().any(|s| s.starts_with("compile:")));
+}
+
+#[test]
+fn serving_fp32_variant_matches_engine_ppl_ballpark() {
+    let Some(root) = artifacts_root() else { return };
+    let s = stream();
+    let cfg = ServeConfig {
+        artifacts: root.clone(),
+        model: "llama8b-sim".into(),
+        workload: vec![(Variant::Fp32, 4)],
+        req_len: 64,
+        batcher: BatcherConfig::default(),
+        router: RouterConfig::default(),
+    };
+    let r = serve_workload(&cfg, &s).unwrap();
+    let served_ppl = r.per_variant["fp32"].ppl;
+
+    // same stream through the native engine
+    use arcquant::model::{Engine, EngineMode, ModelConfig, Weights};
+    let cfgm = ModelConfig::load(&format!("{root}/llama8b-sim.config.json")).unwrap();
+    let w = Weights::load(&format!("{root}/llama8b-sim.weights.bin"), &cfgm).unwrap();
+    let e = Engine::new(cfgm, w, EngineMode::Fp32, None).unwrap();
+    let native = arcquant::eval::perplexity(&e, &s, 63, 4).ppl;
+    assert!(
+        (served_ppl / native - 1.0).abs() < 0.35,
+        "served {served_ppl} vs native {native}"
+    );
+}
