@@ -1,10 +1,92 @@
 //! Figure 8a bench: augmented-GEMM latency vs S on the host, plus the
 //! calibrated Blackwell cost-model series. Latency must be linear in K+S.
+//!
+//! Also records the packed-vs-QDQ execution comparison at paper shapes
+//! (K=4096, S ∈ {0, 128, 256}) into `BENCH_gemm_packed.json`: tokens/s
+//! and bytes-moved per forward for both paths, so the perf trajectory of
+//! the packed datapath is tracked across PRs.
 
 use arcquant::costmodel::{gemm_us, GemmPath, Gpu};
+use arcquant::formats::Format;
+use arcquant::quant::{ArcQuantLinear, LayerPlan, PackedArcLinear, Permutation};
 use arcquant::tensor::{matmul_nt, Mat};
 use arcquant::util::bench::Bencher;
+use arcquant::util::json::Json;
+use arcquant::util::prop::gens::outlier_mat;
 use arcquant::util::Prng;
+
+/// Packed-vs-QDQ forward at paper shapes → BENCH_gemm_packed.json.
+fn bench_packed_vs_qdq(b: &Bencher) {
+    let (n, k, m) = (16usize, 4096usize, 256usize);
+    let mut rng = Prng::new(1);
+    let mut rows: Vec<Json> = Vec::new();
+    println!("# packed vs QDQ ARCQuant forward (N={n}, K={k}, M={m})");
+    for s in [0usize, 128, 256] {
+        let x = outlier_mat(&mut rng, n, k);
+        let mut w = Mat::zeros(m, k);
+        w.fill_random_normal(&mut rng, 0.4);
+        let plan = LayerPlan {
+            perm: Permutation::identity(k),
+            s,
+            fmt: Format::Nvfp4,
+        };
+        let qdq = ArcQuantLinear::prepare(&w, plan.clone());
+        let packed = PackedArcLinear::prepare(&w, plan).expect("aligned");
+
+        let r_qdq = b.run(&format!("gemm_aug_qdq_k{k}_s{s}"), || qdq.forward(&x));
+        let r_packed =
+            b.run(&format!("gemm_aug_packed_k{k}_s{s}"), || packed.forward(&x));
+
+        // Bytes moved per forward, weight side + activation side. QDQ
+        // streams f32 for both; packed streams codes + block scales.
+        let w_bytes_qdq = (m * (k + s) * 4) as u64;
+        let a_bytes_qdq = (n * (k + s) * 4) as u64;
+        let w_bytes_packed = packed.weight_bytes();
+        let a_bytes_packed = Format::Nvfp4.storage_bytes(n, k + s);
+        let tok_s = |median_us: f64| n as f64 / (median_us * 1e-6);
+
+        let ratio = w_bytes_qdq as f64 / w_bytes_packed as f64;
+        println!(
+            "#   s={s}: weight bytes packed {w_bytes_packed} vs f32 {w_bytes_qdq} ({ratio:.1}x), \
+             tokens/s packed {:.1} vs qdq {:.1}",
+            tok_s(r_packed.median_us),
+            tok_s(r_qdq.median_us)
+        );
+        // Acceptance: packed weight footprint ≤ 1/6 of the f32 path.
+        assert!(
+            w_bytes_packed as f64 <= w_bytes_qdq as f64 / 6.0,
+            "packed weights not ≤ f32/6 at s={s}"
+        );
+
+        let mut row = Json::obj();
+        row.set("n", Json::Num(n as f64))
+            .set("k", Json::Num(k as f64))
+            .set("m", Json::Num(m as f64))
+            .set("s", Json::Num(s as f64));
+        let mut qj = Json::obj();
+        qj.set("median_us", Json::Num(r_qdq.median_us))
+            .set("tokens_per_s", Json::Num(tok_s(r_qdq.median_us)))
+            .set("weight_bytes", Json::Num(w_bytes_qdq as f64))
+            .set("activation_bytes", Json::Num(a_bytes_qdq as f64));
+        let mut pj = Json::obj();
+        pj.set("median_us", Json::Num(r_packed.median_us))
+            .set("tokens_per_s", Json::Num(tok_s(r_packed.median_us)))
+            .set("weight_bytes", Json::Num(w_bytes_packed as f64))
+            .set("activation_bytes", Json::Num(a_bytes_packed as f64));
+        row.set("qdq", qj)
+            .set("packed", pj)
+            .set("weight_ratio_f32_over_packed", Json::Num(ratio));
+        rows.push(row);
+    }
+    let mut out = Json::obj();
+    out.set("bench", Json::Str("gemm_packed".into()))
+        .set("shapes", Json::Arr(rows));
+    let path = "BENCH_gemm_packed.json";
+    match std::fs::write(path, out.dump()) {
+        Ok(()) => println!("# wrote {path}"),
+        Err(e) => eprintln!("# could not write {path}: {e}"),
+    }
+}
 
 fn main() {
     let b = Bencher::default();
@@ -36,4 +118,6 @@ fn main() {
         let t = gemm_us(Gpu::Rtx5090, path, 8192, 4096, 4096);
         println!("MODEL gemm_{name}_5090 latency_us={t:.1}");
     }
+
+    bench_packed_vs_qdq(&Bencher::quick());
 }

@@ -27,8 +27,25 @@ pub mod quarot;
 pub mod smoothquant;
 
 use crate::formats::{Format, RowQuantizer};
-use crate::quant::{ArcQuantLinear, LayerPlan};
+use crate::quant::{ArcQuantLinear, LayerPlan, PackedArcLinear};
 use crate::tensor::{matmul_nt, Mat};
+
+/// How a prepared layer executes its GEMM.
+///
+/// * [`ExecPath::Qdq`] — fused quantize-dequantize simulation: operands
+///   are f32 values on the quantization grid, the GEMM is the f32
+///   [`matmul_nt`]. Numerically authoritative, memory-hungry.
+/// * [`ExecPath::Packed`] — real packed codes end-to-end through
+///   [`crate::tensor::matmul_nt_packed`]: weights live as 4-bit codes +
+///   block scales (~1/7.5 of f32), activations are quantized straight to
+///   codes. Methods without a packed implementation, and layer shapes that
+///   are not group-aligned, silently fall back to QDQ.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
+pub enum ExecPath {
+    #[default]
+    Qdq,
+    Packed,
+}
 
 /// Every quantization strategy the experiments sweep.
 #[derive(Clone, Debug, PartialEq)]
@@ -101,9 +118,49 @@ pub enum PreparedLinear {
     },
     /// ARCQuant.
     Arc(ArcQuantLinear),
+    /// ARCQuant (or RTN, S=0) on the packed-execution path: codes
+    /// end-to-end.
+    PackedArc(PackedArcLinear),
 }
 
 impl PreparedLinear {
+    /// Like [`Self::prepare`], with an explicit execution path. Packed
+    /// execution is implemented for the methods whose online transform is
+    /// "quantize the activation" (ARCQuant, RTN); everything else — and
+    /// any layer whose K/S aren't group-aligned — falls back to QDQ.
+    pub fn prepare_with(
+        method: &Method,
+        w: &Mat,
+        calib: &LayerCalib,
+        exec: ExecPath,
+    ) -> PreparedLinear {
+        if exec == ExecPath::Packed {
+            if let Some(plan) = Self::quantize_only_plan(method, w, calib) {
+                if let Ok(p) = PackedArcLinear::prepare(w, plan) {
+                    return PreparedLinear::PackedArc(p);
+                }
+            }
+        }
+        Self::prepare(method, w, calib)
+    }
+
+    /// The [`LayerPlan`] for methods whose online transform is purely
+    /// "quantize the activation" (ARCQuant, RTN) — the methods the packed
+    /// path can execute. Single source of truth shared with
+    /// [`Self::prepare`]'s ArcQuant branch.
+    fn quantize_only_plan(method: &Method, w: &Mat, calib: &LayerCalib) -> Option<LayerPlan> {
+        match method {
+            Method::ArcQuant { fmt, max_s } => Some(match max_s {
+                Some(cap) => {
+                    LayerPlan::from_calibration_capped(&calib.col_absmax, *fmt, *cap)
+                }
+                None => LayerPlan::from_calibration(&calib.col_absmax, *fmt),
+            }),
+            Method::Rtn { fmt } => Some(LayerPlan::rtn(w.cols, *fmt)),
+            _ => None,
+        }
+    }
+
     /// Offline preparation given the layer weight [M, K] and calibration
     /// statistics for this layer's input activations.
     pub fn prepare(method: &Method, w: &Mat, calib: &LayerCalib) -> PreparedLinear {
@@ -139,13 +196,9 @@ impl PreparedLinear {
                 let (wq, inv_s) = flatquant::prepare(w, &calib.col_absmax, *fmt);
                 PreparedLinear::Flat { wq, inv_s, fmt: *fmt }
             }
-            Method::ArcQuant { fmt, max_s } => {
-                let plan = match max_s {
-                    Some(cap) => {
-                        LayerPlan::from_calibration_capped(&calib.col_absmax, *fmt, *cap)
-                    }
-                    None => LayerPlan::from_calibration(&calib.col_absmax, *fmt),
-                };
+            Method::ArcQuant { .. } => {
+                let plan = Self::quantize_only_plan(method, w, calib)
+                    .expect("ArcQuant always has a plan");
                 PreparedLinear::Arc(ArcQuantLinear::prepare(w, plan))
             }
         }
@@ -178,6 +231,7 @@ impl PreparedLinear {
                 matmul_nt(&xq, wq)
             }
             PreparedLinear::Arc(a) => a.forward(x),
+            PreparedLinear::PackedArc(a) => a.forward(x),
         }
     }
 
@@ -185,8 +239,28 @@ impl PreparedLinear {
     pub fn s(&self) -> usize {
         match self {
             PreparedLinear::Arc(a) => a.s(),
+            PreparedLinear::PackedArc(a) => a.s(),
             PreparedLinear::Atom(a) => a.outliers(),
             _ => 0,
+        }
+    }
+
+    /// Which execution path this prepared layer actually runs (Packed
+    /// requests can fall back to Qdq on unpackable shapes).
+    pub fn exec_path(&self) -> ExecPath {
+        match self {
+            PreparedLinear::PackedArc(_) => ExecPath::Packed,
+            _ => ExecPath::Qdq,
+        }
+    }
+
+    /// Real packed weight bytes when this layer stores codes; `None` for
+    /// the QDQ simulation (which stores f32 and is accounted by format
+    /// arithmetic instead).
+    pub fn packed_weight_bytes(&self) -> Option<u64> {
+        match self {
+            PreparedLinear::PackedArc(a) => Some(a.weight_bytes()),
+            _ => None,
         }
     }
 }
@@ -295,6 +369,57 @@ mod tests {
             arc <= w4a8 * 2.0,
             "ARCQuant {arc} should be within 2x of W4A8 {w4a8}"
         );
+    }
+
+    #[test]
+    fn packed_exec_path_matches_qdq_and_shrinks_weights() {
+        let (x, w, calib) = workload(63);
+        for method in [
+            Method::ArcQuant { fmt: Format::Nvfp4, max_s: None },
+            Method::Rtn { fmt: Format::Nvfp4 },
+        ] {
+            let qdq = PreparedLinear::prepare_with(&method, &w, &calib, ExecPath::Qdq);
+            let packed =
+                PreparedLinear::prepare_with(&method, &w, &calib, ExecPath::Packed);
+            assert_eq!(qdq.exec_path(), ExecPath::Qdq);
+            assert_eq!(packed.exec_path(), ExecPath::Packed, "{method:?}");
+            assert_eq!(qdq.s(), packed.s());
+            let (a, b) = (qdq.forward(&x), packed.forward(&x));
+            let rel = stats::rel_frob_err(&b.data, &a.data);
+            assert!(rel < 1e-5, "{method:?}: packed vs qdq rel err {rel}");
+            // real codes: ≥6x smaller than the f32 simulation of the same
+            // augmented matrix
+            let bytes = packed.packed_weight_bytes().unwrap();
+            let f32_bytes = (w.rows * (w.cols + packed.s()) * 4) as u64;
+            assert!(bytes * 6 <= f32_bytes, "{bytes} vs {f32_bytes}");
+        }
+    }
+
+    #[test]
+    fn packed_request_falls_back_for_unpackable() {
+        let (x, w, calib) = workload(64);
+        // SmoothQuant has no packed implementation → QDQ fallback.
+        let method = Method::Smooth { fmt: Format::Nvfp4, alpha: 0.5 };
+        let lin = PreparedLinear::prepare_with(&method, &w, &calib, ExecPath::Packed);
+        assert_eq!(lin.exec_path(), ExecPath::Qdq);
+        assert!(lin.packed_weight_bytes().is_none());
+        assert!(lin.forward(&x).data.iter().all(|v| v.is_finite()));
+
+        // Unaligned K → fallback even for ARCQuant.
+        let mut rng = crate::util::Prng::new(99);
+        let mut w2 = Mat::zeros(8, 40);
+        w2.fill_random_normal(&mut rng, 0.5);
+        let calib2 = LayerCalib {
+            col_absmax: vec![1.0; 40],
+            sample: None,
+        };
+        let lin2 = PreparedLinear::prepare_with(
+            &Method::ArcQuant { fmt: Format::Nvfp4, max_s: None },
+            &w2,
+            &calib2,
+            ExecPath::Packed,
+        );
+        assert_eq!(lin2.exec_path(), ExecPath::Qdq);
     }
 
     #[test]

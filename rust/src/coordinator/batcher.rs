@@ -46,22 +46,22 @@ pub struct Batch {
 
 pub struct Batcher {
     pub cfg: BatcherConfig,
-    queues: [VecDeque<PrefillRequest>; 3],
+    /// One FIFO per variant, indexed by position in [`Variant::ALL`].
+    queues: Vec<VecDeque<PrefillRequest>>,
 }
 
 fn qidx(v: Variant) -> usize {
-    match v {
-        Variant::Fp32 => 0,
-        Variant::ArcQuant => 1,
-        Variant::Nvfp4Rtn => 2,
-    }
+    Variant::ALL
+        .iter()
+        .position(|&x| x == v)
+        .expect("variant missing from Variant::ALL")
 }
 
 impl Batcher {
     pub fn new(cfg: BatcherConfig) -> Batcher {
         Batcher {
             cfg,
-            queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            queues: Variant::ALL.iter().map(|_| VecDeque::new()).collect(),
         }
     }
 
@@ -98,11 +98,7 @@ impl Batcher {
             }
         }
         let (i, _) = pick?;
-        let variant = match i {
-            0 => Variant::Fp32,
-            1 => Variant::ArcQuant,
-            _ => Variant::Nvfp4Rtn,
-        };
+        let variant = Variant::ALL[i];
         let q = &mut self.queues[i];
         let n = q.len().min(self.cfg.batch_size);
         let requests: Vec<PrefillRequest> = q.drain(..n).collect();
@@ -112,16 +108,11 @@ impl Batcher {
     /// Drain everything unconditionally (shutdown path).
     pub fn drain_all(&mut self) -> Vec<Batch> {
         let mut out = Vec::new();
-        for i in 0..3 {
+        for i in 0..self.queues.len() {
             while !self.queues[i].is_empty() {
                 let n = self.queues[i].len().min(self.cfg.batch_size);
                 let reqs: Vec<PrefillRequest> = self.queues[i].drain(..n).collect();
-                let variant = match i {
-                    0 => Variant::Fp32,
-                    1 => Variant::ArcQuant,
-                    _ => Variant::Nvfp4Rtn,
-                };
-                out.push(self.assemble(variant, reqs));
+                out.push(self.assemble(Variant::ALL[i], reqs));
             }
         }
         out

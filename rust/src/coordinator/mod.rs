@@ -33,4 +33,6 @@ pub use kvcache::{KvPageManager, PageError};
 pub use metrics::Metrics;
 pub use request::{PrefillRequest, PrefillResponse, Variant};
 pub use router::{Router, RouterConfig, RouterDecision};
-pub use server::{serve_workload, ServeConfig, ServeReport};
+pub use server::{
+    serve_workload, serve_workload_native, NativeServeConfig, ServeConfig, ServeReport,
+};

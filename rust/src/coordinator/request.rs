@@ -1,19 +1,32 @@
 //! Request/response types of the serving path.
 
-/// Which compiled model variant a request runs on.
+/// Which model variant a request runs on. PJRT serving maps these to
+/// compiled artifacts; native serving maps them to Rust [`crate::model::Engine`]s
+/// (where [`Variant::ArcPacked`] selects the packed-execution datapath).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Variant {
     Fp32,
     ArcQuant,
     Nvfp4Rtn,
+    /// ARCQuant on real NVFP4 codes end-to-end (`ExecPath::Packed`).
+    ArcPacked,
 }
 
 impl Variant {
+    /// Every variant, in queue-index order (the batcher keys on this).
+    pub const ALL: [Variant; 4] = [
+        Variant::Fp32,
+        Variant::ArcQuant,
+        Variant::Nvfp4Rtn,
+        Variant::ArcPacked,
+    ];
+
     pub fn artifact_key(self) -> &'static str {
         match self {
             Variant::Fp32 => "fp32",
             Variant::ArcQuant => "arcquant",
             Variant::Nvfp4Rtn => "nvfp4rtn",
+            Variant::ArcPacked => "arcquant-packed",
         }
     }
 
@@ -22,6 +35,7 @@ impl Variant {
             "fp32" | "fp16" => Some(Variant::Fp32),
             "arcquant" | "arc" => Some(Variant::ArcQuant),
             "nvfp4rtn" | "rtn" | "nvfp4" => Some(Variant::Nvfp4Rtn),
+            "arcquant-packed" | "packed" | "arc-packed" => Some(Variant::ArcPacked),
             _ => None,
         }
     }
@@ -71,7 +85,20 @@ mod tests {
         assert_eq!(Variant::parse("arc"), Some(Variant::ArcQuant));
         assert_eq!(Variant::parse("fp16"), Some(Variant::Fp32));
         assert_eq!(Variant::parse("nvfp4"), Some(Variant::Nvfp4Rtn));
+        assert_eq!(Variant::parse("packed"), Some(Variant::ArcPacked));
         assert_eq!(Variant::parse("bogus"), None);
+    }
+
+    #[test]
+    fn all_covers_every_variant_once() {
+        for (i, v) in Variant::ALL.iter().enumerate() {
+            assert_eq!(
+                Variant::ALL.iter().position(|x| x == v),
+                Some(i),
+                "duplicate {v:?}"
+            );
+            assert_eq!(Variant::parse(v.artifact_key()), Some(*v));
+        }
     }
 
     #[test]

@@ -1,16 +1,24 @@
-//! The serving loop: router → batcher → executor thread (PJRT) →
-//! responses. Drives the end-to-end example and the Table 8 / Figure 8b
-//! measured rows.
+//! The serving loop: router → batcher → executor thread → responses.
+//! Drives the end-to-end example and the Table 8 / Figure 8b measured
+//! rows.
 //!
-//! The executor thread constructs the [`crate::runtime::Runtime`] itself
-//! (the PJRT client is not `Send`) and is the only thread that touches
-//! compiled executables — the "device-owning thread" of a real stack.
+//! Two executors share the submission/aggregation pipeline:
+//!
+//! * [`serve_workload`] — PJRT: the executor thread constructs the
+//!   [`crate::runtime::Runtime`] itself (the PJRT client is not `Send`)
+//!   and is the only thread that touches compiled executables — the
+//!   "device-owning thread" of a real stack.
+//! * [`serve_workload_native`] — Rust-native: the executor thread runs
+//!   [`crate::model::Engine`] forwards, one engine per variant, which is
+//!   how the packed-execution datapath ([`Variant::ArcPacked`] →
+//!   `EngineMode::QuantizedPacked`) is served without AOT artifacts.
 
 use super::batcher::{Batch, Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use super::request::{PrefillRequest, PrefillResponse, Variant};
 use super::router::{Router, RouterConfig, RouterDecision};
 use crate::eval::ppl::token_nll;
+use crate::model::Engine;
 use crate::runtime::{Manifest, ModelBundle, Runtime};
 use crate::util::Timer;
 use std::collections::BTreeMap;
@@ -71,7 +79,7 @@ pub fn serve_workload(cfg: &ServeConfig, stream: &[u16]) -> Result<ServeReport, 
         // Pre-compile all variants we might see (compile once, off the
         // hot path).
         let mut exes = BTreeMap::new();
-        for v in [Variant::Fp32, Variant::ArcQuant, Variant::Nvfp4Rtn] {
+        for v in Variant::ALL {
             if let Some(path) = manifest.model_hlo(&model, v.artifact_key()) {
                 let t = Timer::start();
                 let exe = rt.load(&path).map_err(|e| e.to_string())?;
@@ -109,7 +117,7 @@ pub fn serve_workload(cfg: &ServeConfig, stream: &[u16]) -> Result<ServeReport, 
             let mut extra = bundle.weight_literals().map_err(|e| e.to_string())?;
             match batch.variant {
                 Variant::Fp32 => {}
-                Variant::ArcQuant => extra
+                Variant::ArcQuant | Variant::ArcPacked => extra
                     .extend(bundle.plan_literals(false).map_err(|e| e.to_string())?),
                 Variant::Nvfp4Rtn => extra
                     .extend(bundle.plan_literals(true).map_err(|e| e.to_string())?),
@@ -161,21 +169,71 @@ pub fn serve_workload(cfg: &ServeConfig, stream: &[u16]) -> Result<ServeReport, 
     });
 
     // ---- submission side ----
-    let router = Router::new(cfg.router.clone());
-    let mut batcher = Batcher::new(cfg.batcher.clone());
     let wall = Timer::start();
+    let (id_variant, rejected) = submit_workload(
+        &cfg.workload,
+        cfg.req_len,
+        stream,
+        &cfg.router,
+        &cfg.batcher,
+        &tx_batch,
+        &metrics,
+    )?;
+    drop(tx_batch);
+
+    // ---- collect ----
+    let mut responses: Vec<PrefillResponse> = Vec::new();
+    while let Ok(resp) = rx_resp.recv() {
+        responses.push(resp);
+    }
+    let platform = executor
+        .join()
+        .map_err(|_| "executor panicked".to_string())??;
+    let wall_ms = wall.ms();
+
+    Ok(aggregate_report(
+        responses,
+        &id_variant,
+        &metrics,
+        rejected,
+        wall_ms,
+        cfg.req_len,
+        platform,
+    ))
+}
+
+/// Shared submission loop: route, enqueue, ship ready batches. Returns
+/// the request→variant map for aggregation and the rejected count.
+#[allow(clippy::too_many_arguments)]
+fn submit_workload(
+    workload: &[(Variant, usize)],
+    req_len: usize,
+    stream: &[u16],
+    router_cfg: &RouterConfig,
+    batcher_cfg: &BatcherConfig,
+    tx_batch: &mpsc::Sender<Batch>,
+    metrics: &Metrics,
+) -> Result<(BTreeMap<u64, Variant>, usize), String> {
+    if stream.len() <= req_len + 1 {
+        return Err(format!(
+            "eval stream too short ({} tokens) for req_len {req_len}",
+            stream.len()
+        ));
+    }
+    let router = Router::new(router_cfg.clone());
+    let mut batcher = Batcher::new(batcher_cfg.clone());
     let mut next_id = 0u64;
     let mut id_variant: BTreeMap<u64, Variant> = BTreeMap::new();
     let mut rejected = 0usize;
 
-    for &(variant, count) in &cfg.workload {
+    for &(variant, count) in workload {
         for r in 0..count {
             next_id += 1;
-            let start = (r * (cfg.req_len + 3)) % (stream.len() - cfg.req_len - 1);
-            let tokens = stream[start..start + cfg.req_len].to_vec();
+            let start = (r * (req_len + 3)) % (stream.len() - req_len - 1);
+            let tokens = stream[start..start + req_len].to_vec();
             let req = PrefillRequest::new(next_id, tokens, variant);
             Metrics::inc(&metrics.submitted);
-            match router.admit(&req, batcher.queued(), &cfg.batcher) {
+            match router.admit(&req, batcher.queued(), batcher_cfg) {
                 RouterDecision::Accept => {
                     id_variant.insert(next_id, variant);
                     if batcher.push(req).is_err() {
@@ -198,21 +256,21 @@ pub fn serve_workload(cfg: &ServeConfig, stream: &[u16]) -> Result<ServeReport, 
     for b in batcher.drain_all() {
         tx_batch.send(b).map_err(|e| e.to_string())?;
     }
-    drop(tx_batch);
+    Ok((id_variant, rejected))
+}
 
-    // ---- collect ----
-    let mut responses: Vec<PrefillResponse> = Vec::new();
-    while let Ok(resp) = rx_resp.recv() {
-        responses.push(resp);
-    }
-    let platform = executor
-        .join()
-        .map_err(|_| "executor panicked".to_string())??;
-    let wall_ms = wall.ms();
-
-    // ---- aggregate ----
+/// Shared aggregation: per-variant stats + latency percentiles.
+fn aggregate_report(
+    responses: Vec<PrefillResponse>,
+    id_variant: &BTreeMap<u64, Variant>,
+    metrics: &Metrics,
+    rejected: usize,
+    wall_ms: f64,
+    req_len: usize,
+    platform: String,
+) -> ServeReport {
     let mut per_variant: BTreeMap<&'static str, VariantStats> = BTreeMap::new();
-    for v in [Variant::Fp32, Variant::ArcQuant, Variant::Nvfp4Rtn] {
+    for v in Variant::ALL {
         let key = v.artifact_key();
         let rs: Vec<&PrefillResponse> = responses
             .iter()
@@ -239,13 +297,13 @@ pub fn serve_workload(cfg: &ServeConfig, stream: &[u16]) -> Result<ServeReport, 
                 requests: rs.len(),
                 mean_execute_ms: mean_exec,
                 ppl: (total_nll / total_tok.max(1) as f64).exp(),
-                throughput_tok_s: (rs.len() * cfg.req_len) as f64
+                throughput_tok_s: (rs.len() * req_len) as f64
                     / (exec_total / 1e3).max(1e-9),
             },
         );
     }
     let (p50, p90, p99) = metrics.latency_percentiles();
-    Ok(ServeReport {
+    ServeReport {
         completed: responses.len(),
         rejected,
         wall_ms,
@@ -255,7 +313,139 @@ pub fn serve_workload(cfg: &ServeConfig, stream: &[u16]) -> Result<ServeReport, 
         per_variant,
         stage_breakdown: metrics.breakdown(),
         platform,
-    })
+    }
+}
+
+/// Native serving config: no artifacts — engines are supplied directly.
+#[derive(Clone, Debug)]
+pub struct NativeServeConfig {
+    /// (variant, number of requests) mix
+    pub workload: Vec<(Variant, usize)>,
+    /// request length in tokens (≤ batcher seq_len)
+    pub req_len: usize,
+    pub batcher: BatcherConfig,
+    pub router: RouterConfig,
+}
+
+/// Run a closed-loop serving workload against Rust-native engines — the
+/// same router → batcher → executor pipeline as [`serve_workload`], with
+/// the executor thread running [`Engine`] forwards. This is how the
+/// packed-execution path serves traffic (map [`Variant::ArcPacked`] to an
+/// engine built with `EngineMode::QuantizedPacked`); it also gives an
+/// artifact-free serving path for tests and laptops.
+pub fn serve_workload_native(
+    cfg: &NativeServeConfig,
+    stream: &[u16],
+    engines: &[(Variant, &Engine)],
+) -> Result<ServeReport, String> {
+    let metrics = Arc::new(Metrics::new());
+    let (tx_batch, rx_batch) = mpsc::channel::<Batch>();
+    let (tx_resp, rx_resp) = mpsc::channel::<PrefillResponse>();
+    let seq_len = cfg.batcher.seq_len;
+
+    let wall = Timer::start();
+    let mut result: Option<Result<(BTreeMap<u64, Variant>, usize), String>> = None;
+    let mut responses: Vec<PrefillResponse> = Vec::new();
+    let mut executor_panicked = false;
+
+    std::thread::scope(|scope| {
+        // ---- executor thread (owns nothing exotic; engines are Sync) ----
+        let exec_metrics = metrics.clone();
+        let executor = scope.spawn(move || {
+            while let Ok(batch) = rx_batch.recv() {
+                let key = batch.variant.artifact_key();
+                let engine = engines
+                    .iter()
+                    .find(|(v, _)| *v == batch.variant)
+                    .map(|(_, e)| *e);
+                let Some(engine) = engine else {
+                    // variant without an engine: report failure upstream
+                    for req in batch.requests {
+                        let _ = tx_resp.send(PrefillResponse {
+                            id: req.id,
+                            last_logits: Vec::new(),
+                            nll: f64::NAN,
+                            nll_tokens: 0,
+                            queue_ms: 0.0,
+                            execute_ms: 0.0,
+                            batch_size: 0,
+                        });
+                    }
+                    continue;
+                };
+                let t = Timer::start();
+                let batch_size = batch.lengths.iter().filter(|&&l| l > 0).count();
+                let mut outs = Vec::with_capacity(batch.requests.len());
+                for (slot, _req) in batch.requests.iter().enumerate() {
+                    let len = batch.lengths[slot];
+                    let toks: Vec<u16> = batch.tokens
+                        [slot * seq_len..slot * seq_len + len]
+                        .iter()
+                        .map(|&t| t as u16)
+                        .collect();
+                    let logits = engine.forward(&toks, None, None);
+                    let mut nll = 0.0;
+                    let mut cnt = 0;
+                    for pos in 0..len.saturating_sub(1) {
+                        nll += token_nll(logits.row(pos), toks[pos + 1] as usize);
+                        cnt += 1;
+                    }
+                    let last = logits.row(len.saturating_sub(1)).to_vec();
+                    outs.push((last, nll, cnt));
+                }
+                let execute_ms = t.ms();
+                exec_metrics.record_stage(&format!("execute:{key}"), execute_ms);
+                Metrics::inc(&exec_metrics.batches);
+                for (req, (last_logits, nll, cnt)) in
+                    batch.requests.iter().zip(outs)
+                {
+                    let total_ms = req.t_submit.elapsed().as_secs_f64() * 1e3;
+                    let resp = PrefillResponse {
+                        id: req.id,
+                        last_logits,
+                        nll,
+                        nll_tokens: cnt,
+                        queue_ms: (total_ms - execute_ms).max(0.0),
+                        execute_ms,
+                        batch_size,
+                    };
+                    exec_metrics.record_latency(total_ms);
+                    Metrics::inc(&exec_metrics.completed);
+                    let _ = tx_resp.send(resp);
+                }
+            }
+        });
+
+        // ---- submission + collection on this thread ----
+        result = Some(submit_workload(
+            &cfg.workload,
+            cfg.req_len,
+            stream,
+            &cfg.router,
+            &cfg.batcher,
+            &tx_batch,
+            &metrics,
+        ));
+        drop(tx_batch);
+        while let Ok(resp) = rx_resp.recv() {
+            responses.push(resp);
+        }
+        executor_panicked = executor.join().is_err();
+    });
+
+    if executor_panicked {
+        return Err("native executor panicked".to_string());
+    }
+    let (id_variant, rejected) = result.expect("submission ran")?;
+    Ok(aggregate_report(
+        responses,
+        &id_variant,
+        &metrics,
+        rejected,
+        wall.ms(),
+        cfg.req_len,
+        "native-rust".to_string(),
+    ))
 }
 
 #[cfg(test)]

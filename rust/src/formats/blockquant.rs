@@ -47,6 +47,46 @@ pub fn e2m1_snap_rne(x: f32) -> f32 {
     }
 }
 
+/// Signed E2M1 nibble decode LUT: index = 4-bit code with the sign in
+/// bit 3. The packed GEMM and the row decoder index this directly.
+pub const E2M1_LUT: [f32; 16] = [
+    0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0, //
+    -0.0, -0.5, -1.0, -1.5, -2.0, -3.0, -4.0, -6.0,
+];
+
+/// The same LUT doubled to integers (every E2M1 grid value is a multiple
+/// of 0.5) — the integer inner loop of `matmul_nt_packed` accumulates
+/// exact `i32` products and folds the 2·2 factor into the block scale.
+pub const E2M1_LUT_X2: [i32; 16] = [
+    0, 1, 2, 3, 4, 6, 8, 12, //
+    0, -1, -2, -3, -4, -6, -8, -12,
+];
+
+/// Sign-extended INT4 nibble decode LUT (two's complement).
+pub const INT4_LUT: [i32; 16] = [
+    0, 1, 2, 3, 4, 5, 6, 7, //
+    -8, -7, -6, -5, -4, -3, -2, -1,
+];
+
+/// Exact 4-bit code of a value already on the signed E2M1 grid
+/// (sign in bit 3). Inverse of [`E2M1_LUT`] — the pack fast path uses it
+/// so codes decode to *bit-identical* values to [`RowQuantizer::qdq_row`].
+#[inline]
+pub fn e2m1_code(v: f32) -> u8 {
+    // grid·2 ∈ {0,1,2,3,4,6,8,12}: exact as f32, exact as u8 cast.
+    let mag = match (v.abs() * 2.0) as u8 {
+        0 => 0,
+        1 => 1,
+        2 => 2,
+        3 => 3,
+        4 => 4,
+        6 => 5,
+        8 => 6,
+        _ => 7, // 12
+    };
+    mag | ((v.is_sign_negative() as u8) << 3)
+}
+
 /// Bit-exact quantized matrix: packed element codes + encoded block scales.
 #[derive(Clone, Debug)]
 pub struct QuantizedMat {
@@ -172,71 +212,111 @@ impl RowQuantizer {
         out
     }
 
+    /// Encode one row into packed codes + scales, appending to the output
+    /// vectors. This is the pack fast path shared by [`Self::quantize`]
+    /// (offline weights) and the online packed-activation path in
+    /// [`crate::quant`]. The codes it emits decode *bit-identically* to
+    /// what [`Self::qdq_row`] computes (E2M1 uses the same
+    /// multiply-by-reciprocal snap, then an exact value→code lookup),
+    /// which is what lets the packed and QDQ execution paths agree.
+    pub fn pack_row(
+        &self,
+        row: &[f32],
+        ts: f32,
+        codes: &mut Vec<u8>,
+        scale_codes: &mut Vec<u8>,
+        scales_f32: &mut Vec<f32>,
+    ) {
+        let g = self.fmt.group();
+        let elem = self.fmt.element();
+        let four_bit = self.fmt.element_bits() == 4;
+        let blocks_per_row = row.len().div_ceil(g);
+        // scratch for one block's raw 4/6/8-bit codes
+        let mut block_codes: Vec<u8> = Vec::with_capacity(g);
+
+        for b in 0..blocks_per_row {
+            let lo = b * g;
+            let hi = ((b + 1) * g).min(row.len());
+            let block = &row[lo..hi];
+            let amax = block.iter().fold(0.0f32, |mm, &v| mm.max(v.abs()));
+            let s = self.block_scale(amax, ts);
+            scales_f32.push(s);
+            match self.fmt {
+                Format::Nvfp4 => {
+                    let (sc, _) = codec(crate::numerics::FpKind::E4M3)
+                        .encode(if ts == 0.0 { 0.0 } else { s / ts });
+                    scale_codes.push(sc);
+                }
+                Format::Int4 { .. } => {}
+                _ => {
+                    scale_codes.push(E8M0::ceil_from(s).0);
+                }
+            }
+            // Element codes (pad the last block with zeros).
+            block_codes.clear();
+            match elem {
+                Some(crate::numerics::FpKind::E2M1) => {
+                    if s == 0.0 {
+                        block_codes.resize(g, 0);
+                    } else {
+                        let inv = 1.0 / s;
+                        for i in 0..g {
+                            let x = if lo + i < hi { block[i] } else { 0.0 };
+                            block_codes.push(e2m1_code(e2m1_snap_rne(x * inv)));
+                        }
+                    }
+                }
+                Some(kind) => {
+                    for i in 0..g {
+                        let x = if lo + i < hi { block[i] } else { 0.0 };
+                        let code = if s == 0.0 {
+                            0
+                        } else {
+                            let (c, neg) = codec(kind).encode(x / s);
+                            // sign bit on top of the magnitude code
+                            c | ((neg as u8) << (kind.bits() - 1))
+                        };
+                        block_codes.push(code);
+                    }
+                }
+                None => {
+                    for i in 0..g {
+                        let x = if lo + i < hi { block[i] } else { 0.0 };
+                        // INT4: two's-complement nibble of code in [-7, 7].
+                        let q = INT4.quantize_code(x, s);
+                        block_codes.push((q as i8 as u8) & 0x0F);
+                    }
+                }
+            }
+            if four_bit {
+                for pair in block_codes.chunks(2) {
+                    let lo_n = pair[0] & 0x0F;
+                    let hi_n = if pair.len() > 1 { pair[1] & 0x0F } else { 0 };
+                    codes.push(lo_n | (hi_n << 4));
+                }
+            } else {
+                codes.extend_from_slice(&block_codes);
+            }
+        }
+    }
+
     /// Full bit-exact quantization to packed codes.
     pub fn quantize(&self, m: &Mat) -> QuantizedMat {
         let g = self.fmt.group();
         let ts = self.tensor_scale(m.absmax());
         let blocks_per_row = m.cols.div_ceil(g);
-        let elem = self.fmt.element();
-        let four_bit = self.fmt.element_bits() == 4;
+        let code_bytes_per_row = if self.fmt.element_bits() == 4 {
+            blocks_per_row * g.div_ceil(2)
+        } else {
+            blocks_per_row * g
+        };
 
-        let mut codes = Vec::new();
+        let mut codes = Vec::with_capacity(m.rows * code_bytes_per_row);
         let mut scale_codes = Vec::new();
         let mut scales_f32 = Vec::with_capacity(m.rows * blocks_per_row);
 
         for r in 0..m.rows {
-            let row = m.row(r);
-            for b in 0..blocks_per_row {
-                let lo = b * g;
-                let hi = ((b + 1) * g).min(m.cols);
-                let block = &row[lo..hi];
-                let amax = block.iter().fold(0.0f32, |mm, &v| mm.max(v.abs()));
-                let s = self.block_scale(amax, ts);
-                scales_f32.push(s);
-                match self.fmt {
-                    Format::Nvfp4 => {
-                        let (sc, _) = codec(crate::numerics::FpKind::E4M3)
-                            .encode(if ts == 0.0 { 0.0 } else { s / ts });
-                        scale_codes.push(sc);
-                    }
-                    Format::Int4 { .. } => {}
-                    _ => {
-                        scale_codes.push(E8M0::ceil_from(s).0);
-                    }
-                }
-                // Element codes (pad the last block with zeros).
-                let mut block_codes: Vec<u8> = Vec::with_capacity(g);
-                for i in 0..g {
-                    let x = if lo + i < hi { block[i] } else { 0.0 };
-                    let code = match elem {
-                        Some(kind) => {
-                            if s == 0.0 {
-                                0
-                            } else {
-                                let (c, neg) = codec(kind).encode(x / s);
-                                // sign bit on top of the magnitude code
-                                c | ((neg as u8) << (kind.bits() - 1))
-                            }
-                        }
-                        None => {
-                            // INT4: two's-complement nibble of code in
-                            // [-7, 7].
-                            let q = INT4.quantize_code(x, s);
-                            (q as i8 as u8) & 0x0F
-                        }
-                    };
-                    block_codes.push(code);
-                }
-                if four_bit {
-                    for pair in block_codes.chunks(2) {
-                        let lo_n = pair[0] & 0x0F;
-                        let hi_n = if pair.len() > 1 { pair[1] & 0x0F } else { 0 };
-                        codes.push(lo_n | (hi_n << 4));
-                    }
-                } else {
-                    codes.extend_from_slice(&block_codes);
-                }
-            }
+            self.pack_row(m.row(r), ts, &mut codes, &mut scale_codes, &mut scales_f32);
         }
         QuantizedMat {
             fmt: self.fmt,
@@ -251,54 +331,168 @@ impl RowQuantizer {
 }
 
 impl QuantizedMat {
-    /// Decode back to f32.
-    pub fn dequantize(&self) -> Mat {
+    /// Blocks per row (the last one may be ragged, padded with zero codes).
+    #[inline]
+    pub fn blocks_per_row(&self) -> usize {
+        self.cols.div_ceil(self.fmt.group())
+    }
+
+    /// Bytes of `codes` storage per block (4-bit formats pack 2/byte;
+    /// 6/8-bit formats use one byte per element).
+    #[inline]
+    pub fn block_bytes(&self) -> usize {
         let g = self.fmt.group();
-        let blocks_per_row = self.cols.div_ceil(g);
+        if self.fmt.element_bits() == 4 {
+            g.div_ceil(2)
+        } else {
+            g
+        }
+    }
+
+    /// Effective (decoded) scale of block `b` in row `r` — the `s` of
+    /// Eq. 1 after scale encoding.
+    #[inline]
+    pub fn block_scale(&self, r: usize, b: usize) -> f32 {
+        self.scales_f32[r * self.blocks_per_row() + b]
+    }
+
+    /// Effective scales of one row, one per block.
+    #[inline]
+    pub fn row_scales(&self, r: usize) -> &[f32] {
+        let bpr = self.blocks_per_row();
+        &self.scales_f32[r * bpr..(r + 1) * bpr]
+    }
+
+    /// Raw packed code bytes of one row (padded layout: every block
+    /// occupies [`Self::block_bytes`]).
+    #[inline]
+    pub fn row_codes(&self, r: usize) -> &[u8] {
+        let rb = self.blocks_per_row() * self.block_bytes();
+        &self.codes[r * rb..(r + 1) * rb]
+    }
+
+    /// Raw packed code bytes of block `b` in row `r`.
+    #[inline]
+    pub fn block_codes(&self, r: usize, b: usize) -> &[u8] {
+        let bb = self.block_bytes();
+        let off = (r * self.blocks_per_row() + b) * bb;
+        &self.codes[off..off + bb]
+    }
+
+    /// Decode blocks `[b0, b1)` of row `r` into `out`. `out` must cover
+    /// exactly the valid (non-padding) columns of those blocks, i.e.
+    /// `min(b1·g, cols) − b0·g` elements. This is the shared fast path:
+    /// E2M1 decodes through [`E2M1_LUT`], INT4 through [`INT4_LUT`], and
+    /// the wider minifloats through the table codec.
+    pub fn dequant_blocks(&self, r: usize, b0: usize, b1: usize, out: &mut [f32]) {
+        let g = self.fmt.group();
+        debug_assert_eq!(out.len(), (b1 * g).min(self.cols) - b0 * g);
         let elem = self.fmt.element();
         let four_bit = self.fmt.element_bits() == 4;
-        let mut out = Mat::zeros(self.rows, self.cols);
-
-        let unpack = |flat_idx: usize| -> u8 {
-            if four_bit {
-                let byte = self.codes[flat_idx / 2];
-                if flat_idx % 2 == 0 {
-                    byte & 0x0F
-                } else {
-                    byte >> 4
-                }
-            } else {
-                self.codes[flat_idx]
-            }
-        };
-
-        for r in 0..self.rows {
-            for b in 0..blocks_per_row {
-                let s = self.scales_f32[r * blocks_per_row + b];
-                for i in 0..g {
-                    let c = b * g + i;
-                    if c >= self.cols {
-                        break;
+        for b in b0..b1 {
+            let s = self.block_scale(r, b);
+            let n_valid = ((b + 1) * g).min(self.cols) - b * g;
+            let dst = &mut out[(b - b0) * g..(b - b0) * g + n_valid];
+            let bytes = self.block_codes(r, b);
+            match elem {
+                Some(crate::numerics::FpKind::E2M1) => {
+                    for (i, v) in dst.iter_mut().enumerate() {
+                        let byte = bytes[i / 2];
+                        let nib = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                        *v = E2M1_LUT[nib as usize] * s;
                     }
-                    let code = unpack((r * blocks_per_row + b) * g + i);
-                    let v = match elem {
-                        Some(kind) => {
-                            let sign_bit = 1u8 << (kind.bits() - 1);
-                            let neg = code & sign_bit != 0;
-                            let mag = code & (sign_bit - 1);
-                            codec(kind).decode(mag, neg) * s
-                        }
-                        None => {
-                            // sign-extend the nibble
-                            let q = ((code << 4) as i8 >> 4) as i32;
-                            INT4.dequantize(q, s)
-                        }
-                    };
-                    *out.at_mut(r, c) = v;
+                }
+                Some(kind) => {
+                    let c = codec(kind);
+                    let sign_bit = 1u8 << (kind.bits() - 1);
+                    for (i, v) in dst.iter_mut().enumerate() {
+                        let code = bytes[i];
+                        let neg = code & sign_bit != 0;
+                        let mag = code & (sign_bit - 1);
+                        *v = c.decode(mag, neg) * s;
+                    }
+                }
+                None => {
+                    debug_assert!(four_bit);
+                    for (i, v) in dst.iter_mut().enumerate() {
+                        let byte = bytes[i / 2];
+                        let nib = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                        *v = INT4.dequantize(INT4_LUT[nib as usize], s);
+                    }
                 }
             }
         }
+    }
+
+    /// Decode one full row into `out` (`cols` elements).
+    #[inline]
+    pub fn dequant_row(&self, r: usize, out: &mut [f32]) {
+        self.dequant_blocks(r, 0, self.blocks_per_row(), out);
+    }
+
+    /// Decode back to f32 (rows in parallel).
+    pub fn dequantize(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        if self.rows == 0 || self.cols == 0 {
+            return out;
+        }
+        let cols = self.cols;
+        pool::par_chunks_mut(&mut out.data, cols, |offset, row| {
+            self.dequant_row(offset / cols, row);
+        });
         out
+    }
+
+    /// Assemble a new matrix from whole blocks of source matrices: output
+    /// block `t` of every row is taken from `srcs[t] = (mat, block_idx)`.
+    /// This is how the augmented (K+S) packed operands are built — the
+    /// Appendix-D interleaved layout and the duplicated outlier weight
+    /// blocks are both pure block-gather operations on codes, no
+    /// re-quantization.
+    ///
+    /// All sources must share the format and row count and have
+    /// group-aligned `cols` (no ragged tail), so blocks are
+    /// position-independent. The result carries the first source's
+    /// `tensor_scale`; the effective per-block scales in `scales_f32`
+    /// remain authoritative for decoding (sources quantized under a
+    /// different tensor scale — e.g. the residual operand — stay
+    /// bit-exact through them).
+    pub fn from_blocks(srcs: &[(&QuantizedMat, usize)]) -> QuantizedMat {
+        assert!(!srcs.is_empty(), "from_blocks: empty block list");
+        let fmt = srcs[0].0.fmt;
+        let rows = srcs[0].0.rows;
+        let g = fmt.group();
+        for &(m, b) in srcs {
+            assert_eq!(m.fmt, fmt, "from_blocks: mixed formats");
+            assert_eq!(m.rows, rows, "from_blocks: mixed row counts");
+            assert_eq!(m.cols % g, 0, "from_blocks: ragged source cols");
+            assert!(b < m.blocks_per_row(), "from_blocks: block out of range");
+        }
+        let bb = srcs[0].0.block_bytes();
+        let nb = srcs.len();
+        let has_scale_codes = !srcs[0].0.scale_codes.is_empty();
+        let mut codes = Vec::with_capacity(rows * nb * bb);
+        let mut scale_codes =
+            Vec::with_capacity(if has_scale_codes { rows * nb } else { 0 });
+        let mut scales_f32 = Vec::with_capacity(rows * nb);
+        for r in 0..rows {
+            for &(m, b) in srcs {
+                codes.extend_from_slice(m.block_codes(r, b));
+                scales_f32.push(m.block_scale(r, b));
+                if has_scale_codes {
+                    scale_codes.push(m.scale_codes[r * m.blocks_per_row() + b]);
+                }
+            }
+        }
+        QuantizedMat {
+            fmt,
+            rows,
+            cols: nb * g,
+            codes,
+            scale_codes,
+            scales_f32,
+            tensor_scale: srcs[0].0.tensor_scale,
+        }
     }
 
     /// Actual packed storage footprint in bytes.
@@ -545,6 +739,108 @@ mod tests {
         for m in [0.25f32, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0] {
             assert_eq!(e2m1_snap_rne(m), c.quantize(m), "midpoint {m}");
             assert_eq!(e2m1_snap_rne(-m), c.quantize(-m));
+        }
+    }
+
+    #[test]
+    fn prop_pack_decode_equals_qdq_bit_exact_all_formats() {
+        // The packed-execution contract: materialized codes must decode to
+        // *bit-identical* values to the fused QDQ path, for every format,
+        // including ragged cols not divisible by the group size.
+        let all = [
+            Format::Nvfp4,
+            Format::Mxfp4,
+            Format::Mxfp6E2M3,
+            Format::Mxfp6E3M2,
+            Format::Mxfp8E4M3,
+            Format::Mxfp8E5M2,
+            Format::Int4 { group: 16 },
+            Format::Int4 { group: 128 },
+        ];
+        prop::forall(
+            "pack_decode_bit_exact",
+            prop::Config { cases: 24, ..Default::default() },
+            |rng| {
+                let rows = 1 + rng.below(5);
+                // deliberately ragged most of the time
+                let cols = 1 + rng.below(200);
+                let data = prop::gens::activation_vec(rng, rows * cols);
+                Mat::from_vec(rows, cols, data)
+            },
+            |m| {
+                for fmt in all {
+                    let q = RowQuantizer::new(fmt);
+                    let decoded = q.quantize(m).dequantize();
+                    let fused = q.qdq_mat(m);
+                    for (i, (a, b)) in
+                        decoded.data.iter().zip(&fused.data).enumerate()
+                    {
+                        if a != b {
+                            return Err(format!(
+                                "{fmt:?} elem {i}: packed {a} != qdq {b}"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn block_accessors_are_consistent() {
+        let mut rng = Prng::new(17);
+        let m = rand_mat(&mut rng, 3, 80, true);
+        for fmt in [Format::Nvfp4, Format::Mxfp8E4M3, Format::Int4 { group: 16 }] {
+            let qm = RowQuantizer::new(fmt).quantize(&m);
+            let g = fmt.group();
+            assert_eq!(qm.blocks_per_row(), 80usize.div_ceil(g));
+            assert_eq!(
+                qm.row_codes(1).len(),
+                qm.blocks_per_row() * qm.block_bytes()
+            );
+            // dequant_blocks over a prefix matches the full decode
+            let full = qm.dequantize();
+            let nb = 80usize.div_ceil(g).min(2);
+            let take = (nb * g).min(80);
+            let mut prefix = vec![0.0f32; take];
+            qm.dequant_blocks(1, 0, nb, &mut prefix);
+            assert_eq!(&prefix[..], &full.row(1)[..take], "{fmt:?}");
+        }
+    }
+
+    #[test]
+    fn from_blocks_gathers_and_duplicates() {
+        let mut rng = Prng::new(18);
+        let m = rand_mat(&mut rng, 2, 64, true);
+        let qm = RowQuantizer::new(Format::Nvfp4).quantize(&m);
+        // layout [B0 B0 B1 | B3]: duplication + gather in one pass
+        let cat =
+            QuantizedMat::from_blocks(&[(&qm, 0), (&qm, 0), (&qm, 1), (&qm, 3)]);
+        assert_eq!((cat.rows, cat.cols), (2, 64));
+        let full = qm.dequantize();
+        let got = cat.dequantize();
+        for r in 0..2 {
+            assert_eq!(&got.row(r)[0..16], &full.row(r)[0..16]);
+            assert_eq!(&got.row(r)[16..32], &full.row(r)[0..16]);
+            assert_eq!(&got.row(r)[32..48], &full.row(r)[16..32]);
+            assert_eq!(&got.row(r)[48..64], &full.row(r)[48..64]);
+        }
+        assert_eq!(cat.scale_codes.len(), 2 * 4);
+    }
+
+    #[test]
+    fn e2m1_code_lut_roundtrip() {
+        for (code, &v) in E2M1_LUT.iter().enumerate() {
+            // skip the redundant -0.0 entry: e2m1_code(-0.0) keeps the
+            // sign bit, decode maps both to zero
+            let c = e2m1_code(v);
+            if v == 0.0 {
+                assert_eq!(E2M1_LUT[c as usize], 0.0);
+            } else {
+                assert_eq!(c as usize, code, "value {v}");
+            }
+            assert_eq!(E2M1_LUT_X2[code], (v * 2.0) as i32);
         }
     }
 

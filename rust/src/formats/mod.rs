@@ -15,7 +15,7 @@
 pub mod blockquant;
 pub mod spec;
 
-pub use blockquant::{QuantizedMat, RowQuantizer};
+pub use blockquant::{e2m1_code, QuantizedMat, RowQuantizer, E2M1_LUT, E2M1_LUT_X2, INT4_LUT};
 pub use spec::{format_spec, table7_formats, FormatSpec};
 
 use crate::numerics::FpKind;

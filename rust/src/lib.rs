@@ -14,8 +14,29 @@
 //!   quantization, the fused reorder+RMSNorm+primary+residual kernel, and
 //!   the augmented (K+S) GEMM.
 //!
-//! See `DESIGN.md` for the experiment-by-experiment reproduction map and
-//! `EXPERIMENTS.md` for measured results.
+//! ## Execution paths: QDQ vs packed
+//!
+//! Every quantized linear can run one of two numerically interchangeable
+//! datapaths (knob: [`baselines::ExecPath`], engine-level:
+//! [`model::EngineMode::QuantizedPacked`]):
+//!
+//! * **QDQ** — the fused quantize-dequantize simulation: operands are f32
+//!   values on the quantization grid ([`formats::RowQuantizer::qdq_mat`]),
+//!   the GEMM is the f32 [`tensor::matmul_nt`]. Authoritative for
+//!   accuracy experiments; weights occupy 8× their packed size.
+//! * **Packed** — real codes end-to-end: weights stored as 4-bit codes +
+//!   E4M3/E8M0 block scales ([`formats::QuantizedMat`]), activations
+//!   quantized straight to codes, and the augmented (K+S) GEMM
+//!   ([`tensor::matmul_nt_packed`]) decodes 16-wide blocks on the fly
+//!   with the scale product hoisted per block pair — the execution model
+//!   of the paper's unified NVFP4 GEMM. Packed forward matches QDQ
+//!   forward to summation-order precision (property-tested at 1e-6 of the
+//!   dot-product scale).
+//!
+//! See `docs/packed_path.md` for the layout details (Appendix-D K+S
+//! interleaving, duplicated outlier blocks), `DESIGN.md` for the
+//! experiment-by-experiment reproduction map and `EXPERIMENTS.md` for
+//! measured results.
 
 pub mod baselines;
 pub mod calib;

@@ -10,8 +10,12 @@
 //!   info       artifact/manifest summary
 
 use arcquant::baselines::Method;
-use arcquant::coordinator::{serve_workload, BatcherConfig, RouterConfig, ServeConfig, Variant};
+use arcquant::coordinator::{
+    serve_workload, serve_workload_native, BatcherConfig, NativeServeConfig, RouterConfig,
+    ServeConfig, ServeReport, Variant,
+};
 use arcquant::formats::Format;
+use arcquant::model::{Engine, EngineMode};
 use arcquant::report::{ctx::model_domain, figures, tables, Ctx, EvalBudget};
 use arcquant::util::cli::Args;
 use arcquant::util::Timer;
@@ -50,8 +54,10 @@ USAGE: arcquant <subcommand> [--flags]
 
   report    --table 1..8 | --figure 1|2|3|6|7|8|9 | --bounds | --all
             [--artifacts DIR] [--quick]
-  serve     [--model llama8b-sim] [--requests 24] [--variant arc|fp32|rtn|mix]
-            [--artifacts DIR]
+  serve     [--model llama8b-sim] [--requests 24]
+            [--variant arc|fp32|rtn|packed|mix] [--artifacts DIR]
+            [--native]   (run the Rust engines instead of PJRT artifacts;
+                          required for the packed-execution variant)
   calibrate --model NAME [--windows 8] [--window-len 128] [--out FILE]
   eval      --model NAME --method fp16|rtn|smooth|quarot|atom|flatquant|w4a8|arcquant
             [--format nvfp4|mxfp4|int4]
@@ -141,12 +147,37 @@ fn cmd_report(args: &Args) -> i32 {
     0
 }
 
+fn print_serve_report(r: &ServeReport) {
+    println!("platform: {}", r.platform);
+    println!(
+        "completed {} rejected {} wall {:.1}ms p50 {:.1}ms p90 {:.1}ms p99 {:.1}ms",
+        r.completed, r.rejected, r.wall_ms, r.p50_ms, r.p90_ms, r.p99_ms
+    );
+    for (v, s) in &r.per_variant {
+        println!(
+            "  {v:15} requests {:3}  mean exec {:8.1}ms  ppl {:7.3}  throughput {:8.1} tok/s",
+            s.requests, s.mean_execute_ms, s.ppl, s.throughput_tok_s
+        );
+    }
+    println!("stage breakdown:");
+    for (stage, ms, share) in &r.stage_breakdown {
+        println!("  {stage:22} {ms:10.1}ms {share:5.1}%");
+    }
+}
+
 fn cmd_serve(args: &Args) -> i32 {
     let artifacts = args.str_or("artifacts", "artifacts");
     let model = args.str_or("model", "llama8b-sim");
     let n = args.usize_or("requests", 24).unwrap_or(24);
     let variant = args.str_or("variant", "mix");
+    let native = args.bool_flag("native");
     let workload = match variant.as_str() {
+        // native mix showcases the packed datapath next to QDQ + FP32
+        "mix" if native => vec![
+            (Variant::Fp32, n / 3),
+            (Variant::ArcQuant, n / 3),
+            (Variant::ArcPacked, n - 2 * (n / 3)),
+        ],
         "mix" => vec![
             (Variant::Fp32, n / 3),
             (Variant::ArcQuant, n / 3),
@@ -160,6 +191,12 @@ fn cmd_serve(args: &Args) -> i32 {
             }
         },
     };
+    if !native && workload.iter().any(|(v, _)| *v == Variant::ArcPacked) {
+        eprintln!(
+            "variant 'packed' runs on the Rust engines, not PJRT artifacts — pass --native"
+        );
+        return 2;
+    }
     let ctx = Ctx::new(&artifacts, EvalBudget::quick());
     let stream = match ctx.eval_stream(model_domain(&model)) {
         Ok(s) => s,
@@ -168,6 +205,57 @@ fn cmd_serve(args: &Args) -> i32 {
             return 1;
         }
     };
+    if native {
+        // Build one Rust engine per distinct variant; ArcPacked selects
+        // the packed-execution datapath (real NVFP4 codes end-to-end).
+        let arc = Method::ArcQuant { fmt: Format::Nvfp4, max_s: Some(512) };
+        let mut engines: Vec<(Variant, Engine)> = Vec::new();
+        for &(v, _) in &workload {
+            if engines.iter().any(|(ev, _)| *ev == v) {
+                continue;
+            }
+            let mode = match v {
+                Variant::Fp32 => EngineMode::Fp32,
+                Variant::ArcQuant => EngineMode::Quantized(arc.clone()),
+                Variant::Nvfp4Rtn => {
+                    EngineMode::Quantized(Method::Rtn { fmt: Format::Nvfp4 })
+                }
+                Variant::ArcPacked => EngineMode::QuantizedPacked(arc.clone()),
+            };
+            match ctx.engine(&model, mode) {
+                Ok((e, prep_s)) => {
+                    println!(
+                        "prepared {} engine in {prep_s:.2}s ({} weight MB)",
+                        v.artifact_key(),
+                        e.weight_bytes() / (1u64 << 20)
+                    );
+                    engines.push((v, e));
+                }
+                Err(e) => {
+                    eprintln!("engine build failed for {}: {e}", v.artifact_key());
+                    return 1;
+                }
+            }
+        }
+        let ncfg = NativeServeConfig {
+            workload,
+            req_len: 64,
+            batcher: BatcherConfig::default(),
+            router: RouterConfig::default(),
+        };
+        let refs: Vec<(Variant, &Engine)> =
+            engines.iter().map(|(v, e)| (*v, e)).collect();
+        return match serve_workload_native(&ncfg, &stream, &refs) {
+            Ok(r) => {
+                print_serve_report(&r);
+                0
+            }
+            Err(e) => {
+                eprintln!("serve failed: {e}");
+                1
+            }
+        };
+    }
     let cfg = ServeConfig {
         artifacts,
         model,
@@ -178,21 +266,7 @@ fn cmd_serve(args: &Args) -> i32 {
     };
     match serve_workload(&cfg, &stream) {
         Ok(r) => {
-            println!("platform: {}", r.platform);
-            println!(
-                "completed {} rejected {} wall {:.1}ms p50 {:.1}ms p90 {:.1}ms p99 {:.1}ms",
-                r.completed, r.rejected, r.wall_ms, r.p50_ms, r.p90_ms, r.p99_ms
-            );
-            for (v, s) in &r.per_variant {
-                println!(
-                    "  {v:9} requests {:3}  mean exec {:8.1}ms  ppl {:7.3}  throughput {:8.1} tok/s",
-                    s.requests, s.mean_execute_ms, s.ppl, s.throughput_tok_s
-                );
-            }
-            println!("stage breakdown:");
-            for (stage, ms, share) in &r.stage_breakdown {
-                println!("  {stage:22} {ms:10.1}ms {share:5.1}%");
-            }
+            print_serve_report(&r);
             0
         }
         Err(e) => {

@@ -15,6 +15,7 @@
 use super::LayerPlan;
 use crate::formats::RowQuantizer;
 use crate::tensor::{matmul_nt, Mat};
+use crate::util::pool;
 
 /// The online activation-quantization result: the augmented matrix
 /// [Q_X | Q_{R_o}] of shape [N, K+S] (values already dequantized — the
@@ -42,35 +43,66 @@ impl ArcQuantizer {
     /// Online activation path (the Fused Quantization Kernel's semantics):
     /// reorder, primary quant, residual quant of the first S channels,
     /// augment along K.
+    ///
+    /// §Perf: runs in a single [N, K+S] buffer drawn from the thread-local
+    /// scratch pool (no per-forward `Mat::zeros` + `hcat` churn) — the
+    /// reorder writes straight into the primary region and mirrors the
+    /// outlier prefix into the residual region, then both regions are
+    /// fake-quantized in place. [`ArcQuantLinear::forward`] returns the
+    /// buffer to the pool after the GEMM. Values are bit-identical to the
+    /// previous reorder → `qdq_mat` → subtract → `qdq_mat` → `hcat`
+    /// pipeline.
     pub fn quantize_activations(&self, x: &Mat) -> AugmentedActivation {
         let q = RowQuantizer::new(self.plan.fmt);
-        let xr = self.plan.perm.apply_cols(x);
-        let primary = q.qdq_mat(&xr);
-        let s = self.plan.s.min(x.cols);
-        if s == 0 {
-            return AugmentedActivation {
-                data: primary,
-                k: x.cols,
-                s: 0,
-            };
-        }
-        // Residuals of the outlier prefix only.
-        let mut resid = Mat::zeros(x.rows, s);
-        for r in 0..x.rows {
-            let xrow = xr.row(r);
-            let prow = primary.row(r);
-            let rrow = resid.row_mut(r);
-            for j in 0..s {
-                rrow[j] = xrow[j] - prow[j];
+        let n = x.rows;
+        let k = x.cols;
+        let s = self.plan.s.min(k);
+        let cols = k + s;
+        let mut aug = Mat::from_vec(n, cols, pool::take_f32(n * cols));
+
+        // Pass 1 (parallel rows): gather the reordered activations into
+        // the primary region; copy the outlier prefix into the residual
+        // region (pre-quantization values, needed for the residual).
+        let perm = &self.plan.perm.idx;
+        pool::par_chunks_mut(&mut aug.data, cols, |offset, row| {
+            let r = offset / cols;
+            let xrow = x.row(r);
+            for (j, &src) in perm.iter().enumerate() {
+                row[j] = xrow[src];
             }
+            let (primary, resid) = row.split_at_mut(k);
+            resid.copy_from_slice(&primary[..s]);
+        });
+
+        // Tensor scale of the primary stage: absmax over the reordered x
+        // (the mirrored prefix is a subset, so scanning the whole buffer
+        // gives the same maximum).
+        let ts = q.tensor_scale(aug.absmax());
+
+        // Pass 2 (parallel rows): primary QDQ in place, then residual =
+        // original − quantized for the first S channels.
+        pool::par_chunks_mut(&mut aug.data, cols, |_, row| {
+            let (primary, resid) = row.split_at_mut(k);
+            q.qdq_row(primary, ts);
+            for (rv, pv) in resid.iter_mut().zip(primary.iter()) {
+                *rv -= pv;
+            }
+        });
+
+        if s > 0 {
+            // Stage-2 quantization of the residual (its own tensor scale).
+            let mut amax_r = 0f32;
+            for r in 0..n {
+                for &v in &aug.row(r)[k..] {
+                    amax_r = amax_r.max(v.abs());
+                }
+            }
+            let ts_r = q.tensor_scale(amax_r);
+            pool::par_chunks_mut(&mut aug.data, cols, |_, row| {
+                q.qdq_row(&mut row[k..], ts_r);
+            });
         }
-        // Stage-2 quantization of the residual (its own tensor scale).
-        let resid_q = q.qdq_mat(&resid);
-        AugmentedActivation {
-            data: primary.hcat(&resid_q),
-            k: x.cols,
-            s,
-        }
+        AugmentedActivation { data: aug, k, s }
     }
 }
 
@@ -117,9 +149,13 @@ impl ArcQuantLinear {
     /// Forward pass: one unified GEMM on the extended reduction dimension
     /// (N, K+S, M) — Eq. 2.
     pub fn forward(&self, x: &Mat) -> Mat {
-        let aug = self.quantizer.quantize_activations(x);
+        let mut aug = self.quantizer.quantize_activations(x);
         debug_assert_eq!(aug.data.cols, self.w_aug.cols);
-        matmul_nt(&aug.data, &self.w_aug)
+        let y = matmul_nt(&aug.data, &self.w_aug);
+        // Recycle the augmented buffer (per-forward allocation churn is
+        // visible in serving profiles).
+        pool::put_f32(std::mem::take(&mut aug.data.data));
+        y
     }
 
     /// The S actually in effect.
@@ -153,18 +189,8 @@ mod tests {
     use super::*;
     use crate::formats::Format;
     use crate::quant::Permutation;
+    use crate::util::prop::gens::outlier_mat;
     use crate::util::{prop, stats, Prng};
-
-    fn outlier_mat(rng: &mut Prng, rows: usize, cols: usize) -> Mat {
-        Mat::from_fn(rows, cols, |_, c| {
-            let v = rng.normal();
-            if c % 23 == 7 {
-                v * 50.0
-            } else {
-                v
-            }
-        })
-    }
 
     fn plan_for(x: &Mat, fmt: Format) -> LayerPlan {
         LayerPlan::from_calibration(&x.col_absmax(), fmt)

@@ -15,14 +15,21 @@
 //!
 //! [`outlier`] implements the adaptive τ = 2⁻³·M selection rule and
 //! [`error`] the §3.4 worst-case bounds.
+//!
+//! Two execution paths share this pipeline: the QDQ simulation
+//! ([`arcquant`], f32 values on the quantization grid) and the packed
+//! path ([`packed`], real codes through
+//! [`crate::tensor::matmul_nt_packed`]). See `docs/packed_path.md`.
 
 pub mod arcquant;
 pub mod error;
 pub mod outlier;
+pub mod packed;
 pub mod reorder;
 pub mod residual;
 
 pub use arcquant::{interleaved_layout, ArcQuantLinear, ArcQuantizer, AugmentedActivation};
+pub use packed::{PackedArcLinear, PackedAugmented};
 pub use outlier::{select_outliers, OutlierSelection, TAU_COEFF};
 pub use reorder::Permutation;
 pub use residual::{dual_stage_qdq, dual_stage_reconstruct};

@@ -1,0 +1,355 @@
+//! Packed-execution ARCQuant: the augmented GEMM on real NVFP4 codes
+//! end-to-end (§3.2–§3.3 + Appendix D), no QDQ simulation in the loop.
+//!
+//! * [`ArcQuantizer::quantize_activations_packed`] — the online path:
+//!   reorder → primary quantization *to codes* → residuals of the top-S
+//!   channels computed against the **decoded codes** (no dequantize →
+//!   requantize round trip; the decode is the same bit-exact LUT the GEMM
+//!   uses) → residual quantization to codes → block-interleaved
+//!   augmentation.
+//! * [`PackedArcLinear`] — the offline side: weights reordered, quantized
+//!   once to codes, outlier blocks *duplicated at the code level* and laid
+//!   out in the Appendix-D interleaved order `[P₀ R₀ P₁ R₁ … | rest]`, so
+//!   the GEMM streams contiguous code bytes for the compensated region.
+//!
+//! The packed forward is numerically interchangeable with
+//! [`super::ArcQuantLinear::forward`]'s QDQ simulation: both paths quantize to
+//! the *same grid values* (pinned bit-exact by the `formats` property
+//! tests); only f32 summation order differs, bounded at 1e-6 of the
+//! dot-product scale (property-tested below).
+
+use super::{ArcQuantizer, LayerPlan};
+use crate::formats::{QuantizedMat, RowQuantizer};
+use crate::tensor::{matmul_nt_packed, Mat};
+use crate::util::pool;
+
+/// The online packed-activation result: codes for `[Q_X | Q_{R_o}]` in the
+/// interleaved K+S layout, ready for [`matmul_nt_packed`].
+#[derive(Clone, Debug)]
+pub struct PackedAugmented {
+    pub qm: QuantizedMat,
+    /// K (original channel count).
+    pub k: usize,
+    /// S (augmented residual channels).
+    pub s: usize,
+}
+
+/// Block order of the augmented operand: outlier primary block `b`
+/// immediately followed by its residual/duplicate partner, then the
+/// uncompensated tail — the code-level form of
+/// [`super::interleaved_layout`].
+fn interleaved_srcs<'a>(
+    primary: &'a QuantizedMat,
+    partner: &'a QuantizedMat,
+    s_blocks: usize,
+    k_blocks: usize,
+) -> Vec<(&'a QuantizedMat, usize)> {
+    let mut srcs = Vec::with_capacity(k_blocks + s_blocks);
+    for b in 0..s_blocks {
+        srcs.push((primary, b));
+        srcs.push((partner, b));
+    }
+    for b in s_blocks..k_blocks {
+        srcs.push((primary, b));
+    }
+    srcs
+}
+
+impl ArcQuantizer {
+    /// Online packed path. Requires group-aligned K (the transformer dims
+    /// all are); S is group-aligned by construction
+    /// ([`crate::quant::select_outliers`]).
+    pub fn quantize_activations_packed(&self, x: &Mat) -> PackedAugmented {
+        let q = RowQuantizer::new(self.plan.fmt);
+        let g = self.plan.fmt.group();
+        let n = x.rows;
+        let k = x.cols;
+        let s = self.plan.s.min(k);
+        assert_eq!(k % g, 0, "packed path requires group-aligned K (k={k}, g={g})");
+        assert_eq!(s % g, 0, "packed path requires group-aligned S (s={s}, g={g})");
+
+        // Reorder into pooled scratch.
+        let mut xr = Mat::from_vec(n, k, pool::take_f32(n * k));
+        let perm = &self.plan.perm.idx;
+        pool::par_chunks_mut(&mut xr.data, k, |offset, row| {
+            let xrow = x.row(offset / k);
+            for (j, &src) in perm.iter().enumerate() {
+                row[j] = xrow[src];
+            }
+        });
+
+        let primary = q.quantize(&xr);
+        if s == 0 {
+            pool::put_f32(xr.data);
+            return PackedAugmented { qm: primary, k, s: 0 };
+        }
+
+        // Residual of the outlier prefix, straight from the codes: decode
+        // the first S/g primary blocks (bit-exact with the QDQ values) and
+        // subtract. Pooled scratch — no fresh Mat per forward.
+        let sb = s / g;
+        let mut resid = Mat::from_vec(n, s, pool::take_f32(n * s));
+        {
+            let xr_ref = &xr;
+            let primary_ref = &primary;
+            pool::par_chunks_mut(&mut resid.data, s, |offset, row| {
+                let r = offset / s;
+                // decode into the row, then flip to residual in place
+                primary_ref.dequant_blocks(r, 0, sb, row);
+                let xrow = xr_ref.row(r);
+                for (rv, &xv) in row.iter_mut().zip(xrow[..s].iter()) {
+                    *rv = xv - *rv;
+                }
+            });
+        }
+        let resid_q = q.quantize(&resid);
+        pool::put_f32(xr.data);
+        pool::put_f32(resid.data);
+
+        let srcs = interleaved_srcs(&primary, &resid_q, sb, k / g);
+        PackedAugmented {
+            qm: QuantizedMat::from_blocks(&srcs),
+            k,
+            s,
+        }
+    }
+}
+
+/// A linear layer prepared for *packed* ARCQuant inference: `W_aug` held
+/// as NVFP4/MXFP4/INT4 codes of shape [M, K+S] (outlier blocks duplicated
+/// at the code level, interleaved layout), so weight memory is the real
+/// packed footprint — ~4.25 bits/element instead of 32.
+#[derive(Clone, Debug)]
+pub struct PackedArcLinear {
+    pub quantizer: ArcQuantizer,
+    /// [M, K+S] packed codes: reordered, quantized, outlier blocks
+    /// duplicated, Appendix-D interleaved.
+    pub w_packed: QuantizedMat,
+    /// Original output dim M and input dim K.
+    pub out_dim: usize,
+    pub in_dim: usize,
+}
+
+impl PackedArcLinear {
+    /// Offline weight preparation. Errs when the layer shape cannot run
+    /// packed (K or S not aligned to the format group) — callers fall back
+    /// to the QDQ path ([`super::ArcQuantLinear`]).
+    pub fn prepare(w: &Mat, plan: LayerPlan) -> Result<PackedArcLinear, String> {
+        assert_eq!(w.cols, plan.perm.len(), "weight in_dim != plan channels");
+        let g = plan.fmt.group();
+        if w.cols % g != 0 {
+            return Err(format!(
+                "packed path needs K % g == 0 (K={}, g={g})",
+                w.cols
+            ));
+        }
+        let s = plan.s.min(w.cols);
+        if s % g != 0 {
+            return Err(format!("packed path needs S % g == 0 (S={s}, g={g})"));
+        }
+        let q = RowQuantizer::new(plan.fmt);
+        let wr = plan.perm.apply_cols(w);
+        let wq = q.quantize(&wr);
+        let sb = s / g;
+        let w_packed = if sb == 0 {
+            wq
+        } else {
+            // Duplicate the *quantized* outlier weight blocks — the GEMM
+            // then computes R_o · Q(W_o)ᵀ as the correction term (Eq. 2).
+            let srcs = interleaved_srcs(&wq, &wq, sb, w.cols / g);
+            QuantizedMat::from_blocks(&srcs)
+        };
+        Ok(PackedArcLinear {
+            out_dim: w.rows,
+            in_dim: w.cols,
+            quantizer: ArcQuantizer::new(plan),
+            w_packed,
+        })
+    }
+
+    /// Forward pass on codes end-to-end: quantize activations straight to
+    /// packed codes, then one unified block-scaled GEMM over K+S.
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let aug = self.quantizer.quantize_activations_packed(x);
+        debug_assert_eq!(aug.qm.cols, self.w_packed.cols);
+        matmul_nt_packed(&aug.qm, &self.w_packed)
+    }
+
+    /// The S actually in effect.
+    pub fn s(&self) -> usize {
+        self.quantizer.plan.s.min(self.in_dim)
+    }
+
+    /// Real packed weight footprint in bytes (codes + block scales +
+    /// tensor scale, including the duplicated outlier blocks).
+    pub fn weight_bytes(&self) -> u64 {
+        self.w_packed.packed_bytes()
+    }
+
+    /// Equivalent f32 (QDQ-simulation) weight footprint, for reporting.
+    pub fn qdq_equiv_bytes(&self) -> u64 {
+        (self.w_packed.rows * self.w_packed.cols * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Format;
+    use crate::quant::{ArcQuantLinear, Permutation};
+    use crate::util::prop::gens::outlier_mat;
+    use crate::util::{prop, Prng};
+
+    /// Packed-vs-QDQ agreement: 1e-6 relative to the dot-product scale
+    /// (‖a‖·‖b‖ over the augmented operands) — the acceptance contract.
+    fn forward_close(
+        y_packed: &Mat,
+        y_qdq: &Mat,
+        aug_qdq: &Mat,
+        w_aug: &Mat,
+    ) -> Result<(), String> {
+        let norm = |m: &Mat, r: usize| -> f64 {
+            m.row(r).iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+        };
+        for i in 0..y_packed.rows {
+            let na = norm(aug_qdq, i);
+            for j in 0..y_packed.cols {
+                let tol = 1e-6 * (1.0 + na * norm(w_aug, j));
+                let (p, q) = (y_packed.at(i, j) as f64, y_qdq.at(i, j) as f64);
+                if (p - q).abs() > tol {
+                    return Err(format!("({i},{j}): packed {p} vs qdq {q}, tol {tol}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn check_fmt(fmt: Format, x: &Mat, w: &Mat) {
+        let plan = LayerPlan::from_calibration(&x.col_absmax(), fmt);
+        let qdq = ArcQuantLinear::prepare(w, plan.clone());
+        let packed = PackedArcLinear::prepare(w, plan.clone()).unwrap();
+        assert_eq!(packed.s(), qdq.s());
+        let y_qdq = qdq.forward(x);
+        let y_packed = packed.forward(x);
+        let aug = ArcQuantizer::new(plan).quantize_activations(x);
+        forward_close(&y_packed, &y_qdq, &aug.data, &qdq.w_aug)
+            .unwrap_or_else(|e| panic!("{}: {e}", fmt.name()));
+    }
+
+    #[test]
+    fn packed_forward_matches_qdq_forward_nvfp4() {
+        let mut rng = Prng::new(80);
+        let x = outlier_mat(&mut rng, 8, 128);
+        let mut w = Mat::zeros(12, 128);
+        w.fill_random_normal(&mut rng, 0.4);
+        check_fmt(Format::Nvfp4, &x, &w);
+    }
+
+    #[test]
+    fn packed_forward_matches_qdq_forward_mxfp4_and_int4() {
+        let mut rng = Prng::new(81);
+        let x = outlier_mat(&mut rng, 6, 256);
+        let mut w = Mat::zeros(10, 256);
+        w.fill_random_normal(&mut rng, 0.4);
+        check_fmt(Format::Mxfp4, &x, &w);
+        check_fmt(Format::Int4 { group: 16 }, &x, &w);
+        check_fmt(Format::Int4 { group: 128 }, &x, &w);
+    }
+
+    #[test]
+    fn prop_packed_matches_qdq_across_shapes() {
+        // The acceptance-criteria property: NVFP4 / MXFP4 / INT4 packed
+        // forward ≡ QDQ forward within 1e-6 relative, on K+S augmented
+        // layers of random shapes.
+        prop::forall(
+            "packed_forward_matches_qdq",
+            prop::Config { cases: 10, ..Default::default() },
+            |rng| {
+                let k = prop::gens::dim_mult(rng, 32, 160);
+                let n = 1 + rng.below(6);
+                let m = 1 + rng.below(10);
+                let x = Mat::from_vec(n, k, prop::gens::activation_vec(rng, n * k));
+                let w = Mat::from_vec(m, k, prop::gens::uniform_vec(rng, m * k, 1.0));
+                (x, w)
+            },
+            |(x, w)| {
+                for fmt in
+                    [Format::Nvfp4, Format::Mxfp4, Format::Int4 { group: 32 }]
+                {
+                    let plan = LayerPlan::from_calibration(&x.col_absmax(), fmt);
+                    let qdq = ArcQuantLinear::prepare(w, plan.clone());
+                    let packed = PackedArcLinear::prepare(w, plan.clone())
+                        .map_err(|e| e.to_string())?;
+                    let y_qdq = qdq.forward(x);
+                    let y_packed = packed.forward(x);
+                    let aug = ArcQuantizer::new(plan).quantize_activations(x);
+                    forward_close(&y_packed, &y_qdq, &aug.data, &qdq.w_aug)
+                        .map_err(|e| format!("{fmt:?} {e}"))?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn s_zero_packed_reduces_to_rtn_codes() {
+        let mut rng = Prng::new(82);
+        let x = outlier_mat(&mut rng, 4, 64);
+        let mut w = Mat::zeros(8, 64);
+        w.fill_random_normal(&mut rng, 1.0);
+        let lin = PackedArcLinear::prepare(&w, LayerPlan::rtn(64, Format::Nvfp4)).unwrap();
+        assert_eq!(lin.w_packed.cols, 64);
+        assert_eq!(lin.s(), 0);
+        let y = lin.forward(&x);
+        assert_eq!((y.rows, y.cols), (4, 8));
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn unaligned_shapes_fall_back_with_err() {
+        let w = Mat::zeros(4, 40); // 40 % 16 != 0
+        let plan = LayerPlan::rtn(40, Format::Nvfp4);
+        assert!(PackedArcLinear::prepare(&w, plan).is_err());
+    }
+
+    #[test]
+    fn packed_weight_footprint_under_one_sixth_of_f32() {
+        // Acceptance: packed weight bytes ≤ 1/6 of the f32 QDQ path for
+        // NVFP4 at operating S.
+        let mut rng = Prng::new(83);
+        let x = outlier_mat(&mut rng, 8, 512);
+        let mut w = Mat::zeros(64, 512);
+        w.fill_random_normal(&mut rng, 0.3);
+        let plan = LayerPlan::from_calibration(&x.col_absmax(), Format::Nvfp4);
+        assert!(plan.s > 0);
+        let lin = PackedArcLinear::prepare(&w, plan).unwrap();
+        let packed = lin.weight_bytes() as f64;
+        let f32_bytes = lin.qdq_equiv_bytes() as f64;
+        assert!(
+            packed <= f32_bytes / 6.0,
+            "packed {packed}B vs f32 {f32_bytes}B"
+        );
+    }
+
+    #[test]
+    fn interleaved_code_layout_matches_qdq_interleave() {
+        // The packed augmentation must equal the f32 interleaved layout of
+        // the QDQ path, decoded — layout parity with Appendix D.
+        let (k, s) = (64usize, 32usize);
+        let mut rng = Prng::new(84);
+        let x = outlier_mat(&mut rng, 3, k);
+        let plan = LayerPlan {
+            perm: Permutation::identity(k),
+            s,
+            fmt: Format::Nvfp4,
+        };
+        let qz = ArcQuantizer::new(plan);
+        let aug_qdq = qz.quantize_activations(&x);
+        let aug_packed = qz.quantize_activations_packed(&x);
+        assert_eq!(aug_packed.qm.cols, k + s);
+        let order = super::super::interleaved_layout(k, s, 16);
+        let want = aug_qdq.data.select_cols(&order);
+        let got = aug_packed.qm.dequantize();
+        assert_eq!(got.data, want.data, "decoded packed aug != interleaved qdq aug");
+    }
+}

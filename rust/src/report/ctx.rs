@@ -166,7 +166,7 @@ impl Ctx {
     /// Build an engine for (model, mode).
     pub fn engine(&self, model: &str, mode: EngineMode) -> Result<(Engine, f64), String> {
         let (cfg, w) = self.model(model)?;
-        let calib = if matches!(mode, EngineMode::Quantized(_)) {
+        let calib = if mode.method().is_some() {
             Some(self.calibration(model)?)
         } else {
             None

@@ -1,0 +1,354 @@
+//! Block-scaled GEMM on packed codes: C = A · Bᵀ where both operands are
+//! [`QuantizedMat`]s — the execution path the paper's unified NVFP4 GEMM
+//! actually takes. The hot loop streams 4-bit codes and per-block scales,
+//! never a dequantized f32 weight matrix:
+//!
+//! * the scale product `s_a·s_b` is hoisted per block pair (both operands
+//!   are blocked identically along the reduction dim, so block `t` of an
+//!   A row always meets block `t` of a B row);
+//! * E2M1×E2M1 and INT4×INT4 blocks run an *integer* inner loop — codes
+//!   decode through a 16-entry `i32` LUT and the per-block partial sum is
+//!   exact in `i32` before a single multiply by the hoisted scale;
+//! * mixed-width pairs (e.g. the W4A8 path: MXFP8 activations × MXFP4
+//!   weights) decode through per-format 256-entry f32 LUTs;
+//! * output rows are parallelised via [`crate::util::pool`], mirroring
+//!   [`super::matmul_nt`]; per-row decode scratch is recycled through the
+//!   thread-local buffer pool, so within a GEMM each worker allocates at
+//!   most once regardless of row count (workers are scoped per call, so a
+//!   fresh forward pays one scratch allocation per worker, not per row).
+//!
+//! Numerical contract: per-block partials accumulate into an f64 carry,
+//! so the result matches the QDQ simulation (`matmul_nt` over
+//! `dequantize()`d operands) to ≤1e-6 relative to the dot-product scale
+//! `‖a_row‖·‖b_row‖` — property-tested here and in `quant::packed`.
+
+use super::Mat;
+use crate::formats::blockquant::{E2M1_LUT_X2, INT4_LUT};
+use crate::formats::QuantizedMat;
+use crate::numerics::{codec, FpKind};
+use crate::util::pool;
+
+/// The activation operand of the packed GEMM is just a (possibly
+/// K+S-augmented) packed matrix; the alias keeps signatures readable.
+pub type QuantizedAct = QuantizedMat;
+
+/// Per-element decode LUT over the full code byte (sign bit included).
+/// 4-bit formats use the low 16 entries; unused entries stay 0.
+fn elem_lut_f32(qm: &QuantizedMat) -> [f32; 256] {
+    let mut lut = [0f32; 256];
+    match qm.fmt.element() {
+        Some(kind) => {
+            let c = codec(kind);
+            let bits = kind.bits();
+            let sign_bit = 1u16 << (bits - 1);
+            let grid_len = c.grid().len() as u16;
+            for code in 0..(1u16 << bits) {
+                let neg = code & sign_bit != 0;
+                let mag = code & (sign_bit - 1);
+                if mag < grid_len {
+                    lut[code as usize] = c.decode(mag as u8, neg);
+                }
+            }
+        }
+        None => {
+            for (i, &v) in INT4_LUT.iter().enumerate() {
+                lut[i] = v as f32;
+            }
+        }
+    }
+    lut
+}
+
+/// Integer decode LUT for the fast path, plus the factor that folds the
+/// LUT's fixed-point shift back out (E2M1 values are stored ×2, so a
+/// product of two carries ×4 → factor 0.25).
+fn elem_lut_i32(qm: &QuantizedMat) -> Option<(&'static [i32; 16], f32)> {
+    match qm.fmt.element() {
+        Some(FpKind::E2M1) => Some((&E2M1_LUT_X2, 0.25)),
+        None => Some((&INT4_LUT, 1.0)),
+        _ => None,
+    }
+}
+
+/// C = A · Bᵀ on packed operands: A is [n, k], B is [m, k] → C [n, m].
+/// Operands must share the reduction dim and block size; element formats
+/// may differ (mixed-precision pairs take the f32-LUT path).
+pub fn matmul_nt_packed(a: &QuantizedAct, b: &QuantizedMat) -> Mat {
+    assert_eq!(
+        a.cols, b.cols,
+        "reduction-dim mismatch: A[{},{}] · B[{},{}]ᵀ",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    assert_eq!(
+        a.fmt.group(),
+        b.fmt.group(),
+        "block-size mismatch: {:?} vs {:?}",
+        a.fmt,
+        b.fmt
+    );
+    // nibble unpacking assumes two codes per byte fill whole blocks
+    assert!(a.fmt.group() % 2 == 0, "packed GEMM requires an even group size");
+    let n = a.rows;
+    let m = b.rows;
+    let mut c = Mat::zeros(n, m);
+    if n == 0 || m == 0 || a.cols == 0 {
+        return c;
+    }
+
+    let int_pair = match (elem_lut_i32(a), elem_lut_i32(b)) {
+        // Integer partials are only exact when both sides use the same
+        // fixed-point shift (same element encoding).
+        (Some((la, fa)), Some((lb, _))) if a.fmt.element() == b.fmt.element() => {
+            Some((la, lb, fa))
+        }
+        _ => None,
+    };
+
+    match int_pair {
+        Some((lut_a, lut_b, factor)) => {
+            gemm_int(a, b, &mut c, lut_a, lut_b, factor);
+        }
+        None => {
+            let lut_a = elem_lut_f32(a);
+            let lut_b = elem_lut_f32(b);
+            gemm_f32(a, b, &mut c, &lut_a, &lut_b);
+        }
+    }
+    c
+}
+
+/// Decode one packed row into `out` (padded layout: blocks_per_row · g
+/// entries) through a 16-entry i32 LUT. 4-bit codes only.
+fn decode_row_i32(qm: &QuantizedMat, r: usize, lut: &[i32; 16], out: &mut [i32]) {
+    debug_assert_eq!(qm.fmt.element_bits(), 4);
+    for (t, byte) in qm.row_codes(r).iter().enumerate() {
+        out[2 * t] = lut[(byte & 0x0F) as usize];
+        out[2 * t + 1] = lut[(byte >> 4) as usize];
+    }
+}
+
+/// Decode one packed row into `out` (padded layout) through a 256-entry
+/// f32 LUT; handles both 4-bit (two codes per byte) and byte-wide codes.
+fn decode_row_f32(qm: &QuantizedMat, r: usize, lut: &[f32; 256], out: &mut [f32]) {
+    let row = qm.row_codes(r);
+    if qm.fmt.element_bits() == 4 {
+        for (t, byte) in row.iter().enumerate() {
+            out[2 * t] = lut[(byte & 0x0F) as usize];
+            out[2 * t + 1] = lut[(byte >> 4) as usize];
+        }
+    } else {
+        for (t, byte) in row.iter().enumerate() {
+            out[t] = lut[*byte as usize];
+        }
+    }
+}
+
+/// Integer fast path: both operands 4-bit with the same element encoding.
+fn gemm_int(
+    a: &QuantizedMat,
+    b: &QuantizedMat,
+    c: &mut Mat,
+    lut_a: &[i32; 16],
+    lut_b: &[i32; 16],
+    factor: f32,
+) {
+    let g = a.fmt.group();
+    let bpr = a.blocks_per_row();
+    let bb = b.block_bytes(); // == g/2
+    let m = b.rows;
+    pool::par_chunks_mut(&mut c.data, m, |offset, c_row| {
+        let i = offset / m;
+        let mut ai = pool::take_i32(bpr * g);
+        decode_row_i32(a, i, lut_a, &mut ai);
+        let sa = a.row_scales(i);
+        for (j, out) in c_row.iter_mut().enumerate() {
+            let sb = b.row_scales(j);
+            let brow = b.row_codes(j);
+            let mut acc = 0f64;
+            for blk in 0..bpr {
+                let sab = sa[blk] * sb[blk];
+                if sab == 0.0 {
+                    continue;
+                }
+                let ab = &ai[blk * g..(blk + 1) * g];
+                let bytes = &brow[blk * bb..(blk + 1) * bb];
+                let mut isum = 0i32;
+                for (byte, av) in bytes.iter().zip(ab.chunks_exact(2)) {
+                    isum += av[0] * lut_b[(byte & 0x0F) as usize]
+                        + av[1] * lut_b[(byte >> 4) as usize];
+                }
+                acc += (isum as f32 * factor) as f64 * sab as f64;
+            }
+            *out = acc as f32;
+        }
+        pool::put_i32(ai);
+    });
+}
+
+/// Generic path: per-format f32 decode (6/8-bit elements or mixed pairs).
+fn gemm_f32(
+    a: &QuantizedMat,
+    b: &QuantizedMat,
+    c: &mut Mat,
+    lut_a: &[f32; 256],
+    lut_b: &[f32; 256],
+) {
+    let g = a.fmt.group();
+    let bpr = a.blocks_per_row();
+    let bb = b.block_bytes();
+    let b_four_bit = b.fmt.element_bits() == 4;
+    let m = b.rows;
+    pool::par_chunks_mut(&mut c.data, m, |offset, c_row| {
+        let i = offset / m;
+        let mut af = pool::take_f32(bpr * g);
+        decode_row_f32(a, i, lut_a, &mut af);
+        let sa = a.row_scales(i);
+        for (j, out) in c_row.iter_mut().enumerate() {
+            let sb = b.row_scales(j);
+            let brow = b.row_codes(j);
+            let mut acc = 0f64;
+            for blk in 0..bpr {
+                let sab = sa[blk] * sb[blk];
+                if sab == 0.0 {
+                    continue;
+                }
+                let ab = &af[blk * g..(blk + 1) * g];
+                let bytes = &brow[blk * bb..(blk + 1) * bb];
+                let mut fsum = 0f32;
+                if b_four_bit {
+                    for (byte, av) in bytes.iter().zip(ab.chunks_exact(2)) {
+                        fsum += av[0] * lut_b[(byte & 0x0F) as usize]
+                            + av[1] * lut_b[(byte >> 4) as usize];
+                    }
+                } else {
+                    for (bv, av) in bytes.iter().zip(ab.iter()) {
+                        fsum += av * lut_b[*bv as usize];
+                    }
+                }
+                acc += fsum as f64 * sab as f64;
+            }
+            *out = acc as f32;
+        }
+        pool::put_f32(af);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{Format, RowQuantizer};
+    use crate::tensor::matmul_nt;
+    use crate::util::prop::gens::outlier_mat;
+    use crate::util::{prop, Prng};
+
+    /// Per-element tolerance of the packed-vs-QDQ contract: 1e-6 relative
+    /// to the natural scale of the dot product (Cauchy–Schwarz bound of
+    /// its terms). The measured gap is ~6e-8 — see docs/packed_path.md.
+    fn check_close(y_packed: &Mat, y_qdq: &Mat, da: &Mat, db: &Mat) -> Result<(), String> {
+        let norm = |m: &Mat, r: usize| -> f64 {
+            m.row(r).iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+        };
+        for i in 0..y_packed.rows {
+            let na = norm(da, i);
+            for j in 0..y_packed.cols {
+                let tol = 1e-6 * (1.0 + na * norm(db, j));
+                let (p, q) = (y_packed.at(i, j) as f64, y_qdq.at(i, j) as f64);
+                if (p - q).abs() > tol {
+                    return Err(format!("({i},{j}): packed {p} vs qdq {q} > {tol}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn packed_matches_qdq_gemm_all_4bit_formats() {
+        let mut rng = Prng::new(70);
+        for fmt in [Format::Nvfp4, Format::Mxfp4, Format::Int4 { group: 16 }] {
+            let x = outlier_mat(&mut rng, 5, 96);
+            let mut w = Mat::zeros(7, 96);
+            w.fill_random_normal(&mut rng, 0.5);
+            let q = RowQuantizer::new(fmt);
+            let (qa, qb) = (q.quantize(&x), q.quantize(&w));
+            let (da, db) = (qa.dequantize(), qb.dequantize());
+            let y_packed = matmul_nt_packed(&qa, &qb);
+            let y_qdq = matmul_nt(&da, &db);
+            check_close(&y_packed, &y_qdq, &da, &db)
+                .unwrap_or_else(|e| panic!("{fmt:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn packed_supports_mixed_w4a8() {
+        // W4A8: MXFP8 activations × MXFP4 weights share g=32 but not the
+        // element type — exercises the f32-LUT path.
+        let mut rng = Prng::new(71);
+        let x = outlier_mat(&mut rng, 4, 64);
+        let mut w = Mat::zeros(6, 64);
+        w.fill_random_normal(&mut rng, 0.5);
+        let qa = RowQuantizer::new(Format::Mxfp8E4M3).quantize(&x);
+        let qb = RowQuantizer::new(Format::Mxfp4).quantize(&w);
+        let (da, db) = (qa.dequantize(), qb.dequantize());
+        let y_packed = matmul_nt_packed(&qa, &qb);
+        let y_qdq = matmul_nt(&da, &db);
+        check_close(&y_packed, &y_qdq, &da, &db).unwrap();
+    }
+
+    #[test]
+    fn packed_handles_ragged_and_zero_blocks() {
+        // ragged cols (padding codes must contribute nothing) + an
+        // all-zero block (scale 0 skip path)
+        let mut rng = Prng::new(72);
+        let mut x = outlier_mat(&mut rng, 3, 41);
+        let mut w = Mat::zeros(5, 41);
+        w.fill_random_normal(&mut rng, 1.0);
+        for c in 16..32 {
+            for r in 0..3 {
+                *x.at_mut(r, c) = 0.0;
+            }
+        }
+        let q = RowQuantizer::new(Format::Nvfp4);
+        let (qa, qb) = (q.quantize(&x), q.quantize(&w));
+        let (da, db) = (qa.dequantize(), qb.dequantize());
+        let y_packed = matmul_nt_packed(&qa, &qb);
+        let y_qdq = matmul_nt(&da, &db);
+        check_close(&y_packed, &y_qdq, &da, &db).unwrap();
+    }
+
+    #[test]
+    fn prop_packed_matches_qdq_random_shapes() {
+        prop::forall(
+            "packed_gemm_matches_qdq",
+            prop::Config { cases: 16, ..Default::default() },
+            |rng| {
+                let k = prop::gens::dim_mult(rng, 16, 160);
+                let n = 1 + rng.below(6);
+                let m = 1 + rng.below(9);
+                let x = Mat::from_vec(n, k, prop::gens::activation_vec(rng, n * k));
+                let w = Mat::from_vec(m, k, prop::gens::uniform_vec(rng, m * k, 1.0));
+                (x, w)
+            },
+            |(x, w)| {
+                for fmt in [Format::Nvfp4, Format::Mxfp4] {
+                    let q = RowQuantizer::new(fmt);
+                    let (qa, qb) = (q.quantize(x), q.quantize(w));
+                    let (da, db) = (qa.dequantize(), qb.dequantize());
+                    let y_packed = matmul_nt_packed(&qa, &qb);
+                    let y_qdq = matmul_nt(&da, &db);
+                    check_close(&y_packed, &y_qdq, &da, &db)
+                        .map_err(|e| format!("{fmt:?}: {e}"))?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "reduction-dim mismatch")]
+    fn shape_mismatch_panics() {
+        let q = RowQuantizer::new(Format::Nvfp4);
+        let a = q.quantize(&Mat::zeros(2, 32));
+        let b = q.quantize(&Mat::zeros(2, 48));
+        let _ = matmul_nt_packed(&a, &b);
+    }
+}

@@ -1,5 +1,12 @@
 //! Scoped data-parallel helpers over std::thread (rayon is unavailable
 //! offline). Work is split into contiguous chunks, one per worker.
+//!
+//! Also hosts small thread-local scratch-buffer pools ([`take_f32`] /
+//! [`put_f32`], [`take_i32`] / [`put_i32`]) so per-forward hot paths
+//! (activation quantization, the packed GEMM's decode scratch) reuse
+//! allocations instead of churning `Vec`s on every call.
+
+use std::cell::RefCell;
 
 /// Number of workers to use: respects `ARCQUANT_THREADS`, defaults to the
 /// available parallelism, capped at 16.
@@ -38,6 +45,60 @@ where
                     f(base + ci * chunk_len, chunk);
                 }
             });
+        }
+    });
+}
+
+// Per-thread free lists. Bounded so a burst of large buffers cannot pin
+// memory forever; each worker thread keeps its own list, so no locking.
+const POOL_CAP: usize = 8;
+
+thread_local! {
+    static F32_BUFS: RefCell<Vec<Vec<f32>>> = RefCell::new(Vec::new());
+    static I32_BUFS: RefCell<Vec<Vec<i32>>> = RefCell::new(Vec::new());
+}
+
+/// Take a zero-filled `Vec<f32>` of `len` from the thread-local pool
+/// (allocating only when the pool is empty). Pair with [`put_f32`].
+pub fn take_f32(len: usize) -> Vec<f32> {
+    match F32_BUFS.with(|p| p.borrow_mut().pop()) {
+        Some(mut v) => {
+            v.clear();
+            v.resize(len, 0.0);
+            v
+        }
+        None => vec![0.0; len],
+    }
+}
+
+/// Return a buffer taken with [`take_f32`] to the pool.
+pub fn put_f32(v: Vec<f32>) {
+    F32_BUFS.with(|p| {
+        let mut p = p.borrow_mut();
+        if p.len() < POOL_CAP {
+            p.push(v);
+        }
+    });
+}
+
+/// Take a zero-filled `Vec<i32>` of `len` from the thread-local pool.
+pub fn take_i32(len: usize) -> Vec<i32> {
+    match I32_BUFS.with(|p| p.borrow_mut().pop()) {
+        Some(mut v) => {
+            v.clear();
+            v.resize(len, 0);
+            v
+        }
+        None => vec![0; len],
+    }
+}
+
+/// Return a buffer taken with [`take_i32`] to the pool.
+pub fn put_i32(v: Vec<i32>) {
+    I32_BUFS.with(|p| {
+        let mut p = p.borrow_mut();
+        if p.len() < POOL_CAP {
+            p.push(v);
         }
     });
 }
@@ -95,6 +156,25 @@ mod tests {
     fn par_map_empty() {
         let out: Vec<usize> = par_map(0, |i| i);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn scratch_pool_recycles() {
+        let a = take_f32(100);
+        assert!(a.iter().all(|&x| x == 0.0));
+        let ptr = a.as_ptr() as usize;
+        let cap = a.capacity();
+        put_f32(a);
+        let b = take_f32(50);
+        // same allocation comes back (capacity preserved, zeroed contents)
+        assert_eq!(b.as_ptr() as usize, ptr);
+        assert!(b.capacity() >= 50 && cap >= 100);
+        assert!(b.iter().all(|&x| x == 0.0));
+        put_f32(b);
+
+        let c = take_i32(16);
+        assert_eq!(c.len(), 16);
+        put_i32(c);
     }
 
     #[test]

@@ -48,6 +48,22 @@ where
 /// Generator helpers.
 pub mod gens {
     use super::*;
+    use crate::tensor::Mat;
+
+    /// Outlier-heavy activation matrix (the LLM channel phenomenon the
+    /// paper targets): unit normals with every 23rd channel boosted 50×.
+    /// Shared by the quant/tensor tests and the GEMM benches so they all
+    /// exercise the same distribution.
+    pub fn outlier_mat(rng: &mut Prng, rows: usize, cols: usize) -> Mat {
+        Mat::from_fn(rows, cols, |_, c| {
+            let v = rng.normal();
+            if c % 23 == 7 {
+                v * 50.0
+            } else {
+                v
+            }
+        })
+    }
 
     /// Vec<f32> with values drawn from a heavy-tailed mixture that mimics
     /// LLM activations: mostly N(0, 1) with occasional large outliers —

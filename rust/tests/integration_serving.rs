@@ -1,8 +1,11 @@
-//! Integration: the full serving stack over the PJRT artifacts.
-//! Skips gracefully when artifacts are absent.
+//! Integration: the full serving stack over the PJRT artifacts (skips
+//! gracefully when artifacts are absent), plus the Rust-native serving
+//! path — router → batcher → engine executor — which needs no artifacts
+//! and is how the packed-execution datapath serves traffic.
 
 use arcquant::coordinator::{
-    serve_workload, BatcherConfig, RouterConfig, ServeConfig, Variant,
+    serve_workload, serve_workload_native, BatcherConfig, NativeServeConfig,
+    RouterConfig, ServeConfig, Variant,
 };
 
 fn artifacts_root() -> Option<String> {
@@ -58,6 +61,98 @@ fn serving_completes_all_requests_and_reports_sane_stats() {
     let stages: Vec<&str> = r.stage_breakdown.iter().map(|(s, _, _)| s.as_str()).collect();
     assert!(stages.iter().any(|s| s.starts_with("execute:fp32")));
     assert!(stages.iter().any(|s| s.starts_with("compile:")));
+}
+
+#[test]
+fn native_serving_runs_packed_and_qdq_without_artifacts() {
+    use arcquant::baselines::Method;
+    use arcquant::formats::Format;
+    use arcquant::model::{Engine, EngineMode, ModelConfig, Weights};
+    use std::collections::BTreeMap;
+
+    // synthetic model + calibration: no artifacts required
+    let cfg = ModelConfig::tiny_test();
+    let weights = Weights::synthetic(&cfg, 3);
+    let fp = Engine::new(cfg.clone(), weights.clone(), EngineMode::Fp32, None).unwrap();
+    let mut coll = BTreeMap::new();
+    let calib_toks: Vec<u16> = (0..64u16).map(|i| (i * 37) % 256).collect();
+    fp.forward(&calib_toks, Some(&mut coll), None);
+
+    let method = Method::ArcQuant { fmt: Format::Nvfp4, max_s: Some(64) };
+    let qdq = Engine::new(
+        cfg.clone(),
+        weights.clone(),
+        EngineMode::Quantized(method.clone()),
+        Some(&coll),
+    )
+    .unwrap();
+    let packed = Engine::new(
+        cfg.clone(),
+        weights.clone(),
+        EngineMode::QuantizedPacked(method),
+        Some(&coll),
+    )
+    .unwrap();
+    // packed engine reports real (small) weight bytes
+    assert!(packed.weight_bytes() < fp.weight_bytes() / 2);
+
+    let stream: Vec<u16> = (0..4096u32).map(|i| ((i * 37 + 11) % 256) as u16).collect();
+    let ncfg = NativeServeConfig {
+        workload: vec![
+            (Variant::Fp32, 5),
+            (Variant::ArcQuant, 4),
+            (Variant::ArcPacked, 4),
+        ],
+        req_len: 24,
+        batcher: BatcherConfig::default(),
+        router: RouterConfig::default(),
+    };
+    let engines: Vec<(Variant, &Engine)> = vec![
+        (Variant::Fp32, &fp),
+        (Variant::ArcQuant, &qdq),
+        (Variant::ArcPacked, &packed),
+    ];
+    let r = serve_workload_native(&ncfg, &stream, &engines).unwrap();
+    assert_eq!(r.completed, 13);
+    assert_eq!(r.rejected, 0);
+    assert_eq!(r.platform, "native-rust");
+    for key in ["fp32", "arcquant", "arcquant-packed"] {
+        let s = &r.per_variant[key];
+        assert!(s.ppl.is_finite() && s.ppl > 1.0, "{key}: ppl {}", s.ppl);
+        assert!(s.throughput_tok_s > 0.0);
+    }
+    // the packed datapath serves the same numbers as the QDQ simulation
+    let (a, p) = (
+        r.per_variant["arcquant"].ppl,
+        r.per_variant["arcquant-packed"].ppl,
+    );
+    assert!((p / a - 1.0).abs() < 0.02, "packed ppl {p} vs qdq ppl {a}");
+    // execute stages recorded per variant
+    let stages: Vec<&str> =
+        r.stage_breakdown.iter().map(|(s, _, _)| s.as_str()).collect();
+    assert!(stages.iter().any(|s| s.starts_with("execute:arcquant-packed")));
+}
+
+#[test]
+fn native_serving_reports_missing_engine_variants() {
+    use arcquant::model::{Engine, EngineMode, ModelConfig, Weights};
+    let cfg = ModelConfig::tiny_test();
+    let weights = Weights::synthetic(&cfg, 5);
+    let fp = Engine::new(cfg, weights, EngineMode::Fp32, None).unwrap();
+    let stream: Vec<u16> = (0..2048u32).map(|i| ((i * 91 + 3) % 256) as u16).collect();
+    let ncfg = NativeServeConfig {
+        workload: vec![(Variant::Fp32, 2), (Variant::Nvfp4Rtn, 2)],
+        req_len: 16,
+        batcher: BatcherConfig::default(),
+        router: RouterConfig::default(),
+    };
+    let engines: Vec<(Variant, &Engine)> = vec![(Variant::Fp32, &fp)];
+    let r = serve_workload_native(&ncfg, &stream, &engines).unwrap();
+    // all responses come back; the engine-less variant yields empty
+    // logits, so only fp32 contributes stats
+    assert_eq!(r.completed, 4);
+    assert!(r.per_variant.contains_key("fp32"));
+    assert!(!r.per_variant.contains_key("nvfp4rtn"));
 }
 
 #[test]

@@ -1,0 +1,134 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The container builds with no registry access, so this vendored crate
+//! provides exactly the surface the workspace uses: [`Error`], [`Result`],
+//! the [`Context`] extension trait, and the `anyhow!` / `ensure!` macros.
+//! Errors are a single formatted string with contexts prepended
+//! (`"ctx: cause"`), which matches how the callers render them.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// String-backed error value.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like real anyhow: any std error converts. (Coherent because `Error`
+// itself deliberately does not implement `std::error::Error`.)
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(&e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach human context to an error, anyhow-style.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, format string, or error value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $msg:literal $(,)?) => {
+        if !$cond {
+            return Err($crate::anyhow!($msg));
+        }
+    };
+    ($cond:expr, $fmt:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($fmt, $($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path")
+            .context("reading config")
+            .map(|_| ())
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().starts_with("reading config: "), "{e}");
+    }
+
+    #[test]
+    fn macros_format() {
+        let x = 3;
+        let e: Error = anyhow!("bad value {x}");
+        assert_eq!(e.to_string(), "bad value 3");
+        let e2: Error = anyhow!(String::from("owned"));
+        assert_eq!(e2.to_string(), "owned");
+    }
+
+    #[test]
+    fn ensure_returns_err() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "must be ok");
+            Ok(1)
+        }
+        assert!(f(true).is_ok());
+        assert_eq!(f(false).unwrap_err().to_string(), "must be ok");
+    }
+}

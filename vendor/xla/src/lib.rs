@@ -1,0 +1,139 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The container has no PJRT plugin or registry access, so this vendored
+//! crate mirrors just the API surface `arcquant::runtime` uses. Every
+//! entry point that would touch a real device returns an
+//! "PJRT unavailable" error; the serving stack already treats that the
+//! same way as missing artifacts (graceful skip / clear CLI error).
+//! Swapping in the real bindings is a Cargo.toml change only.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT unavailable (offline xla stub; install the real xla bindings to execute artifacts)"
+    )))
+}
+
+/// Element types the runtime marshals.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Host-side literal. The stub only carries enough to type-check the
+/// marshalling code; device round trips are what error out.
+#[derive(Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable("Literal::to_tuple1")
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        unavailable("Literal::array_shape")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().err().expect("stub must not pretend");
+        assert!(e.to_string().contains("PJRT unavailable"), "{e}");
+    }
+
+    #[test]
+    fn literal_marshalling_is_inert() {
+        let l = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2]).unwrap();
+        assert!(l.to_vec::<f32>().is_err());
+    }
+}
