@@ -1,0 +1,128 @@
+//! Decode-throughput bench: ArcPacked vs Fp32 (and the QDQ ArcQuant
+//! reference) batched decode over per-sequence KV caches, at batch sizes
+//! {1, 4, 8} — the serving-side counterpart of `bench_gemm_aug`'s
+//! kernel-level comparison. Emits `BENCH_decode.json` with tokens/s per
+//! (variant, batch) plus the KV page-manager accounting, so the decode
+//! trajectory of the packed datapath is tracked across PRs.
+//!
+//! Method: per sample, prefill `batch` fresh prompts (untimed), then time
+//! `STEPS` consecutive `decode_batch` ticks and report
+//! `batch · STEPS / elapsed`. Median over samples. Fixed work per timing
+//! window (instead of the adaptive `Bencher`) because every decode tick
+//! grows the caches — throughput at unbounded iteration counts would
+//! measure ever-longer attention spans.
+
+use arcquant::baselines::Method;
+use arcquant::coordinator::kvcache::KvPageManager;
+use arcquant::formats::Format;
+use arcquant::model::{sampling, Engine, EngineMode, KvCache, ModelConfig, Weights};
+use arcquant::util::json::Json;
+use arcquant::util::{stats, Timer};
+use std::collections::BTreeMap;
+
+const PROMPT_LEN: usize = 16;
+const STEPS: usize = 16;
+const SAMPLES: usize = 5;
+
+fn decode_tok_s(engine: &Engine, batch: usize) -> (f64, f64) {
+    let cfg = &engine.cfg;
+    let mut rates = Vec::with_capacity(SAMPLES);
+    for sample in 0..SAMPLES + 1 {
+        // fresh caches per sample: prefill is untimed setup
+        let mut caches: Vec<KvCache> = Vec::with_capacity(batch);
+        let mut toks: Vec<u16> = Vec::with_capacity(batch);
+        for s in 0..batch {
+            let prompt: Vec<u16> = (0..PROMPT_LEN)
+                .map(|i| ((i * 37 + s * 91 + sample * 13 + 7) % cfg.vocab) as u16)
+                .collect();
+            let mut c = KvCache::new(cfg, PROMPT_LEN + STEPS + 1);
+            let logits = engine.prefill(&prompt, &mut c).unwrap();
+            toks.push(sampling::argmax(&logits));
+            caches.push(c);
+        }
+        let t = Timer::start();
+        for _ in 0..STEPS {
+            let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+            let logits = engine.decode_batch(&toks, &mut refs).unwrap();
+            for (s, tok) in toks.iter_mut().enumerate() {
+                *tok = sampling::argmax(logits.row(s));
+            }
+        }
+        let ms = t.ms();
+        if sample == 0 {
+            continue; // warmup
+        }
+        rates.push((batch * STEPS) as f64 / (ms / 1e3));
+    }
+    let med = stats::median(&rates);
+    (med, 1e3 / med) // (tokens/s, ms per token)
+}
+
+fn main() {
+    let cfg = ModelConfig::tiny_test();
+    let weights = Weights::synthetic(&cfg, 7);
+    let toks: Vec<u16> = (0..128u16).map(|i| (i * 37) % 256).collect();
+    let fp = Engine::new(cfg.clone(), weights.clone(), EngineMode::Fp32, None).unwrap();
+    let mut calib = BTreeMap::new();
+    fp.forward(&toks, Some(&mut calib), None);
+
+    let arc = Method::ArcQuant { fmt: Format::Nvfp4, max_s: Some(64) };
+    let variants: Vec<(&str, EngineMode)> = vec![
+        ("fp32", EngineMode::Fp32),
+        ("arcquant", EngineMode::Quantized(arc.clone())),
+        ("arcquant-packed", EngineMode::QuantizedPacked(arc)),
+    ];
+
+    println!("# decode throughput, prompt={PROMPT_LEN} steps={STEPS} (median of {SAMPLES})");
+    let mut rows: Vec<Json> = Vec::new();
+    let mut tok_s_by: BTreeMap<(String, usize), f64> = BTreeMap::new();
+    for (name, mode) in variants {
+        let engine =
+            Engine::new(cfg.clone(), weights.clone(), mode, Some(&calib)).unwrap();
+        for batch in [1usize, 4, 8] {
+            let (tok_s, ms_per_step) = decode_tok_s(&engine, batch);
+
+            // KV page accounting for this steady-state batch: every
+            // sequence sits at prompt + STEPS tokens when the window ends.
+            let mut pm = KvPageManager::new(4096, cfg.d, cfg.l);
+            for s in 0..batch {
+                pm.admit(s as u64, PROMPT_LEN + STEPS).unwrap();
+            }
+            println!(
+                "BENCH decode_{name}_b{batch} tok_s={tok_s:.1} ms_per_tok={ms_per_step:.3} \
+                 kv_pages={} kv_page_bytes={}",
+                pm.used_pages(),
+                pm.bytes_used()
+            );
+            tok_s_by.insert((name.to_string(), batch), tok_s);
+
+            let mut row = Json::obj();
+            row.set("variant", Json::Str(name.into()))
+                .set("batch", Json::Num(batch as f64))
+                .set("tokens_per_s", Json::Num(tok_s))
+                .set("ms_per_token", Json::Num(ms_per_step))
+                .set("kv_pages", Json::Num(pm.used_pages() as f64))
+                .set("kv_page_bytes", Json::Num(pm.bytes_used() as f64))
+                .set("weight_bytes", Json::Num(engine.weight_bytes() as f64));
+            rows.push(row);
+        }
+    }
+
+    for batch in [1usize, 4, 8] {
+        let fp = tok_s_by[&("fp32".to_string(), batch)];
+        let packed = tok_s_by[&("arcquant-packed".to_string(), batch)];
+        println!("#   b{batch}: packed/fp32 decode ratio {:.2}x", packed / fp);
+    }
+
+    let mut out = Json::obj();
+    out.set("bench", Json::Str("decode".into()))
+        .set("model", Json::Str(cfg.name.clone()))
+        .set("prompt_len", Json::Num(PROMPT_LEN as f64))
+        .set("steps", Json::Num(STEPS as f64))
+        .set("rows", Json::Arr(rows));
+    let path = "BENCH_decode.json";
+    match std::fs::write(path, out.dump()) {
+        Ok(()) => println!("# wrote {path}"),
+        Err(e) => eprintln!("# could not write {path}: {e}"),
+    }
+}

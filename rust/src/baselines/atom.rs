@@ -66,6 +66,11 @@ impl AtomLinear {
     pub fn outliers(&self) -> usize {
         self.s8
     }
+
+    /// Output dimension M of the prepared layer.
+    pub fn out_dim(&self) -> usize {
+        self.w_bulk.rows
+    }
 }
 
 /// Group-wise symmetric integer QDQ with Atom's group size.

@@ -235,6 +235,69 @@ impl PreparedLinear {
         }
     }
 
+    /// Row-wise (per-token) forward: bit-identical to calling
+    /// [`Self::forward`] on each row of `x` as its own [1, K] matrix, but
+    /// still one batched GEMM per call for every method with a batched
+    /// implementation. This is the decode-batch entry point: per-sequence
+    /// `decode_step` runs `forward` on [1, K] activations, so a batched
+    /// decode that uses `forward_rowwise` reproduces it exactly (the
+    /// NVFP4 tensor scale is the only whole-matrix statistic in the online
+    /// path, and the row-wise quantizers pin it per row).
+    pub fn forward_rowwise(&self, x: &Mat) -> Mat {
+        match self {
+            PreparedLinear::Fp16 { w } => matmul_nt(x, w),
+            PreparedLinear::Rtn { wq, a_fmt, .. } => {
+                let xq = RowQuantizer::new(*a_fmt).qdq_mat_rowwise(x);
+                matmul_nt(&xq, wq)
+            }
+            PreparedLinear::Smooth { wq, inv_s, fmt } => {
+                let mut xs = x.clone();
+                xs.scale_cols(inv_s);
+                let xq = RowQuantizer::new(*fmt).qdq_mat_rowwise(&xs);
+                matmul_nt(&xq, wq)
+            }
+            PreparedLinear::QuaRot { wq, rot, fmt } => {
+                let xr = rot.apply_cols(x);
+                let xq = RowQuantizer::new(*fmt).qdq_mat_rowwise(&xr);
+                matmul_nt(&xq, wq)
+            }
+            // Atom has no batched per-row implementation; B single-row
+            // forwards are the definition of row-wise semantics, so this
+            // stays exact (Atom is not on the serving decode path).
+            PreparedLinear::Atom(a) => {
+                let mut out = Mat::zeros(x.rows, self.out_dim());
+                for r in 0..x.rows {
+                    let single = Mat::from_vec(1, x.cols, x.row(r).to_vec());
+                    let y = a.forward(&single);
+                    out.row_mut(r).copy_from_slice(y.row(0));
+                }
+                out
+            }
+            PreparedLinear::Flat { wq, inv_s, fmt } => {
+                let mut xs = x.clone();
+                xs.scale_cols(inv_s);
+                let xq = RowQuantizer::new(*fmt).qdq_mat_rowwise(&xs);
+                matmul_nt(&xq, wq)
+            }
+            PreparedLinear::Arc(a) => a.forward_rowwise(x),
+            PreparedLinear::PackedArc(a) => a.forward_rowwise(x),
+        }
+    }
+
+    /// Output dimension M of the prepared layer.
+    pub fn out_dim(&self) -> usize {
+        match self {
+            PreparedLinear::Fp16 { w } => w.rows,
+            PreparedLinear::Rtn { wq, .. }
+            | PreparedLinear::Smooth { wq, .. }
+            | PreparedLinear::QuaRot { wq, .. }
+            | PreparedLinear::Flat { wq, .. } => wq.rows,
+            PreparedLinear::Atom(a) => a.out_dim(),
+            PreparedLinear::Arc(a) => a.out_dim,
+            PreparedLinear::PackedArc(a) => a.out_dim,
+        }
+    }
+
     /// S (augmented channels) if the method has one.
     pub fn s(&self) -> usize {
         match self {
@@ -420,6 +483,40 @@ mod tests {
             ExecPath::Packed,
         );
         assert_eq!(lin2.exec_path(), ExecPath::Qdq);
+    }
+
+    #[test]
+    fn forward_rowwise_matches_per_row_forward_every_method() {
+        // The decode-batch contract at the PreparedLinear layer, for every
+        // method and both exec paths: forward_rowwise([B, K]) row r is
+        // bit-identical to forward on row r alone.
+        let (x, w, calib) = workload(65);
+        let methods = [
+            Method::Fp16,
+            Method::Rtn { fmt: Format::Nvfp4 },
+            Method::W4A8Rtn,
+            Method::Smooth { fmt: Format::Nvfp4, alpha: 0.5 },
+            Method::QuaRot { fmt: Format::Nvfp4, seed: 0 },
+            Method::Atom { outlier_channels: 64 },
+            Method::FlatQuant { fmt: Format::Nvfp4 },
+            Method::ArcQuant { fmt: Format::Nvfp4, max_s: None },
+        ];
+        for method in &methods {
+            for exec in [ExecPath::Qdq, ExecPath::Packed] {
+                let lin = PreparedLinear::prepare_with(method, &w, &calib, exec);
+                assert_eq!(lin.out_dim(), w.rows, "{method:?}");
+                let batched = lin.forward_rowwise(&x);
+                for r in 0..x.rows {
+                    let single = Mat::from_vec(1, x.cols, x.row(r).to_vec());
+                    let want = lin.forward(&single);
+                    assert_eq!(
+                        batched.row(r),
+                        want.row(0),
+                        "{method:?} ({exec:?}) row {r}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

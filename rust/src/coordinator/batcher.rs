@@ -3,8 +3,11 @@
 //! oldest request has waited `max_wait`.
 //!
 //! The AOT artifacts have a fixed [batch, seq] shape, so the batcher also
-//! owns padding policy: short sequences are left-padded with token 0 and
-//! the executor slices NLL accounting to the real length.
+//! owns padding policy: short sequences are **right-padded** with token 0
+//! (real tokens first, zeros after) and the executor slices NLL
+//! accounting to the real length — `lengths[slot]` counts the leading
+//! real tokens, which is what the NLL slicing assumes. Pinned by
+//! `padding_is_on_the_right` below.
 
 use super::request::{PrefillRequest, Variant};
 use std::collections::VecDeque;
@@ -36,6 +39,9 @@ impl Default for BatcherConfig {
 /// A ready-to-execute batch.
 #[derive(Clone, Debug)]
 pub struct Batch {
+    /// Unique, monotonically increasing id (per batcher) — response
+    /// aggregation keys "distinct batches" on this.
+    pub id: u64,
     pub variant: Variant,
     pub requests: Vec<PrefillRequest>,
     /// flattened padded tokens [batch_size * seq_len]
@@ -48,6 +54,7 @@ pub struct Batcher {
     pub cfg: BatcherConfig,
     /// One FIFO per variant, indexed by position in [`Variant::ALL`].
     queues: Vec<VecDeque<PrefillRequest>>,
+    next_batch_id: u64,
 }
 
 fn qidx(v: Variant) -> usize {
@@ -62,6 +69,7 @@ impl Batcher {
         Batcher {
             cfg,
             queues: Variant::ALL.iter().map(|_| VecDeque::new()).collect(),
+            next_batch_id: 0,
         }
     }
 
@@ -118,7 +126,7 @@ impl Batcher {
         out
     }
 
-    fn assemble(&self, variant: Variant, requests: Vec<PrefillRequest>) -> Batch {
+    fn assemble(&mut self, variant: Variant, requests: Vec<PrefillRequest>) -> Batch {
         let bs = self.cfg.batch_size;
         let sl = self.cfg.seq_len;
         let mut tokens = vec![0i32; bs * sl];
@@ -126,11 +134,15 @@ impl Batcher {
         for (slot, req) in requests.iter().enumerate() {
             let take = req.tokens.len().min(sl);
             lengths[slot] = take;
+            // right-padding: real tokens occupy [0, take), zeros after
             for (j, &t) in req.tokens[..take].iter().enumerate() {
                 tokens[slot * sl + j] = t as i32;
             }
         }
+        let id = self.next_batch_id;
+        self.next_batch_id += 1;
         Batch {
+            id,
             variant,
             requests,
             tokens,
@@ -214,6 +226,51 @@ mod tests {
         let batch = b.pop_ready().unwrap();
         assert_eq!(batch.tokens, vec![9, 8, 7, 6]); // truncated to seq_len
         assert_eq!(batch.lengths[0], 4);
+    }
+
+    #[test]
+    fn padding_is_on_the_right() {
+        // NLL slicing reads positions [0, len) as the real tokens, so the
+        // padding side is load-bearing: real tokens first, zeros after.
+        let mut b = Batcher::new(BatcherConfig {
+            batch_size: 2,
+            seq_len: 4,
+            max_wait: Duration::from_millis(0),
+            ..Default::default()
+        });
+        b.push(PrefillRequest::new(1, vec![9, 8], Variant::Fp32)).unwrap();
+        let batch = b.pop_ready().unwrap();
+        assert_eq!(batch.lengths[0], 2);
+        assert_eq!(&batch.tokens[0..4], &[9, 8, 0, 0], "must be right-padded");
+        // the real tokens are exactly the leading lengths[0] positions
+        assert_eq!(
+            &batch.tokens[..batch.lengths[0]],
+            &[9, 8],
+            "NLL slicing depends on leading-real-token layout"
+        );
+    }
+
+    #[test]
+    fn batch_ids_are_unique_and_monotone() {
+        let mut b = Batcher::new(BatcherConfig {
+            batch_size: 1,
+            ..Default::default()
+        });
+        for i in 0..6 {
+            b.push(req(i, 4, Variant::Fp32)).unwrap();
+        }
+        b.push(req(7, 4, Variant::ArcQuant)).unwrap();
+        let mut ids = Vec::new();
+        while let Some(batch) = b.pop_ready() {
+            ids.push(batch.id);
+        }
+        for batch in b.drain_all() {
+            ids.push(batch.id);
+        }
+        assert_eq!(ids.len(), 7);
+        for w in ids.windows(2) {
+            assert!(w[1] > w[0], "ids must increase: {ids:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,527 @@
+//! Generation serving: continuous batching over the paged KV-cache.
+//!
+//! This is the decode-side counterpart of [`super::server`]'s prefill
+//! pipeline and the repo's first end-to-end generation workload — the
+//! thing the paper's headline "up to 3× over FP16" decode-throughput
+//! claim is actually about. The executor runs an Orca-style
+//! iteration-level scheduler: every loop tick it
+//!
+//! 1. **admits** pending requests whose variant has decode-batch room and
+//!    whose **worst case** (prompt + full generation budget) fits the free
+//!    KV pages ([`KvPageManager::admit`] then reserves the prompt pages;
+//!    decode growth allocates incrementally). Too few free pages is
+//!    backpressure — the request simply waits for running sequences to
+//!    retire; a request that could not complete even on an idle pool is
+//!    rejected outright. The headroom check counts only this sequence's
+//!    own growth, so concurrent admissions can still over-commit the pool
+//!    — that is what the mid-decode `OutOfPages` truncation below handles,
+//! 2. **prefills** the newly admitted prompts (one forward each, timed as
+//!    `prefill:{variant}`) and samples their first token,
+//! 3. runs **one batched decode step per variant** over all running
+//!    sequences ([`Engine::decode_batch`] — a single [B, D] GEMM per
+//!    linear site, QDQ and packed alike, bit-identical per sequence to a
+//!    `decode_step` loop), extending each sequence's page allocation
+//!    first ([`KvPageManager::extend`]; exhaustion retires the sequence
+//!    early with [`FinishReason::OutOfPages`]),
+//! 4. **retires** finished sequences, releasing their pages
+//!    ([`KvPageManager::release`]) so waiting requests can admit.
+//!
+//! Newly-prefilled sequences join the running decode batch on the next
+//! tick; retired ones free their slots the same tick they finish — no
+//! static batch boundaries, which is what keeps the decode batch full
+//! under mixed-length traffic.
+
+use super::metrics::Metrics;
+use super::request::{FinishReason, GenerateRequest, GenerateResponse, Variant};
+use super::router::{Router, RouterConfig, RouterDecision};
+use crate::coordinator::kvcache::KvPageManager;
+use crate::model::{sampling::Sampler, Engine, KvCache};
+use crate::util::{Prng, Timer};
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Config of a native generation workload.
+#[derive(Clone, Debug)]
+pub struct GenerateServeConfig {
+    /// (variant, number of generation requests) mix
+    pub workload: Vec<(Variant, usize)>,
+    /// prompt length in tokens
+    pub prompt_len: usize,
+    /// tokens to generate per request (the first comes from the prefill
+    /// logits, the rest from batched decode steps)
+    pub max_new_tokens: usize,
+    /// cap on concurrently *decoding* sequences per variant — admission
+    /// holds requests beyond this until a slot retires
+    pub max_decode_batch: usize,
+    /// total pages in the KV page pool shared by all sequences
+    pub kv_pages: usize,
+    /// pending-queue capacity before the router sheds load
+    pub queue_cap: usize,
+    pub router: RouterConfig,
+    pub sampler: Sampler,
+    /// seed for the per-sequence sampling streams (see [`session_rng`])
+    pub seed: u64,
+}
+
+impl Default for GenerateServeConfig {
+    fn default() -> Self {
+        GenerateServeConfig {
+            workload: Vec::new(),
+            prompt_len: 32,
+            max_new_tokens: 16,
+            max_decode_batch: 8,
+            kv_pages: 256,
+            queue_cap: 256,
+            router: RouterConfig::default(),
+            sampler: Sampler::Greedy,
+            seed: 0,
+        }
+    }
+}
+
+/// Per-sequence sampling stream: deterministic from (workload seed,
+/// request id), so a served generation can be replayed bit-exactly by a
+/// reference `prefill` + `decode_step` loop using the same rng.
+pub fn session_rng(seed: u64, id: u64) -> Prng {
+    Prng::new(seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Per-variant decode statistics of a generation run.
+#[derive(Clone, Debug, Default)]
+pub struct GenVariantStats {
+    /// completed sequences (including OutOfPages-truncated ones)
+    pub requests: usize,
+    /// all sampled tokens (prefill-sampled + decode-sampled)
+    pub generated_tokens: usize,
+    /// batched decode steps executed
+    pub decode_ticks: usize,
+    /// tokens sampled from batched decode steps
+    pub decode_tokens: usize,
+    /// mean decode-batch occupancy (decode_tokens / decode_ticks)
+    pub mean_decode_batch: f64,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+    /// decode throughput: decode_tokens / decode_ms
+    pub decode_tok_s: f64,
+    /// sequences retired early because the page pool ran dry
+    pub oom_truncated: usize,
+}
+
+/// Report of a generation workload: decode throughput per variant plus
+/// the KV page-manager accounting (the memory side of the paper's
+/// deployment claim).
+#[derive(Clone, Debug)]
+pub struct GenerateReport {
+    pub completed: usize,
+    pub rejected: usize,
+    pub wall_ms: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+    pub per_variant: BTreeMap<&'static str, GenVariantStats>,
+    pub stage_breakdown: Vec<(String, f64, f64)>,
+    pub kv_pages_total: usize,
+    pub kv_pages_peak: usize,
+    pub kv_bytes_peak: u64,
+    pub kv_bytes_per_page: u64,
+    pub platform: String,
+    /// every per-request outcome, in completion order (tests replay these
+    /// against a reference decode loop)
+    pub responses: Vec<GenerateResponse>,
+}
+
+/// One running generation inside the executor.
+struct GenSession {
+    id: u64,
+    variant: Variant,
+    prompt_len: usize,
+    max_new: usize,
+    /// last sampled token — the next decode input
+    next_token: u16,
+    generated: Vec<u16>,
+    cache: KvCache,
+    rng: Prng,
+    t_submit: std::time::Instant,
+    prefill_ms: f64,
+    /// amortized share of batched decode time (tick_ms / tick_batch)
+    decode_ms: f64,
+    finish: Option<FinishReason>,
+}
+
+/// Accumulators the executor thread returns alongside the responses.
+#[derive(Default)]
+struct ExecOutcome {
+    per_variant: BTreeMap<&'static str, GenVariantStats>,
+    kv_pages_peak: usize,
+    kv_bytes_peak: u64,
+    kv_bytes_per_page: u64,
+}
+
+/// Run a closed-loop generation workload against Rust-native engines —
+/// the continuous-batching counterpart of
+/// [`super::server::serve_workload_native`]. Prompts are drawn from
+/// `stream` at per-request offsets; every variant in the workload needs a
+/// matching engine (requests for missing variants are rejected).
+pub fn serve_generate_native(
+    cfg: &GenerateServeConfig,
+    stream: &[u16],
+    engines: &[(Variant, &Engine)],
+) -> Result<GenerateReport, String> {
+    if engines.is_empty() {
+        return Err("serve_generate_native: no engines supplied".into());
+    }
+    if cfg.max_decode_batch == 0 {
+        return Err("serve_generate_native: max_decode_batch must be ≥ 1".into());
+    }
+    if stream.len() <= cfg.prompt_len + 1 {
+        return Err(format!(
+            "eval stream too short ({} tokens) for prompt_len {}",
+            stream.len(),
+            cfg.prompt_len
+        ));
+    }
+    let model_cfg = &engines[0].1.cfg;
+    let metrics = Arc::new(Metrics::new());
+    let (tx_req, rx_req) = mpsc::channel::<GenerateRequest>();
+    let (tx_resp, rx_resp) = mpsc::channel::<GenerateResponse>();
+
+    let wall = Timer::start();
+    let mut responses: Vec<GenerateResponse> = Vec::new();
+    let mut outcome: Option<ExecOutcome> = None;
+    let mut router_rejected = 0usize;
+    let mut executor_panicked = false;
+
+    std::thread::scope(|scope| {
+        let exec_metrics = metrics.clone();
+        let executor = scope.spawn(move || {
+            run_generate_executor(
+                cfg,
+                model_cfg,
+                engines,
+                rx_req,
+                tx_resp,
+                &exec_metrics,
+            )
+        });
+
+        // ---- submission side: route + enqueue ----
+        let router = Router::new(cfg.router.clone());
+        let mut next_id = 0u64;
+        let mut submitted = 0usize;
+        for &(variant, count) in &cfg.workload {
+            for r in 0..count {
+                next_id += 1;
+                let start =
+                    (r * (cfg.prompt_len + 5)) % (stream.len() - cfg.prompt_len - 1);
+                let prompt = stream[start..start + cfg.prompt_len].to_vec();
+                let req =
+                    GenerateRequest::new(next_id, prompt, cfg.max_new_tokens, variant);
+                Metrics::inc(&metrics.submitted);
+                // Queue depth = requests in flight: drain any completions
+                // the executor has already produced so shedding reflects
+                // the real backlog, not the cumulative admitted count.
+                while let Ok(resp) = rx_resp.try_recv() {
+                    responses.push(resp);
+                }
+                let in_flight = submitted - responses.len();
+                match router.admit_generate(&req, in_flight, cfg.queue_cap) {
+                    RouterDecision::Accept => {
+                        submitted += 1;
+                        if tx_req.send(req).is_err() {
+                            router_rejected += 1;
+                        }
+                    }
+                    RouterDecision::Reject(_) => {
+                        router_rejected += 1;
+                        Metrics::inc(&metrics.rejected);
+                    }
+                }
+            }
+        }
+        drop(tx_req);
+
+        // ---- collect ----
+        while let Ok(resp) = rx_resp.recv() {
+            responses.push(resp);
+        }
+        match executor.join() {
+            Ok(o) => outcome = Some(o),
+            Err(_) => executor_panicked = true,
+        }
+    });
+
+    if executor_panicked {
+        return Err("generate executor panicked".to_string());
+    }
+    let outcome = outcome.expect("executor outcome");
+    let exec_rejected = responses
+        .iter()
+        .filter(|r| r.finish == FinishReason::Rejected)
+        .count();
+    let completed = responses.len() - exec_rejected;
+    let (p50, p90, p99) = metrics.latency_percentiles();
+    Ok(GenerateReport {
+        completed,
+        rejected: router_rejected + exec_rejected,
+        wall_ms: wall.ms(),
+        p50_ms: p50,
+        p90_ms: p90,
+        p99_ms: p99,
+        per_variant: outcome.per_variant,
+        stage_breakdown: metrics.breakdown(),
+        kv_pages_total: cfg.kv_pages,
+        kv_pages_peak: outcome.kv_pages_peak,
+        kv_bytes_peak: outcome.kv_bytes_peak,
+        kv_bytes_per_page: outcome.kv_bytes_per_page,
+        platform: "native-rust".to_string(),
+        responses,
+    })
+}
+
+/// The executor loop proper (runs on its own thread; owns the sessions
+/// and the page manager).
+fn run_generate_executor(
+    cfg: &GenerateServeConfig,
+    model_cfg: &crate::model::ModelConfig,
+    engines: &[(Variant, &Engine)],
+    rx_req: mpsc::Receiver<GenerateRequest>,
+    tx_resp: mpsc::Sender<GenerateResponse>,
+    metrics: &Metrics,
+) -> ExecOutcome {
+    let engine_for =
+        |v: Variant| engines.iter().find(|(ev, _)| *ev == v).map(|(_, e)| *e);
+    let mut pages = KvPageManager::new(cfg.kv_pages, model_cfg.d, model_cfg.l);
+    let mut out = ExecOutcome {
+        kv_bytes_per_page: pages.bytes_per_page,
+        ..Default::default()
+    };
+    let mut pending: Vec<GenerateRequest> = Vec::new();
+    let mut sessions: Vec<GenSession> = Vec::new();
+    let mut rx_closed = false;
+
+    let reject = |req: &GenerateRequest, tx: &mpsc::Sender<GenerateResponse>| {
+        let _ = tx.send(GenerateResponse {
+            id: req.id,
+            variant: req.variant,
+            tokens: Vec::new(),
+            prompt_len: req.prompt.len(),
+            finish: FinishReason::Rejected,
+            prefill_ms: 0.0,
+            decode_ms: 0.0,
+            total_ms: req.t_submit.elapsed().as_secs_f64() * 1e3,
+        });
+    };
+
+    loop {
+        // ---- pull newly arrived requests (non-blocking) ----
+        if !rx_closed {
+            loop {
+                match rx_req.try_recv() {
+                    Ok(r) => pending.push(r),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        rx_closed = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if pending.is_empty() && sessions.is_empty() {
+            if rx_closed {
+                break;
+            }
+            // idle: block for the next request instead of spinning
+            match rx_req.recv() {
+                Ok(r) => pending.push(r),
+                Err(_) => {
+                    rx_closed = true;
+                    break;
+                }
+            }
+        }
+
+        // ---- admission + prefill (iteration-level: any pending request
+        // whose variant has decode room and whose prompt fits the free
+        // pages joins now; the rest wait under backpressure) ----
+        let mut still_pending = Vec::with_capacity(pending.len());
+        for req in pending.drain(..) {
+            let Some(engine) = engine_for(req.variant) else {
+                Metrics::inc(&metrics.rejected);
+                reject(&req, &tx_resp);
+                continue;
+            };
+            let worst =
+                KvPageManager::pages_for(req.prompt.len() + req.max_new_tokens);
+            if worst > cfg.kv_pages {
+                // could never complete, even on an idle pool
+                Metrics::inc(&metrics.rejected);
+                reject(&req, &tx_resp);
+                continue;
+            }
+            let running = sessions
+                .iter()
+                .filter(|s| s.variant == req.variant)
+                .count();
+            // Admit when the decode batch has room AND the free pages
+            // cover this sequence's own worst case (prompt + budget);
+            // only the prompt pages are reserved now, growth allocates
+            // per decode step.
+            if running >= cfg.max_decode_batch
+                || pages.free_pages() < worst
+                || pages.admit(req.id, req.prompt.len()).is_err()
+            {
+                // backpressure: pages/slots free up as sequences retire
+                still_pending.push(req);
+                continue;
+            }
+            out.kv_pages_peak = out.kv_pages_peak.max(pages.used_pages());
+            out.kv_bytes_peak = out.kv_bytes_peak.max(pages.bytes_used());
+
+            let key = req.variant.artifact_key();
+            let mut cache =
+                KvCache::new(model_cfg, req.prompt.len() + req.max_new_tokens);
+            let t = Timer::start();
+            let first_logits = match engine.prefill(&req.prompt, &mut cache) {
+                Ok(l) => l,
+                Err(_) => {
+                    // capacity mismatch — cannot happen with the page
+                    // pre-check, but never leak pages if it does
+                    let _ = pages.release(req.id);
+                    Metrics::inc(&metrics.rejected);
+                    reject(&req, &tx_resp);
+                    continue;
+                }
+            };
+            let prefill_ms = t.ms();
+            metrics.record_stage(&format!("prefill:{key}"), prefill_ms);
+            let mut rng = session_rng(cfg.seed, req.id);
+            let first = cfg.sampler.sample(&first_logits, &mut rng);
+            let stats = out.per_variant.entry(key).or_default();
+            stats.prefill_ms += prefill_ms;
+            stats.generated_tokens += 1;
+            let mut session = GenSession {
+                id: req.id,
+                variant: req.variant,
+                prompt_len: req.prompt.len(),
+                max_new: req.max_new_tokens,
+                next_token: first,
+                generated: vec![first],
+                cache,
+                rng,
+                t_submit: req.t_submit,
+                prefill_ms,
+                decode_ms: 0.0,
+                finish: None,
+            };
+            if session.generated.len() >= session.max_new {
+                session.finish = Some(FinishReason::Length);
+            }
+            sessions.push(session);
+        }
+        pending = still_pending;
+
+        // ---- one batched decode step per variant ----
+        for v in Variant::ALL {
+            // page extension first: every participant reserves room for
+            // the token this step appends; exhaustion retires early, and
+            // the retired sequence's pages are released immediately so
+            // later slots in the same tick can take them
+            for s in sessions
+                .iter_mut()
+                .filter(|s| s.variant == v && s.finish.is_none())
+            {
+                if pages.extend(s.id, 1).is_err() {
+                    s.finish = Some(FinishReason::OutOfPages);
+                    let _ = pages.release(s.id);
+                }
+            }
+            out.kv_pages_peak = out.kv_pages_peak.max(pages.used_pages());
+            out.kv_bytes_peak = out.kv_bytes_peak.max(pages.bytes_used());
+
+            let mut group: Vec<&mut GenSession> = sessions
+                .iter_mut()
+                .filter(|s| s.variant == v && s.finish.is_none())
+                .collect();
+            if group.is_empty() {
+                continue;
+            }
+            let engine = engine_for(v).expect("admitted variant has an engine");
+            let key = v.artifact_key();
+            let toks: Vec<u16> = group.iter().map(|s| s.next_token).collect();
+            let bsz = group.len();
+            let mut caches: Vec<&mut KvCache> =
+                group.iter_mut().map(|s| s.cache_mut()).collect();
+            let t = Timer::start();
+            let logits = engine
+                .decode_batch(&toks, &mut caches)
+                .expect("page manager and cache capacity are kept in sync");
+            let tick_ms = t.ms();
+            drop(caches);
+            metrics.record_stage(&format!("decode:{key}"), tick_ms);
+            Metrics::inc(&metrics.batches);
+
+            let stats = out.per_variant.entry(key).or_default();
+            stats.decode_ticks += 1;
+            stats.decode_tokens += bsz;
+            stats.decode_ms += tick_ms;
+            stats.generated_tokens += bsz;
+            for (r, s) in group.iter_mut().enumerate() {
+                let tok = cfg.sampler.sample(logits.row(r), &mut s.rng);
+                s.generated.push(tok);
+                s.next_token = tok;
+                s.decode_ms += tick_ms / bsz as f64;
+                if s.generated.len() >= s.max_new {
+                    s.finish = Some(FinishReason::Length);
+                }
+            }
+        }
+
+        // ---- retire finished sequences, releasing their pages ----
+        let drained = std::mem::take(&mut sessions);
+        for s in drained {
+            let Some(finish) = s.finish else {
+                sessions.push(s);
+                continue;
+            };
+            let _ = pages.release(s.id);
+            let key = s.variant.artifact_key();
+            let stats = out.per_variant.entry(key).or_default();
+            stats.requests += 1;
+            if finish == FinishReason::OutOfPages {
+                stats.oom_truncated += 1;
+            }
+            let total_ms = s.t_submit.elapsed().as_secs_f64() * 1e3;
+            metrics.record_latency(total_ms);
+            Metrics::inc(&metrics.completed);
+            let _ = tx_resp.send(GenerateResponse {
+                id: s.id,
+                variant: s.variant,
+                tokens: s.generated,
+                prompt_len: s.prompt_len,
+                finish,
+                prefill_ms: s.prefill_ms,
+                decode_ms: s.decode_ms,
+                total_ms,
+            });
+        }
+    }
+
+    debug_assert!(pages.check_invariants().is_ok());
+    for stats in out.per_variant.values_mut() {
+        if stats.decode_ticks > 0 {
+            stats.mean_decode_batch =
+                stats.decode_tokens as f64 / stats.decode_ticks as f64;
+        }
+        if stats.decode_ms > 0.0 {
+            stats.decode_tok_s = stats.decode_tokens as f64 / (stats.decode_ms / 1e3);
+        }
+    }
+    out
+}
+
+impl GenSession {
+    fn cache_mut(&mut self) -> &mut KvCache {
+        &mut self.cache
+    }
+}

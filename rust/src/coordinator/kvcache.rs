@@ -45,6 +45,10 @@ impl KvPageManager {
         self.free.len()
     }
 
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
     pub fn used_pages(&self) -> usize {
         self.total_pages - self.free.len()
     }

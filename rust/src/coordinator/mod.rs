@@ -20,8 +20,16 @@
 //! The KV-cache manager ([`kvcache`]) provides paged allocation for the
 //! Rust-native decode path (the engine's `KvCache` holds the tensors;
 //! the manager owns page accounting, admission and eviction).
+//!
+//! The **generation path** ([`generate`]) runs the same front door into a
+//! continuous-batching decode executor: requests admit against the page
+//! manager, prefill once, then join a per-variant running batch that
+//! advances one batched `decode_batch` step per scheduler tick
+//! (Orca-style iteration-level scheduling), releasing pages as sequences
+//! retire. See `docs/decode_serving.md`.
 
 pub mod batcher;
+pub mod generate;
 pub mod kvcache;
 pub mod metrics;
 pub mod request;
@@ -29,9 +37,16 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use generate::{
+    serve_generate_native, session_rng, GenVariantStats, GenerateReport,
+    GenerateServeConfig,
+};
 pub use kvcache::{KvPageManager, PageError};
 pub use metrics::Metrics;
-pub use request::{PrefillRequest, PrefillResponse, Variant};
+pub use request::{
+    FinishReason, GenerateRequest, GenerateResponse, PrefillRequest, PrefillResponse,
+    Variant,
+};
 pub use router::{Router, RouterConfig, RouterDecision};
 pub use server::{
     serve_workload, serve_workload_native, NativeServeConfig, ServeConfig, ServeReport,

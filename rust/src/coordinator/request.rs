@@ -66,6 +66,10 @@ impl PrefillRequest {
 #[derive(Clone, Debug)]
 pub struct PrefillResponse {
     pub id: u64,
+    /// Execution-batch identity (assigned by the batcher): the aggregator
+    /// keys "distinct batches" on this, not on timer values that can
+    /// collide.
+    pub batch_id: u64,
     pub last_logits: Vec<f32>,
     /// sum of next-token NLLs the executor computed for PPL accounting
     /// (0.0 when targets are unknown)
@@ -74,6 +78,60 @@ pub struct PrefillResponse {
     pub queue_ms: f64,
     pub execute_ms: f64,
     pub batch_size: usize,
+}
+
+/// One generation request: prefill the prompt, then decode up to
+/// `max_new_tokens` tokens under continuous batching.
+#[derive(Clone, Debug)]
+pub struct GenerateRequest {
+    pub id: u64,
+    pub prompt: Vec<u16>,
+    pub max_new_tokens: usize,
+    pub variant: Variant,
+    /// enqueue timestamp for latency accounting
+    pub t_submit: std::time::Instant,
+}
+
+impl GenerateRequest {
+    pub fn new(id: u64, prompt: Vec<u16>, max_new_tokens: usize, variant: Variant) -> Self {
+        GenerateRequest {
+            id,
+            prompt,
+            max_new_tokens,
+            variant,
+            t_submit: std::time::Instant::now(),
+        }
+    }
+}
+
+/// Why a generation finished.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated the full `max_new_tokens`.
+    Length,
+    /// The KV page pool ran dry mid-decode; the sequence was retired early
+    /// with however many tokens it had (its pages were released).
+    OutOfPages,
+    /// Rejected before any forward ran (admission or page budget).
+    Rejected,
+}
+
+/// Completed (or rejected) generation: the sampled tokens + timing.
+#[derive(Clone, Debug)]
+pub struct GenerateResponse {
+    pub id: u64,
+    pub variant: Variant,
+    /// Generated tokens (empty when rejected).
+    pub tokens: Vec<u16>,
+    pub prompt_len: usize,
+    pub finish: FinishReason,
+    /// Wall time spent in this sequence's prefill forward.
+    pub prefill_ms: f64,
+    /// Sum over decode ticks of (tick execute time / tick batch size) —
+    /// this sequence's amortized share of batched decode time.
+    pub decode_ms: f64,
+    /// Total request latency, submit → completion.
+    pub total_ms: f64,
 }
 
 #[cfg(test)]

@@ -2,7 +2,7 @@
 //! queue-depth backpressure — the front door of the serving stack.
 
 use super::batcher::BatcherConfig;
-use super::request::{PrefillRequest, Variant};
+use super::request::{GenerateRequest, PrefillRequest, Variant};
 
 #[derive(Clone, Debug)]
 pub struct RouterConfig {
@@ -60,6 +60,31 @@ impl Router {
         RouterDecision::Accept
     }
 
+    /// Admission decision for a generation request. Same front-door checks
+    /// as prefill (empty/oversized prompt, queue shedding) plus a zero
+    /// generation budget check; KV **page** admission happens later, at
+    /// the executor, which owns the page manager.
+    pub fn admit_generate(
+        &self,
+        req: &GenerateRequest,
+        queued: usize,
+        queue_cap: usize,
+    ) -> RouterDecision {
+        if req.prompt.is_empty() {
+            return RouterDecision::Reject("empty prompt");
+        }
+        if req.prompt.len() > self.cfg.max_len {
+            return RouterDecision::Reject("prompt exceeds max length");
+        }
+        if req.max_new_tokens == 0 {
+            return RouterDecision::Reject("zero generation budget");
+        }
+        if queued as f64 >= queue_cap as f64 * self.cfg.shed_threshold {
+            return RouterDecision::Reject("overloaded — shedding load");
+        }
+        RouterDecision::Accept
+    }
+
     /// Fill in the default variant if unset-style sentinel used by CLI.
     pub fn resolve_variant(&self, requested: Option<Variant>) -> Variant {
         requested.unwrap_or(self.cfg.default_variant)
@@ -101,6 +126,19 @@ mod tests {
         };
         assert_eq!(r.admit(&req(8), 50, &b), RouterDecision::Accept);
         assert!(matches!(r.admit(&req(8), 95, &b), RouterDecision::Reject(_)));
+    }
+
+    #[test]
+    fn generate_admission_checks_prompt_budget_and_load() {
+        let r = Router::new(RouterConfig::default());
+        let g = |plen: usize, maxnew: usize| {
+            GenerateRequest::new(1, vec![1; plen], maxnew, Variant::ArcPacked)
+        };
+        assert_eq!(r.admit_generate(&g(16, 8), 0, 100), RouterDecision::Accept);
+        assert!(matches!(r.admit_generate(&g(0, 8), 0, 100), RouterDecision::Reject(_)));
+        assert!(matches!(r.admit_generate(&g(1000, 8), 0, 100), RouterDecision::Reject(_)));
+        assert!(matches!(r.admit_generate(&g(16, 0), 0, 100), RouterDecision::Reject(_)));
+        assert!(matches!(r.admit_generate(&g(16, 8), 95, 100), RouterDecision::Reject(_)));
     }
 
     #[test]

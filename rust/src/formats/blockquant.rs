@@ -212,6 +212,23 @@ impl RowQuantizer {
         out
     }
 
+    /// Fused QDQ with a **per-row** tensor scale: row `r` quantizes
+    /// exactly as if it were its own [1, K] matrix (per-token scaling).
+    /// Bit-identical to calling [`Self::qdq_mat`] on each row separately —
+    /// the contract the batched decode path relies on to match the
+    /// per-sequence `decode_step` loop. For formats without a tensor
+    /// scale the tensor scale is 1.0 either way, so this equals
+    /// [`Self::qdq_mat`] bit-for-bit.
+    pub fn qdq_mat_rowwise(&self, m: &Mat) -> Mat {
+        let mut out = m.clone();
+        let cols = m.cols;
+        pool::par_chunks_mut(&mut out.data, cols, |_, row| {
+            let amax = row.iter().fold(0.0f32, |mm, &v| mm.max(v.abs()));
+            self.qdq_row(row, self.tensor_scale(amax));
+        });
+        out
+    }
+
     /// Encode one row into packed codes + scales, appending to the output
     /// vectors. This is the pack fast path shared by [`Self::quantize`]
     /// (offline weights) and the online packed-activation path in
@@ -326,6 +343,49 @@ impl RowQuantizer {
             scale_codes,
             scales_f32,
             tensor_scale: ts,
+        }
+    }
+
+    /// Bit-exact quantization to packed codes with a **per-row** tensor
+    /// scale (per-token scaling). Each row packs exactly as if it were its
+    /// own [1, K] matrix, so the result decodes bit-identically to
+    /// per-row [`Self::quantize`] calls — what lets the batched decode
+    /// path run one packed GEMM and still match per-sequence execution.
+    ///
+    /// The effective per-block scales in `scales_f32` (and the per-block
+    /// `scale_codes`, encoded against each row's own tensor scale) remain
+    /// authoritative for decoding; the single stored `tensor_scale` slot
+    /// cannot represent per-row scales, so it carries the maximum over
+    /// rows as advisory metadata only.
+    pub fn quantize_rowwise(&self, m: &Mat) -> QuantizedMat {
+        let g = self.fmt.group();
+        let blocks_per_row = m.cols.div_ceil(g);
+        let code_bytes_per_row = if self.fmt.element_bits() == 4 {
+            blocks_per_row * g.div_ceil(2)
+        } else {
+            blocks_per_row * g
+        };
+
+        let mut codes = Vec::with_capacity(m.rows * code_bytes_per_row);
+        let mut scale_codes = Vec::new();
+        let mut scales_f32 = Vec::with_capacity(m.rows * blocks_per_row);
+
+        let mut ts_max = 0f32;
+        for r in 0..m.rows {
+            let row = m.row(r);
+            let amax = row.iter().fold(0.0f32, |mm, &v| mm.max(v.abs()));
+            let ts = self.tensor_scale(amax);
+            ts_max = ts_max.max(ts);
+            self.pack_row(row, ts, &mut codes, &mut scale_codes, &mut scales_f32);
+        }
+        QuantizedMat {
+            fmt: self.fmt,
+            rows: m.rows,
+            cols: m.cols,
+            codes,
+            scale_codes,
+            scales_f32,
+            tensor_scale: if m.rows == 0 { 1.0 } else { ts_max },
         }
     }
 }
@@ -841,6 +901,57 @@ mod tests {
                 assert_eq!(c as usize, code, "value {v}");
             }
             assert_eq!(E2M1_LUT_X2[code], (v * 2.0) as i32);
+        }
+    }
+
+    #[test]
+    fn rowwise_qdq_matches_per_row_calls_bit_exact() {
+        // The batched-decode contract: qdq_mat_rowwise(X) row r ==
+        // qdq_mat(X[r..r+1]) bit-for-bit, for every format (NVFP4 is the
+        // interesting one — its tensor scale couples rows in qdq_mat).
+        let mut rng = Prng::new(90);
+        let m = rand_mat(&mut rng, 5, 96, true);
+        for fmt in [Format::Nvfp4, Format::Mxfp4, Format::Int4 { group: 16 }] {
+            let q = RowQuantizer::new(fmt);
+            let batched = q.qdq_mat_rowwise(&m);
+            for r in 0..m.rows {
+                let single = Mat::from_vec(1, m.cols, m.row(r).to_vec());
+                let want = q.qdq_mat(&single);
+                assert_eq!(batched.row(r), want.row(0), "{fmt:?} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn rowwise_quantize_matches_per_row_calls_bit_exact() {
+        let mut rng = Prng::new(91);
+        let m = rand_mat(&mut rng, 4, 64, true);
+        for fmt in [Format::Nvfp4, Format::Mxfp4, Format::Int4 { group: 16 }] {
+            let q = RowQuantizer::new(fmt);
+            let batched = q.quantize_rowwise(&m);
+            let decoded = batched.dequantize();
+            for r in 0..m.rows {
+                let single = Mat::from_vec(1, m.cols, m.row(r).to_vec());
+                let sq = q.quantize(&single);
+                assert_eq!(batched.row_codes(r), sq.row_codes(0), "{fmt:?} codes r{r}");
+                assert_eq!(batched.row_scales(r), sq.row_scales(0), "{fmt:?} scales r{r}");
+                assert_eq!(decoded.row(r), sq.dequantize().row(0), "{fmt:?} decode r{r}");
+            }
+        }
+    }
+
+    #[test]
+    fn rowwise_equals_whole_matrix_when_no_tensor_scale() {
+        // MX/INT formats have no tensor scale, so row-wise and whole-matrix
+        // quantization must be the same bits.
+        let mut rng = Prng::new(92);
+        let m = rand_mat(&mut rng, 3, 64, true);
+        for fmt in [Format::Mxfp4, Format::Mxfp8E4M3, Format::Int4 { group: 16 }] {
+            let q = RowQuantizer::new(fmt);
+            assert_eq!(q.qdq_mat_rowwise(&m).data, q.qdq_mat(&m).data, "{fmt:?}");
+            let (a, b) = (q.quantize_rowwise(&m), q.quantize(&m));
+            assert_eq!(a.codes, b.codes, "{fmt:?}");
+            assert_eq!(a.scales_f32, b.scales_f32, "{fmt:?}");
         }
     }
 

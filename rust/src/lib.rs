@@ -33,10 +33,23 @@
 //!   forward to summation-order precision (property-tested at 1e-6 of the
 //!   dot-product scale).
 //!
+//! ## Serving: prefill and generation
+//!
+//! The coordinator serves two workload shapes over either datapath:
+//! per-request **prefill** ([`coordinator::serve_workload_native`], the
+//! PPL/latency benchmark) and **generation**
+//! ([`coordinator::serve_generate_native`]) — continuous batching over
+//! the paged KV-cache, where every scheduler tick advances all running
+//! sequences by one token through a single batched
+//! [`model::Engine::decode_batch`] forward. Batched decode is
+//! bit-identical per sequence to a `decode_step` loop (the row-wise
+//! activation quantizers pin the NVFP4 tensor scale per token), so
+//! serving never changes the numbers the accuracy tables report.
+//!
 //! See `docs/packed_path.md` for the layout details (Appendix-D K+S
-//! interleaving, duplicated outlier blocks), `DESIGN.md` for the
-//! experiment-by-experiment reproduction map and `EXPERIMENTS.md` for
-//! measured results.
+//! interleaving, duplicated outlier blocks), `docs/decode_serving.md` for
+//! the generation path, `DESIGN.md` for the experiment-by-experiment
+//! reproduction map and `EXPERIMENTS.md` for measured results.
 
 pub mod baselines;
 pub mod calib;

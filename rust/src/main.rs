@@ -11,11 +11,12 @@
 
 use arcquant::baselines::Method;
 use arcquant::coordinator::{
-    serve_workload, serve_workload_native, BatcherConfig, NativeServeConfig, RouterConfig,
-    ServeConfig, ServeReport, Variant,
+    serve_generate_native, serve_workload, serve_workload_native, BatcherConfig,
+    GenerateReport, GenerateServeConfig, NativeServeConfig, RouterConfig, ServeConfig,
+    ServeReport, Variant,
 };
 use arcquant::formats::Format;
-use arcquant::model::{Engine, EngineMode};
+use arcquant::model::{Engine, EngineMode, Sampler};
 use arcquant::report::{ctx::model_domain, figures, tables, Ctx, EvalBudget};
 use arcquant::util::cli::Args;
 use arcquant::util::Timer;
@@ -58,6 +59,11 @@ USAGE: arcquant <subcommand> [--flags]
             [--variant arc|fp32|rtn|packed|mix] [--artifacts DIR]
             [--native]   (run the Rust engines instead of PJRT artifacts;
                           required for the packed-execution variant)
+            [--generate N]  (generation workload: N new tokens/request via
+                             the continuous-batching decode executor —
+                             needs --native)
+            [--prompt-len 32] [--kv-pages 512] [--decode-batch 8]
+            [--top-k K]  (sample instead of greedy decode)
   calibrate --model NAME [--windows 8] [--window-len 128] [--out FILE]
   eval      --model NAME --method fp16|rtn|smooth|quarot|atom|flatquant|w4a8|arcquant
             [--format nvfp4|mxfp4|int4]
@@ -165,12 +171,56 @@ fn print_serve_report(r: &ServeReport) {
     }
 }
 
+fn print_generate_report(r: &GenerateReport) {
+    println!("platform: {} (generation / continuous batching)", r.platform);
+    println!(
+        "completed {} rejected {} wall {:.1}ms p50 {:.1}ms p90 {:.1}ms p99 {:.1}ms",
+        r.completed, r.rejected, r.wall_ms, r.p50_ms, r.p90_ms, r.p99_ms
+    );
+    println!(
+        "kv pages: {} total, {} peak used ({:.2} MB peak of {:.0} KB/page)",
+        r.kv_pages_total,
+        r.kv_pages_peak,
+        r.kv_bytes_peak as f64 / (1u64 << 20) as f64,
+        r.kv_bytes_per_page as f64 / 1024.0
+    );
+    for (v, s) in &r.per_variant {
+        println!(
+            "  {v:15} requests {:3}  decode {:8.1} tok/s  mean batch {:4.1}  \
+             prefill {:7.1}ms  decode {:7.1}ms  oom {}",
+            s.requests,
+            s.decode_tok_s,
+            s.mean_decode_batch,
+            s.prefill_ms,
+            s.decode_ms,
+            s.oom_truncated
+        );
+    }
+    println!("stage breakdown:");
+    for (stage, ms, share) in &r.stage_breakdown {
+        println!("  {stage:22} {ms:10.1}ms {share:5.1}%");
+    }
+}
+
 fn cmd_serve(args: &Args) -> i32 {
     let artifacts = args.str_or("artifacts", "artifacts");
     let model = args.str_or("model", "llama8b-sim");
     let n = args.usize_or("requests", 24).unwrap_or(24);
     let variant = args.str_or("variant", "mix");
     let native = args.bool_flag("native");
+    let generate = args.str_flag("generate").map(|s| s.parse::<usize>());
+    let generate = match generate {
+        Some(Ok(g)) if g > 0 => Some(g),
+        Some(_) => {
+            eprintln!("--generate needs a positive token count");
+            return 2;
+        }
+        None => None,
+    };
+    if generate.is_some() && !native {
+        eprintln!("--generate runs on the Rust engines — pass --native");
+        return 2;
+    }
     let workload = match variant.as_str() {
         // native mix showcases the packed datapath next to QDQ + FP32
         "mix" if native => vec![
@@ -237,14 +287,65 @@ fn cmd_serve(args: &Args) -> i32 {
                 }
             }
         }
+        let refs: Vec<(Variant, &Engine)> =
+            engines.iter().map(|(v, e)| (*v, e)).collect();
+        if let Some(max_new) = generate {
+            // generation workload: continuous-batching decode over the
+            // paged KV-cache, decode tokens/s per variant
+            let sampler = match args.usize_or("top-k", 0) {
+                Ok(0) => Sampler::Greedy,
+                Ok(k) => Sampler::TopK { k, temperature: 0.8 },
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            };
+            let parsed = (|| -> Result<(usize, usize, usize), String> {
+                Ok((
+                    args.usize_or("prompt-len", 32)?,
+                    args.usize_or("decode-batch", 8)?,
+                    args.usize_or("kv-pages", 512)?,
+                ))
+            })();
+            let (prompt_len, decode_batch, kv_pages) = match parsed {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            };
+            let gcfg = GenerateServeConfig {
+                workload,
+                prompt_len,
+                max_new_tokens: max_new,
+                max_decode_batch: decode_batch,
+                kv_pages,
+                sampler,
+                // the router's prompt cap must track the requested prompt
+                // length or every request would be shed at the front door
+                router: RouterConfig {
+                    max_len: prompt_len,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            return match serve_generate_native(&gcfg, &stream, &refs) {
+                Ok(r) => {
+                    print_generate_report(&r);
+                    0
+                }
+                Err(e) => {
+                    eprintln!("generate serve failed: {e}");
+                    1
+                }
+            };
+        }
         let ncfg = NativeServeConfig {
             workload,
             req_len: 64,
             batcher: BatcherConfig::default(),
             router: RouterConfig::default(),
         };
-        let refs: Vec<(Variant, &Engine)> =
-            engines.iter().map(|(v, e)| (*v, e)).collect();
         return match serve_workload_native(&ncfg, &stream, &refs) {
             Ok(r) => {
                 print_serve_report(&r);

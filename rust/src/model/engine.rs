@@ -57,11 +57,20 @@ pub struct Engine {
     /// site name -> prepared linears (empty map in Fp32 mode).
     sites: BTreeMap<String, Site>,
     boost: Vec<f32>,
+    /// RoPE inverse-frequency table, one entry per rotary pair index
+    /// (head_dim/2 entries) — hoisted out of the per-(row, head, i)
+    /// `ln`/`exp` recomputation that used to sit on the decode hot loop.
+    rope_freqs: Vec<f32>,
 }
 
 /// KV cache for incremental decode: per layer, K and V as [T_cur, D]
 /// row-appended matrices (single sequence; the coordinator batches at a
 /// higher level).
+///
+/// `capacity` is a hard bound in tokens: [`Engine::prefill`],
+/// [`Engine::decode_step`] and [`Engine::decode_batch`] pre-check it and
+/// return `Err` instead of over-committing; the internal append asserts
+/// it as a backstop for direct [`Engine::forward`] users.
 pub struct KvCache {
     pub k: Vec<Mat>,
     pub v: Vec<Mat>,
@@ -85,13 +94,41 @@ impl KvCache {
         self.len() == 0
     }
 
-    fn append(&mut self, layer: usize, k_rows: &Mat, v_rows: &Mat) {
-        let push = |dst: &mut Mat, src: &Mat| {
-            dst.data.extend_from_slice(&src.data);
-            dst.rows += src.rows;
+    /// Tokens that still fit.
+    pub fn remaining(&self) -> usize {
+        self.capacity.saturating_sub(self.len())
+    }
+
+    /// Err when `extra` more tokens would exceed `capacity`.
+    pub fn ensure_room(&self, extra: usize) -> Result<(), String> {
+        if self.len() + extra > self.capacity {
+            return Err(format!(
+                "kv cache over capacity: {} cached + {extra} new > {}",
+                self.len(),
+                self.capacity
+            ));
+        }
+        Ok(())
+    }
+
+    fn append_rows(&mut self, layer: usize, k_rows: &[f32], v_rows: &[f32], n: usize) {
+        assert!(
+            self.k[layer].rows + n <= self.capacity,
+            "kv cache over capacity: {} cached + {n} new > {} (pre-check with \
+             ensure_room / the page manager before forwarding)",
+            self.k[layer].rows,
+            self.capacity
+        );
+        let push = |dst: &mut Mat, src: &[f32]| {
+            dst.data.extend_from_slice(src);
+            dst.rows += n;
         };
         push(&mut self.k[layer], k_rows);
         push(&mut self.v[layer], v_rows);
+    }
+
+    fn append(&mut self, layer: usize, k_rows: &Mat, v_rows: &Mat) {
+        self.append_rows(layer, &k_rows.data, &v_rows.data, k_rows.rows);
     }
 
     /// Bytes held (Table 8 memory accounting).
@@ -143,18 +180,34 @@ impl Engine {
                 }
             }
         }
+        let half = cfg.head_dim() / 2;
+        let rope_freqs = (0..half)
+            .map(|i| (-(10000f32).ln() * i as f32 / half as f32).exp())
+            .collect();
         Ok(Engine {
             cfg,
             weights,
             mode,
             sites,
             boost,
+            rope_freqs,
         })
     }
 
     fn site_forward(&self, name: &str, x: &Mat, fallback: &[&Mat]) -> Vec<Mat> {
         match self.sites.get(name) {
             Some(site) => site.linears.iter().map(|l| l.forward(x)).collect(),
+            None => fallback.iter().map(|w| matmul_nt(x, w)).collect(),
+        }
+    }
+
+    /// Like [`Self::site_forward`] with row-wise (per-token) activation
+    /// quantization: each row of `x` quantizes as its own [1, D] matrix,
+    /// so the batched GEMM is bit-identical per row to B single-row
+    /// forwards — the decode-batch path runs this.
+    fn site_forward_rows(&self, name: &str, x: &Mat, fallback: &[&Mat]) -> Vec<Mat> {
+        match self.sites.get(name) {
+            Some(site) => site.linears.iter().map(|l| l.forward_rowwise(x)).collect(),
             None => fallback.iter().map(|w| matmul_nt(x, w)).collect(),
         }
     }
@@ -185,37 +238,57 @@ impl Engine {
         h
     }
 
+    /// RoPE of one [D] row at absolute position `pos`, using the hoisted
+    /// frequency table (same values as the former inline `ln`/`exp`
+    /// recomputation, computed once at engine build).
+    fn rope_row(&self, row: &mut [f32], pos: usize) {
+        let hd = self.cfg.head_dim();
+        let half = hd / 2;
+        let pos = pos as f32;
+        for h in 0..self.cfg.h {
+            let base = h * hd;
+            for (i, &freq) in self.rope_freqs.iter().enumerate() {
+                let ang = pos * freq;
+                let (sin, cos) = ang.sin_cos();
+                let a = row[base + i];
+                let b = row[base + half + i];
+                row[base + i] = a * cos - b * sin;
+                row[base + half + i] = a * sin + b * cos;
+            }
+        }
+    }
+
     /// RoPE over a [T, D] matrix laid out as H heads × head_dim,
     /// positions `pos0..pos0+T`.
     fn rope(&self, m: &mut Mat, pos0: usize) {
-        let hd = self.cfg.head_dim();
-        let half = hd / 2;
         for r in 0..m.rows {
-            let pos = (pos0 + r) as f32;
-            let row = m.row_mut(r);
-            for h in 0..self.cfg.h {
-                let base = h * hd;
-                for i in 0..half {
-                    let freq = (-(10000f32).ln() * i as f32 / half as f32).exp();
-                    let ang = pos * freq;
-                    let (sin, cos) = ang.sin_cos();
-                    let a = row[base + i];
-                    let b = row[base + half + i];
-                    row[base + i] = a * cos - b * sin;
-                    row[base + half + i] = a * sin + b * cos;
-                }
-            }
+            self.rope_row(m.row_mut(r), pos0 + r);
+        }
+    }
+
+    /// RoPE over a [B, D] matrix where row `r` sits at its own absolute
+    /// position `pos[r]` — the batched-decode case (each sequence has its
+    /// own cache length).
+    fn rope_at(&self, m: &mut Mat, pos: &[usize]) {
+        debug_assert_eq!(m.rows, pos.len());
+        for r in 0..m.rows {
+            self.rope_row(m.row_mut(r), pos[r]);
         }
     }
 
     /// Causal attention for one sequence: q,k,v are [T, D]; kv optionally
     /// prepended from a cache (decode). Returns [T, D] context.
+    ///
+    /// The score buffer is allocated once per call and reused across every
+    /// (head, position) pair — the former fresh `Vec` per pair sat
+    /// directly on the decode hot loop.
     fn attention(&self, q: &Mat, k_all: &Mat, v_all: &Mat, pos0: usize) -> Mat {
         let hd = self.cfg.head_dim();
         let scale = 1.0 / (hd as f32).sqrt();
         let t_q = q.rows;
         let t_k = k_all.rows;
         let mut ctx = Mat::zeros(t_q, self.cfg.d);
+        let mut scores: Vec<f32> = Vec::with_capacity(t_k);
         for h in 0..self.cfg.h {
             let base = h * hd;
             for i in 0..t_q {
@@ -223,7 +296,7 @@ impl Engine {
                 let visible = visible.min(t_k);
                 // scores
                 let qi = &q.row(i)[base..base + hd];
-                let mut scores = Vec::with_capacity(visible);
+                scores.clear();
                 let mut max_s = f32::NEG_INFINITY;
                 for j in 0..visible {
                     let kj = &k_all.row(j)[base..base + hd];
@@ -339,16 +412,118 @@ impl Engine {
         matmul_nt(&hn, &self.weights.embed) // tied head: [T, V]
     }
 
-    /// Prefill + return logits of the last position only.
-    pub fn prefill(&self, tokens: &[u16], cache: &mut KvCache) -> Vec<f32> {
+    /// Prefill + return logits of the last position only. Fails (without
+    /// touching the cache) when the prompt would exceed the cache
+    /// capacity.
+    pub fn prefill(&self, tokens: &[u16], cache: &mut KvCache) -> Result<Vec<f32>, String> {
+        if tokens.is_empty() {
+            return Err("prefill on empty prompt".into());
+        }
+        cache.ensure_room(tokens.len())?;
         let logits = self.forward(tokens, None, Some(cache));
-        logits.row(logits.rows - 1).to_vec()
+        Ok(logits.row(logits.rows - 1).to_vec())
     }
 
-    /// Decode one token given the cache.
-    pub fn decode_step(&self, token: u16, cache: &mut KvCache) -> Vec<f32> {
+    /// Decode one token given the cache. Fails (without touching the
+    /// cache) when the cache is at capacity.
+    pub fn decode_step(&self, token: u16, cache: &mut KvCache) -> Result<Vec<f32>, String> {
+        cache.ensure_room(1)?;
         let logits = self.forward(&[token], None, Some(cache));
-        logits.row(0).to_vec()
+        Ok(logits.row(0).to_vec())
+    }
+
+    /// Batched decode: advance B independent sequences by one token in a
+    /// single forward — the continuous-batching serving hot path. Row `r`
+    /// of `tokens` is the next input token of the sequence whose
+    /// [`KvCache`] is `caches[r]`; the result is the [B, V] logits matrix.
+    ///
+    /// Every linear runs one batched GEMM per site — QDQ and packed alike
+    /// — via the row-wise (per-token) activation quantizers, so the output
+    /// row for each sequence is **bit-identical** to running
+    /// [`Self::decode_step`] on that sequence alone (pinned by tests at
+    /// B ∈ {1, 4, 8} for every engine mode). Attention stays per-sequence:
+    /// each row attends over its own cache at its own position.
+    ///
+    /// Fails without touching any cache when `tokens`/`caches` disagree in
+    /// length or any cache is at capacity.
+    pub fn decode_batch(
+        &self,
+        tokens: &[u16],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Mat, String> {
+        let b = tokens.len();
+        if b == 0 {
+            return Err("decode_batch on empty batch".into());
+        }
+        if caches.len() != b {
+            return Err(format!(
+                "decode_batch: {b} tokens but {} caches",
+                caches.len()
+            ));
+        }
+        for (r, c) in caches.iter().enumerate() {
+            c.ensure_room(1)
+                .map_err(|e| format!("decode_batch slot {r}: {e}"))?;
+        }
+        // Each sequence's absolute position for this step = its cache
+        // length, captured once (every layer of one step shares it).
+        let pos: Vec<usize> = caches.iter().map(|c| c.len()).collect();
+
+        let mut h = self.embed(tokens);
+        for (i, lw) in self.weights.layers.iter().enumerate() {
+            // ---- attention ----
+            let site = format!("layers.{i}.attn_in");
+            let xn = self.rmsnorm(&h, &lw.attn_norm);
+            let mut qkv =
+                self.site_forward_rows(&site, &xn, &[&lw.wq, &lw.wk, &lw.wv]);
+            let v = qkv.pop().unwrap();
+            let mut k = qkv.pop().unwrap();
+            let mut q = qkv.pop().unwrap();
+            self.rope_at(&mut q, &pos);
+            self.rope_at(&mut k, &pos);
+
+            let mut ctx = Mat::zeros(b, self.cfg.d);
+            for r in 0..b {
+                let cache = &mut *caches[r];
+                cache.append_rows(i, k.row(r), v.row(r), 1);
+                let q_r = Mat::from_vec(1, self.cfg.d, q.row(r).to_vec());
+                let c_r = self.attention(&q_r, &cache.k[i], &cache.v[i], pos[r]);
+                ctx.row_mut(r).copy_from_slice(c_r.row(0));
+            }
+
+            let site = format!("layers.{i}.attn_out");
+            let attn_out = self
+                .site_forward_rows(&site, &ctx, &[&lw.wo])
+                .pop()
+                .unwrap();
+            for (a, bb) in h.data.iter_mut().zip(&attn_out.data) {
+                *a += bb;
+            }
+
+            // ---- MLP ----
+            let site = format!("layers.{i}.mlp_in");
+            let xn = self.rmsnorm(&h, &lw.mlp_norm);
+            let mut gu = self.site_forward_rows(&site, &xn, &[&lw.w1, &lw.w3]);
+            let u = gu.pop().unwrap();
+            let g = gu.pop().unwrap();
+            let mut act = Mat::zeros(b, self.cfg.f);
+            for idx in 0..act.data.len() {
+                let gv = g.data[idx];
+                let silu = gv / (1.0 + (-gv).exp());
+                act.data[idx] = silu * u.data[idx];
+            }
+
+            let site = format!("layers.{i}.mlp_out");
+            let mlp_out = self
+                .site_forward_rows(&site, &act, &[&lw.w2])
+                .pop()
+                .unwrap();
+            for (a, bb) in h.data.iter_mut().zip(&mlp_out.data) {
+                *a += bb;
+            }
+        }
+        let hn = self.rmsnorm(&h, &self.weights.final_norm);
+        Ok(matmul_nt(&hn, &self.weights.embed)) // tied head: [B, V]
     }
 
     /// Average S (augmented channels) across sites — Figure 7 / Table
@@ -458,8 +633,8 @@ mod tests {
         let want = full.row(toks.len() - 1);
 
         let mut cache = KvCache::new(&e.cfg, 128);
-        e.prefill(&toks[..6], &mut cache);
-        let got = e.decode_step(toks[6], &mut cache);
+        e.prefill(&toks[..6], &mut cache).unwrap();
+        let got = e.decode_step(toks[6], &mut cache).unwrap();
         for (a, b) in got.iter().zip(want) {
             assert!(
                 (a - b).abs() < 1e-3 * (1.0 + b.abs()),
@@ -468,6 +643,174 @@ mod tests {
         }
         assert_eq!(cache.len(), 7);
         assert!(cache.bytes() > 0);
+    }
+
+    #[test]
+    fn kv_capacity_enforced_at_the_boundary() {
+        let e = tiny_engine(EngineMode::Fp32);
+        let toks: Vec<u16> = (0..8).collect();
+
+        // prefill over capacity fails up front, leaving the cache untouched
+        let mut cache = KvCache::new(&e.cfg, 7);
+        assert!(e.prefill(&toks, &mut cache).is_err());
+        assert_eq!(cache.len(), 0);
+
+        // exactly at capacity: prefill fills, decode has no room
+        let mut cache = KvCache::new(&e.cfg, 8);
+        e.prefill(&toks, &mut cache).unwrap();
+        assert_eq!(cache.len(), 8);
+        assert_eq!(cache.remaining(), 0);
+        assert!(e.decode_step(1, &mut cache).is_err());
+        assert_eq!(cache.len(), 8, "failed decode must not grow the cache");
+
+        // one below capacity: the last decode step fits, the next fails
+        let mut cache = KvCache::new(&e.cfg, 9);
+        e.prefill(&toks, &mut cache).unwrap();
+        e.decode_step(1, &mut cache).unwrap();
+        assert_eq!(cache.len(), 9);
+        assert!(e.decode_step(2, &mut cache).is_err());
+
+        // decode_batch pre-checks every slot before touching any cache
+        let mut full = KvCache::new(&e.cfg, 8);
+        e.prefill(&toks, &mut full).unwrap();
+        let mut roomy = KvCache::new(&e.cfg, 64);
+        e.prefill(&toks, &mut roomy).unwrap();
+        let mut caches = [&mut roomy, &mut full];
+        assert!(e.decode_batch(&[1, 2], &mut caches).is_err());
+        assert_eq!(caches[0].len(), 8, "failed batch must not touch any slot");
+        assert_eq!(caches[1].len(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "kv cache over capacity")]
+    fn forward_past_capacity_asserts() {
+        // Direct forward() users who skip the pre-check hit the append
+        // backstop instead of silently over-committing.
+        let e = tiny_engine(EngineMode::Fp32);
+        let mut cache = KvCache::new(&e.cfg, 4);
+        let toks: Vec<u16> = (0..8).collect();
+        let _ = e.forward(&toks, None, Some(&mut cache));
+    }
+
+    /// The acceptance criterion: batched decode is bit-identical to the
+    /// per-sequence `decode_step` loop, per engine mode and batch size.
+    fn check_decode_batch_bit_identical(mode: EngineMode) {
+        let e = tiny_engine(mode);
+        for batch in [1usize, 4, 8] {
+            // distinct prompts of distinct lengths → distinct positions
+            let prompts: Vec<Vec<u16>> = (0..batch)
+                .map(|s| {
+                    (0..(5 + 3 * s))
+                        .map(|i| ((i * 37 + s * 91 + 7) % 256) as u16)
+                        .collect()
+                })
+                .collect();
+            let steps: Vec<u16> =
+                (0..batch).map(|s| ((s * 131 + 17) % 256) as u16).collect();
+
+            // reference: independent per-sequence decode_step
+            let mut want: Vec<Vec<f32>> = Vec::new();
+            for s in 0..batch {
+                let mut cache = KvCache::new(&e.cfg, 64);
+                e.prefill(&prompts[s], &mut cache).unwrap();
+                want.push(e.decode_step(steps[s], &mut cache).unwrap());
+            }
+
+            // batched: same prompts prefilled, then one decode_batch
+            let mut caches: Vec<KvCache> = prompts
+                .iter()
+                .map(|p| {
+                    let mut c = KvCache::new(&e.cfg, 64);
+                    e.prefill(p, &mut c).unwrap();
+                    c
+                })
+                .collect();
+            let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+            let got = e.decode_batch(&steps, &mut refs).unwrap();
+            assert_eq!((got.rows, got.cols), (batch, e.cfg.vocab));
+            for s in 0..batch {
+                assert_eq!(
+                    got.row(s),
+                    &want[s][..],
+                    "batch {batch} slot {s}: batched decode != decode_step"
+                );
+                assert_eq!(caches[s].len(), prompts[s].len() + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_batch_bit_identical_fp32() {
+        check_decode_batch_bit_identical(EngineMode::Fp32);
+    }
+
+    #[test]
+    fn decode_batch_bit_identical_quantized() {
+        check_decode_batch_bit_identical(EngineMode::Quantized(Method::ArcQuant {
+            fmt: Format::Nvfp4,
+            max_s: Some(64),
+        }));
+    }
+
+    #[test]
+    fn decode_batch_bit_identical_quantized_rtn() {
+        check_decode_batch_bit_identical(EngineMode::Quantized(Method::Rtn {
+            fmt: Format::Nvfp4,
+        }));
+    }
+
+    #[test]
+    fn decode_batch_bit_identical_packed() {
+        check_decode_batch_bit_identical(EngineMode::QuantizedPacked(
+            Method::ArcQuant { fmt: Format::Nvfp4, max_s: Some(64) },
+        ));
+    }
+
+    #[test]
+    fn decode_batch_continues_a_generation_bit_exact() {
+        // Multi-step: a 4-wide batched greedy generation equals four
+        // independent decode_step generations, token for token.
+        let e = tiny_engine(EngineMode::QuantizedPacked(Method::ArcQuant {
+            fmt: Format::Nvfp4,
+            max_s: Some(64),
+        }));
+        let prompts: Vec<Vec<u16>> = (0..4)
+            .map(|s| (0..6).map(|i| ((i * 53 + s * 29 + 3) % 256) as u16).collect())
+            .collect();
+        let steps = 5usize;
+        let argmax = |l: &[f32]| -> u16 {
+            crate::model::sampling::argmax(l)
+        };
+
+        let mut want: Vec<Vec<u16>> = Vec::new();
+        for p in &prompts {
+            let mut cache = KvCache::new(&e.cfg, 64);
+            let mut tok = argmax(&e.prefill(p, &mut cache).unwrap());
+            let mut out = vec![tok];
+            for _ in 1..steps {
+                tok = argmax(&e.decode_step(tok, &mut cache).unwrap());
+                out.push(tok);
+            }
+            want.push(out);
+        }
+
+        let mut caches: Vec<KvCache> = Vec::new();
+        let mut toks: Vec<u16> = Vec::new();
+        for p in &prompts {
+            let mut c = KvCache::new(&e.cfg, 64);
+            toks.push(argmax(&e.prefill(p, &mut c).unwrap()));
+            caches.push(c);
+        }
+        let mut got: Vec<Vec<u16>> = toks.iter().map(|&t| vec![t]).collect();
+        for _ in 1..steps {
+            let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+            let logits = e.decode_batch(&toks, &mut refs).unwrap();
+            for s in 0..4 {
+                toks[s] = argmax(logits.row(s));
+                got[s].push(toks[s]);
+            }
+        }
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -9,10 +9,12 @@
 
 pub mod config;
 pub mod engine;
+pub mod sampling;
 pub mod weights;
 
 pub use config::ModelConfig;
-pub use engine::{Engine, EngineMode};
+pub use engine::{Engine, EngineMode, KvCache};
+pub use sampling::Sampler;
 pub use weights::Weights;
 
 /// Per-layer quantization-site identifiers, matching the Python side.

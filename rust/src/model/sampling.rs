@@ -1,0 +1,142 @@
+//! Token sampling for the generation serving path.
+//!
+//! Greedy (argmax) and top-k sampling over a logits row. Everything is
+//! deterministic given a [`Prng`] seed, so served generations can be
+//! replayed bit-exactly against a reference `decode_step` loop — the
+//! property the serving integration tests pin.
+
+use crate::util::Prng;
+
+/// Greedy decode: index of the maximum logit (lowest index wins ties).
+pub fn argmax(logits: &[f32]) -> u16 {
+    debug_assert!(!logits.is_empty());
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best = i;
+            best_v = v;
+        }
+    }
+    best as u16
+}
+
+/// Sample from the softmax over the top-`k` logits at `temperature`.
+/// `k = 0` is treated as the full vocabulary; `temperature <= 0` collapses
+/// to greedy. Ties break by lowest index (the comparator totals the order
+/// by (logit desc, index asc), so the shortlist is deterministic).
+///
+/// This sits on the decode hot path, so the shortlist comes from an
+/// O(V) `select_nth_unstable_by` partition rather than a full-vocabulary
+/// sort.
+pub fn top_k(logits: &[f32], k: usize, temperature: f32, rng: &mut Prng) -> u16 {
+    debug_assert!(!logits.is_empty());
+    if temperature <= 0.0 || k == 1 {
+        return argmax(logits);
+    }
+    let k = if k == 0 { logits.len() } else { k.min(logits.len()) };
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    let by_logit_desc = |&a: &usize, &b: &usize| {
+        logits[b]
+            .partial_cmp(&logits[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    };
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k - 1, by_logit_desc);
+        idx.truncate(k);
+    }
+    // max logit of the shortlist for softmax stability (the partition
+    // does not sort the front, so scan for it)
+    let max = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f32> = idx
+        .iter()
+        .map(|&i| ((logits[i] - max) / temperature).exp())
+        .collect();
+    idx[rng.categorical(&weights)] as u16
+}
+
+/// Sampling policy carried by a generation workload.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sampler {
+    /// Deterministic argmax — the mode the bit-exactness tests use.
+    Greedy,
+    /// Top-k sampling at a temperature (k = 0 ⇒ full vocabulary).
+    TopK { k: usize, temperature: f32 },
+}
+
+impl Sampler {
+    pub fn sample(&self, logits: &[f32], rng: &mut Prng) -> u16 {
+        match *self {
+            Sampler::Greedy => argmax(logits),
+            Sampler::TopK { k, temperature } => top_k(logits, k, temperature, rng),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max_and_breaks_ties_low() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0, 3.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        assert_eq!(argmax(&[-2.0, -1.0, -3.0]), 1);
+    }
+
+    #[test]
+    fn top_k_with_k1_is_greedy() {
+        let mut rng = Prng::new(1);
+        let logits = [0.0f32, 2.0, -1.0, 1.5];
+        for _ in 0..20 {
+            assert_eq!(top_k(&logits, 1, 1.0, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn zero_temperature_is_greedy() {
+        let mut rng = Prng::new(2);
+        let logits = [0.0f32, 2.0, -1.0];
+        assert_eq!(top_k(&logits, 3, 0.0, &mut rng), 1);
+        assert_eq!(Sampler::TopK { k: 3, temperature: 0.0 }.sample(&logits, &mut rng), 1);
+    }
+
+    #[test]
+    fn top_k_restricts_support_to_the_shortlist() {
+        let mut rng = Prng::new(3);
+        // token 2 and 0 are the top two; token 1 must never be drawn at k=2
+        let logits = [1.0f32, -4.0, 2.0];
+        for _ in 0..200 {
+            let t = top_k(&logits, 2, 1.0, &mut rng);
+            assert!(t == 0 || t == 2, "sampled outside top-2: {t}");
+        }
+    }
+
+    #[test]
+    fn top_k_prefers_high_logits() {
+        let mut rng = Prng::new(4);
+        let logits = [0.0f32, 3.0, 0.5, -1.0];
+        let mut counts = [0usize; 4];
+        for _ in 0..2000 {
+            counts[top_k(&logits, 0, 1.0, &mut rng) as usize] += 1;
+        }
+        assert!(counts[1] > counts[0] && counts[1] > counts[2] && counts[1] > counts[3]);
+        // every token has nonzero probability at full support
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let logits: Vec<f32> = (0..64).map(|i| ((i * 37) % 11) as f32 * 0.3).collect();
+        let a: Vec<u16> = {
+            let mut rng = Prng::new(9);
+            (0..32).map(|_| top_k(&logits, 8, 0.8, &mut rng)).collect()
+        };
+        let b: Vec<u16> = {
+            let mut rng = Prng::new(9);
+            (0..32).map(|_| top_k(&logits, 8, 0.8, &mut rng)).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

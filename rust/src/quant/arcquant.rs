@@ -104,6 +104,45 @@ impl ArcQuantizer {
         }
         AugmentedActivation { data: aug, k, s }
     }
+
+    /// Row-wise (per-token) variant of [`Self::quantize_activations`]:
+    /// every row quantizes exactly as if it were its own [1, K] matrix —
+    /// both the primary and the residual stage derive their tensor scale
+    /// from that row alone. Bit-identical to running
+    /// [`Self::quantize_activations`] on each row separately, which is the
+    /// contract that lets the engine's batched decode run one augmented
+    /// GEMM per site and still match the per-sequence `decode_step` loop.
+    pub fn quantize_activations_rowwise(&self, x: &Mat) -> AugmentedActivation {
+        let q = RowQuantizer::new(self.plan.fmt);
+        let n = x.rows;
+        let k = x.cols;
+        let s = self.plan.s.min(k);
+        let cols = k + s;
+        let mut aug = Mat::from_vec(n, cols, pool::take_f32(n * cols));
+
+        let perm = &self.plan.perm.idx;
+        pool::par_chunks_mut(&mut aug.data, cols, |offset, row| {
+            let r = offset / cols;
+            let xrow = x.row(r);
+            for (j, &src) in perm.iter().enumerate() {
+                row[j] = xrow[src];
+            }
+            let (primary, resid) = row.split_at_mut(k);
+            resid.copy_from_slice(&primary[..s]);
+            // Primary stage, this row's own tensor scale (reordering and
+            // the mirrored prefix don't change the row maximum).
+            let amax = primary.iter().fold(0.0f32, |mm, &v| mm.max(v.abs()));
+            q.qdq_row(primary, q.tensor_scale(amax));
+            for (rv, pv) in resid.iter_mut().zip(primary.iter()) {
+                *rv -= pv;
+            }
+            if s > 0 {
+                let amax_r = resid.iter().fold(0.0f32, |mm, &v| mm.max(v.abs()));
+                q.qdq_row(resid, q.tensor_scale(amax_r));
+            }
+        });
+        AugmentedActivation { data: aug, k, s }
+    }
 }
 
 /// A linear layer prepared for ARCQuant inference.
@@ -154,6 +193,17 @@ impl ArcQuantLinear {
         let y = matmul_nt(&aug.data, &self.w_aug);
         // Recycle the augmented buffer (per-forward allocation churn is
         // visible in serving profiles).
+        pool::put_f32(std::mem::take(&mut aug.data.data));
+        y
+    }
+
+    /// Row-wise (per-token) forward: bit-identical to calling
+    /// [`Self::forward`] on each row of `x` separately, but still one
+    /// unified GEMM over [B, K+S]. The batched decode path runs this.
+    pub fn forward_rowwise(&self, x: &Mat) -> Mat {
+        let mut aug = self.quantizer.quantize_activations_rowwise(x);
+        debug_assert_eq!(aug.data.cols, self.w_aug.cols);
+        let y = matmul_nt(&aug.data, &self.w_aug);
         pool::put_f32(std::mem::take(&mut aug.data.data));
         y
     }
@@ -334,6 +384,29 @@ mod tests {
             let e_arc = stats::mse(&arc.data, &y_ref.data);
             let e_rtn = stats::mse(&rtn.data, &y_ref.data);
             assert!(e_arc < e_rtn, "{fmt:?}: {e_arc} !< {e_rtn}");
+        }
+    }
+
+    #[test]
+    fn rowwise_forward_matches_per_row_forward_bit_exact() {
+        // The batched-decode contract at the ARCQuant layer: one
+        // forward_rowwise over [B, K] == B single-row forwards, exactly.
+        let mut rng = Prng::new(46);
+        let x = outlier_mat(&mut rng, 6, 128);
+        let mut w = Mat::zeros(9, 128);
+        w.fill_random_normal(&mut rng, 0.4);
+        for plan in [
+            plan_for(&x, Format::Nvfp4),
+            LayerPlan::rtn(128, Format::Nvfp4),
+            plan_for(&x, Format::Mxfp4),
+        ] {
+            let lin = ArcQuantLinear::prepare(&w, plan);
+            let batched = lin.forward_rowwise(&x);
+            for r in 0..x.rows {
+                let single = Mat::from_vec(1, x.cols, x.row(r).to_vec());
+                let want = lin.forward(&single);
+                assert_eq!(batched.row(r), want.row(0), "row {r} (s={})", lin.s());
+            }
         }
     }
 

@@ -113,6 +113,64 @@ impl ArcQuantizer {
             s,
         }
     }
+
+    /// Row-wise (per-token) variant of
+    /// [`Self::quantize_activations_packed`]: both quantization stages use
+    /// per-row tensor scales ([`RowQuantizer::quantize_rowwise`]), so the
+    /// packed codes of row `r` are bit-identical to packing that row as
+    /// its own [1, K] matrix. The per-block `scales_f32` stay
+    /// authoritative in [`matmul_nt_packed`](crate::tensor::matmul_nt_packed),
+    /// which is what lets the batched decode run one packed GEMM per site
+    /// and still match per-sequence execution exactly.
+    pub fn quantize_activations_packed_rowwise(&self, x: &Mat) -> PackedAugmented {
+        let q = RowQuantizer::new(self.plan.fmt);
+        let g = self.plan.fmt.group();
+        let n = x.rows;
+        let k = x.cols;
+        let s = self.plan.s.min(k);
+        assert_eq!(k % g, 0, "packed path requires group-aligned K (k={k}, g={g})");
+        assert_eq!(s % g, 0, "packed path requires group-aligned S (s={s}, g={g})");
+
+        let mut xr = Mat::from_vec(n, k, pool::take_f32(n * k));
+        let perm = &self.plan.perm.idx;
+        pool::par_chunks_mut(&mut xr.data, k, |offset, row| {
+            let xrow = x.row(offset / k);
+            for (j, &src) in perm.iter().enumerate() {
+                row[j] = xrow[src];
+            }
+        });
+
+        let primary = q.quantize_rowwise(&xr);
+        if s == 0 {
+            pool::put_f32(xr.data);
+            return PackedAugmented { qm: primary, k, s: 0 };
+        }
+
+        let sb = s / g;
+        let mut resid = Mat::from_vec(n, s, pool::take_f32(n * s));
+        {
+            let xr_ref = &xr;
+            let primary_ref = &primary;
+            pool::par_chunks_mut(&mut resid.data, s, |offset, row| {
+                let r = offset / s;
+                primary_ref.dequant_blocks(r, 0, sb, row);
+                let xrow = xr_ref.row(r);
+                for (rv, &xv) in row.iter_mut().zip(xrow[..s].iter()) {
+                    *rv = xv - *rv;
+                }
+            });
+        }
+        let resid_q = q.quantize_rowwise(&resid);
+        pool::put_f32(xr.data);
+        pool::put_f32(resid.data);
+
+        let srcs = interleaved_srcs(&primary, &resid_q, sb, k / g);
+        PackedAugmented {
+            qm: QuantizedMat::from_blocks(&srcs),
+            k,
+            s,
+        }
+    }
 }
 
 /// A linear layer prepared for *packed* ARCQuant inference: `W_aug` held
@@ -171,6 +229,15 @@ impl PackedArcLinear {
     /// packed codes, then one unified block-scaled GEMM over K+S.
     pub fn forward(&self, x: &Mat) -> Mat {
         let aug = self.quantizer.quantize_activations_packed(x);
+        debug_assert_eq!(aug.qm.cols, self.w_packed.cols);
+        matmul_nt_packed(&aug.qm, &self.w_packed)
+    }
+
+    /// Row-wise (per-token) forward: bit-identical to calling
+    /// [`Self::forward`] on each row of `x` separately, but still one
+    /// packed GEMM over [B, K+S]. The batched decode path runs this.
+    pub fn forward_rowwise(&self, x: &Mat) -> Mat {
+        let aug = self.quantizer.quantize_activations_packed_rowwise(x);
         debug_assert_eq!(aug.qm.cols, self.w_packed.cols);
         matmul_nt_packed(&aug.qm, &self.w_packed)
     }
@@ -289,6 +356,40 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn rowwise_packed_forward_matches_per_row_forward_bit_exact() {
+        // The batched-decode contract on the packed path: one
+        // forward_rowwise over [B, K] == B single-row forwards, exactly —
+        // codes, block scales, and GEMM output all bit-identical.
+        let mut rng = Prng::new(85);
+        let x = outlier_mat(&mut rng, 5, 128);
+        let mut w = Mat::zeros(7, 128);
+        w.fill_random_normal(&mut rng, 0.4);
+        for fmt in [Format::Nvfp4, Format::Mxfp4, Format::Int4 { group: 16 }] {
+            let plan = LayerPlan::from_calibration(&x.col_absmax(), fmt);
+            let lin = PackedArcLinear::prepare(&w, plan.clone()).unwrap();
+            let qz = ArcQuantizer::new(plan);
+            let batched_aug = qz.quantize_activations_packed_rowwise(&x);
+            let batched = lin.forward_rowwise(&x);
+            for r in 0..x.rows {
+                let single = Mat::from_vec(1, x.cols, x.row(r).to_vec());
+                let single_aug = qz.quantize_activations_packed(&single);
+                assert_eq!(
+                    batched_aug.qm.row_codes(r),
+                    single_aug.qm.row_codes(0),
+                    "{fmt:?} codes r{r}"
+                );
+                assert_eq!(
+                    batched_aug.qm.row_scales(r),
+                    single_aug.qm.row_scales(0),
+                    "{fmt:?} scales r{r}"
+                );
+                let want = lin.forward(&single);
+                assert_eq!(batched.row(r), want.row(0), "{fmt:?} output r{r}");
+            }
+        }
     }
 
     #[test]

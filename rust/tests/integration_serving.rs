@@ -1,11 +1,13 @@
 //! Integration: the full serving stack over the PJRT artifacts (skips
 //! gracefully when artifacts are absent), plus the Rust-native serving
 //! path — router → batcher → engine executor — which needs no artifacts
-//! and is how the packed-execution datapath serves traffic.
+//! and is how the packed-execution datapath serves traffic, plus the
+//! generation path (continuous-batching decode over the paged KV-cache).
 
 use arcquant::coordinator::{
-    serve_workload, serve_workload_native, BatcherConfig, NativeServeConfig,
-    RouterConfig, ServeConfig, Variant,
+    serve_generate_native, serve_workload, serve_workload_native, session_rng,
+    BatcherConfig, FinishReason, GenerateServeConfig, NativeServeConfig, RouterConfig,
+    ServeConfig, Variant,
 };
 
 fn artifacts_root() -> Option<String> {
@@ -153,6 +155,256 @@ fn native_serving_reports_missing_engine_variants() {
     assert_eq!(r.completed, 4);
     assert!(r.per_variant.contains_key("fp32"));
     assert!(!r.per_variant.contains_key("nvfp4rtn"));
+}
+
+/// Shared fixture for generation tests: tiny fp32 + QDQ + packed engines
+/// over one synthetic calibration.
+fn gen_engines() -> Vec<(Variant, arcquant::model::Engine)> {
+    use arcquant::baselines::Method;
+    use arcquant::formats::Format;
+    use arcquant::model::{Engine, EngineMode, ModelConfig, Weights};
+    use std::collections::BTreeMap;
+
+    let cfg = ModelConfig::tiny_test();
+    let weights = Weights::synthetic(&cfg, 3);
+    let fp = Engine::new(cfg.clone(), weights.clone(), EngineMode::Fp32, None).unwrap();
+    let mut coll = BTreeMap::new();
+    let calib_toks: Vec<u16> = (0..64u16).map(|i| (i * 37) % 256).collect();
+    fp.forward(&calib_toks, Some(&mut coll), None);
+    let method = Method::ArcQuant { fmt: Format::Nvfp4, max_s: Some(64) };
+    let qdq = Engine::new(
+        cfg.clone(),
+        weights.clone(),
+        EngineMode::Quantized(method.clone()),
+        Some(&coll),
+    )
+    .unwrap();
+    let packed = Engine::new(
+        cfg.clone(),
+        weights,
+        EngineMode::QuantizedPacked(method),
+        Some(&coll),
+    )
+    .unwrap();
+    vec![
+        (Variant::Fp32, fp),
+        (Variant::ArcQuant, qdq),
+        (Variant::ArcPacked, packed),
+    ]
+}
+
+fn synth_stream() -> Vec<u16> {
+    (0..4096u32).map(|i| ((i * 37 + 11) % 256) as u16).collect()
+}
+
+#[test]
+fn generation_tokens_match_reference_decode_loop_bit_exact() {
+    use arcquant::model::{KvCache, Sampler};
+
+    // Mixed prefill+decode generation traffic across all three variants,
+    // through the continuous-batching executor...
+    let engines = gen_engines();
+    let refs: Vec<(Variant, &arcquant::model::Engine)> =
+        engines.iter().map(|(v, e)| (*v, e)).collect();
+    let stream = synth_stream();
+    let cfg = GenerateServeConfig {
+        workload: vec![
+            (Variant::Fp32, 3),
+            (Variant::ArcQuant, 3),
+            (Variant::ArcPacked, 4),
+        ],
+        prompt_len: 24,
+        max_new_tokens: 8,
+        max_decode_batch: 4,
+        kv_pages: 256,
+        sampler: Sampler::Greedy,
+        seed: 7,
+        ..Default::default()
+    };
+    let r = serve_generate_native(&cfg, &stream, &refs).unwrap();
+    assert_eq!(r.completed, 10);
+    assert_eq!(r.rejected, 0);
+    assert_eq!(r.responses.len(), 10);
+    assert_eq!(r.platform, "native-rust");
+
+    // ...must produce, per request, exactly the tokens of an independent
+    // per-sequence prefill + decode_step loop (the batched decode is
+    // bit-identical per row, so greedy argmax can never diverge).
+    for resp in &r.responses {
+        assert_eq!(resp.finish, FinishReason::Length, "id {}", resp.id);
+        assert_eq!(resp.tokens.len(), cfg.max_new_tokens);
+        let engine = refs.iter().find(|(v, _)| *v == resp.variant).map(|(_, e)| *e).unwrap();
+        // same prompt reconstruction as the submission side
+        let idx = (resp.id - 1) as usize;
+        let per_variant_r = cfg
+            .workload
+            .iter()
+            .scan(0usize, |acc, &(v, n)| {
+                let lo = *acc;
+                *acc += n;
+                Some((v, lo))
+            })
+            .find(|&(v, _)| v == resp.variant)
+            .map(|(_, lo)| idx - lo)
+            .unwrap();
+        let start = (per_variant_r * (cfg.prompt_len + 5))
+            % (stream.len() - cfg.prompt_len - 1);
+        let prompt = &stream[start..start + cfg.prompt_len];
+
+        let mut rng = session_rng(cfg.seed, resp.id);
+        let mut cache = KvCache::new(&engine.cfg, cfg.prompt_len + cfg.max_new_tokens);
+        let mut tok = cfg
+            .sampler
+            .sample(&engine.prefill(prompt, &mut cache).unwrap(), &mut rng);
+        let mut want = vec![tok];
+        for _ in 1..cfg.max_new_tokens {
+            tok = cfg
+                .sampler
+                .sample(&engine.decode_step(tok, &mut cache).unwrap(), &mut rng);
+            want.push(tok);
+        }
+        assert_eq!(
+            resp.tokens, want,
+            "id {} ({:?}): served generation diverged from reference loop",
+            resp.id, resp.variant
+        );
+    }
+
+    // decode stats: every variant decoded in batches, throughput recorded,
+    // and the stage breakdown shows the mixed prefill+decode pipeline
+    for key in ["fp32", "arcquant", "arcquant-packed"] {
+        let s = &r.per_variant[key];
+        assert!(s.requests >= 3, "{key}");
+        assert!(s.decode_tok_s > 0.0, "{key}");
+        assert!(s.decode_ticks >= 7, "{key}: {} ticks", s.decode_ticks);
+        assert!(s.mean_decode_batch > 1.0, "{key}: batching never happened");
+        assert_eq!(s.oom_truncated, 0, "{key}");
+    }
+    let stages: Vec<&str> =
+        r.stage_breakdown.iter().map(|(s, _, _)| s.as_str()).collect();
+    assert!(stages.iter().any(|s| s.starts_with("prefill:arcquant-packed")));
+    assert!(stages.iter().any(|s| s.starts_with("decode:arcquant-packed")));
+    assert!(stages.iter().any(|s| s.starts_with("decode:fp32")));
+
+    // page accounting surfaced in the report
+    assert!(r.kv_pages_peak > 0 && r.kv_pages_peak <= r.kv_pages_total);
+    assert!(r.kv_bytes_peak > 0);
+    assert_eq!(
+        r.kv_bytes_peak,
+        r.kv_pages_peak as u64 * r.kv_bytes_per_page
+    );
+}
+
+#[test]
+fn generation_rejects_prompts_exceeding_the_page_budget() {
+    use arcquant::model::Sampler;
+    let engines = gen_engines();
+    let refs: Vec<(Variant, &arcquant::model::Engine)> =
+        engines.iter().map(|(v, e)| (*v, e)).collect();
+    let stream = synth_stream();
+    // prompt needs 2 pages (24 tokens, 16-token pages); pool has 1 → no
+    // request can ever run
+    let cfg = GenerateServeConfig {
+        workload: vec![(Variant::ArcPacked, 3)],
+        prompt_len: 24,
+        max_new_tokens: 4,
+        max_decode_batch: 4,
+        kv_pages: 1,
+        sampler: Sampler::Greedy,
+        seed: 0,
+        ..Default::default()
+    };
+    let r = serve_generate_native(&cfg, &stream, &refs).unwrap();
+    assert_eq!(r.completed, 0);
+    assert_eq!(r.rejected, 3);
+    assert!(r
+        .responses
+        .iter()
+        .all(|resp| resp.finish == FinishReason::Rejected && resp.tokens.is_empty()));
+}
+
+#[test]
+fn generation_backpressure_serializes_when_pages_are_scarce() {
+    use arcquant::model::Sampler;
+    let engines = gen_engines();
+    let refs: Vec<(Variant, &arcquant::model::Engine)> =
+        engines.iter().map(|(v, e)| (*v, e)).collect();
+    let stream = synth_stream();
+    // each sequence peaks at 16 + 7 = 23 tokens → 2 pages; a 2-page pool
+    // forces one-at-a-time admission, but everything still completes
+    let cfg = GenerateServeConfig {
+        workload: vec![(Variant::Fp32, 3)],
+        prompt_len: 16,
+        max_new_tokens: 8,
+        max_decode_batch: 4,
+        kv_pages: 2,
+        sampler: Sampler::Greedy,
+        seed: 0,
+        ..Default::default()
+    };
+    let r = serve_generate_native(&cfg, &stream, &refs).unwrap();
+    assert_eq!(r.completed, 3);
+    assert_eq!(r.rejected, 0);
+    assert!(r
+        .responses
+        .iter()
+        .all(|resp| resp.finish == FinishReason::Length
+            && resp.tokens.len() == cfg.max_new_tokens));
+    // pages were the bottleneck: the pool never exceeded its 2 pages
+    assert!(r.kv_pages_peak <= 2);
+    // decode could never batch: one running sequence at a time
+    assert!((r.per_variant["fp32"].mean_decode_batch - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn generation_truncates_on_mid_decode_page_exhaustion() {
+    use arcquant::model::Sampler;
+    let engines = gen_engines();
+    let refs: Vec<(Variant, &arcquant::model::Engine)> =
+        engines.iter().map(|(v, e)| (*v, e)).collect();
+    let stream = synth_stream();
+    // Each sequence: 16-token prompt (1 page), worst case 36 tokens
+    // (3 pages). A 4-page pool passes the admission headroom check for
+    // both sequences (free 4 ≥ 3, then free 3 ≥ 3) — a deliberate
+    // over-commit: combined worst case is 6 pages. Both grow to 2 pages;
+    // at the 33-token boundary the pool is exhausted, the first sequence
+    // retires OutOfPages (releasing its pages) and the second takes the
+    // freed pages and completes its full budget.
+    let cfg = GenerateServeConfig {
+        workload: vec![(Variant::ArcQuant, 2)],
+        prompt_len: 16,
+        max_new_tokens: 20,
+        max_decode_batch: 4,
+        kv_pages: 4,
+        sampler: Sampler::Greedy,
+        seed: 0,
+        ..Default::default()
+    };
+    let r = serve_generate_native(&cfg, &stream, &refs).unwrap();
+    assert_eq!(r.completed, 2);
+    assert_eq!(r.rejected, 0);
+    let finished: Vec<FinishReason> =
+        r.responses.iter().map(|resp| resp.finish).collect();
+    assert!(finished.contains(&FinishReason::Length), "{finished:?}");
+    assert!(finished.contains(&FinishReason::OutOfPages), "{finished:?}");
+    let oom = r
+        .responses
+        .iter()
+        .find(|resp| resp.finish == FinishReason::OutOfPages)
+        .unwrap();
+    assert!(
+        !oom.tokens.is_empty() && oom.tokens.len() < cfg.max_new_tokens,
+        "truncated mid-generation: {} tokens",
+        oom.tokens.len()
+    );
+    let full = r
+        .responses
+        .iter()
+        .find(|resp| resp.finish == FinishReason::Length)
+        .unwrap();
+    assert_eq!(full.tokens.len(), cfg.max_new_tokens);
+    assert_eq!(r.per_variant["arcquant"].oom_truncated, 1);
+    assert!(r.kv_pages_peak <= 4);
 }
 
 #[test]
