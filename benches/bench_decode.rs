@@ -5,43 +5,65 @@
 //! (variant, batch) plus the KV page-manager accounting, so the decode
 //! trajectory of the packed datapath is tracked across PRs.
 //!
+//! Also records a decode-site kernel comparison: the pre-v2 packed kernel
+//! ([`matmul_nt_packed_ref`]) vs the v2 tiled/row kernels
+//! ([`matmul_nt_packed`]) at the [B, K]·[M, K]ᵀ shapes a decode tick
+//! issues per layer, B ∈ {1, 4, 8}.
+//!
 //! Method: per sample, prefill `batch` fresh prompts (untimed), then time
-//! `STEPS` consecutive `decode_batch` ticks and report
-//! `batch · STEPS / elapsed`. Median over samples. Fixed work per timing
+//! `steps` consecutive `decode_batch` ticks and report
+//! `batch · steps / elapsed`. Median over samples. Fixed work per timing
 //! window (instead of the adaptive `Bencher`) because every decode tick
 //! grows the caches — throughput at unbounded iteration counts would
 //! measure ever-longer attention spans.
+//!
+//! `ARCQUANT_BENCH_SMOKE=1` shrinks every shape and skips the JSON
+//! rewrite — CI uses it to catch kernel-routing panics cheaply.
 
 use arcquant::baselines::Method;
 use arcquant::coordinator::kvcache::KvPageManager;
-use arcquant::formats::Format;
+use arcquant::formats::{Format, RowQuantizer};
 use arcquant::model::{sampling, Engine, EngineMode, KvCache, ModelConfig, Weights};
+use arcquant::tensor::{matmul_nt_packed, matmul_nt_packed_ref, Mat};
+use arcquant::util::bench::{smoke_mode, Bencher};
 use arcquant::util::json::Json;
-use arcquant::util::{stats, Timer};
+use arcquant::util::prop::gens::outlier_mat;
+use arcquant::util::{stats, Prng, Timer};
 use std::collections::BTreeMap;
 
-const PROMPT_LEN: usize = 16;
-const STEPS: usize = 16;
-const SAMPLES: usize = 5;
+struct Cfg {
+    prompt_len: usize,
+    steps: usize,
+    samples: usize,
+    batches: &'static [usize],
+}
 
-fn decode_tok_s(engine: &Engine, batch: usize) -> (f64, f64) {
+fn bench_cfg() -> Cfg {
+    if smoke_mode() {
+        Cfg { prompt_len: 4, steps: 2, samples: 1, batches: &[1, 2] }
+    } else {
+        Cfg { prompt_len: 16, steps: 16, samples: 5, batches: &[1, 4, 8] }
+    }
+}
+
+fn decode_tok_s(engine: &Engine, batch: usize, bc: &Cfg) -> (f64, f64) {
     let cfg = &engine.cfg;
-    let mut rates = Vec::with_capacity(SAMPLES);
-    for sample in 0..SAMPLES + 1 {
+    let mut rates = Vec::with_capacity(bc.samples);
+    for sample in 0..bc.samples + 1 {
         // fresh caches per sample: prefill is untimed setup
         let mut caches: Vec<KvCache> = Vec::with_capacity(batch);
         let mut toks: Vec<u16> = Vec::with_capacity(batch);
         for s in 0..batch {
-            let prompt: Vec<u16> = (0..PROMPT_LEN)
+            let prompt: Vec<u16> = (0..bc.prompt_len)
                 .map(|i| ((i * 37 + s * 91 + sample * 13 + 7) % cfg.vocab) as u16)
                 .collect();
-            let mut c = KvCache::new(cfg, PROMPT_LEN + STEPS + 1);
+            let mut c = KvCache::new(cfg, bc.prompt_len + bc.steps + 1);
             let logits = engine.prefill(&prompt, &mut c).unwrap();
             toks.push(sampling::argmax(&logits));
             caches.push(c);
         }
         let t = Timer::start();
-        for _ in 0..STEPS {
+        for _ in 0..bc.steps {
             let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
             let logits = engine.decode_batch(&toks, &mut refs).unwrap();
             for (s, tok) in toks.iter_mut().enumerate() {
@@ -52,13 +74,54 @@ fn decode_tok_s(engine: &Engine, batch: usize) -> (f64, f64) {
         if sample == 0 {
             continue; // warmup
         }
-        rates.push((batch * STEPS) as f64 / (ms / 1e3));
+        rates.push((batch * bc.steps) as f64 / (ms / 1e3));
     }
     let med = stats::median(&rates);
     (med, 1e3 / med) // (tokens/s, ms per token)
 }
 
+/// Kernel v1-vs-v2 at the per-layer GEMM shape a decode tick issues:
+/// [B, K] activations (already packed) against an [M, K] packed weight.
+/// Returns the geomean speedup over the batch sizes.
+fn bench_decode_site_kernels(rows: &mut Vec<Json>) -> f64 {
+    let (k, m) = if smoke_mode() { (256usize, 32usize) } else { (2048usize, 512usize) };
+    let batches: &[usize] = if smoke_mode() { &[1, 2] } else { &[1, 4, 8] };
+    let b = if smoke_mode() { Bencher::smoke() } else { Bencher::quick() };
+    let mut rng = Prng::new(9);
+    let q = RowQuantizer::new(Format::Nvfp4);
+    let mut w = Mat::zeros(m, k);
+    w.fill_random_normal(&mut rng, 0.4);
+    let qw = q.quantize(&w);
+    let mut speedups: Vec<f64> = Vec::new();
+    for &batch in batches {
+        let x = outlier_mat(&mut rng, batch, k);
+        let qx = q.quantize_rowwise(&x);
+        let r_v1 = b.run(&format!("decode_site_kernel_v1_b{batch}"), || {
+            matmul_nt_packed_ref(&qx, &qw)
+        });
+        let r_v2 = b.run(&format!("decode_site_kernel_v2_b{batch}"), || {
+            matmul_nt_packed(&qx, &qw)
+        });
+        let speedup = r_v1.median_us / r_v2.median_us;
+        speedups.push(speedup);
+        println!(
+            "#   decode-site kernel b{batch} (K={k}, M={m}): v1 {:.1}us v2 {:.1}us ({speedup:.2}x)",
+            r_v1.median_us, r_v2.median_us
+        );
+        let mut row = Json::obj();
+        row.set("batch", Json::Num(batch as f64))
+            .set("k", Json::Num(k as f64))
+            .set("m", Json::Num(m as f64))
+            .set("v1_median_us", Json::Num(r_v1.median_us))
+            .set("v2_median_us", Json::Num(r_v2.median_us))
+            .set("speedup_v2_over_v1", Json::Num(speedup));
+        rows.push(row);
+    }
+    stats::geomean(&speedups)
+}
+
 fn main() {
+    let bc = bench_cfg();
     let cfg = ModelConfig::tiny_test();
     let weights = Weights::synthetic(&cfg, 7);
     let toks: Vec<u16> = (0..128u16).map(|i| (i * 37) % 256).collect();
@@ -73,20 +136,23 @@ fn main() {
         ("arcquant-packed", EngineMode::QuantizedPacked(arc)),
     ];
 
-    println!("# decode throughput, prompt={PROMPT_LEN} steps={STEPS} (median of {SAMPLES})");
+    println!(
+        "# decode throughput, prompt={} steps={} (median of {})",
+        bc.prompt_len, bc.steps, bc.samples
+    );
     let mut rows: Vec<Json> = Vec::new();
     let mut tok_s_by: BTreeMap<(String, usize), f64> = BTreeMap::new();
     for (name, mode) in variants {
         let engine =
             Engine::new(cfg.clone(), weights.clone(), mode, Some(&calib)).unwrap();
-        for batch in [1usize, 4, 8] {
-            let (tok_s, ms_per_step) = decode_tok_s(&engine, batch);
+        for &batch in bc.batches {
+            let (tok_s, ms_per_step) = decode_tok_s(&engine, batch, &bc);
 
             // KV page accounting for this steady-state batch: every
-            // sequence sits at prompt + STEPS tokens when the window ends.
+            // sequence sits at prompt + steps tokens when the window ends.
             let mut pm = KvPageManager::new(4096, cfg.d, cfg.l);
             for s in 0..batch {
-                pm.admit(s as u64, PROMPT_LEN + STEPS).unwrap();
+                pm.admit(s as u64, bc.prompt_len + bc.steps).unwrap();
             }
             println!(
                 "BENCH decode_{name}_b{batch} tok_s={tok_s:.1} ms_per_tok={ms_per_step:.3} \
@@ -108,21 +174,45 @@ fn main() {
         }
     }
 
-    for batch in [1usize, 4, 8] {
+    for &batch in bc.batches {
         let fp = tok_s_by[&("fp32".to_string(), batch)];
         let packed = tok_s_by[&("arcquant-packed".to_string(), batch)];
         println!("#   b{batch}: packed/fp32 decode ratio {:.2}x", packed / fp);
     }
 
+    let mut kernel_rows: Vec<Json> = Vec::new();
+    let site_geomean = bench_decode_site_kernels(&mut kernel_rows);
+    println!("# decode-site kernel geomean speedup v2/v1: {site_geomean:.2}x");
+
+    if smoke_mode() {
+        println!("# smoke mode: BENCH_decode.json not rewritten");
+        return;
+    }
+    // Keep the top-level schema identical to the committed baseline so
+    // regeneration diffs show perf deltas, not schema churn.
+    let mut prov = Json::obj();
+    prov.set(
+        "source",
+        Json::Str("cargo bench --bench bench_decode (in-tree harness)".into()),
+    )
+    .set("threads", Json::Num(arcquant::util::pool::num_threads() as f64));
     let mut out = Json::obj();
     out.set("bench", Json::Str("decode".into()))
+        .set("provenance", prov)
         .set("model", Json::Str(cfg.name.clone()))
-        .set("prompt_len", Json::Num(PROMPT_LEN as f64))
-        .set("steps", Json::Num(STEPS as f64))
-        .set("rows", Json::Arr(rows));
+        .set("prompt_len", Json::Num(bc.prompt_len as f64))
+        .set("steps", Json::Num(bc.steps as f64))
+        .set("rows", Json::Arr(rows))
+        .set("decode_site_kernel", Json::Arr(kernel_rows))
+        .set("decode_site_kernel_geomean_speedup", Json::Num(site_geomean));
     let path = "BENCH_decode.json";
     match std::fs::write(path, out.dump()) {
         Ok(()) => println!("# wrote {path}"),
-        Err(e) => eprintln!("# could not write {path}: {e}"),
+        Err(e) => {
+            // a failed trajectory rewrite must fail the run, or the
+            // runner would report success over stale numbers
+            eprintln!("# could not write {path}: {e}");
+            std::process::exit(1);
+        }
     }
 }

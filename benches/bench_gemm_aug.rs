@@ -1,27 +1,43 @@
 //! Figure 8a bench: augmented-GEMM latency vs S on the host, plus the
 //! calibrated Blackwell cost-model series. Latency must be linear in K+S.
 //!
-//! Also records the packed-vs-QDQ execution comparison at paper shapes
-//! (K=4096, S ∈ {0, 128, 256}) into `BENCH_gemm_packed.json`: tokens/s
-//! and bytes-moved per forward for both paths, so the perf trajectory of
-//! the packed datapath is tracked across PRs.
+//! Also records the packed-execution perf trajectory into
+//! `BENCH_gemm_packed.json`:
+//!
+//! * packed-vs-QDQ forward comparison at paper shapes (K=4096,
+//!   S ∈ {0, 128, 256}): tokens/s and bytes-moved per forward;
+//! * **kernel v1-vs-v2**: the pre-v2 one-row-at-a-time kernel
+//!   ([`matmul_nt_packed_ref`]) against the register-tiled v2 kernel
+//!   ([`matmul_nt_packed`]) on identical packed operands, at
+//!   the K=4096 shapes for both prefill (n=16) and decode (n=1), with
+//!   the geometric-mean speedup — the acceptance series for the v2
+//!   rewrite.
+//!
+//! `ARCQUANT_BENCH_SMOKE=1` shrinks every shape and skips the JSON
+//! rewrite — CI uses it to catch kernel-routing panics cheaply.
 
 use arcquant::costmodel::{gemm_us, GemmPath, Gpu};
 use arcquant::formats::Format;
 use arcquant::quant::{ArcQuantLinear, LayerPlan, PackedArcLinear, Permutation};
-use arcquant::tensor::{matmul_nt, Mat};
-use arcquant::util::bench::Bencher;
+use arcquant::tensor::{matmul_nt, matmul_nt_packed, matmul_nt_packed_ref, Mat};
+use arcquant::util::bench::{smoke_mode, Bencher};
 use arcquant::util::json::Json;
+use arcquant::util::pool;
 use arcquant::util::prop::gens::outlier_mat;
+use arcquant::util::stats;
 use arcquant::util::Prng;
 
-/// Packed-vs-QDQ forward at paper shapes → BENCH_gemm_packed.json.
+/// Packed-vs-QDQ forward + kernel v1-vs-v2 at paper shapes →
+/// BENCH_gemm_packed.json (skipped in smoke mode).
 fn bench_packed_vs_qdq(b: &Bencher) {
-    let (n, k, m) = (16usize, 4096usize, 256usize);
+    let (n, k, m) = if smoke_mode() { (4usize, 256usize, 32usize) } else { (16usize, 4096usize, 256usize) };
+    let s_list: &[usize] = if smoke_mode() { &[0, 32] } else { &[0, 128, 256] };
     let mut rng = Prng::new(1);
     let mut rows: Vec<Json> = Vec::new();
+    let mut kernel_rows: Vec<Json> = Vec::new();
+    let mut speedups: Vec<f64> = Vec::new();
     println!("# packed vs QDQ ARCQuant forward (N={n}, K={k}, M={m})");
-    for s in [0usize, 128, 256] {
+    for &s in s_list {
         let x = outlier_mat(&mut rng, n, k);
         let mut w = Mat::zeros(m, k);
         w.fill_random_normal(&mut rng, 0.4);
@@ -36,6 +52,39 @@ fn bench_packed_vs_qdq(b: &Bencher) {
         let r_qdq = b.run(&format!("gemm_aug_qdq_k{k}_s{s}"), || qdq.forward(&x));
         let r_packed =
             b.run(&format!("gemm_aug_packed_k{k}_s{s}"), || packed.forward(&x));
+
+        // Kernel-level v1 vs v2 on identical packed operands: prefill
+        // shape (n rows) and single-token decode shape (1 row).
+        for (label, rows_n) in [("prefill", n), ("decode", 1usize)] {
+            let xs = if rows_n == n {
+                x.clone()
+            } else {
+                Mat::from_vec(rows_n, k, x.row(0).to_vec())
+            };
+            let aug = packed.quantizer.quantize_activations_packed(&xs);
+            let r_v1 = b.run(&format!("kernel_v1_{label}_k{k}_s{s}"), || {
+                matmul_nt_packed_ref(&aug.qm, &packed.w_packed)
+            });
+            let r_v2 = b.run(&format!("kernel_v2_{label}_k{k}_s{s}"), || {
+                matmul_nt_packed(&aug.qm, &packed.w_packed)
+            });
+            let speedup = r_v1.median_us / r_v2.median_us;
+            speedups.push(speedup);
+            println!(
+                "#   kernel {label} s={s}: v1 {:.1}us v2 {:.1}us ({speedup:.2}x)",
+                r_v1.median_us, r_v2.median_us
+            );
+            let mut kr = Json::obj();
+            kr.set("shape", Json::Str(label.into()))
+                .set("n", Json::Num(rows_n as f64))
+                .set("k", Json::Num(k as f64))
+                .set("m", Json::Num(m as f64))
+                .set("s", Json::Num(s as f64))
+                .set("v1_median_us", Json::Num(r_v1.median_us))
+                .set("v2_median_us", Json::Num(r_v2.median_us))
+                .set("speedup_v2_over_v1", Json::Num(speedup));
+            kernel_rows.push(kr);
+        }
 
         // Bytes moved per forward, weight side + activation side. QDQ
         // streams f32 for both; packed streams codes + block scales.
@@ -78,23 +127,47 @@ fn bench_packed_vs_qdq(b: &Bencher) {
             .set("weight_ratio_f32_over_packed", Json::Num(ratio));
         rows.push(row);
     }
+    let geomean = stats::geomean(&speedups);
+    println!("# kernel geomean speedup v2/v1: {geomean:.2}x");
+
+    if smoke_mode() {
+        println!("# smoke mode: BENCH_gemm_packed.json not rewritten");
+        return;
+    }
+    // Keep the top-level schema identical to the committed baseline so
+    // regeneration diffs show perf deltas, not schema churn.
+    let mut prov = Json::obj();
+    prov.set(
+        "source",
+        Json::Str("cargo bench --bench bench_gemm_aug (in-tree harness)".into()),
+    )
+    .set("threads", Json::Num(pool::num_threads() as f64));
     let mut out = Json::obj();
     out.set("bench", Json::Str("gemm_packed".into()))
-        .set("shapes", Json::Arr(rows));
+        .set("provenance", prov)
+        .set("shapes", Json::Arr(rows))
+        .set("kernel", Json::Arr(kernel_rows))
+        .set("kernel_geomean_speedup_v2_over_v1", Json::Num(geomean));
     let path = "BENCH_gemm_packed.json";
     match std::fs::write(path, out.dump()) {
         Ok(()) => println!("# wrote {path}"),
-        Err(e) => eprintln!("# could not write {path}: {e}"),
+        Err(e) => {
+            // a failed trajectory rewrite must fail the run, or the
+            // runner would report success over stale numbers
+            eprintln!("# could not write {path}: {e}");
+            std::process::exit(1);
+        }
     }
 }
 
 fn main() {
-    let b = Bencher::default();
-    let (n, k, m) = (64usize, 1024usize, 256usize);
+    let b = if smoke_mode() { Bencher::smoke() } else { Bencher::default() };
+    let (n, k, m) = if smoke_mode() { (8usize, 128usize, 32usize) } else { (64usize, 1024usize, 256usize) };
+    let s_list: &[usize] = if smoke_mode() { &[0, 32] } else { &[0, 128, 256, 512, 1024] };
     let mut rng = Prng::new(0);
-    println!("# host GEMM (N={n}, K=1024+S, M={m}) + modeled RTX 5090 GEMM (8192x4096x4096)");
+    println!("# host GEMM (N={n}, K={k}+S, M={m}) + modeled RTX 5090 GEMM (8192x4096x4096)");
     let mut prev = 0.0;
-    for s in [0usize, 128, 256, 512, 1024] {
+    for &s in s_list {
         let mut x = Mat::zeros(n, k + s);
         let mut w = Mat::zeros(m, k + s);
         x.fill_random_normal(&mut rng, 1.0);
@@ -119,5 +192,6 @@ fn main() {
         println!("MODEL gemm_{name}_5090 latency_us={t:.1}");
     }
 
-    bench_packed_vs_qdq(&Bencher::quick());
+    let kb = if smoke_mode() { Bencher::smoke() } else { Bencher::quick() };
+    bench_packed_vs_qdq(&kb);
 }

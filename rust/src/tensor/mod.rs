@@ -10,7 +10,7 @@ pub mod gemm;
 pub mod gemm_packed;
 
 pub use gemm::matmul_nt;
-pub use gemm_packed::{matmul_nt_packed, QuantizedAct};
+pub use gemm_packed::{matmul_nt_packed, matmul_nt_packed_ref, QuantizedAct};
 
 /// Row-major 2-D matrix of f32.
 #[derive(Clone, Debug, PartialEq)]

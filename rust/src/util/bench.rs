@@ -50,12 +50,27 @@ impl Default for Bencher {
     }
 }
 
+/// True when `ARCQUANT_BENCH_SMOKE` is set (and not "0"): benches shrink
+/// every shape and skip their `BENCH_*.json` rewrites — the CI smoke step.
+pub fn smoke_mode() -> bool {
+    std::env::var("ARCQUANT_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false)
+}
+
 impl Bencher {
     pub fn quick() -> Self {
         Bencher {
             sample_target_s: 0.02,
             samples: 7,
             warmup_s: 0.02,
+        }
+    }
+
+    /// Minimal-work configuration for [`smoke_mode`] runs.
+    pub fn smoke() -> Self {
+        Bencher {
+            sample_target_s: 0.005,
+            samples: 3,
+            warmup_s: 0.005,
         }
     }
 

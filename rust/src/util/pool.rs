@@ -1,5 +1,22 @@
-//! Scoped data-parallel helpers over std::thread (rayon is unavailable
-//! offline). Work is split into contiguous chunks, one per worker.
+//! Data-parallel helpers over a **persistent worker pool** (rayon is
+//! unavailable offline). Work is split into contiguous chunks; the
+//! decomposition is identical to single-threaded execution (each output
+//! element is produced by the same code over the same inputs), so results
+//! are bit-for-bit independent of the thread count.
+//!
+//! v2: the pool is lazily initialized once per process (`OnceLock`) and
+//! fed through a locked queue + condvar. A `par_chunks_mut`/`par_map`
+//! call enqueues one job per worker piece, runs the first piece on the
+//! calling thread, then helps drain the queue until its own jobs are
+//! done — so per-call dispatch cost is a queue round-trip instead of the
+//! previous `std::thread::scope` spawn/join (≈7 spawns per decode step
+//! per layer on the serving hot path). Nested parallel calls from inside
+//! a pool job submit to the same queue and are legal at any depth: a
+//! waiting caller only ever *helps* (drains its own group's jobs) and
+//! re-polls on a timed wait instead of blocking, so every queued job is
+//! always reachable by some thread and the pool cannot deadlock — while
+//! narrow outer fan-outs (e.g. two eval windows on a 16-worker pool)
+//! still spread their inner GEMMs across the idle workers.
 //!
 //! Also hosts small thread-local scratch-buffer pools ([`take_f32`] /
 //! [`put_f32`], [`take_i32`] / [`put_i32`]) so per-forward hot paths
@@ -7,22 +24,234 @@
 //! allocations instead of churning `Vec`s on every call.
 
 use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
 
-/// Number of workers to use: respects `ARCQUANT_THREADS`, defaults to the
-/// available parallelism, capped at 16.
+// ---------------------------------------------------------------------------
+// Thread-count configuration
+// ---------------------------------------------------------------------------
+
+/// `ARCQUANT_THREADS` parsed once per process (the pre-v2 code re-read the
+/// environment on every parallel call — measurable on the decode path).
+static ENV_THREADS: OnceLock<usize> = OnceLock::new();
+
+/// Runtime override (0 = none). Tests use this to pin the worker count
+/// in-process, where re-exporting the environment would be racy.
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+fn configured_threads() -> usize {
+    *ENV_THREADS.get_or_init(|| {
+        if let Ok(v) = std::env::var("ARCQUANT_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get().min(16))
+            .unwrap_or(4)
+    })
+}
+
+/// Number of workers to use: respects `ARCQUANT_THREADS` (read once per
+/// process), defaults to the available parallelism capped at 16. A
+/// [`set_thread_override`] value, when present, wins.
 pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("ARCQUANT_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
+    match THREAD_OVERRIDE.load(Ordering::Relaxed) {
+        0 => configured_threads(),
+        n => n,
+    }
+}
+
+/// Override the worker count at runtime (`None` restores the environment
+/// default). Results never depend on the thread count — this exists so
+/// the determinism pins can compare single- vs multi-threaded execution
+/// within one process. Global: affects every subsequent parallel call.
+pub fn set_thread_override(n: Option<usize>) {
+    THREAD_OVERRIDE.store(n.map_or(0, |v| v.max(1)), Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Persistent worker pool
+// ---------------------------------------------------------------------------
+
+/// Completion latch for one `scope_run` call, shared by its jobs.
+struct Group {
+    state: Mutex<GroupState>,
+    done: Condvar,
+}
+
+struct GroupState {
+    remaining: usize,
+    /// First panic payload observed in a job; re-raised on the caller.
+    panic: Option<Box<dyn std::any::Any + Send + 'static>>,
+}
+
+struct Job {
+    task: Box<dyn FnOnce() + Send + 'static>,
+    group: Arc<Group>,
+}
+
+impl Job {
+    fn run(self) {
+        let res = catch_unwind(AssertUnwindSafe(self.task));
+        let mut st = self.group.state.lock().unwrap();
+        if let Err(payload) = res {
+            if st.panic.is_none() {
+                st.panic = Some(payload);
+            }
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            self.group.done.notify_all();
         }
     }
-    std::thread::available_parallelism()
-        .map(|n| n.get().min(16))
-        .unwrap_or(4)
+}
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Job>>,
+    ready: Condvar,
+}
+
+impl PoolShared {
+    fn submit(&self, job: Job) {
+        self.queue.lock().unwrap().push_back(job);
+        self.ready.notify_one();
+    }
+
+    /// Pop the oldest queued job belonging to `group`, if any. Helping is
+    /// group-scoped so a waiting caller never burns its stack (or delays
+    /// its own completion) executing an unrelated fan-out's jobs.
+    fn try_pop_group(&self, group: &Arc<Group>) -> Option<Job> {
+        let mut q = self.queue.lock().unwrap();
+        let i = q.iter().position(|j| Arc::ptr_eq(&j.group, group))?;
+        q.remove(i)
+    }
+
+    /// Worker body: block on the queue forever. Workers are detached and
+    /// idle on the condvar between calls; they do not keep the process
+    /// alive.
+    fn worker_loop(&self) {
+        loop {
+            let job = {
+                let mut q = self.queue.lock().unwrap();
+                loop {
+                    if let Some(j) = q.pop_front() {
+                        break j;
+                    }
+                    q = self.ready.wait(q).unwrap();
+                }
+            };
+            job.run();
+        }
+    }
+
+    /// Caller-side wait: keep executing `group`'s queued jobs until the
+    /// group has fully completed. Never blocks while its own work is
+    /// queued, and the timed re-poll below never blocks indefinitely —
+    /// together these make nested submission deadlock-free: every queued
+    /// job is reachable by an idle worker or by its waiting owner.
+    fn help_until_done(&self, group: &Arc<Group>) {
+        loop {
+            {
+                let st = group.state.lock().unwrap();
+                if st.remaining == 0 {
+                    return;
+                }
+            }
+            if let Some(job) = self.try_pop_group(group) {
+                job.run();
+                continue;
+            }
+            let st = group.state.lock().unwrap();
+            if st.remaining == 0 {
+                return;
+            }
+            // Timed wait: re-polls the queue so the caller resumes helping
+            // if new jobs land while ours run on busy workers.
+            let _ = group
+                .done
+                .wait_timeout(st, Duration::from_micros(200))
+                .unwrap();
+        }
+    }
+}
+
+static POOL: OnceLock<Arc<PoolShared>> = OnceLock::new();
+
+fn pool() -> &'static Arc<PoolShared> {
+    POOL.get_or_init(|| {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+        });
+        // The caller of every parallel region executes one piece itself,
+        // so `configured - 1` workers already saturate the default
+        // configuration; spawn `configured` to also cover overrides and
+        // concurrent top-level callers (extra workers just idle).
+        for wi in 0..configured_threads() {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("arcquant-pool-{wi}"))
+                .spawn(move || sh.worker_loop())
+                .expect("failed to spawn pool worker");
+        }
+        shared
+    })
+}
+
+/// Run `jobs` to completion: the first on the calling thread, the rest on
+/// the persistent pool. Blocks until every job has finished and re-raises
+/// the first panic observed (caller's own piece first).
+fn scope_run<'s>(mut jobs: Vec<Box<dyn FnOnce() + Send + 's>>) {
+    if jobs.is_empty() {
+        return;
+    }
+    let local = jobs.remove(0);
+    if jobs.is_empty() {
+        local();
+        return;
+    }
+    let group = Arc::new(Group {
+        state: Mutex::new(GroupState {
+            remaining: jobs.len(),
+            panic: None,
+        }),
+        done: Condvar::new(),
+    });
+    let p = pool();
+    for task in jobs {
+        // SAFETY: the borrowed-data lifetime `'s` is erased to `'static`
+        // here, which is sound because this function does not return (or
+        // unwind) until `help_until_done` has observed every job finished
+        // — no task can touch its borrows after `'s` expires. Panic
+        // payloads are `Any + 'static` by construction, so nothing
+        // borrowed escapes through the panic slot either.
+        let task: Box<dyn FnOnce() + Send + 'static> =
+            unsafe { std::mem::transmute(task) };
+        p.submit(Job {
+            task,
+            group: Arc::clone(&group),
+        });
+    }
+    // The caller's own piece must not unwind past the latch while workers
+    // still hold borrows into the scope: catch, wait, then re-raise.
+    let local_res = catch_unwind(AssertUnwindSafe(local));
+    p.help_until_done(&group);
+    if let Err(payload) = local_res {
+        resume_unwind(payload);
+    }
+    let pool_panic = group.state.lock().unwrap().panic.take();
+    if let Some(payload) = pool_panic {
+        resume_unwind(payload);
+    }
 }
 
 /// Apply `f(start, chunk)` to disjoint mutable chunks of `data` in parallel.
-/// `start` is the element offset of the chunk within `data`.
+/// `start` is the element offset of the chunk within `data`. Chunk
+/// boundaries (and therefore results) are identical at every thread count.
 pub fn par_chunks_mut<T: Send, F>(data: &mut [T], chunk_len: usize, f: F)
 where
     F: Fn(usize, &mut [T]) + Sync,
@@ -36,18 +265,53 @@ where
     }
     let n_chunks = data.len().div_ceil(chunk_len);
     let per_worker = n_chunks.div_ceil(nt);
-    std::thread::scope(|scope| {
-        for (wi, piece) in data.chunks_mut(per_worker * chunk_len).enumerate() {
-            let f = &f;
-            scope.spawn(move || {
-                let base = wi * per_worker * chunk_len;
+    let stride = per_worker * chunk_len;
+    let f = &f;
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = data
+        .chunks_mut(stride)
+        .enumerate()
+        .map(|(wi, piece)| {
+            Box::new(move || {
+                let base = wi * stride;
                 for (ci, chunk) in piece.chunks_mut(chunk_len).enumerate() {
                     f(base + ci * chunk_len, chunk);
                 }
-            });
-        }
-    });
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    scope_run(jobs);
 }
+
+/// Parallel map over indices [0, n): returns `vec![f(0), f(1), ..]`.
+pub fn par_map<R: Send, F>(n: usize, f: F) -> Vec<R>
+where
+    F: Fn(usize) -> R + Sync,
+{
+    let nt = num_threads().min(n.max(1));
+    if nt <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let per = n.div_ceil(nt);
+    let f = &f;
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = results
+        .chunks_mut(per)
+        .enumerate()
+        .map(|(wi, slot_chunk)| {
+            Box::new(move || {
+                for (j, slot) in slot_chunk.iter_mut().enumerate() {
+                    *slot = Some(f(wi * per + j));
+                }
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    scope_run(jobs);
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Thread-local scratch-buffer pools
+// ---------------------------------------------------------------------------
 
 // Per-thread free lists. Bounded so a burst of large buffers cannot pin
 // memory forever; each worker thread keeps its own list, so no locking.
@@ -56,6 +320,7 @@ const POOL_CAP: usize = 8;
 thread_local! {
     static F32_BUFS: RefCell<Vec<Vec<f32>>> = RefCell::new(Vec::new());
     static I32_BUFS: RefCell<Vec<Vec<i32>>> = RefCell::new(Vec::new());
+    static I16_BUFS: RefCell<Vec<Vec<i16>>> = RefCell::new(Vec::new());
 }
 
 /// Take a zero-filled `Vec<f32>` of `len` from the thread-local pool
@@ -103,28 +368,27 @@ pub fn put_i32(v: Vec<i32>) {
     });
 }
 
-/// Parallel map over indices [0, n): returns `vec![f(0), f(1), ..]`.
-pub fn par_map<R: Send, F>(n: usize, f: F) -> Vec<R>
-where
-    F: Fn(usize) -> R + Sync,
-{
-    let nt = num_threads().min(n.max(1));
-    if nt <= 1 {
-        return (0..n).map(f).collect();
+/// Take a zero-filled `Vec<i16>` of `len` from the thread-local pool
+/// (the packed GEMM's decoded-panel scratch).
+pub fn take_i16(len: usize) -> Vec<i16> {
+    match I16_BUFS.with(|p| p.borrow_mut().pop()) {
+        Some(mut v) => {
+            v.clear();
+            v.resize(len, 0);
+            v
+        }
+        None => vec![0; len],
     }
-    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    let per = n.div_ceil(nt);
-    std::thread::scope(|scope| {
-        for (wi, slot_chunk) in results.chunks_mut(per).enumerate() {
-            let f = &f;
-            scope.spawn(move || {
-                for (j, slot) in slot_chunk.iter_mut().enumerate() {
-                    *slot = Some(f(wi * per + j));
-                }
-            });
+}
+
+/// Return a buffer taken with [`take_i16`] to the pool.
+pub fn put_i16(v: Vec<i16>) {
+    I16_BUFS.with(|p| {
+        let mut p = p.borrow_mut();
+        if p.len() < POOL_CAP {
+            p.push(v);
         }
     });
-    results.into_iter().map(|r| r.unwrap()).collect()
 }
 
 #[cfg(test)]
@@ -157,6 +421,64 @@ mod tests {
         let out: Vec<usize> = par_map(0, |i| i);
         assert!(out.is_empty());
     }
+
+    #[test]
+    fn repeated_calls_reuse_the_pool() {
+        // The serving decode loop issues thousands of small parallel
+        // regions; they must all complete against the same worker set.
+        for round in 0..200 {
+            let mut v = vec![0usize; 97];
+            par_chunks_mut(&mut v, 8, |start, chunk| {
+                for (i, x) in chunk.iter_mut().enumerate() {
+                    *x = start + i + round;
+                }
+            });
+            for (i, &x) in v.iter().enumerate() {
+                assert_eq!(x, i + round);
+            }
+        }
+    }
+
+    #[test]
+    fn nested_parallel_calls_complete() {
+        // par_map jobs that themselves call par_chunks_mut (the
+        // eval-pipeline shape: windows in parallel, GEMMs inside). Nested
+        // calls submit to the same queue and their owners help-drain —
+        // most importantly, this must not deadlock the pool.
+        let out = par_map(8, |i| {
+            let mut v = vec![0usize; 64];
+            par_chunks_mut(&mut v, 4, |start, chunk| {
+                for (j, x) in chunk.iter_mut().enumerate() {
+                    *x = i + start + j;
+                }
+            });
+            v.iter().sum::<usize>()
+        });
+        for (i, &s) in out.iter().enumerate() {
+            let want: usize = (0..64).map(|j| i + j).sum();
+            assert_eq!(s, want);
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            let mut v = vec![0u32; 256];
+            par_chunks_mut(&mut v, 1, |start, _| {
+                if start == 200 {
+                    panic!("boom in chunk");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "panic in a parallel chunk must propagate");
+        // ...and the pool must still work afterwards.
+        let out = par_map(32, |i| i + 1);
+        assert_eq!(out[31], 32);
+    }
+
+    // NOTE: set_thread_override is process-global, so its behavior is
+    // tested only in rust/tests/integration_determinism.rs (its own test
+    // binary) — a unit test here would race the other library tests.
 
     #[test]
     fn scratch_pool_recycles() {

@@ -29,6 +29,14 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     v[rank.min(v.len() - 1)]
 }
 
+/// Geometric mean of positive values (1.0 for an empty slice).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    (xs.iter().map(|&x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
 pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }

@@ -1,0 +1,70 @@
+//! Determinism pins for the persistent worker pool: single-threaded
+//! (`ARCQUANT_THREADS=1`-equivalent) and multi-threaded execution must
+//! produce bit-identical output for the packed and QDQ GEMMs, the
+//! activation quantizers, and the full packed ARCQuant forward.
+//!
+//! The pool decomposes work into chunks whose boundaries never affect
+//! per-element arithmetic, so this is an invariant of the design — these
+//! tests pin it. They live in their own integration binary because the
+//! thread override is process-global: unit tests of the library run in
+//! one process and must not race against it.
+
+use arcquant::formats::{Format, RowQuantizer};
+use arcquant::quant::{LayerPlan, PackedArcLinear};
+use arcquant::tensor::{matmul_nt, matmul_nt_packed, matmul_nt_packed_ref, Mat};
+use arcquant::util::pool;
+use arcquant::util::prop::gens::outlier_mat;
+use arcquant::util::Prng;
+
+/// Everything the serving hot path parallelises, evaluated once: the
+/// returned buffers are compared bitwise across thread counts.
+fn run_all(x: &Mat, w: &Mat) -> Vec<Vec<f32>> {
+    let mut outs: Vec<Vec<f32>> = Vec::new();
+    for fmt in [Format::Nvfp4, Format::Mxfp4, Format::Int4 { group: 16 }] {
+        let q = RowQuantizer::new(fmt);
+        let (qa, qb) = (q.quantize(x), q.quantize(w));
+        // packed GEMM, tiled shape
+        outs.push(matmul_nt_packed(&qa, &qb).data);
+        // packed GEMM, n = 1 decode shape (column-parallel row kernel)
+        let row = Mat::from_vec(1, x.cols, x.row(0).to_vec());
+        outs.push(matmul_nt_packed(&q.quantize(&row), &qb).data);
+        // pre-v2 reference kernel (also pool-parallelised)
+        outs.push(matmul_nt_packed_ref(&qa, &qb).data);
+        // QDQ GEMM over dequantized operands
+        outs.push(matmul_nt(&qa.dequantize(), &qb.dequantize()).data);
+        // row-wise QDQ quantizer (the batched-decode activation path)
+        outs.push(q.qdq_mat_rowwise(x).data);
+    }
+    // full packed ARCQuant forward: reorder + two quantization stages +
+    // augmented GEMM, every stage pool-parallelised
+    let plan = LayerPlan::from_calibration(&x.col_absmax(), Format::Nvfp4);
+    let lin = PackedArcLinear::prepare(w, plan).unwrap();
+    outs.push(lin.forward(x).data);
+    outs.push(lin.forward_rowwise(x).data);
+    outs
+}
+
+#[test]
+fn single_vs_multi_thread_runs_are_bit_identical() {
+    let mut rng = Prng::new(400);
+    let x = outlier_mat(&mut rng, 6, 128);
+    let mut w = Mat::zeros(9, 128);
+    w.fill_random_normal(&mut rng, 0.5);
+
+    pool::set_thread_override(Some(1));
+    assert_eq!(pool::num_threads(), 1);
+    let single = run_all(&x, &w);
+    pool::set_thread_override(Some(8));
+    assert_eq!(pool::num_threads(), 8);
+    let multi = run_all(&x, &w);
+    pool::set_thread_override(None);
+    let default = run_all(&x, &w);
+
+    assert_eq!(single.len(), multi.len());
+    for (i, (a, b)) in single.iter().zip(&multi).enumerate() {
+        assert_eq!(a, b, "output {i} differs between 1 and 8 threads");
+    }
+    for (i, (a, b)) in single.iter().zip(&default).enumerate() {
+        assert_eq!(a, b, "output {i} differs between 1 and default threads");
+    }
+}

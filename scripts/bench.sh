@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# Repo-root bench runner: runs the GEMM + decode benches at pinned
+# shapes/seeds (seeds are hardcoded in the bench sources) and rewrites
+# BENCH_gemm_packed.json / BENCH_decode.json in the repo root — the
+# perf-trajectory files committed with each PR.
+#
+# Usage:
+#   scripts/bench.sh            # full run, rewrites BENCH_*.json
+#   scripts/bench.sh --smoke    # reduced shapes, no JSON rewrite (CI uses
+#                               # this to catch kernel-routing panics)
+#
+# ARCQUANT_THREADS pins the worker pool; defaults to 4 here so trajectory
+# numbers are comparable across differently-sized hosts.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export ARCQUANT_THREADS="${ARCQUANT_THREADS:-4}"
+
+# Smoke mode comes from the flag or an inherited ARCQUANT_BENCH_SMOKE —
+# the benches honor the env var either way, so the final message must too.
+SMOKE=0
+if [[ "${1:-}" == "--smoke" ]]; then
+  SMOKE=1
+elif [[ -n "${ARCQUANT_BENCH_SMOKE:-}" && "${ARCQUANT_BENCH_SMOKE}" != "0" ]]; then
+  SMOKE=1
+fi
+
+if [[ "$SMOKE" == "1" ]]; then
+  export ARCQUANT_BENCH_SMOKE=1
+  echo "# smoke mode: reduced shapes, BENCH_*.json left untouched"
+fi
+
+cargo bench --bench bench_gemm_aug
+cargo bench --bench bench_decode
+
+if [[ "$SMOKE" == "0" ]]; then
+  echo "# rewrote BENCH_gemm_packed.json and BENCH_decode.json"
+fi
