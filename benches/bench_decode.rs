@@ -17,12 +17,18 @@
 //! grows the caches — throughput at unbounded iteration counts would
 //! measure ever-longer attention spans.
 //!
+//! Also emits the **KV-format series** (`kv_format_rows` /
+//! `kv_capacity`): decode throughput with the K/V pages stored f32 vs
+//! NVFP4/MXFP4 on the same packed engine, and the max sequences a fixed
+//! page budget admits per format (the capacity lever `--kv-format`
+//! exposes — see `docs/kv_cache.md`).
+//!
 //! `ARCQUANT_BENCH_SMOKE=1` shrinks every shape and skips the JSON
 //! rewrite — CI uses it to catch kernel-routing panics cheaply.
 
 use arcquant::baselines::Method;
 use arcquant::coordinator::kvcache::KvPageManager;
-use arcquant::formats::{Format, RowQuantizer};
+use arcquant::formats::{Format, KvFormat, RowQuantizer};
 use arcquant::model::{sampling, Engine, EngineMode, KvCache, ModelConfig, Weights};
 use arcquant::tensor::{matmul_nt_packed, matmul_nt_packed_ref, Mat};
 use arcquant::util::bench::{smoke_mode, Bencher};
@@ -46,7 +52,7 @@ fn bench_cfg() -> Cfg {
     }
 }
 
-fn decode_tok_s(engine: &Engine, batch: usize, bc: &Cfg) -> (f64, f64) {
+fn decode_tok_s(engine: &Engine, batch: usize, bc: &Cfg, kv: KvFormat) -> (f64, f64) {
     let cfg = &engine.cfg;
     let mut rates = Vec::with_capacity(bc.samples);
     for sample in 0..bc.samples + 1 {
@@ -57,7 +63,7 @@ fn decode_tok_s(engine: &Engine, batch: usize, bc: &Cfg) -> (f64, f64) {
             let prompt: Vec<u16> = (0..bc.prompt_len)
                 .map(|i| ((i * 37 + s * 91 + sample * 13 + 7) % cfg.vocab) as u16)
                 .collect();
-            let mut c = KvCache::new(cfg, bc.prompt_len + bc.steps + 1);
+            let mut c = KvCache::with_format(cfg, bc.prompt_len + bc.steps + 1, kv);
             let logits = engine.prefill(&prompt, &mut c).unwrap();
             toks.push(sampling::argmax(&logits));
             caches.push(c);
@@ -120,6 +126,55 @@ fn bench_decode_site_kernels(rows: &mut Vec<Json>) -> f64 {
     stats::geomean(&speedups)
 }
 
+/// KV-format capacity series: max sequences a fixed page budget admits
+/// per [`KvFormat`], under the executor's worst-case admission rule
+/// (pure page accounting — exact, not timed). Returns the
+/// nvfp4-over-fp32 admitted-sequence ratio.
+fn bench_kv_capacity(
+    d: usize,
+    layers: usize,
+    page_budget: usize,
+    prompt_len: usize,
+    max_new: usize,
+    rows: &mut Vec<Json>,
+) -> f64 {
+    let worst = prompt_len + max_new;
+    let mut admitted_by: Vec<(KvFormat, usize)> = Vec::new();
+    for kv in KvFormat::ALL {
+        let mut pm = KvPageManager::with_format(page_budget, d, layers, kv);
+        let mut n = 0u64;
+        // executor-style admission: free pages must cover the sequence's
+        // own worst case before its prompt pages are reserved
+        while pm.free_pages() >= pm.pages_for(worst) && pm.admit(n, prompt_len).is_ok()
+        {
+            pm.extend(n, max_new).unwrap();
+            n += 1;
+        }
+        let admitted = n as usize;
+        println!(
+            "BENCH kv_capacity_{} page_budget={page_budget} worst_tokens={worst} \
+             tokens_per_page={} pages_per_seq={} admitted_sequences={admitted}",
+            kv.name(),
+            pm.page_tokens,
+            pm.pages_for(worst),
+        );
+        let mut row = Json::obj();
+        row.set("kv_format", Json::Str(kv.name().into()))
+            .set("page_budget", Json::Num(page_budget as f64))
+            .set("worst_case_tokens", Json::Num(worst as f64))
+            .set("tokens_per_page", Json::Num(pm.page_tokens as f64))
+            .set("pages_per_seq", Json::Num(pm.pages_for(worst) as f64))
+            .set("admitted_sequences", Json::Num(admitted as f64))
+            .set("bytes_per_page", Json::Num(pm.bytes_per_page as f64));
+        rows.push(row);
+        admitted_by.push((kv, admitted));
+    }
+    let get = |kv: KvFormat| {
+        admitted_by.iter().find(|(f, _)| *f == kv).map(|(_, n)| *n).unwrap()
+    };
+    get(KvFormat::Nvfp4) as f64 / get(KvFormat::Fp32) as f64
+}
+
 fn main() {
     let bc = bench_cfg();
     let cfg = ModelConfig::tiny_test();
@@ -146,7 +201,7 @@ fn main() {
         let engine =
             Engine::new(cfg.clone(), weights.clone(), mode, Some(&calib)).unwrap();
         for &batch in bc.batches {
-            let (tok_s, ms_per_step) = decode_tok_s(&engine, batch, &bc);
+            let (tok_s, ms_per_step) = decode_tok_s(&engine, batch, &bc, KvFormat::Fp32);
 
             // KV page accounting for this steady-state batch: every
             // sequence sits at prompt + steps tokens when the window ends.
@@ -184,6 +239,48 @@ fn main() {
     let site_geomean = bench_decode_site_kernels(&mut kernel_rows);
     println!("# decode-site kernel geomean speedup v2/v1: {site_geomean:.2}x");
 
+    // ---- KV-format series: same packed engine, K/V pages f32 vs 4-bit ----
+    let kv_engine = Engine::new(
+        cfg.clone(),
+        weights.clone(),
+        EngineMode::QuantizedPacked(Method::ArcQuant {
+            fmt: Format::Nvfp4,
+            max_s: Some(64),
+        }),
+        Some(&calib),
+    )
+    .unwrap();
+    let kv_batch = if smoke_mode() { 2usize } else { 4 };
+    let mut kv_rows: Vec<Json> = Vec::new();
+    let mut kv_tok_s: BTreeMap<&'static str, f64> = BTreeMap::new();
+    for kv in KvFormat::ALL {
+        let (tok_s, ms_per_step) = decode_tok_s(&kv_engine, kv_batch, &bc, kv);
+        println!(
+            "BENCH kv_decode_{}_b{kv_batch} tok_s={tok_s:.1} ms_per_tok={ms_per_step:.3}",
+            kv.name()
+        );
+        kv_tok_s.insert(kv.name(), tok_s);
+        let mut row = Json::obj();
+        row.set("kv_format", Json::Str(kv.name().into()))
+            .set("variant", Json::Str("arcquant-packed".into()))
+            .set("batch", Json::Num(kv_batch as f64))
+            .set("tokens_per_s", Json::Num(tok_s))
+            .set("ms_per_token", Json::Num(ms_per_step));
+        kv_rows.push(row);
+    }
+    println!(
+        "#   nvfp4-KV/fp32-KV decode throughput ratio {:.2}x",
+        kv_tok_s["nvfp4"] / kv_tok_s["fp32"]
+    );
+
+    // capacity at a fixed page budget (exact accounting, not timed)
+    let (kv_budget, kv_prompt, kv_new) =
+        if smoke_mode() { (16usize, 24usize, 8usize) } else { (64, 96, 32) };
+    let mut kv_cap_rows: Vec<Json> = Vec::new();
+    let cap_ratio =
+        bench_kv_capacity(cfg.d, cfg.l, kv_budget, kv_prompt, kv_new, &mut kv_cap_rows);
+    println!("#   nvfp4-KV/fp32-KV admitted-sequence ratio {cap_ratio:.2}x");
+
     if smoke_mode() {
         println!("# smoke mode: BENCH_decode.json not rewritten");
         return;
@@ -204,7 +301,10 @@ fn main() {
         .set("steps", Json::Num(bc.steps as f64))
         .set("rows", Json::Arr(rows))
         .set("decode_site_kernel", Json::Arr(kernel_rows))
-        .set("decode_site_kernel_geomean_speedup", Json::Num(site_geomean));
+        .set("decode_site_kernel_geomean_speedup", Json::Num(site_geomean))
+        .set("kv_format_rows", Json::Arr(kv_rows))
+        .set("kv_capacity", Json::Arr(kv_cap_rows))
+        .set("kv_capacity_ratio_nvfp4_over_fp32", Json::Num(cap_ratio));
     let path = "BENCH_decode.json";
     match std::fs::write(path, out.dump()) {
         Ok(()) => println!("# wrote {path}"),

@@ -17,8 +17,9 @@
 //! * **W4A8** — 4-bit weights (MXFP4) with 8-bit activations (MXFP8), the
 //!   accuracy ceiling ARCQuant aims to reach within W4A4.
 //!
-//! Each method exposes a [`QuantMethod`]-conforming `prepare`/`forward`
-//! so the eval harness and report generators treat them uniformly.
+//! Each method is a [`Method`] variant prepared into a [`PreparedLinear`]
+//! (`prepare`/`forward`), so the eval harness and report generators
+//! treat them uniformly.
 
 pub mod atom;
 pub mod flatquant;

@@ -30,11 +30,18 @@
 //! tick; retired ones free their slots the same tick they finish — no
 //! static batch boundaries, which is what keeps the decode batch full
 //! under mixed-length traffic.
+//!
+//! The K/V pages themselves are format-pluggable
+//! ([`GenerateServeConfig::kv_format`]): NVFP4/MXFP4 pages hold ~6–7×
+//! more tokens per page than f32, so the same `kv_pages` budget admits
+//! several times more concurrent sequences — the capacity lever measured
+//! in `docs/kv_cache.md`.
 
 use super::metrics::Metrics;
 use super::request::{FinishReason, GenerateRequest, GenerateResponse, Variant};
 use super::router::{Router, RouterConfig, RouterDecision};
 use crate::coordinator::kvcache::KvPageManager;
+use crate::formats::KvFormat;
 use crate::model::{sampling::Sampler, Engine, KvCache};
 use crate::util::{Prng, Timer};
 use std::collections::BTreeMap;
@@ -56,6 +63,10 @@ pub struct GenerateServeConfig {
     pub max_decode_batch: usize,
     /// total pages in the KV page pool shared by all sequences
     pub kv_pages: usize,
+    /// storage format of the K/V pages (engine caches + page accounting);
+    /// quantized formats pack ~6–7x more tokens per page, so the same
+    /// `kv_pages` budget admits several times more concurrent sequences
+    pub kv_format: KvFormat,
     /// pending-queue capacity before the router sheds load
     pub queue_cap: usize,
     pub router: RouterConfig,
@@ -72,6 +83,7 @@ impl Default for GenerateServeConfig {
             max_new_tokens: 16,
             max_decode_batch: 8,
             kv_pages: 256,
+            kv_format: KvFormat::Fp32,
             queue_cap: 256,
             router: RouterConfig::default(),
             sampler: Sampler::Greedy,
@@ -125,6 +137,10 @@ pub struct GenerateReport {
     pub kv_pages_peak: usize,
     pub kv_bytes_peak: u64,
     pub kv_bytes_per_page: u64,
+    /// K/V page storage format of the run (`KvFormat::name`).
+    pub kv_format: &'static str,
+    /// tokens one page held under that format (16 for f32)
+    pub kv_page_tokens: usize,
     pub platform: String,
     /// every per-request outcome, in completion order (tests replay these
     /// against a reference decode loop)
@@ -156,6 +172,7 @@ struct ExecOutcome {
     kv_pages_peak: usize,
     kv_bytes_peak: u64,
     kv_bytes_per_page: u64,
+    kv_page_tokens: usize,
 }
 
 /// Run a closed-loop generation workload against Rust-native engines —
@@ -274,6 +291,8 @@ pub fn serve_generate_native(
         kv_pages_peak: outcome.kv_pages_peak,
         kv_bytes_peak: outcome.kv_bytes_peak,
         kv_bytes_per_page: outcome.kv_bytes_per_page,
+        kv_format: cfg.kv_format.name(),
+        kv_page_tokens: outcome.kv_page_tokens,
         platform: "native-rust".to_string(),
         responses,
     })
@@ -291,9 +310,15 @@ fn run_generate_executor(
 ) -> ExecOutcome {
     let engine_for =
         |v: Variant| engines.iter().find(|(ev, _)| *ev == v).map(|(_, e)| *e);
-    let mut pages = KvPageManager::new(cfg.kv_pages, model_cfg.d, model_cfg.l);
+    let mut pages = KvPageManager::with_format(
+        cfg.kv_pages,
+        model_cfg.d,
+        model_cfg.l,
+        cfg.kv_format,
+    );
     let mut out = ExecOutcome {
         kv_bytes_per_page: pages.bytes_per_page,
+        kv_page_tokens: pages.page_tokens,
         ..Default::default()
     };
     let mut pending: Vec<GenerateRequest> = Vec::new();
@@ -351,8 +376,7 @@ fn run_generate_executor(
                 reject(&req, &tx_resp);
                 continue;
             };
-            let worst =
-                KvPageManager::pages_for(req.prompt.len() + req.max_new_tokens);
+            let worst = pages.pages_for(req.prompt.len() + req.max_new_tokens);
             if worst > cfg.kv_pages {
                 // could never complete, even on an idle pool
                 Metrics::inc(&metrics.rejected);
@@ -379,8 +403,11 @@ fn run_generate_executor(
             out.kv_bytes_peak = out.kv_bytes_peak.max(pages.bytes_used());
 
             let key = req.variant.artifact_key();
-            let mut cache =
-                KvCache::new(model_cfg, req.prompt.len() + req.max_new_tokens);
+            let mut cache = KvCache::with_format(
+                model_cfg,
+                req.prompt.len() + req.max_new_tokens,
+                cfg.kv_format,
+            );
             let t = Timer::start();
             let first_logits = match engine.prefill(&req.prompt, &mut cache) {
                 Ok(l) => l,

@@ -3,12 +3,24 @@
 //! Owns page accounting for decode sessions: fixed-size token pages,
 //! per-sequence page tables, allocation/free with an LRU-evictable
 //! freelist, and admission checks so the executor never over-commits
-//! memory. The actual K/V tensors live in the engine's `KvCache`; this
-//! module is the bookkeeping layer the coordinator uses for admission
-//! and backpressure.
+//! memory. The actual K/V tensors live in the engine's
+//! [`crate::model::KvCache`]; this module is the bookkeeping layer the
+//! coordinator uses for admission and backpressure.
+//!
+//! Pages are **fixed byte slabs**, sized by the f32 geometry
+//! ([`PAGE_TOKENS`] = 16 f32 tokens). How many tokens one slab holds
+//! depends on the KV storage format ([`KvFormat`]): quantized K/V rows
+//! are ~6–7× smaller than f32 at transformer widths, so an NVFP4/MXFP4
+//! page holds ~6–7× more tokens and the same page budget admits several
+//! times more concurrent sequences (`docs/kv_cache.md` has the measured
+//! table; the per-format math lives in [`KvFormat::bytes_per_token`]).
 
+use crate::formats::KvFormat;
 use std::collections::BTreeMap;
 
+/// Tokens per page in the reference f32 format. This also fixes the page
+/// *byte* size for every format: one page is always the slab that holds
+/// 16 f32 tokens (2 · 16 · d · layers · 4 bytes).
 pub const PAGE_TOKENS: usize = 16;
 
 #[derive(Debug, PartialEq, Eq)]
@@ -27,17 +39,43 @@ pub struct KvPageManager {
     total_pages: usize,
     free: Vec<usize>,
     seqs: BTreeMap<u64, SeqAlloc>,
-    /// bytes per page = 2 (K,V) * page_tokens * d * layers * 4 bytes
+    /// K/V storage format the pages account for.
+    pub format: KvFormat,
+    /// Tokens one page holds under `format` (16 for f32; the full slab
+    /// divided by the format's real bytes/token otherwise).
+    pub page_tokens: usize,
+    /// Bytes one fully-occupied page stores under `format` =
+    /// `page_tokens · bytes_per_token` (equals the slab for f32; slightly
+    /// below it for quantized formats, whose token size does not divide
+    /// the slab evenly).
     pub bytes_per_page: u64,
 }
 
 impl KvPageManager {
+    /// An f32-format manager — the historical constructor and geometry.
     pub fn new(total_pages: usize, d: usize, layers: usize) -> KvPageManager {
+        Self::with_format(total_pages, d, layers, KvFormat::Fp32)
+    }
+
+    /// A manager accounting pages in `format`. The page byte slab is
+    /// fixed by the f32 geometry, so comparing formats at the same
+    /// `total_pages` compares equal memory budgets.
+    pub fn with_format(
+        total_pages: usize,
+        d: usize,
+        layers: usize,
+        format: KvFormat,
+    ) -> KvPageManager {
+        let slab = PAGE_TOKENS as u64 * KvFormat::Fp32.bytes_per_token(d, layers);
+        let per_token = format.bytes_per_token(d, layers);
+        let page_tokens = ((slab / per_token) as usize).max(1);
         KvPageManager {
             total_pages,
             free: (0..total_pages).rev().collect(),
             seqs: BTreeMap::new(),
-            bytes_per_page: (2 * PAGE_TOKENS * d * layers * 4) as u64,
+            format,
+            page_tokens,
+            bytes_per_page: page_tokens as u64 * per_token,
         }
     }
 
@@ -57,19 +95,19 @@ impl KvPageManager {
         self.used_pages() as u64 * self.bytes_per_page
     }
 
-    /// Pages needed to hold `tokens` tokens.
-    pub fn pages_for(tokens: usize) -> usize {
-        tokens.div_ceil(PAGE_TOKENS)
+    /// Pages needed to hold `tokens` tokens under this manager's format.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_tokens)
     }
 
     /// Can a sequence of `tokens` tokens be admitted right now?
     pub fn can_admit(&self, tokens: usize) -> bool {
-        Self::pages_for(tokens) <= self.free.len()
+        self.pages_for(tokens) <= self.free.len()
     }
 
     /// Reserve pages for a new sequence. All-or-nothing.
     pub fn admit(&mut self, seq_id: u64, tokens: usize) -> Result<(), PageError> {
-        let need = Self::pages_for(tokens);
+        let need = self.pages_for(tokens);
         if need > self.free.len() {
             return Err(PageError::OutOfPages);
         }
@@ -81,11 +119,12 @@ impl KvPageManager {
     /// Extend a sequence by `new_tokens` (decode steps), allocating pages
     /// as page boundaries are crossed.
     pub fn extend(&mut self, seq_id: u64, new_tokens: usize) -> Result<(), PageError> {
+        let page_tokens = self.page_tokens;
         let alloc = self
             .seqs
             .get_mut(&seq_id)
             .ok_or(PageError::UnknownSequence)?;
-        let need_total = Self::pages_for(alloc.tokens + new_tokens);
+        let need_total = (alloc.tokens + new_tokens).div_ceil(page_tokens);
         let extra = need_total.saturating_sub(alloc.pages.len());
         if extra > self.free.len() {
             return Err(PageError::OutOfPages);
@@ -120,7 +159,7 @@ impl KvPageManager {
             seen[p] = true;
         }
         for (id, alloc) in &self.seqs {
-            if alloc.pages.len() != Self::pages_for(alloc.tokens) {
+            if alloc.pages.len() != self.pages_for(alloc.tokens) {
                 return Err(format!("seq {id}: page count mismatch"));
             }
             for &p in &alloc.pages {
@@ -180,6 +219,65 @@ mod tests {
         let m = KvPageManager::new(10, 256, 4);
         assert_eq!(m.bytes_per_page, (2 * 16 * 256 * 4 * 4) as u64);
         assert_eq!(m.bytes_used(), 0);
+        assert_eq!(m.page_tokens, PAGE_TOKENS);
+        assert_eq!(m.format, KvFormat::Fp32);
+    }
+
+    #[test]
+    fn quantized_page_geometry() {
+        // d=128, l=2: slab = 16·2048 = 32768 B. NVFP4 tokens are 304 B
+        // (→ 107 tokens/page), MXFP4 272 B (→ 120 tokens/page) — the
+        // per-format page-size math docs/kv_cache.md tabulates.
+        let nv = KvPageManager::with_format(8, 128, 2, KvFormat::Nvfp4);
+        assert_eq!(nv.page_tokens, 107);
+        assert_eq!(nv.bytes_per_page, 107 * 304);
+        let mx = KvPageManager::with_format(8, 128, 2, KvFormat::Mxfp4);
+        assert_eq!(mx.page_tokens, 120);
+        assert_eq!(mx.bytes_per_page, 120 * 272);
+        // a full quantized page never exceeds the f32 slab
+        let slab = 16 * KvFormat::Fp32.bytes_per_token(128, 2);
+        assert!(nv.bytes_per_page <= slab && mx.bytes_per_page <= slab);
+        // pages-per-token shrinks accordingly
+        let fp = KvPageManager::new(8, 128, 2);
+        assert_eq!(fp.pages_for(128), 8);
+        assert_eq!(nv.pages_for(128), 2);
+        assert_eq!(mx.pages_for(128), 2);
+    }
+
+    #[test]
+    fn quantized_kv_admits_at_least_3x_more_sequences() {
+        // The acceptance-criterion math: at the same page budget, worst
+        // case 128 tokens/sequence (96 prompt + 32 budget), NVFP4 KV
+        // admits ≥ 3× the sequences f32 KV does.
+        let admitted = |fmt: KvFormat| -> usize {
+            let mut m = KvPageManager::with_format(64, 128, 2, fmt);
+            let mut n = 0u64;
+            // executor-style worst-case admission: require headroom for
+            // the full budget before reserving the prompt pages
+            while m.free_pages() >= m.pages_for(128) && m.admit(n, 96).is_ok() {
+                m.extend(n, 32).unwrap();
+                n += 1;
+            }
+            m.check_invariants().unwrap();
+            n as usize
+        };
+        let fp = admitted(KvFormat::Fp32);
+        let nv = admitted(KvFormat::Nvfp4);
+        assert_eq!(fp, 8, "64 pages / 8 pages per seq");
+        assert_eq!(nv, 32, "64 pages / 2 pages per seq");
+        assert!(nv >= 3 * fp, "nvfp4 {nv} vs fp32 {fp}");
+    }
+
+    #[test]
+    fn quantized_format_keeps_allocator_invariants() {
+        let mut m = KvPageManager::with_format(4, 128, 2, KvFormat::Nvfp4);
+        m.admit(1, 107).unwrap(); // exactly one page
+        assert_eq!(m.used_pages(), 1);
+        m.extend(1, 1).unwrap(); // 108 tokens → 2 pages
+        assert_eq!(m.used_pages(), 2);
+        assert_eq!(m.bytes_used(), 2 * m.bytes_per_page);
+        assert_eq!(m.release(1).unwrap(), 2);
+        m.check_invariants().unwrap();
     }
 
     #[test]

@@ -10,5 +10,5 @@
 pub mod ppl;
 pub mod tasks;
 
-pub use ppl::{perplexity, PplResult};
+pub use ppl::{decode_perplexity, perplexity, PplResult};
 pub use tasks::{task_suite, TaskResult, TaskSpec};

@@ -2,9 +2,13 @@
 //!
 //! PPL = exp(mean NLL of next-token predictions), computed over
 //! non-overlapping windows — the standard lm-eval WikiText2 protocol,
-//! scaled down.
+//! scaled down. [`perplexity`] runs full-sequence forwards (the accuracy
+//! tables' protocol); [`decode_perplexity`] runs the *decode path* —
+//! prefill + teacher-forced `decode_step`s over a [`KvFormat`]-selected
+//! KV cache — which is what quantized K/V pages actually perturb.
 
-use crate::model::Engine;
+use crate::formats::KvFormat;
+use crate::model::{Engine, KvCache};
 use crate::util::pool;
 
 #[derive(Clone, Debug)]
@@ -62,6 +66,47 @@ pub fn perplexity(
     }
 }
 
+/// Perplexity of the **decode path** over the leading tokens of `stream`:
+/// prefill `stream[..prompt_len]` into a KV cache stored in `kv_format`,
+/// then teacher-force `steps` `decode_step`s (input = the stream token,
+/// NLL scored against the next stream token). This is the protocol the
+/// KV-cache accuracy check uses: weights/activations are identical across
+/// runs, so any NLL delta between formats is attributable to K/V page
+/// quantization alone.
+pub fn decode_perplexity(
+    engine: &Engine,
+    stream: &[u16],
+    prompt_len: usize,
+    steps: usize,
+    kv_format: KvFormat,
+) -> PplResult {
+    assert!(
+        stream.len() > prompt_len + steps,
+        "stream too short: {} tokens for prompt {prompt_len} + {steps} steps",
+        stream.len()
+    );
+    let mut cache =
+        KvCache::with_format(&engine.cfg, prompt_len + steps + 1, kv_format);
+    let logits = engine
+        .prefill(&stream[..prompt_len], &mut cache)
+        .expect("capacity covers prompt + steps");
+    let mut nll = token_nll(&logits, stream[prompt_len] as usize);
+    for s in 0..steps {
+        let logits = engine
+            .decode_step(stream[prompt_len + s], &mut cache)
+            .expect("capacity covers prompt + steps");
+        nll += token_nll(&logits, stream[prompt_len + s + 1] as usize);
+    }
+    let tokens = steps + 1;
+    let mean = nll / tokens as f64;
+    PplResult {
+        ppl: mean.exp(),
+        nll: mean,
+        tokens,
+        windows: 1,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,6 +136,57 @@ mod tests {
         assert!(r.tokens > 0 && r.windows == 4);
         // untrained: ppl should be within a loose band of |V| = 256
         assert!(r.ppl > 20.0 && r.ppl < 5000.0, "ppl={}", r.ppl);
+    }
+
+    #[test]
+    fn nvfp4_kv_decode_ppl_bounded_vs_fp32_kv() {
+        // The KV-quantization accuracy bound: same engine, same
+        // teacher-forced decode schedule over the seed stream — NVFP4 and
+        // MXFP4 K/V pages must stay within a tight NLL band of the f32
+        // cache (the only error source is K/V block quantization).
+        let cfg = ModelConfig::tiny_test();
+        let w = Weights::synthetic(&cfg, 9);
+        let e = Engine::new(cfg, w, EngineMode::Fp32, None).unwrap();
+        let stream: Vec<u16> =
+            (0..400u32).map(|i| ((i * 131 + 17) % 256) as u16).collect();
+        let fp = decode_perplexity(&e, &stream, 32, 24, KvFormat::Fp32);
+        assert!(fp.nll.is_finite() && fp.nll > 0.0);
+        for kv in [KvFormat::Nvfp4, KvFormat::Mxfp4] {
+            let q = decode_perplexity(&e, &stream, 32, 24, kv);
+            assert!(q.nll.is_finite() && q.nll > 0.0, "{kv:?}");
+            let log_ratio = (q.nll / fp.nll).ln().abs();
+            assert!(
+                log_ratio < 0.35,
+                "{kv:?}: decode NLL {} vs fp32 {} (|ln ratio| {log_ratio})",
+                q.nll,
+                fp.nll
+            );
+        }
+    }
+
+    #[test]
+    fn decode_ppl_fp32_kv_matches_full_forward_ballpark() {
+        // The decode-path protocol scores the same next-token predictions
+        // a full forward over the same tokens would (approximately: the
+        // incremental path accumulates per-step rounding).
+        let cfg = ModelConfig::tiny_test();
+        let w = Weights::synthetic(&cfg, 9);
+        let e = Engine::new(cfg, w, EngineMode::Fp32, None).unwrap();
+        let stream: Vec<u16> =
+            (0..200u32).map(|i| ((i * 7 + 3) % 256) as u16).collect();
+        let dec = decode_perplexity(&e, &stream, 16, 16, KvFormat::Fp32);
+        let full = e.forward(&stream[..33], None, None);
+        let mut nll = 0.0;
+        for i in 15..32 {
+            nll += token_nll(full.row(i), stream[i + 1] as usize);
+        }
+        let mean = nll / 17.0;
+        assert!(
+            (dec.nll / mean - 1.0).abs() < 0.05,
+            "decode {} vs forward {}",
+            dec.nll,
+            mean
+        );
     }
 
     #[test]

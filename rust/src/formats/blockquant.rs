@@ -390,7 +390,38 @@ impl RowQuantizer {
     }
 }
 
+impl RowQuantizer {
+    /// Append one f32 row to a growing [`QuantizedMat`], quantized with
+    /// its **own** tensor scale (per-token scaling) — the KV-cache write
+    /// path: each cached token row packs exactly as if it were its own
+    /// [1, K] matrix ([`Self::quantize_rowwise`] contract), so appending
+    /// never re-quantizes history. `qm` must have been created for this
+    /// quantizer's format and `row.len() == qm.cols`.
+    pub fn append_row(&self, qm: &mut QuantizedMat, row: &[f32]) {
+        debug_assert_eq!(qm.fmt, self.fmt, "append_row: format mismatch");
+        assert_eq!(row.len(), qm.cols, "append_row: row width != cols");
+        let amax = row.iter().fold(0.0f32, |mm, &v| mm.max(v.abs()));
+        let ts = self.tensor_scale(amax);
+        self.pack_row(row, ts, &mut qm.codes, &mut qm.scale_codes, &mut qm.scales_f32);
+        qm.rows += 1;
+        qm.tensor_scale = if qm.rows == 1 { ts } else { qm.tensor_scale.max(ts) };
+    }
+}
+
 impl QuantizedMat {
+    /// An empty (0-row) matrix ready for [`RowQuantizer::append_row`].
+    pub fn empty(fmt: Format, cols: usize) -> QuantizedMat {
+        QuantizedMat {
+            fmt,
+            rows: 0,
+            cols,
+            codes: Vec::new(),
+            scale_codes: Vec::new(),
+            scales_f32: Vec::new(),
+            tensor_scale: 1.0,
+        }
+    }
+
     /// Blocks per row (the last one may be ragged, padded with zero codes).
     #[inline]
     pub fn blocks_per_row(&self) -> usize {
@@ -493,14 +524,23 @@ impl QuantizedMat {
     /// Decode back to f32 (rows in parallel).
     pub fn dequantize(&self) -> Mat {
         let mut out = Mat::zeros(self.rows, self.cols);
+        self.dequant_into(&mut out.data);
+        out
+    }
+
+    /// Decode every row into a caller-provided buffer of `rows · cols`
+    /// elements (rows in parallel). The KV decode-on-access path uses this
+    /// with pooled scratch ([`crate::util::pool::take_f32`]) so attention
+    /// reads never allocate a fresh matrix per layer per tick.
+    pub fn dequant_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.rows * self.cols, "dequant_into: size mismatch");
         if self.rows == 0 || self.cols == 0 {
-            return out;
+            return;
         }
         let cols = self.cols;
-        pool::par_chunks_mut(&mut out.data, cols, |offset, row| {
+        pool::par_chunks_mut(out, cols, |offset, row| {
             self.dequant_row(offset / cols, row);
         });
-        out
     }
 
     /// Assemble a new matrix from whole blocks of source matrices: output
@@ -960,5 +1000,59 @@ mod tests {
         let m = Mat::zeros(8, 128);
         let qm = RowQuantizer::new(Format::Nvfp4).quantize(&m);
         assert_eq!(qm.packed_bytes(), Format::Nvfp4.storage_bytes(8, 128));
+    }
+
+    #[test]
+    fn append_row_equals_quantize_rowwise_bit_exact() {
+        // The KV-cache write contract: growing a matrix one row at a time
+        // with append_row produces exactly the codes/scales of a one-shot
+        // quantize_rowwise of the full matrix — including ragged cols.
+        let mut rng = Prng::new(93);
+        for cols in [41usize, 64, 96] {
+            let m = rand_mat(&mut rng, 6, cols, true);
+            for fmt in [Format::Nvfp4, Format::Mxfp4, Format::Int4 { group: 16 }] {
+                let q = RowQuantizer::new(fmt);
+                let want = q.quantize_rowwise(&m);
+                let mut grown = QuantizedMat::empty(fmt, cols);
+                for r in 0..m.rows {
+                    q.append_row(&mut grown, m.row(r));
+                }
+                assert_eq!(grown.rows, m.rows);
+                assert_eq!(grown.codes, want.codes, "{fmt:?} cols={cols}");
+                assert_eq!(grown.scale_codes, want.scale_codes, "{fmt:?}");
+                assert_eq!(grown.scales_f32, want.scales_f32, "{fmt:?}");
+                assert_eq!(grown.dequantize().data, want.dequantize().data);
+            }
+        }
+    }
+
+    #[test]
+    fn append_row_never_requantizes_history() {
+        // Appending a huge-magnitude token must leave every previously
+        // packed row's codes and scales untouched (quantize-once-on-write).
+        let mut rng = Prng::new(94);
+        let m = rand_mat(&mut rng, 3, 64, false);
+        let q = RowQuantizer::new(Format::Nvfp4);
+        let mut grown = QuantizedMat::empty(Format::Nvfp4, 64);
+        for r in 0..m.rows {
+            q.append_row(&mut grown, m.row(r));
+        }
+        let codes_before = grown.codes.clone();
+        let scales_before = grown.scales_f32.clone();
+        let spike: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) * 100.0).collect();
+        q.append_row(&mut grown, &spike);
+        assert_eq!(&grown.codes[..codes_before.len()], &codes_before[..]);
+        assert_eq!(&grown.scales_f32[..scales_before.len()], &scales_before[..]);
+    }
+
+    #[test]
+    fn dequant_into_matches_dequantize() {
+        let mut rng = Prng::new(95);
+        let m = rand_mat(&mut rng, 4, 50, true);
+        let qm = RowQuantizer::new(Format::Nvfp4).quantize(&m);
+        let full = qm.dequantize();
+        let mut buf = vec![7.0f32; 4 * 50];
+        qm.dequant_into(&mut buf);
+        assert_eq!(buf, full.data);
     }
 }

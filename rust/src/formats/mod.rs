@@ -20,6 +20,76 @@ pub use spec::{format_spec, table7_formats, FormatSpec};
 
 use crate::numerics::FpKind;
 
+/// Storage format of the paged KV cache (the serving-side memory knob).
+///
+/// Weights and activations already run packed NVFP4 end-to-end; at decode
+/// time the KV cache is what bounds how many sequences fit a fixed memory
+/// budget. `Fp32` keeps the pre-quantization behavior bit-identical
+/// (pinned by tests); the 4-bit formats store K/V token rows as real
+/// block-quantized codes ([`QuantizedMat`] rows, quantized once on write
+/// with a per-token tensor scale) and decode on access through the same
+/// LUT path the packed GEMM uses.
+///
+/// See `docs/kv_cache.md` for the design and the measured
+/// capacity/throughput table.
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq, Hash)]
+pub enum KvFormat {
+    /// Full-precision K/V rows (4 bytes/element) — the reference path.
+    #[default]
+    Fp32,
+    /// NVFP4 K/V pages: E2M1 elements, per-16 E4M3 block scales, per-token
+    /// FP32 tensor scale.
+    Nvfp4,
+    /// MXFP4 K/V pages: E2M1 elements, per-32 E8M0 block scales.
+    Mxfp4,
+}
+
+impl KvFormat {
+    /// The block-quantized element format, or `None` for f32 storage.
+    pub fn format(self) -> Option<Format> {
+        match self {
+            KvFormat::Fp32 => None,
+            KvFormat::Nvfp4 => Some(Format::Nvfp4),
+            KvFormat::Mxfp4 => Some(Format::Mxfp4),
+        }
+    }
+
+    /// Bytes one cached token occupies across `layers` layers (K and V,
+    /// one [1, d] row each). Quantized formats use the real packed
+    /// arithmetic ([`Format::storage_bytes`] of a single row, which
+    /// includes block scales and the per-row tensor scale).
+    pub fn bytes_per_token(self, d: usize, layers: usize) -> u64 {
+        let per_row = match self.format() {
+            None => (d * 4) as u64,
+            Some(f) => f.storage_bytes(1, d),
+        };
+        2 * layers as u64 * per_row
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KvFormat::Fp32 => "fp32",
+            KvFormat::Nvfp4 => "nvfp4",
+            KvFormat::Mxfp4 => "mxfp4",
+        }
+    }
+
+    /// `fp16` is deliberately **not** an alias: KV pages are stored as
+    /// 4-byte f32 rows, and silently mapping `fp16` here would let a user
+    /// believe they bought 2-byte storage and 2× capacity.
+    pub fn parse(s: &str) -> Option<KvFormat> {
+        match s {
+            "fp32" | "f32" => Some(KvFormat::Fp32),
+            "nvfp4" => Some(KvFormat::Nvfp4),
+            "mxfp4" => Some(KvFormat::Mxfp4),
+            _ => None,
+        }
+    }
+
+    /// Every KV format, reference first (report/bench iteration order).
+    pub const ALL: [KvFormat; 3] = [KvFormat::Fp32, KvFormat::Nvfp4, KvFormat::Mxfp4];
+}
+
 /// Every quantization format exercised by the paper's experiments.
 #[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
 pub enum Format {
@@ -157,5 +227,33 @@ mod tests {
         // 17 cols in NVFP4 → padded to 32 (2 blocks).
         let b = Format::Nvfp4.storage_bytes(1, 17);
         assert_eq!(b, Format::Nvfp4.storage_bytes(1, 32));
+    }
+
+    #[test]
+    fn kv_format_parse_and_names_roundtrip() {
+        for kf in KvFormat::ALL {
+            assert_eq!(KvFormat::parse(kf.name()), Some(kf));
+        }
+        assert_eq!(KvFormat::parse("f32"), Some(KvFormat::Fp32));
+        assert_eq!(KvFormat::parse("bogus"), None);
+        assert_eq!(KvFormat::default(), KvFormat::Fp32);
+    }
+
+    #[test]
+    fn kv_format_bytes_per_token() {
+        // d=128, 2 layers: fp32 = 2·2·128·4 = 2048 B/token.
+        assert_eq!(KvFormat::Fp32.bytes_per_token(128, 2), 2048);
+        // NVFP4 row of 128: 64 B codes + 8 B scales + 4 B tensor = 76 B
+        // → 2·2·76 = 304 B/token (6.7× smaller).
+        assert_eq!(KvFormat::Nvfp4.bytes_per_token(128, 2), 304);
+        // MXFP4 row of 128: 64 B codes + 4 B scales = 68 B → 272 B/token.
+        assert_eq!(KvFormat::Mxfp4.bytes_per_token(128, 2), 272);
+        // quantized KV is >4x denser than f32 at transformer widths
+        for kf in [KvFormat::Nvfp4, KvFormat::Mxfp4] {
+            assert!(
+                KvFormat::Fp32.bytes_per_token(128, 2)
+                    >= 4 * kf.bytes_per_token(128, 2)
+            );
+        }
     }
 }

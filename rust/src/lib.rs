@@ -46,10 +46,21 @@
 //! activation quantizers pin the NVFP4 tensor scale per token), so
 //! serving never changes the numbers the accuracy tables report.
 //!
-//! See `docs/packed_path.md` for the layout details (Appendix-D K+S
-//! interleaving, duplicated outlier blocks), `docs/decode_serving.md` for
-//! the generation path, `DESIGN.md` for the experiment-by-experiment
-//! reproduction map and `EXPERIMENTS.md` for measured results.
+//! The KV cache itself is format-pluggable ([`formats::KvFormat`]):
+//! `fp32` pages keep the reference layout bit-identical, while `nvfp4` /
+//! `mxfp4` pages store real block-quantized codes — quantized once per
+//! token on write, decoded on access — packing ~6–7× more tokens into
+//! the same page budget and therefore admitting several times more
+//! concurrent sequences (`arcquant serve --native --generate N
+//! --kv-format nvfp4`).
+//!
+//! Documentation map: `docs/README.md` is the index —
+//! `docs/ARCHITECTURE.md` (module map + serve-request dataflow),
+//! `docs/packed_path.md` (Appendix-D K+S interleaving, duplicated
+//! outlier blocks, the v2 kernels), `docs/decode_serving.md` (the
+//! generation path) and `docs/kv_cache.md` (quantized KV pages:
+//! geometry, capacity, accuracy guards). The top-level `README.md`
+//! carries the full CLI reference, pinned to the dispatcher by test.
 
 pub mod baselines;
 pub mod calib;

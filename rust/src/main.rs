@@ -15,7 +15,7 @@ use arcquant::coordinator::{
     GenerateReport, GenerateServeConfig, NativeServeConfig, RouterConfig, ServeConfig,
     ServeReport, Variant,
 };
-use arcquant::formats::Format;
+use arcquant::formats::{Format, KvFormat};
 use arcquant::model::{Engine, EngineMode, Sampler};
 use arcquant::report::{ctx::model_domain, figures, tables, Ctx, EvalBudget};
 use arcquant::util::cli::Args;
@@ -63,6 +63,9 @@ USAGE: arcquant <subcommand> [--flags]
                              the continuous-batching decode executor —
                              needs --native)
             [--prompt-len 32] [--kv-pages 512] [--decode-batch 8]
+            [--kv-format fp32|nvfp4|mxfp4]  (K/V page storage: 4-bit
+                          formats pack ~6-7x more tokens per page, so the
+                          same --kv-pages budget admits more sequences)
             [--top-k K]  (sample instead of greedy decode)
   calibrate --model NAME [--windows 8] [--window-len 128] [--out FILE]
   eval      --model NAME --method fp16|rtn|smooth|quarot|atom|flatquant|w4a8|arcquant
@@ -178,11 +181,14 @@ fn print_generate_report(r: &GenerateReport) {
         r.completed, r.rejected, r.wall_ms, r.p50_ms, r.p90_ms, r.p99_ms
     );
     println!(
-        "kv pages: {} total, {} peak used ({:.2} MB peak of {:.0} KB/page)",
+        "kv pages: {} total, {} peak used ({:.2} MB peak of {:.1} KB/page, \
+         {} format, {} tokens/page)",
         r.kv_pages_total,
         r.kv_pages_peak,
         r.kv_bytes_peak as f64 / (1u64 << 20) as f64,
-        r.kv_bytes_per_page as f64 / 1024.0
+        r.kv_bytes_per_page as f64 / 1024.0,
+        r.kv_format,
+        r.kv_page_tokens
     );
     for (v, s) in &r.per_variant {
         println!(
@@ -314,12 +320,18 @@ fn cmd_serve(args: &Args) -> i32 {
                     return 2;
                 }
             };
+            let kv_format = args.str_or("kv-format", "fp32");
+            let Some(kv_format) = KvFormat::parse(&kv_format) else {
+                eprintln!("unknown --kv-format {kv_format} (fp32|nvfp4|mxfp4)");
+                return 2;
+            };
             let gcfg = GenerateServeConfig {
                 workload,
                 prompt_len,
                 max_new_tokens: max_new,
                 max_decode_batch: decode_batch,
                 kv_pages,
+                kv_format,
                 sampler,
                 // the router's prompt cap must track the requested prompt
                 // length or every request would be shed at the front door

@@ -9,7 +9,9 @@
 
 use super::{site_names, ModelConfig, Weights};
 use crate::baselines::{ExecPath, LayerCalib, Method, PreparedLinear};
+use crate::formats::{KvFormat, QuantizedMat, RowQuantizer};
 use crate::tensor::{matmul_nt, Mat};
+use crate::util::pool;
 use std::collections::BTreeMap;
 
 #[derive(Clone, Debug, PartialEq)]
@@ -63,31 +65,84 @@ pub struct Engine {
     rope_freqs: Vec<f32>,
 }
 
+/// Per-layer K/V storage of one cached sequence, selected by
+/// [`KvFormat`].
+///
+/// The `F32` arm is byte-for-byte the pre-quantization layout (plain
+/// row-appended [T, D] matrices) and is never routed through a
+/// quantizer, which is what keeps `KvFormat::Fp32` bit-identical to the
+/// historical decode path. The `Quant` arm stores each side as a growing
+/// [`QuantizedMat`]: one packed row per cached token, quantized once on
+/// write with its own per-token tensor scale.
+enum KvStore {
+    F32 { k: Vec<Mat>, v: Vec<Mat> },
+    Quant { k: Vec<QuantizedMat>, v: Vec<QuantizedMat> },
+}
+
 /// KV cache for incremental decode: per layer, K and V as [T_cur, D]
 /// row-appended matrices (single sequence; the coordinator batches at a
 /// higher level).
+///
+/// Storage is format-pluggable ([`KvFormat`]): `Fp32` keeps the f32 rows
+/// of the pre-quantization path (bit-identical, pinned by tests), while
+/// `Nvfp4`/`Mxfp4` hold real block-quantized codes — each appended token
+/// row packs as its own `[1, D]` matrix (per-token tensor scale, same
+/// contract as [`RowQuantizer::quantize_rowwise`]), so history is never
+/// re-quantized and attention decodes on access through the same LUT
+/// path the packed GEMM uses. See `docs/kv_cache.md`.
 ///
 /// `capacity` is a hard bound in tokens: [`Engine::prefill`],
 /// [`Engine::decode_step`] and [`Engine::decode_batch`] pre-check it and
 /// return `Err` instead of over-committing; the internal append asserts
 /// it as a backstop for direct [`Engine::forward`] users.
 pub struct KvCache {
-    pub k: Vec<Mat>,
-    pub v: Vec<Mat>,
+    store: KvStore,
+    format: KvFormat,
+    /// Model width D — the row length of every cached K/V row.
+    d: usize,
     pub capacity: usize,
 }
 
 impl KvCache {
+    /// An `Fp32` cache — the historical constructor and layout.
     pub fn new(cfg: &ModelConfig, capacity: usize) -> KvCache {
+        Self::with_format(cfg, capacity, KvFormat::Fp32)
+    }
+
+    /// A cache whose K/V pages are stored in `format`.
+    pub fn with_format(cfg: &ModelConfig, capacity: usize, format: KvFormat) -> KvCache {
+        let store = match format.format() {
+            None => KvStore::F32 {
+                k: (0..cfg.l).map(|_| Mat::zeros(0, cfg.d)).collect(),
+                v: (0..cfg.l).map(|_| Mat::zeros(0, cfg.d)).collect(),
+            },
+            Some(f) => KvStore::Quant {
+                k: (0..cfg.l).map(|_| QuantizedMat::empty(f, cfg.d)).collect(),
+                v: (0..cfg.l).map(|_| QuantizedMat::empty(f, cfg.d)).collect(),
+            },
+        };
         KvCache {
-            k: (0..cfg.l).map(|_| Mat::zeros(0, cfg.d)).collect(),
-            v: (0..cfg.l).map(|_| Mat::zeros(0, cfg.d)).collect(),
+            store,
+            format,
+            d: cfg.d,
             capacity,
         }
     }
 
+    /// The storage format of this cache's K/V pages.
+    pub fn format(&self) -> KvFormat {
+        self.format
+    }
+
+    fn layer_len(&self, layer: usize) -> usize {
+        match &self.store {
+            KvStore::F32 { k, .. } => k[layer].rows,
+            KvStore::Quant { k, .. } => k[layer].rows,
+        }
+    }
+
     pub fn len(&self) -> usize {
-        self.k[0].rows
+        self.layer_len(0)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -113,31 +168,68 @@ impl KvCache {
 
     fn append_rows(&mut self, layer: usize, k_rows: &[f32], v_rows: &[f32], n: usize) {
         assert!(
-            self.k[layer].rows + n <= self.capacity,
+            self.layer_len(layer) + n <= self.capacity,
             "kv cache over capacity: {} cached + {n} new > {} (pre-check with \
              ensure_room / the page manager before forwarding)",
-            self.k[layer].rows,
+            self.layer_len(layer),
             self.capacity
         );
-        let push = |dst: &mut Mat, src: &[f32]| {
-            dst.data.extend_from_slice(src);
-            dst.rows += n;
-        };
-        push(&mut self.k[layer], k_rows);
-        push(&mut self.v[layer], v_rows);
+        let d = self.d;
+        match &mut self.store {
+            KvStore::F32 { k, v } => {
+                let push = |dst: &mut Mat, src: &[f32]| {
+                    dst.data.extend_from_slice(src);
+                    dst.rows += n;
+                };
+                push(&mut k[layer], k_rows);
+                push(&mut v[layer], v_rows);
+            }
+            KvStore::Quant { k, v } => {
+                // Quantize-once-per-token on write: each new row packs
+                // with its own tensor scale; rows already in the cache are
+                // untouched.
+                let q = RowQuantizer::new(k[layer].fmt);
+                for r in 0..n {
+                    q.append_row(&mut k[layer], &k_rows[r * d..(r + 1) * d]);
+                    q.append_row(&mut v[layer], &v_rows[r * d..(r + 1) * d]);
+                }
+            }
+        }
     }
 
     fn append(&mut self, layer: usize, k_rows: &Mat, v_rows: &Mat) {
         self.append_rows(layer, &k_rows.data, &v_rows.data, k_rows.rows);
     }
 
-    /// Bytes held (Table 8 memory accounting).
+    /// One layer's K and V decoded to f32 `[T, D]` matrices (a copy —
+    /// diagnostic/test accessor, not the attention hot path, which
+    /// decodes into pooled scratch).
+    pub fn layer_f32(&self, layer: usize) -> (Mat, Mat) {
+        match &self.store {
+            KvStore::F32 { k, v } => (k[layer].clone(), v[layer].clone()),
+            KvStore::Quant { k, v } => (k[layer].dequantize(), v[layer].dequantize()),
+        }
+    }
+
+    /// Bytes held (Table 8 / serving memory accounting) — **real** per
+    /// format: f32 counts 4 bytes/element, quantized formats count the
+    /// packed arithmetic of one `[1, D]` row per cached token (codes +
+    /// block scales + the per-token tensor scale where the format has
+    /// one), mirroring [`Engine::weight_bytes`]'s honest packed sizes.
     pub fn bytes(&self) -> u64 {
-        self.k
-            .iter()
-            .zip(&self.v)
-            .map(|(k, v)| (k.data.len() + v.data.len()) as u64 * 4)
-            .sum()
+        match &self.store {
+            KvStore::F32 { k, v } => k
+                .iter()
+                .zip(v)
+                .map(|(k, v)| (k.data.len() + v.data.len()) as u64 * 4)
+                .sum(),
+            KvStore::Quant { k, .. } => {
+                let fmt = self.format.format().expect("quant store has a format");
+                let per_row = fmt.storage_bytes(1, self.d);
+                // k and v always hold the same row count per layer
+                k.iter().map(|m| 2 * m.rows as u64 * per_row).sum()
+            }
+        }
     }
 }
 
@@ -238,7 +330,7 @@ impl Engine {
         h
     }
 
-    /// RoPE of one [D] row at absolute position `pos`, using the hoisted
+    /// RoPE of one `[D]` row at absolute position `pos`, using the hoisted
     /// frequency table (same values as the former inline `ln`/`exp`
     /// recomputation, computed once at engine build).
     fn rope_row(&self, row: &mut [f32], pos: usize) {
@@ -325,6 +417,42 @@ impl Engine {
         ctx
     }
 
+    /// Attention of `q` over one layer of a [`KvCache`], honoring the
+    /// cache's storage format. `Fp32` reads the stored matrices directly
+    /// (bit-identical to the pre-[`KvFormat`] path); quantized formats
+    /// decode the layer's K/V codes into pooled f32 scratch
+    /// ([`crate::util::pool::take_f32`]) through the same element-LUT
+    /// decode the packed GEMM uses, run the identical attention math, and
+    /// return the scratch — the **decode-on-access** read path
+    /// (quantize once on write, decode per read, never re-quantize).
+    fn attention_over_cache(
+        &self,
+        q: &Mat,
+        cache: &KvCache,
+        layer: usize,
+        pos0: usize,
+    ) -> Mat {
+        match &cache.store {
+            KvStore::F32 { k, v } => self.attention(q, &k[layer], &v[layer], pos0),
+            KvStore::Quant { k, v } => {
+                let t = k[layer].rows;
+                let d = cache.d;
+                // take_f32 zero-fills before dequant_into overwrites every
+                // element — accepted cost: handing out uninitialized
+                // `&mut [f32]` would be UB, and the fill is a small slice
+                // of the LUT decode that follows.
+                let mut kd = Mat::from_vec(t, d, pool::take_f32(t * d));
+                let mut vd = Mat::from_vec(t, d, pool::take_f32(t * d));
+                k[layer].dequant_into(&mut kd.data);
+                v[layer].dequant_into(&mut vd.data);
+                let ctx = self.attention(q, &kd, &vd, pos0);
+                pool::put_f32(kd.data);
+                pool::put_f32(vd.data);
+                ctx
+            }
+        }
+    }
+
     /// Full-sequence forward for one sequence of tokens. Returns logits
     /// [T, V]. If `collect` is Some, pre-quant activations per site are
     /// max-merged into it (calibration path). If `cache` is Some, K/V are
@@ -357,7 +485,7 @@ impl Engine {
             let ctx = match cache.as_mut() {
                 Some(c) => {
                     c.append(i, &k, &v);
-                    self.attention(&q, &c.k[i], &c.v[i], pos0)
+                    self.attention_over_cache(&q, &**c, i, pos0)
                 }
                 None => self.attention(&q, &k, &v, 0),
             };
@@ -487,7 +615,7 @@ impl Engine {
                 let cache = &mut *caches[r];
                 cache.append_rows(i, k.row(r), v.row(r), 1);
                 let q_r = Mat::from_vec(1, self.cfg.d, q.row(r).to_vec());
-                let c_r = self.attention(&q_r, &cache.k[i], &cache.v[i], pos[r]);
+                let c_r = self.attention_over_cache(&q_r, cache, i, pos[r]);
                 ctx.row_mut(r).copy_from_slice(c_r.row(0));
             }
 
@@ -693,8 +821,13 @@ mod tests {
     }
 
     /// The acceptance criterion: batched decode is bit-identical to the
-    /// per-sequence `decode_step` loop, per engine mode and batch size.
+    /// per-sequence `decode_step` loop, per engine mode, KV-cache storage
+    /// format, and batch size.
     fn check_decode_batch_bit_identical(mode: EngineMode) {
+        check_decode_batch_bit_identical_kv(mode, KvFormat::Fp32);
+    }
+
+    fn check_decode_batch_bit_identical_kv(mode: EngineMode, kv: KvFormat) {
         let e = tiny_engine(mode);
         for batch in [1usize, 4, 8] {
             // distinct prompts of distinct lengths → distinct positions
@@ -711,7 +844,7 @@ mod tests {
             // reference: independent per-sequence decode_step
             let mut want: Vec<Vec<f32>> = Vec::new();
             for s in 0..batch {
-                let mut cache = KvCache::new(&e.cfg, 64);
+                let mut cache = KvCache::with_format(&e.cfg, 64, kv);
                 e.prefill(&prompts[s], &mut cache).unwrap();
                 want.push(e.decode_step(steps[s], &mut cache).unwrap());
             }
@@ -720,7 +853,7 @@ mod tests {
             let mut caches: Vec<KvCache> = prompts
                 .iter()
                 .map(|p| {
-                    let mut c = KvCache::new(&e.cfg, 64);
+                    let mut c = KvCache::with_format(&e.cfg, 64, kv);
                     e.prefill(p, &mut c).unwrap();
                     c
                 })
@@ -732,7 +865,7 @@ mod tests {
                 assert_eq!(
                     got.row(s),
                     &want[s][..],
-                    "batch {batch} slot {s}: batched decode != decode_step"
+                    "batch {batch} slot {s} kv {kv:?}: batched decode != decode_step"
                 );
                 assert_eq!(caches[s].len(), prompts[s].len() + 1);
             }
@@ -742,6 +875,25 @@ mod tests {
     #[test]
     fn decode_batch_bit_identical_fp32() {
         check_decode_batch_bit_identical(EngineMode::Fp32);
+    }
+
+    #[test]
+    fn decode_batch_bit_identical_nvfp4_kv() {
+        // Quantized KV pages keep the batched-decode contract: the cache
+        // write is per-token (row-wise) and the decode-on-access read is
+        // deterministic, so batched == per-sequence, bit for bit.
+        check_decode_batch_bit_identical_kv(EngineMode::Fp32, KvFormat::Nvfp4);
+    }
+
+    #[test]
+    fn decode_batch_bit_identical_packed_with_mxfp4_kv() {
+        check_decode_batch_bit_identical_kv(
+            EngineMode::QuantizedPacked(Method::ArcQuant {
+                fmt: Format::Nvfp4,
+                max_s: Some(64),
+            }),
+            KvFormat::Mxfp4,
+        );
     }
 
     #[test]
@@ -920,5 +1072,135 @@ mod tests {
         // NVFP4 and MXFP4 weights are both ~4.25 bits/elem
         let ratio = arc.weight_bytes() as f64 / w4a8.weight_bytes() as f64;
         assert!((0.8..1.2).contains(&ratio));
+    }
+
+    // ---- quantized KV cache (KvFormat) ----
+
+    #[test]
+    fn kv_quant_pages_roundtrip_pack_decode_bit_exact() {
+        // Property: rows appended to a quantized cache one token at a time
+        // decode bit-identically to a one-shot row-wise quantization of the
+        // stacked [T, D] matrix — across page boundaries (16- and 32-token
+        // multiples) and with a ragged D (41 is not a multiple of either
+        // group size, so every row ends in a partial block).
+        use crate::util::Prng;
+        let cfg = ModelConfig {
+            name: "kv-prop".into(),
+            d: 41,
+            l: 2,
+            h: 1,
+            f: 8,
+            vocab: 16,
+            outlier_boost: vec![],
+            rms_eps: 1e-5,
+        };
+        let mut rng = Prng::new(70);
+        for kv in [KvFormat::Nvfp4, KvFormat::Mxfp4] {
+            for tokens in [1usize, 15, 16, 17, 32, 37] {
+                let mut cache = KvCache::with_format(&cfg, 64, kv);
+                let mut k_all = Mat::zeros(0, cfg.d);
+                let mut v_all = Mat::zeros(0, cfg.d);
+                for _ in 0..tokens {
+                    let k_row =
+                        Mat::from_fn(1, cfg.d, |_, c| rng.normal() * (1.0 + c as f32));
+                    let v_row = Mat::from_fn(1, cfg.d, |_, _| rng.normal());
+                    for layer in 0..cfg.l {
+                        cache.append(layer, &k_row, &v_row);
+                    }
+                    k_all.data.extend_from_slice(&k_row.data);
+                    k_all.rows += 1;
+                    v_all.data.extend_from_slice(&v_row.data);
+                    v_all.rows += 1;
+                }
+                assert_eq!(cache.len(), tokens);
+                let q = RowQuantizer::new(kv.format().unwrap());
+                let want_k = q.quantize_rowwise(&k_all).dequantize();
+                let want_v = q.quantize_rowwise(&v_all).dequantize();
+                for layer in 0..cfg.l {
+                    let (got_k, got_v) = cache.layer_f32(layer);
+                    assert_eq!(got_k.data, want_k.data, "{kv:?} t={tokens} K");
+                    assert_eq!(got_v.data, want_v.data, "{kv:?} t={tokens} V");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kv_fp32_format_pinned_bit_identical_to_default_cache() {
+        // The Fp32 pin: a cache built with the explicit format knob runs
+        // the exact pre-KvFormat storage (plain f32 Mats, no quantizer on
+        // the path), so a multi-step greedy generation through it equals
+        // one through the historical `KvCache::new` constructor, token for
+        // token and logit for logit.
+        let e = tiny_engine(EngineMode::QuantizedPacked(Method::ArcQuant {
+            fmt: Format::Nvfp4,
+            max_s: Some(64),
+        }));
+        let prompt: Vec<u16> = (0..9).map(|i| (i * 29 + 3) % 256).collect();
+        let run = |mut cache: KvCache| -> (Vec<u16>, Vec<f32>) {
+            let mut tok =
+                crate::model::sampling::argmax(&e.prefill(&prompt, &mut cache).unwrap());
+            let mut toks = vec![tok];
+            let mut last = Vec::new();
+            for _ in 0..4 {
+                last = e.decode_step(tok, &mut cache).unwrap();
+                tok = crate::model::sampling::argmax(&last);
+                toks.push(tok);
+            }
+            (toks, last)
+        };
+        let (t_default, l_default) = run(KvCache::new(&e.cfg, 64));
+        let (t_fp32, l_fp32) =
+            run(KvCache::with_format(&e.cfg, 64, KvFormat::Fp32));
+        assert_eq!(t_default, t_fp32);
+        assert_eq!(l_default, l_fp32, "Fp32 KV must be bit-identical");
+    }
+
+    #[test]
+    fn kv_quant_decode_close_to_fp32_kv() {
+        // KV4 accuracy: same engine, same prompt+decode schedule, NVFP4 KV
+        // pages vs f32 KV. The only error source is K/V block quantization
+        // (weights/activations identical); on this untrained model the
+        // near-flat attention amplifies relative error, so the bound
+        // matches the full-W4A4 one (0.5, quantized_engine_close_to_fp32)
+        // rather than undercutting it.
+        let e = tiny_engine(EngineMode::Fp32);
+        let prompt: Vec<u16> = (0..24u16).map(|i| (i * 91) % 256).collect();
+        let decode: Vec<u16> = (0..6u16).map(|i| (i * 53 + 11) % 256).collect();
+        let run = |kv: KvFormat| -> (Vec<f32>, u64) {
+            let mut cache = KvCache::with_format(&e.cfg, 64, kv);
+            e.prefill(&prompt, &mut cache).unwrap();
+            let mut all: Vec<f32> = Vec::new();
+            for &t in &decode {
+                all.extend(e.decode_step(t, &mut cache).unwrap());
+            }
+            (all, cache.bytes())
+        };
+        let (fp_logits, fp_bytes) = run(KvFormat::Fp32);
+        for kv in [KvFormat::Nvfp4, KvFormat::Mxfp4] {
+            let (q_logits, q_bytes) = run(kv);
+            assert!(q_logits.iter().all(|v| v.is_finite()));
+            let rel = crate::util::stats::rel_frob_err(&q_logits, &fp_logits);
+            assert!(rel < 0.5, "{kv:?}: KV4 logit rel err {rel}");
+            // real byte accounting: 4-bit pages are >5x smaller than f32
+            assert!(
+                q_bytes * 5 < fp_bytes,
+                "{kv:?}: {q_bytes} B vs f32 {fp_bytes} B"
+            );
+        }
+    }
+
+    #[test]
+    fn kv_quant_capacity_enforced_like_fp32() {
+        let e = tiny_engine(EngineMode::Fp32);
+        let toks: Vec<u16> = (0..8).collect();
+        let mut cache = KvCache::with_format(&e.cfg, 7, KvFormat::Nvfp4);
+        assert!(e.prefill(&toks, &mut cache).is_err());
+        assert_eq!(cache.len(), 0);
+        let mut cache = KvCache::with_format(&e.cfg, 8, KvFormat::Nvfp4);
+        e.prefill(&toks, &mut cache).unwrap();
+        assert_eq!(cache.remaining(), 0);
+        assert!(e.decode_step(1, &mut cache).is_err());
+        assert_eq!(cache.len(), 8, "failed decode must not grow the cache");
     }
 }

@@ -102,12 +102,12 @@ impl FpKind {
 #[derive(Clone, Debug)]
 pub struct Minifloat {
     pub kind: FpKind,
-    /// Positive representable magnitudes, ascending; values[0] == 0.
+    /// Positive representable magnitudes, ascending; `values[0] == 0`.
     values: Vec<f32>,
-    /// midpoints[i] is the RNE decision boundary between values[i] and
-    /// values[i+1]: x <= midpoints[i] rounds down iff tie goes to even i.
+    /// `midpoints[i]` is the RNE decision boundary between `values[i]` and
+    /// `values[i+1]`: `x <= midpoints[i]` rounds down iff tie goes to even i.
     midpoints: Vec<f32>,
-    /// tie_down[i]: on exact tie at midpoints[i], round to values[i]
+    /// `tie_down[i]`: on exact tie at `midpoints[i]`, round to `values[i]`
     /// (true when code i is even).
     tie_down: Vec<bool>,
 }

@@ -98,7 +98,7 @@ impl Mat {
         self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
     }
 
-    /// Gather columns: out[:, j] = self[:, idx[j]].
+    /// Gather columns: `out[:, j] = self[:, idx[j]]`.
     pub fn select_cols(&self, idx: &[usize]) -> Mat {
         let mut out = Mat::zeros(self.rows, idx.len());
         for r in 0..self.rows {
@@ -128,7 +128,7 @@ impl Mat {
         }
     }
 
-    /// Multiply each column by a factor: self[:, c] *= f[c].
+    /// Multiply each column by a factor: `self[:, c] *= f[c]`.
     pub fn scale_cols(&mut self, f: &[f32]) {
         assert_eq!(f.len(), self.cols);
         for r in 0..self.rows {

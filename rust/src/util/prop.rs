@@ -65,7 +65,7 @@ pub mod gens {
         })
     }
 
-    /// Vec<f32> with values drawn from a heavy-tailed mixture that mimics
+    /// `Vec<f32>` with values drawn from a heavy-tailed mixture that mimics
     /// LLM activations: mostly N(0, 1) with occasional large outliers —
     /// the distribution ARCQuant is designed for.
     pub fn activation_vec(rng: &mut Prng, len: usize) -> Vec<f32> {
@@ -81,7 +81,7 @@ pub mod gens {
             .collect()
     }
 
-    /// Vec<f32> uniform in [-scale, scale], never all-zero.
+    /// `Vec<f32>` uniform in [-scale, scale], never all-zero.
     pub fn uniform_vec(rng: &mut Prng, len: usize, scale: f32) -> Vec<f32> {
         let mut v: Vec<f32> = (0..len).map(|_| rng.range_f32(-scale, scale)).collect();
         if v.iter().all(|&x| x == 0.0) && !v.is_empty() {

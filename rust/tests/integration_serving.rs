@@ -296,6 +296,97 @@ fn generation_tokens_match_reference_decode_loop_bit_exact() {
 }
 
 #[test]
+fn generation_with_nvfp4_kv_replays_bit_exact_and_admits_more() {
+    use arcquant::formats::KvFormat;
+    use arcquant::model::{KvCache, Sampler};
+
+    // Same closed-loop workload under f32 and NVFP4 K/V pages, on a
+    // deliberately scarce page pool: each request's worst case is
+    // 24 + 8 = 32 tokens — 2 f32 pages (16 tokens each) but a single
+    // NVFP4 page (107 tokens at d=128, l=2). With 3 pages total, f32 can
+    // only run one sequence at a time while NVFP4 runs three — the
+    // capacity lever the quantized KV cache exists for.
+    let engines = gen_engines();
+    let refs: Vec<(Variant, &arcquant::model::Engine)> =
+        engines.iter().map(|(v, e)| (*v, e)).collect();
+    let stream = synth_stream();
+    let base = GenerateServeConfig {
+        workload: vec![(Variant::ArcPacked, 6)],
+        prompt_len: 24,
+        max_new_tokens: 8,
+        max_decode_batch: 8,
+        kv_pages: 3,
+        sampler: Sampler::Greedy,
+        seed: 11,
+        ..Default::default()
+    };
+    let run = |kv: KvFormat| {
+        let cfg = GenerateServeConfig { kv_format: kv, ..base.clone() };
+        serve_generate_native(&cfg, &stream, &refs).unwrap()
+    };
+    let fp = run(KvFormat::Fp32);
+    let nv = run(KvFormat::Nvfp4);
+    for r in [&fp, &nv] {
+        assert_eq!(r.completed, 6);
+        assert_eq!(r.rejected, 0);
+        assert!(r
+            .responses
+            .iter()
+            .all(|resp| resp.finish == FinishReason::Length
+                && resp.tokens.len() == base.max_new_tokens));
+    }
+    assert_eq!(fp.kv_format, "fp32");
+    assert_eq!(nv.kv_format, "nvfp4");
+    assert_eq!(fp.kv_page_tokens, 16);
+    assert_eq!(nv.kv_page_tokens, 107);
+    // f32 pages force one-at-a-time admission; NVFP4 pages batch all 6
+    // (the decode batch fills up as soon as pages stop being the limit)
+    let (b_fp, b_nv) = (
+        fp.per_variant["arcquant-packed"].mean_decode_batch,
+        nv.per_variant["arcquant-packed"].mean_decode_batch,
+    );
+    assert!((b_fp - 1.0).abs() < 1e-9, "f32 should serialize: {b_fp}");
+    assert!(b_nv > 2.5, "nvfp4 should batch: {b_nv}");
+    // quantized pages also report their real (smaller) byte footprint
+    assert!(nv.kv_bytes_per_page <= fp.kv_bytes_per_page);
+
+    // Bit-exact replay: every served NVFP4-KV generation equals an
+    // independent prefill + decode_step loop over an NVFP4 cache.
+    let engine = refs
+        .iter()
+        .find(|(v, _)| *v == Variant::ArcPacked)
+        .map(|(_, e)| *e)
+        .unwrap();
+    for resp in &nv.responses {
+        let idx = (resp.id - 1) as usize;
+        let start =
+            (idx * (base.prompt_len + 5)) % (stream.len() - base.prompt_len - 1);
+        let prompt = &stream[start..start + base.prompt_len];
+        let mut rng = session_rng(base.seed, resp.id);
+        let mut cache = KvCache::with_format(
+            &engine.cfg,
+            base.prompt_len + base.max_new_tokens,
+            KvFormat::Nvfp4,
+        );
+        let mut tok = base
+            .sampler
+            .sample(&engine.prefill(prompt, &mut cache).unwrap(), &mut rng);
+        let mut want = vec![tok];
+        for _ in 1..base.max_new_tokens {
+            tok = base
+                .sampler
+                .sample(&engine.decode_step(tok, &mut cache).unwrap(), &mut rng);
+            want.push(tok);
+        }
+        assert_eq!(
+            resp.tokens, want,
+            "id {}: served nvfp4-KV generation diverged from reference",
+            resp.id
+        );
+    }
+}
+
+#[test]
 fn generation_rejects_prompts_exceeding_the_page_budget() {
     use arcquant::model::Sampler;
     let engines = gen_engines();

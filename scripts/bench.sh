@@ -4,6 +4,11 @@
 # BENCH_gemm_packed.json / BENCH_decode.json in the repo root — the
 # perf-trajectory files committed with each PR.
 #
+# bench_decode includes the KV-format series (decode throughput with f32
+# vs NVFP4/MXFP4 K/V pages + admitted-sequence capacity at a fixed page
+# budget); --smoke runs it at reduced shapes too, so CI exercises the
+# quantized KV decode path every push.
+#
 # Usage:
 #   scripts/bench.sh            # full run, rewrites BENCH_*.json
 #   scripts/bench.sh --smoke    # reduced shapes, no JSON rewrite (CI uses
