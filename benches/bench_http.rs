@@ -1,0 +1,202 @@
+//! HTTP serving bench: a real in-process [`HttpServer`] over the tiny
+//! synthetic model, driven across loopback TCP by the closed-loop
+//! loadgen at connection counts {1, 4, 16} — emits `BENCH_http.json`
+//! with end-to-end tokens/s and latency percentiles per connection
+//! count, so the networked serving path's trajectory is tracked across
+//! PRs alongside the kernel and decode series.
+//!
+//! The closed loop means concurrency equals the connection count: the
+//! throughput climb from 1 → 4 → 16 connections is exactly the
+//! continuous-batching win (shared decode ticks), since a single
+//! connection can never batch with itself.
+//!
+//! `ARCQUANT_BENCH_SMOKE=1` shrinks the series and skips the JSON
+//! rewrite — CI uses it to exercise the full socket path (server boot,
+//! keep-alive clients, chunked streaming, drain) every push.
+
+use arcquant::baselines::Method;
+use arcquant::coordinator::{
+    run_loadgen, HttpServeConfig, HttpServer, LoadgenConfig, Variant,
+};
+use arcquant::formats::{Format, KvFormat};
+use arcquant::model::{tiny_test_fixture, Engine, EngineMode};
+use arcquant::util::json::Json;
+use std::collections::BTreeMap;
+
+struct Cfg {
+    connections: &'static [usize],
+    requests_per_conn: usize,
+    prompt_len: usize,
+    max_new: usize,
+}
+
+fn bench_cfg() -> Cfg {
+    if arcquant::util::bench::smoke_mode() {
+        Cfg {
+            connections: &[1, 2],
+            requests_per_conn: 2,
+            prompt_len: 8,
+            max_new: 4,
+        }
+    } else {
+        Cfg {
+            connections: &[1, 4, 16],
+            requests_per_conn: 8,
+            prompt_len: 16,
+            max_new: 16,
+        }
+    }
+}
+
+fn engines() -> Vec<(Variant, Engine)> {
+    let (cfg, weights, calib) = tiny_test_fixture(7, 128);
+    let fp =
+        Engine::new(cfg.clone(), weights.clone(), EngineMode::Fp32, None).unwrap();
+    let packed = Engine::new(
+        cfg,
+        weights,
+        EngineMode::QuantizedPacked(Method::ArcQuant {
+            fmt: Format::Nvfp4,
+            max_s: Some(64),
+        }),
+        Some(&calib),
+    )
+    .unwrap();
+    vec![(Variant::ArcPacked, packed), (Variant::Fp32, fp)]
+}
+
+fn main() {
+    let bc = bench_cfg();
+    let smoke = arcquant::util::bench::smoke_mode();
+    let server = HttpServer::start(
+        HttpServeConfig {
+            max_decode_batch: 16,
+            kv_pages: 512,
+            kv_format: KvFormat::Nvfp4,
+            queue_cap: 128,
+            ..Default::default()
+        },
+        "127.0.0.1:0",
+        engines(),
+    )
+    .expect("bench server");
+    let addr = server.addr().to_string();
+    println!(
+        "# http serving bench at {addr}: closed loop, {} requests/conn, \
+         prompt={} max_new={}, nvfp4 KV pages",
+        bc.requests_per_conn, bc.prompt_len, bc.max_new
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut tok_s_by: BTreeMap<usize, f64> = BTreeMap::new();
+    for &conns in bc.connections {
+        let cfg = LoadgenConfig {
+            addr: addr.clone(),
+            connections: conns,
+            requests_per_conn: bc.requests_per_conn,
+            prompt_len: bc.prompt_len,
+            max_new_tokens: bc.max_new,
+            variant: Some(Variant::ArcPacked),
+            vocab: 256,
+            stream: false,
+            seed: 0,
+        };
+        // untimed warmup pass at the smallest shape, then the measured run
+        if conns == bc.connections[0] {
+            let _ = run_loadgen(&LoadgenConfig {
+                requests_per_conn: 1,
+                ..cfg.clone()
+            });
+        }
+        let r = run_loadgen(&cfg).expect("loadgen");
+        assert_eq!(
+            r.errors, 0,
+            "bench traffic must be error-free: {:?}",
+            r.by_status
+        );
+        println!(
+            "BENCH http_c{conns} tok_s={:.1} req_s={:.2} p50_ms={:.1} \
+             p90_ms={:.1} p99_ms={:.1}",
+            r.tok_s, r.req_s, r.p50_ms, r.p90_ms, r.p99_ms
+        );
+        tok_s_by.insert(conns, r.tok_s);
+        let mut row = Json::obj();
+        row.set("connections", Json::Num(conns as f64))
+            .set("requests", Json::Num(r.requests as f64))
+            .set("variant", Json::Str("arcquant-packed".into()))
+            .set("tokens_per_s", Json::Num(r.tok_s))
+            .set("requests_per_s", Json::Num(r.req_s))
+            .set("p50_ms", Json::Num(r.p50_ms))
+            .set("p90_ms", Json::Num(r.p90_ms))
+            .set("p99_ms", Json::Num(r.p99_ms))
+            .set("mean_ms", Json::Num(r.mean_ms));
+        rows.push(row);
+    }
+
+    // one streaming pass: exercises the chunked path end to end
+    let stream_r = run_loadgen(&LoadgenConfig {
+        addr: addr.clone(),
+        connections: 2,
+        requests_per_conn: bc.requests_per_conn.min(4),
+        prompt_len: bc.prompt_len,
+        max_new_tokens: bc.max_new,
+        variant: Some(Variant::ArcPacked),
+        vocab: 256,
+        stream: true,
+        seed: 1,
+    })
+    .expect("streaming loadgen");
+    assert_eq!(stream_r.errors, 0, "streaming traffic must be error-free");
+    println!(
+        "BENCH http_stream_c2 tok_s={:.1} p99_ms={:.1}",
+        stream_r.tok_s, stream_r.p99_ms
+    );
+
+    server.shutdown();
+
+    let lo = bc.connections[0];
+    let hi = bc.connections[bc.connections.len() - 1];
+    println!(
+        "#   {hi}-conn/{lo}-conn throughput ratio {:.2}x (continuous batching)",
+        tok_s_by[&hi] / tok_s_by[&lo]
+    );
+
+    if smoke {
+        println!("# smoke mode: BENCH_http.json not rewritten");
+        return;
+    }
+    let mut prov = Json::obj();
+    prov.set(
+        "source",
+        Json::Str("cargo bench --bench bench_http (in-tree harness)".into()),
+    )
+    .set(
+        "threads",
+        Json::Num(arcquant::util::pool::num_threads() as f64),
+    );
+    let mut stream_row = Json::obj();
+    stream_row
+        .set("connections", Json::Num(2.0))
+        .set("tokens_per_s", Json::Num(stream_r.tok_s))
+        .set("p99_ms", Json::Num(stream_r.p99_ms));
+    let mut out = Json::obj();
+    out.set("bench", Json::Str("http".into()))
+        .set("provenance", prov)
+        .set("model", Json::Str("tiny-test".into()))
+        .set("kv_format", Json::Str("nvfp4".into()))
+        .set("prompt_len", Json::Num(bc.prompt_len as f64))
+        .set("max_new_tokens", Json::Num(bc.max_new as f64))
+        .set("requests_per_conn", Json::Num(bc.requests_per_conn as f64))
+        .set("rows", Json::Arr(rows))
+        .set("streaming", stream_row);
+    let path = "BENCH_http.json";
+    match std::fs::write(path, out.dump()) {
+        Ok(()) => println!("# wrote {path}"),
+        Err(e) => {
+            // a failed trajectory rewrite must fail the run, or the
+            // runner would report success over stale numbers
+            eprintln!("# could not write {path}: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -26,10 +26,15 @@
 //! 4. **retires** finished sequences, releasing their pages
 //!    ([`KvPageManager::release`]) so waiting requests can admit.
 //!
-//! Newly-prefilled sequences join the running decode batch on the next
-//! tick; retired ones free their slots the same tick they finish — no
+//! Retired sequences free their slots the same tick they finish — no
 //! static batch boundaries, which is what keeps the decode batch full
 //! under mixed-length traffic.
+//!
+//! The tick loop itself lives in the crate-internal `SchedCore`, shared
+//! between two drivers: the in-process closed-loop executor below
+//! ([`serve_generate_native`]) and the networked HTTP scheduler thread
+//! ([`super::http`]), which feeds it requests read off sockets and
+//! streams sampled tokens back through per-session [`GenEvent`] channels.
 //!
 //! The K/V pages themselves are format-pluggable
 //! ([`GenerateServeConfig::kv_format`]): NVFP4/MXFP4 pages hold ~6–7×
@@ -38,11 +43,13 @@
 //! in `docs/kv_cache.md`.
 
 use super::metrics::Metrics;
-use super::request::{FinishReason, GenerateRequest, GenerateResponse, Variant};
+use super::request::{
+    FinishReason, GenEvent, GenerateRequest, GenerateResponse, RejectReason, Variant,
+};
 use super::router::{Router, RouterConfig, RouterDecision};
 use crate::coordinator::kvcache::KvPageManager;
 use crate::formats::KvFormat;
-use crate::model::{sampling::Sampler, Engine, KvCache};
+use crate::model::{sampling::Sampler, Engine, KvCache, ModelConfig};
 use crate::util::{Prng, Timer};
 use std::collections::BTreeMap;
 use std::sync::mpsc;
@@ -147,32 +154,342 @@ pub struct GenerateReport {
     pub responses: Vec<GenerateResponse>,
 }
 
-/// One running generation inside the executor.
-struct GenSession {
-    id: u64,
-    variant: Variant,
-    prompt_len: usize,
-    max_new: usize,
+/// One running generation inside a scheduler.
+pub(crate) struct GenSession {
+    pub(crate) id: u64,
+    pub(crate) variant: Variant,
+    pub(crate) prompt_len: usize,
+    pub(crate) max_new: usize,
     /// last sampled token — the next decode input
-    next_token: u16,
-    generated: Vec<u16>,
-    cache: KvCache,
-    rng: Prng,
-    t_submit: std::time::Instant,
-    prefill_ms: f64,
+    pub(crate) next_token: u16,
+    pub(crate) generated: Vec<u16>,
+    pub(crate) cache: KvCache,
+    pub(crate) rng: Prng,
+    pub(crate) t_submit: std::time::Instant,
+    pub(crate) prefill_ms: f64,
     /// amortized share of batched decode time (tick_ms / tick_batch)
-    decode_ms: f64,
-    finish: Option<FinishReason>,
+    pub(crate) decode_ms: f64,
+    pub(crate) finish: Option<FinishReason>,
+    /// streaming observer: every sampled token is forwarded as
+    /// [`GenEvent::Token`] and completion as [`GenEvent::Done`] (the HTTP
+    /// handlers read these); `None` for the closed-loop executor
+    pub(crate) watch: Option<mpsc::Sender<GenEvent>>,
 }
 
-/// Accumulators the executor thread returns alongside the responses.
+/// Accumulators a scheduler returns alongside the responses.
 #[derive(Default)]
-struct ExecOutcome {
-    per_variant: BTreeMap<&'static str, GenVariantStats>,
-    kv_pages_peak: usize,
-    kv_bytes_peak: u64,
-    kv_bytes_per_page: u64,
-    kv_page_tokens: usize,
+pub(crate) struct ExecOutcome {
+    pub(crate) per_variant: BTreeMap<&'static str, GenVariantStats>,
+    pub(crate) kv_pages_peak: usize,
+    pub(crate) kv_bytes_peak: u64,
+    pub(crate) kv_bytes_per_page: u64,
+    pub(crate) kv_page_tokens: usize,
+}
+
+/// Admission decision for one request, right now.
+pub(crate) enum Admit {
+    /// decode-batch room + page headroom — enroll immediately
+    Run,
+    /// transient backpressure: wait for running sequences to retire
+    Wait,
+    /// can never run (or no engine) — reject outright
+    Reject(RejectReason),
+}
+
+/// The iteration-level continuous-batching core: admission → prefill →
+/// batched decode tick → retire, over a [`KvPageManager`]-governed page
+/// pool. Both generation drivers run this loop; they differ only in
+/// where requests come from (an in-process closed loop vs. HTTP
+/// connection handlers) and where responses go (an mpsc collector vs.
+/// per-session [`GenEvent`] channels).
+pub(crate) struct SchedCore<'e> {
+    engines: &'e [(Variant, &'e Engine)],
+    model_cfg: &'e ModelConfig,
+    pub(crate) max_decode_batch: usize,
+    pub(crate) kv_format: KvFormat,
+    pub(crate) sampler: Sampler,
+    pub(crate) seed: u64,
+    pub(crate) pages: KvPageManager,
+    pub(crate) sessions: Vec<GenSession>,
+    pub(crate) per_variant: BTreeMap<&'static str, GenVariantStats>,
+    pub(crate) kv_pages_peak: usize,
+    pub(crate) kv_bytes_peak: u64,
+}
+
+impl<'e> SchedCore<'e> {
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        engines: &'e [(Variant, &'e Engine)],
+        model_cfg: &'e ModelConfig,
+        kv_pages: usize,
+        kv_format: KvFormat,
+        max_decode_batch: usize,
+        sampler: Sampler,
+        seed: u64,
+    ) -> SchedCore<'e> {
+        SchedCore {
+            engines,
+            model_cfg,
+            max_decode_batch,
+            kv_format,
+            sampler,
+            seed,
+            pages: KvPageManager::with_format(
+                kv_pages,
+                model_cfg.d,
+                model_cfg.l,
+                kv_format,
+            ),
+            sessions: Vec::new(),
+            per_variant: BTreeMap::new(),
+            kv_pages_peak: 0,
+            kv_bytes_peak: 0,
+        }
+    }
+
+    /// Admission check (no state change): can `req` start right now?
+    /// Admit when the decode batch has room AND the free pages cover the
+    /// request's own worst case (prompt + budget); only the prompt pages
+    /// are reserved at [`SchedCore::enroll`], growth allocates per decode
+    /// step.
+    pub(crate) fn admission(&self, req: &GenerateRequest) -> Admit {
+        if !self.engines.iter().any(|(ev, _)| *ev == req.variant) {
+            return Admit::Reject(RejectReason::VariantUnavailable);
+        }
+        let worst = self.pages.pages_for(req.prompt.len() + req.max_new_tokens);
+        if worst > self.pages.total_pages() {
+            // could never complete, even on an idle pool
+            return Admit::Reject(RejectReason::PageBudget);
+        }
+        let running = self
+            .sessions
+            .iter()
+            .filter(|s| s.variant == req.variant)
+            .count();
+        if running >= self.max_decode_batch || self.pages.free_pages() < worst {
+            // backpressure: pages/slots free up as sequences retire
+            return Admit::Wait;
+        }
+        Admit::Run
+    }
+
+    /// Reserve prompt pages, prefill, sample the first token and join the
+    /// running set. The caller must have seen [`Admit::Run`] this tick;
+    /// on failure the request (and its watcher) are handed back with a
+    /// reject reason.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn enroll(
+        &mut self,
+        req: GenerateRequest,
+        watch: Option<mpsc::Sender<GenEvent>>,
+        metrics: &Metrics,
+    ) -> Result<(), (GenerateRequest, Option<mpsc::Sender<GenEvent>>, RejectReason)>
+    {
+        let Some(engine) = self
+            .engines
+            .iter()
+            .find(|(ev, _)| *ev == req.variant)
+            .map(|(_, e)| *e)
+        else {
+            return Err((req, watch, RejectReason::VariantUnavailable));
+        };
+        if self.pages.admit(req.id, req.prompt.len()).is_err() {
+            // cannot happen after an Admit::Run check on the same tick,
+            // but never panic the scheduler thread if it does
+            return Err((req, watch, RejectReason::Internal));
+        }
+        self.kv_pages_peak = self.kv_pages_peak.max(self.pages.used_pages());
+        self.kv_bytes_peak = self.kv_bytes_peak.max(self.pages.bytes_used());
+        Metrics::set_gauge(&metrics.kv_pages_used, self.pages.used_pages() as u64);
+
+        let key = req.variant.artifact_key();
+        let mut cache = KvCache::with_format(
+            self.model_cfg,
+            req.prompt.len() + req.max_new_tokens,
+            self.kv_format,
+        );
+        let t = Timer::start();
+        let first_logits = match engine.prefill(&req.prompt, &mut cache) {
+            Ok(l) => l,
+            Err(_) => {
+                // capacity mismatch — cannot happen with the page
+                // pre-check, but never leak pages if it does
+                let _ = self.pages.release(req.id);
+                return Err((req, watch, RejectReason::Internal));
+            }
+        };
+        let prefill_ms = t.ms();
+        metrics.record_stage(&format!("prefill:{key}"), prefill_ms);
+        let mut rng = session_rng(self.seed, req.id);
+        let first = self.sampler.sample(&first_logits, &mut rng);
+        let stats = self.per_variant.entry(key).or_default();
+        stats.prefill_ms += prefill_ms;
+        stats.generated_tokens += 1;
+        metrics.add_variant_tokens(req.variant, 1);
+        if let Some(w) = &watch {
+            let _ = w.send(GenEvent::Token(first));
+        }
+        let mut session = GenSession {
+            id: req.id,
+            variant: req.variant,
+            prompt_len: req.prompt.len(),
+            max_new: req.max_new_tokens,
+            next_token: first,
+            generated: vec![first],
+            cache,
+            rng,
+            t_submit: req.t_submit,
+            prefill_ms,
+            decode_ms: 0.0,
+            finish: None,
+            watch,
+        };
+        if session.generated.len() >= session.max_new {
+            session.finish = Some(FinishReason::Length);
+        }
+        self.sessions.push(session);
+        Ok(())
+    }
+
+    /// One scheduler tick: a single batched decode step per variant over
+    /// all running sequences. Page extension happens first — every
+    /// participant reserves room for the token this step appends;
+    /// exhaustion retires early ([`FinishReason::OutOfPages`]), and the
+    /// retired sequence's pages are released immediately so later slots
+    /// in the same tick can take them.
+    pub(crate) fn decode_tick(&mut self, metrics: &Metrics) {
+        for v in Variant::ALL {
+            for s in self
+                .sessions
+                .iter_mut()
+                .filter(|s| s.variant == v && s.finish.is_none())
+            {
+                if self.pages.extend(s.id, 1).is_err() {
+                    s.finish = Some(FinishReason::OutOfPages);
+                    let _ = self.pages.release(s.id);
+                }
+            }
+            self.kv_pages_peak = self.kv_pages_peak.max(self.pages.used_pages());
+            self.kv_bytes_peak = self.kv_bytes_peak.max(self.pages.bytes_used());
+
+            let mut group: Vec<&mut GenSession> = self
+                .sessions
+                .iter_mut()
+                .filter(|s| s.variant == v && s.finish.is_none())
+                .collect();
+            if group.is_empty() {
+                continue;
+            }
+            let engine = self
+                .engines
+                .iter()
+                .find(|(ev, _)| *ev == v)
+                .map(|(_, e)| *e)
+                .expect("admitted variant has an engine");
+            let key = v.artifact_key();
+            let toks: Vec<u16> = group.iter().map(|s| s.next_token).collect();
+            let bsz = group.len();
+            let mut caches: Vec<&mut KvCache> =
+                group.iter_mut().map(|s| s.cache_mut()).collect();
+            let t = Timer::start();
+            let logits = engine
+                .decode_batch(&toks, &mut caches)
+                .expect("page manager and cache capacity are kept in sync");
+            let tick_ms = t.ms();
+            drop(caches);
+            metrics.record_stage(&format!("decode:{key}"), tick_ms);
+            Metrics::inc(&metrics.batches);
+            Metrics::inc(&metrics.decode_ticks);
+            Metrics::add(&metrics.decode_tokens, bsz as u64);
+            metrics.add_variant_tokens(v, bsz as u64);
+
+            let stats = self.per_variant.entry(key).or_default();
+            stats.decode_ticks += 1;
+            stats.decode_tokens += bsz;
+            stats.decode_ms += tick_ms;
+            stats.generated_tokens += bsz;
+            for (r, s) in group.iter_mut().enumerate() {
+                let tok = self.sampler.sample(logits.row(r), &mut s.rng);
+                s.generated.push(tok);
+                s.next_token = tok;
+                if let Some(w) = &s.watch {
+                    let _ = w.send(GenEvent::Token(tok));
+                }
+                s.decode_ms += tick_ms / bsz as f64;
+                if s.generated.len() >= s.max_new {
+                    s.finish = Some(FinishReason::Length);
+                }
+            }
+        }
+    }
+
+    /// Retire finished sequences, releasing their pages so waiting
+    /// requests can admit. Watchers receive [`GenEvent::Done`]; the
+    /// responses are also returned for closed-loop collection.
+    pub(crate) fn retire(&mut self, metrics: &Metrics) -> Vec<GenerateResponse> {
+        let mut out = Vec::new();
+        let drained = std::mem::take(&mut self.sessions);
+        for s in drained {
+            let Some(finish) = s.finish else {
+                self.sessions.push(s);
+                continue;
+            };
+            let _ = self.pages.release(s.id);
+            let key = s.variant.artifact_key();
+            let stats = self.per_variant.entry(key).or_default();
+            stats.requests += 1;
+            if finish == FinishReason::OutOfPages {
+                stats.oom_truncated += 1;
+            }
+            let total_ms = s.t_submit.elapsed().as_secs_f64() * 1e3;
+            metrics.record_latency(total_ms);
+            Metrics::inc(&metrics.completed);
+            let resp = GenerateResponse {
+                id: s.id,
+                variant: s.variant,
+                tokens: s.generated,
+                prompt_len: s.prompt_len,
+                finish,
+                prefill_ms: s.prefill_ms,
+                decode_ms: s.decode_ms,
+                total_ms,
+            };
+            if let Some(w) = &s.watch {
+                let _ = w.send(GenEvent::Done(resp.clone()));
+            }
+            out.push(resp);
+        }
+        Metrics::set_gauge(&metrics.kv_pages_used, self.pages.used_pages() as u64);
+        out
+    }
+
+    /// Close the books: derived per-variant rates + page accounting.
+    pub(crate) fn finalize(mut self) -> ExecOutcome {
+        debug_assert!(self.pages.check_invariants().is_ok());
+        for stats in self.per_variant.values_mut() {
+            if stats.decode_ticks > 0 {
+                stats.mean_decode_batch =
+                    stats.decode_tokens as f64 / stats.decode_ticks as f64;
+            }
+            if stats.decode_ms > 0.0 {
+                stats.decode_tok_s =
+                    stats.decode_tokens as f64 / (stats.decode_ms / 1e3);
+            }
+        }
+        ExecOutcome {
+            per_variant: self.per_variant,
+            kv_pages_peak: self.kv_pages_peak,
+            kv_bytes_peak: self.kv_bytes_peak,
+            kv_bytes_per_page: self.pages.bytes_per_page,
+            kv_page_tokens: self.pages.page_tokens,
+        }
+    }
+}
+
+impl GenSession {
+    fn cache_mut(&mut self) -> &mut KvCache {
+        &mut self.cache
+    }
 }
 
 /// Run a closed-loop generation workload against Rust-native engines —
@@ -298,31 +615,27 @@ pub fn serve_generate_native(
     })
 }
 
-/// The executor loop proper (runs on its own thread; owns the sessions
-/// and the page manager).
+/// The closed-loop executor (runs on its own thread; owns the
+/// [`SchedCore`] — sessions and page manager included).
 fn run_generate_executor(
     cfg: &GenerateServeConfig,
-    model_cfg: &crate::model::ModelConfig,
+    model_cfg: &ModelConfig,
     engines: &[(Variant, &Engine)],
     rx_req: mpsc::Receiver<GenerateRequest>,
     tx_resp: mpsc::Sender<GenerateResponse>,
     metrics: &Metrics,
 ) -> ExecOutcome {
-    let engine_for =
-        |v: Variant| engines.iter().find(|(ev, _)| *ev == v).map(|(_, e)| *e);
-    let mut pages = KvPageManager::with_format(
+    let mut core = SchedCore::new(
+        engines,
+        model_cfg,
         cfg.kv_pages,
-        model_cfg.d,
-        model_cfg.l,
         cfg.kv_format,
+        cfg.max_decode_batch,
+        cfg.sampler,
+        cfg.seed,
     );
-    let mut out = ExecOutcome {
-        kv_bytes_per_page: pages.bytes_per_page,
-        kv_page_tokens: pages.page_tokens,
-        ..Default::default()
-    };
+    Metrics::set_gauge(&metrics.kv_pages_total, cfg.kv_pages as u64);
     let mut pending: Vec<GenerateRequest> = Vec::new();
-    let mut sessions: Vec<GenSession> = Vec::new();
     let mut rx_closed = false;
 
     let reject = |req: &GenerateRequest, tx: &mpsc::Sender<GenerateResponse>| {
@@ -352,7 +665,7 @@ fn run_generate_executor(
                 }
             }
         }
-        if pending.is_empty() && sessions.is_empty() {
+        if pending.is_empty() && core.sessions.is_empty() {
             if rx_closed {
                 break;
             }
@@ -371,184 +684,32 @@ fn run_generate_executor(
         // pages joins now; the rest wait under backpressure) ----
         let mut still_pending = Vec::with_capacity(pending.len());
         for req in pending.drain(..) {
-            let Some(engine) = engine_for(req.variant) else {
-                Metrics::inc(&metrics.rejected);
-                reject(&req, &tx_resp);
-                continue;
-            };
-            let worst = pages.pages_for(req.prompt.len() + req.max_new_tokens);
-            if worst > cfg.kv_pages {
-                // could never complete, even on an idle pool
-                Metrics::inc(&metrics.rejected);
-                reject(&req, &tx_resp);
-                continue;
-            }
-            let running = sessions
-                .iter()
-                .filter(|s| s.variant == req.variant)
-                .count();
-            // Admit when the decode batch has room AND the free pages
-            // cover this sequence's own worst case (prompt + budget);
-            // only the prompt pages are reserved now, growth allocates
-            // per decode step.
-            if running >= cfg.max_decode_batch
-                || pages.free_pages() < worst
-                || pages.admit(req.id, req.prompt.len()).is_err()
-            {
-                // backpressure: pages/slots free up as sequences retire
-                still_pending.push(req);
-                continue;
-            }
-            out.kv_pages_peak = out.kv_pages_peak.max(pages.used_pages());
-            out.kv_bytes_peak = out.kv_bytes_peak.max(pages.bytes_used());
-
-            let key = req.variant.artifact_key();
-            let mut cache = KvCache::with_format(
-                model_cfg,
-                req.prompt.len() + req.max_new_tokens,
-                cfg.kv_format,
-            );
-            let t = Timer::start();
-            let first_logits = match engine.prefill(&req.prompt, &mut cache) {
-                Ok(l) => l,
-                Err(_) => {
-                    // capacity mismatch — cannot happen with the page
-                    // pre-check, but never leak pages if it does
-                    let _ = pages.release(req.id);
+            match core.admission(&req) {
+                Admit::Reject(_) => {
                     Metrics::inc(&metrics.rejected);
                     reject(&req, &tx_resp);
-                    continue;
                 }
-            };
-            let prefill_ms = t.ms();
-            metrics.record_stage(&format!("prefill:{key}"), prefill_ms);
-            let mut rng = session_rng(cfg.seed, req.id);
-            let first = cfg.sampler.sample(&first_logits, &mut rng);
-            let stats = out.per_variant.entry(key).or_default();
-            stats.prefill_ms += prefill_ms;
-            stats.generated_tokens += 1;
-            let mut session = GenSession {
-                id: req.id,
-                variant: req.variant,
-                prompt_len: req.prompt.len(),
-                max_new: req.max_new_tokens,
-                next_token: first,
-                generated: vec![first],
-                cache,
-                rng,
-                t_submit: req.t_submit,
-                prefill_ms,
-                decode_ms: 0.0,
-                finish: None,
-            };
-            if session.generated.len() >= session.max_new {
-                session.finish = Some(FinishReason::Length);
+                Admit::Wait => still_pending.push(req),
+                Admit::Run => {
+                    if let Err((req, _, _)) = core.enroll(req, None, metrics) {
+                        Metrics::inc(&metrics.rejected);
+                        reject(&req, &tx_resp);
+                    }
+                }
             }
-            sessions.push(session);
         }
         pending = still_pending;
 
-        // ---- one batched decode step per variant ----
-        for v in Variant::ALL {
-            // page extension first: every participant reserves room for
-            // the token this step appends; exhaustion retires early, and
-            // the retired sequence's pages are released immediately so
-            // later slots in the same tick can take them
-            for s in sessions
-                .iter_mut()
-                .filter(|s| s.variant == v && s.finish.is_none())
-            {
-                if pages.extend(s.id, 1).is_err() {
-                    s.finish = Some(FinishReason::OutOfPages);
-                    let _ = pages.release(s.id);
-                }
-            }
-            out.kv_pages_peak = out.kv_pages_peak.max(pages.used_pages());
-            out.kv_bytes_peak = out.kv_bytes_peak.max(pages.bytes_used());
-
-            let mut group: Vec<&mut GenSession> = sessions
-                .iter_mut()
-                .filter(|s| s.variant == v && s.finish.is_none())
-                .collect();
-            if group.is_empty() {
-                continue;
-            }
-            let engine = engine_for(v).expect("admitted variant has an engine");
-            let key = v.artifact_key();
-            let toks: Vec<u16> = group.iter().map(|s| s.next_token).collect();
-            let bsz = group.len();
-            let mut caches: Vec<&mut KvCache> =
-                group.iter_mut().map(|s| s.cache_mut()).collect();
-            let t = Timer::start();
-            let logits = engine
-                .decode_batch(&toks, &mut caches)
-                .expect("page manager and cache capacity are kept in sync");
-            let tick_ms = t.ms();
-            drop(caches);
-            metrics.record_stage(&format!("decode:{key}"), tick_ms);
-            Metrics::inc(&metrics.batches);
-
-            let stats = out.per_variant.entry(key).or_default();
-            stats.decode_ticks += 1;
-            stats.decode_tokens += bsz;
-            stats.decode_ms += tick_ms;
-            stats.generated_tokens += bsz;
-            for (r, s) in group.iter_mut().enumerate() {
-                let tok = cfg.sampler.sample(logits.row(r), &mut s.rng);
-                s.generated.push(tok);
-                s.next_token = tok;
-                s.decode_ms += tick_ms / bsz as f64;
-                if s.generated.len() >= s.max_new {
-                    s.finish = Some(FinishReason::Length);
-                }
-            }
+        // ---- one batched decode step per variant + retire ----
+        core.decode_tick(metrics);
+        for resp in core.retire(metrics) {
+            let _ = tx_resp.send(resp);
         }
-
-        // ---- retire finished sequences, releasing their pages ----
-        let drained = std::mem::take(&mut sessions);
-        for s in drained {
-            let Some(finish) = s.finish else {
-                sessions.push(s);
-                continue;
-            };
-            let _ = pages.release(s.id);
-            let key = s.variant.artifact_key();
-            let stats = out.per_variant.entry(key).or_default();
-            stats.requests += 1;
-            if finish == FinishReason::OutOfPages {
-                stats.oom_truncated += 1;
-            }
-            let total_ms = s.t_submit.elapsed().as_secs_f64() * 1e3;
-            metrics.record_latency(total_ms);
-            Metrics::inc(&metrics.completed);
-            let _ = tx_resp.send(GenerateResponse {
-                id: s.id,
-                variant: s.variant,
-                tokens: s.generated,
-                prompt_len: s.prompt_len,
-                finish,
-                prefill_ms: s.prefill_ms,
-                decode_ms: s.decode_ms,
-                total_ms,
-            });
-        }
+        Metrics::set_gauge(
+            &metrics.queue_depth,
+            (pending.len() + core.sessions.len()) as u64,
+        );
     }
 
-    debug_assert!(pages.check_invariants().is_ok());
-    for stats in out.per_variant.values_mut() {
-        if stats.decode_ticks > 0 {
-            stats.mean_decode_batch =
-                stats.decode_tokens as f64 / stats.decode_ticks as f64;
-        }
-        if stats.decode_ms > 0.0 {
-            stats.decode_tok_s = stats.decode_tokens as f64 / (stats.decode_ms / 1e3);
-        }
-    }
-    out
-}
-
-impl GenSession {
-    fn cache_mut(&mut self) -> &mut KvCache {
-        &mut self.cache
-    }
+    core.finalize()
 }

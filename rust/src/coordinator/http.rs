@@ -1,0 +1,1184 @@
+//! Networked serving frontend: a dependency-free HTTP/1.1 server over
+//! the continuous-batching generation engine.
+//!
+//! This is the layer that turns the coordinator into a real network
+//! service: concurrent TCP clients POST generation requests and are
+//! served from **shared decode ticks** — the same iteration-level
+//! `SchedCore` loop (in [`super::generate`]) the in-process executor
+//! runs, now fed off sockets.
+//!
+//! ```text
+//!   TCP clients ──► acceptor thread ──► connection-handler threads
+//!                                           │  mpsc (Job: request +
+//!                                           │        GenEvent channel)
+//!                                           ▼
+//!                                 scheduler thread (owns the engines,
+//!                                 KvPageManager and sessions; runs the
+//!                                 admission → prefill → batched-decode
+//!                                 → retire tick loop)
+//!                                           │  per-request GenEvent
+//!                                           ▼
+//!                    handlers write JSON (or chunked token streams)
+//! ```
+//!
+//! Endpoints:
+//! - `POST /v1/generate` — JSON body `{"prompt": [ids...],
+//!   "max_new_tokens": N, "variant": "...", "stream": bool}`. Responses
+//!   are bit-exact to a single-sequence `prefill` + `decode_step` replay
+//!   (the batched decode is bit-identical per row). With
+//!   `"stream": true` the response is `Transfer-Encoding: chunked`: one
+//!   `{"token":N}` chunk per sampled token as it is produced, then a
+//!   final `{"done":true,...}` summary chunk.
+//! - `GET /healthz` — liveness + queue/page gauges.
+//! - `GET /metrics` — Prometheus text format
+//!   ([`Metrics::render_prometheus`]).
+//!
+//! Backpressure maps onto status codes: a full scheduler queue is **429**
+//! (retryable — sequences retire and free pages), a request whose worst
+//! case could never fit the page pool (or whose variant has no engine)
+//! is **503**. A mid-decode page exhaustion is *not* an error: the
+//! request completes with `"finish":"out_of_pages"` and however many
+//! tokens it got. Full protocol reference: `docs/http_serving.md`.
+//!
+//! Shutdown is a graceful drain: the acceptor stops taking connections,
+//! in-flight requests run to completion, then the scheduler exits.
+//!
+//! Everything here is `std`-only (`TcpListener` + threads + mpsc) — the
+//! repo's offline build has no tokio/hyper, and none is needed at this
+//! scale: connection handlers block on their per-request event channel
+//! while the single scheduler thread does the actual batching.
+
+use super::generate::{Admit, SchedCore};
+use super::metrics::Metrics;
+use super::request::{
+    GenEvent, GenerateRequest, GenerateResponse, RejectReason, Variant,
+};
+use crate::formats::KvFormat;
+use crate::model::{Engine, Sampler};
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// Hard cap on the request head (request line + headers).
+const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Nesting depth allowed in request bodies (see `util/json.rs`
+/// hardening; generation bodies are flat, so this is generous).
+const MAX_BODY_DEPTH: usize = 16;
+
+/// Config of the HTTP serving frontend.
+#[derive(Clone, Debug)]
+pub struct HttpServeConfig {
+    /// cap on concurrently decoding sequences per variant
+    pub max_decode_batch: usize,
+    /// total pages in the shared KV page pool
+    pub kv_pages: usize,
+    /// storage format of the K/V pages
+    pub kv_format: KvFormat,
+    /// scheduler backlog cap (pending + running) before requests get 429
+    pub queue_cap: usize,
+    /// request-body byte cap before 413
+    pub max_body_bytes: usize,
+    /// prompt-length cap (tokens) before 400
+    pub max_prompt_len: usize,
+    /// per-request `max_new_tokens` cap before 400
+    pub max_new_cap: usize,
+    /// `max_new_tokens` applied when the request omits it
+    pub default_max_new: usize,
+    pub sampler: Sampler,
+    /// seed of the per-session sampling streams (`session_rng`)
+    pub seed: u64,
+    /// socket read timeout — the cadence at which idle keep-alive
+    /// handlers re-check the shutdown flag, and also the inter-read
+    /// deadline while a request is being received: a client that stalls
+    /// longer than this mid-request is dropped (connection closed, no
+    /// error response) rather than holding a handler thread hostage
+    pub read_timeout_ms: u64,
+}
+
+impl Default for HttpServeConfig {
+    fn default() -> Self {
+        HttpServeConfig {
+            max_decode_batch: 8,
+            kv_pages: 256,
+            kv_format: KvFormat::Fp32,
+            queue_cap: 64,
+            max_body_bytes: 1 << 20,
+            max_prompt_len: 512,
+            max_new_cap: 256,
+            default_max_new: 16,
+            sampler: Sampler::Greedy,
+            seed: 0,
+            read_timeout_ms: 250,
+        }
+    }
+}
+
+/// One enqueued generation: the request plus the channel its events
+/// (tokens, completion, rejection) flow back on.
+struct Job {
+    req: GenerateRequest,
+    watch: mpsc::Sender<GenEvent>,
+}
+
+/// Request-body limits the connection handlers validate against (split
+/// out of [`ConnShared`] so body parsing is unit-testable).
+#[derive(Clone, Debug)]
+struct BodyLimits {
+    max_prompt_len: usize,
+    max_new_cap: usize,
+    default_max_new: usize,
+    vocab: usize,
+    default_variant: Variant,
+}
+
+/// State shared by the acceptor and every connection handler.
+struct ConnShared {
+    cfg: HttpServeConfig,
+    limits: BodyLimits,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    next_id: AtomicU64,
+}
+
+/// A running HTTP serving frontend. Binds eagerly in
+/// [`HttpServer::start`]; [`HttpServer::shutdown`] (or drop) drains
+/// gracefully.
+pub struct HttpServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    sched: Option<std::thread::JoinHandle<()>>,
+    job_tx: Option<mpsc::Sender<Job>>,
+    /// serving metrics — the `GET /metrics` registry, readable in-process
+    pub metrics: Arc<Metrics>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (`"127.0.0.1:0"` picks a free port — read it back via
+    /// [`HttpServer::addr`]) and start the acceptor + scheduler threads.
+    /// The first engine's variant is the default for requests that do not
+    /// pin one; its model config fixes vocabulary and page geometry.
+    pub fn start(
+        cfg: HttpServeConfig,
+        addr: &str,
+        engines: Vec<(Variant, Engine)>,
+    ) -> Result<HttpServer, String> {
+        if engines.is_empty() {
+            return Err("HttpServer::start: no engines supplied".into());
+        }
+        if cfg.max_decode_batch == 0 {
+            return Err("HttpServer::start: max_decode_batch must be ≥ 1".into());
+        }
+        let listener =
+            TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        let local = listener.local_addr().map_err(|e| e.to_string())?;
+        let metrics = Arc::new(Metrics::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (job_tx, job_rx) = mpsc::channel::<Job>();
+        let limits = BodyLimits {
+            max_prompt_len: cfg.max_prompt_len,
+            max_new_cap: cfg.max_new_cap,
+            default_max_new: cfg.default_max_new,
+            vocab: engines[0].1.cfg.vocab,
+            default_variant: engines[0].0,
+        };
+        let shared = Arc::new(ConnShared {
+            cfg: cfg.clone(),
+            limits,
+            metrics: metrics.clone(),
+            shutdown: shutdown.clone(),
+            next_id: AtomicU64::new(0),
+        });
+        let sched_metrics = metrics.clone();
+        let sched_cfg = cfg.clone();
+        let sched = std::thread::Builder::new()
+            .name("arcquant-http-sched".into())
+            .spawn(move || run_scheduler(sched_cfg, engines, job_rx, sched_metrics))
+            .map_err(|e| format!("spawn scheduler: {e}"))?;
+        let acc_tx = job_tx.clone();
+        let accept = std::thread::Builder::new()
+            .name("arcquant-http-accept".into())
+            .spawn(move || run_acceptor(listener, acc_tx, shared))
+            .map_err(|e| format!("spawn acceptor: {e}"))?;
+        Ok(HttpServer {
+            addr: local,
+            shutdown,
+            accept: Some(accept),
+            sched: Some(sched),
+            job_tx: Some(job_tx),
+            metrics,
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful drain: stop accepting connections, let in-flight requests
+    /// complete, then stop the scheduler. Blocks until everything exited.
+    pub fn shutdown(mut self) {
+        self.shutdown_impl();
+    }
+
+    fn shutdown_impl(&mut self) {
+        if self.accept.is_none() && self.sched.is_none() {
+            return;
+        }
+        self.shutdown.store(true, Ordering::Relaxed);
+        // wake the acceptor out of accept(): it re-checks the flag per
+        // connection, so a throwaway local connect unblocks it
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // the acceptor joins every connection handler before exiting, so
+        // at this point ours is the last Job sender — dropping it lets
+        // the scheduler finish its sessions and exit
+        self.job_tx = None;
+        if let Some(h) = self.sched.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
+/// Map a scheduler rejection onto an HTTP status.
+fn reject_status(r: RejectReason) -> u16 {
+    match r {
+        RejectReason::QueueFull => 429,
+        RejectReason::Internal => 500,
+        RejectReason::VariantUnavailable
+        | RejectReason::PageBudget
+        | RejectReason::ShuttingDown => 503,
+    }
+}
+
+// ---------------------------------------------------------------------
+// scheduler thread
+// ---------------------------------------------------------------------
+
+fn enqueue(
+    job: Job,
+    pending: &mut VecDeque<Job>,
+    running: usize,
+    queue_cap: usize,
+    metrics: &Metrics,
+) {
+    if pending.len() + running >= queue_cap {
+        Metrics::inc(&metrics.rejected);
+        let _ = job.watch.send(GenEvent::Rejected {
+            reason: RejectReason::QueueFull,
+        });
+    } else {
+        Metrics::inc(&metrics.submitted);
+        pending.push_back(job);
+    }
+}
+
+/// The single scheduler thread: owns the engines and the
+/// [`SchedCore`]; every loop iteration drains newly arrived jobs, admits
+/// what fits, then runs one batched decode tick per variant — so
+/// concurrent HTTP clients share ticks exactly like the closed-loop
+/// executor's requests do.
+fn run_scheduler(
+    cfg: HttpServeConfig,
+    engines: Vec<(Variant, Engine)>,
+    rx: mpsc::Receiver<Job>,
+    metrics: Arc<Metrics>,
+) {
+    let refs: Vec<(Variant, &Engine)> =
+        engines.iter().map(|(v, e)| (*v, e)).collect();
+    let model_cfg = &engines[0].1.cfg;
+    let mut core = SchedCore::new(
+        &refs,
+        model_cfg,
+        cfg.kv_pages,
+        cfg.kv_format,
+        cfg.max_decode_batch,
+        cfg.sampler,
+        cfg.seed,
+    );
+    Metrics::set_gauge(&metrics.kv_pages_total, cfg.kv_pages as u64);
+    let mut pending: VecDeque<Job> = VecDeque::new();
+    let mut rx_closed = false;
+
+    loop {
+        // ---- pull newly arrived jobs (non-blocking) ----
+        if !rx_closed {
+            loop {
+                match rx.try_recv() {
+                    Ok(job) => enqueue(
+                        job,
+                        &mut pending,
+                        core.sessions.len(),
+                        cfg.queue_cap,
+                        &metrics,
+                    ),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        rx_closed = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if pending.is_empty() && core.sessions.is_empty() {
+            if rx_closed {
+                break;
+            }
+            // idle: block briefly instead of spinning (bounded so the
+            // disconnect that signals shutdown is noticed promptly)
+            match rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(job) => enqueue(
+                    job,
+                    &mut pending,
+                    core.sessions.len(),
+                    cfg.queue_cap,
+                    &metrics,
+                ),
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    rx_closed = true;
+                    continue;
+                }
+            }
+        }
+
+        // ---- admission + prefill ----
+        let mut still = VecDeque::with_capacity(pending.len());
+        for job in pending.drain(..) {
+            match core.admission(&job.req) {
+                Admit::Reject(reason) => {
+                    Metrics::inc(&metrics.rejected);
+                    let _ = job.watch.send(GenEvent::Rejected { reason });
+                }
+                Admit::Wait => still.push_back(job),
+                Admit::Run => {
+                    if let Err((_, watch, reason)) =
+                        core.enroll(job.req, Some(job.watch), &metrics)
+                    {
+                        Metrics::inc(&metrics.rejected);
+                        if let Some(w) = watch {
+                            let _ = w.send(GenEvent::Rejected { reason });
+                        }
+                    }
+                }
+            }
+        }
+        pending = still;
+        Metrics::set_gauge(
+            &metrics.queue_depth,
+            (pending.len() + core.sessions.len()) as u64,
+        );
+
+        // ---- one batched decode step per variant + retire ----
+        core.decode_tick(&metrics);
+        let _ = core.retire(&metrics);
+        Metrics::set_gauge(
+            &metrics.queue_depth,
+            (pending.len() + core.sessions.len()) as u64,
+        );
+    }
+    // loop exits only with empty queue and no sessions: fully drained
+    let _ = core.finalize();
+}
+
+// ---------------------------------------------------------------------
+// acceptor + connection handlers
+// ---------------------------------------------------------------------
+
+fn run_acceptor(
+    listener: TcpListener,
+    job_tx: mpsc::Sender<Job>,
+    shared: Arc<ConnShared>,
+) {
+    let mut handles = Vec::new();
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if shared.shutdown.load(Ordering::Relaxed) {
+                    break;
+                }
+                let tx = job_tx.clone();
+                let sh = shared.clone();
+                handles.push(std::thread::spawn(move || handle_conn(stream, tx, sh)));
+                // reap exited handlers so a long-lived server holds one
+                // handle per *live* connection, not per connection ever
+                // served (dropping a finished handle just detaches it)
+                handles.retain(|h| !h.is_finished());
+            }
+            Err(_) => {
+                if shared.shutdown.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+        }
+    }
+    // drain: every in-flight connection finishes its request(s)
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
+fn handle_conn(stream: TcpStream, job_tx: mpsc::Sender<Job>, sh: Arc<ConnShared>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream
+        .set_read_timeout(Some(Duration::from_millis(sh.cfg.read_timeout_ms)));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        if sh.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        let req = match read_http_request(&mut reader, sh.cfg.max_body_bytes) {
+            Ok(r) => r,
+            // idle keep-alive: poll again (re-checks the shutdown flag)
+            Err(HttpReadError::Idle) => continue,
+            Err(HttpReadError::Eof) | Err(HttpReadError::Io(_)) => return,
+            Err(HttpReadError::BodyTooLarge) => {
+                let _ = send(
+                    &mut writer,
+                    413,
+                    "application/json",
+                    &error_body("request body exceeds the configured limit"),
+                    false,
+                    &sh.metrics,
+                );
+                return;
+            }
+            Err(HttpReadError::Malformed(m)) => {
+                let _ = send(
+                    &mut writer,
+                    400,
+                    "application/json",
+                    &error_body(&m),
+                    false,
+                    &sh.metrics,
+                );
+                return;
+            }
+        };
+        let keep = req.keep_alive && !sh.shutdown.load(Ordering::Relaxed);
+        let usable = route_request(&mut writer, &req, keep, &job_tx, &sh);
+        if !usable || !keep {
+            return;
+        }
+    }
+}
+
+fn route_request(
+    w: &mut TcpStream,
+    req: &HttpRequest,
+    keep: bool,
+    job_tx: &mpsc::Sender<Job>,
+    sh: &ConnShared,
+) -> bool {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let mut j = Json::obj();
+            j.set("status", Json::Str("ok".into()))
+                .set(
+                    "queue_depth",
+                    Json::Num(Metrics::get(&sh.metrics.queue_depth) as f64),
+                )
+                .set(
+                    "kv_pages_used",
+                    Json::Num(Metrics::get(&sh.metrics.kv_pages_used) as f64),
+                )
+                .set(
+                    "kv_pages_total",
+                    Json::Num(Metrics::get(&sh.metrics.kv_pages_total) as f64),
+                );
+            send(w, 200, "application/json", &j.dump(), keep, &sh.metrics)
+        }
+        ("GET", "/metrics") => send(
+            w,
+            200,
+            "text/plain; version=0.0.4",
+            &sh.metrics.render_prometheus(),
+            keep,
+            &sh.metrics,
+        ),
+        ("POST", "/v1/generate") => handle_generate(w, req, keep, job_tx, sh),
+        (_, "/healthz" | "/metrics" | "/v1/generate") => send(
+            w,
+            405,
+            "application/json",
+            &error_body("method not allowed"),
+            keep,
+            &sh.metrics,
+        ),
+        _ => send(
+            w,
+            404,
+            "application/json",
+            &error_body("not found"),
+            keep,
+            &sh.metrics,
+        ),
+    }
+}
+
+fn handle_generate(
+    w: &mut TcpStream,
+    req: &HttpRequest,
+    keep: bool,
+    job_tx: &mpsc::Sender<Job>,
+    sh: &ConnShared,
+) -> bool {
+    let parsed = std::str::from_utf8(&req.body)
+        .map_err(|_| "body is not UTF-8".to_string())
+        .and_then(|s| parse_generate_body(s, &sh.limits));
+    let api = match parsed {
+        Ok(a) => a,
+        Err(msg) => {
+            return send(
+                w,
+                400,
+                "application/json",
+                &error_body(&msg),
+                keep,
+                &sh.metrics,
+            )
+        }
+    };
+    let id = sh.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+    let (tx_ev, rx_ev) = mpsc::channel::<GenEvent>();
+    let greq = GenerateRequest::new(id, api.prompt, api.max_new_tokens, api.variant);
+    if job_tx
+        .send(Job {
+            req: greq,
+            watch: tx_ev,
+        })
+        .is_err()
+    {
+        return send(
+            w,
+            503,
+            "application/json",
+            &error_body(RejectReason::ShuttingDown.message()),
+            false,
+            &sh.metrics,
+        );
+    }
+    if api.stream {
+        stream_generate(w, &rx_ev, keep, sh)
+    } else {
+        collect_generate(w, &rx_ev, keep, sh)
+    }
+}
+
+/// Non-streaming: wait for the terminal event, answer with one JSON body.
+fn collect_generate(
+    w: &mut TcpStream,
+    rx_ev: &mpsc::Receiver<GenEvent>,
+    keep: bool,
+    sh: &ConnShared,
+) -> bool {
+    loop {
+        match rx_ev.recv() {
+            Ok(GenEvent::Token(_)) => {}
+            Ok(GenEvent::Done(resp)) => {
+                return send(
+                    w,
+                    200,
+                    "application/json",
+                    &response_obj(&resp).dump(),
+                    keep,
+                    &sh.metrics,
+                );
+            }
+            Ok(GenEvent::Rejected { reason }) => {
+                return send(
+                    w,
+                    reject_status(reason),
+                    "application/json",
+                    &error_body(reason.message()),
+                    keep,
+                    &sh.metrics,
+                );
+            }
+            Err(_) => {
+                return send(
+                    w,
+                    500,
+                    "application/json",
+                    &error_body("scheduler unavailable"),
+                    false,
+                    &sh.metrics,
+                );
+            }
+        }
+    }
+}
+
+/// Streaming: chunked transfer encoding, one `{"token":N}` NDJSON line
+/// per sampled token as the scheduler produces it, then a final
+/// `{"done":true,...}` summary chunk. The status line is only committed
+/// after the first event, so rejections still get their proper 4xx/5xx.
+fn stream_generate(
+    w: &mut TcpStream,
+    rx_ev: &mpsc::Receiver<GenEvent>,
+    keep: bool,
+    sh: &ConnShared,
+) -> bool {
+    let first = match rx_ev.recv() {
+        Ok(ev) => ev,
+        Err(_) => {
+            return send(
+                w,
+                500,
+                "application/json",
+                &error_body("scheduler unavailable"),
+                false,
+                &sh.metrics,
+            );
+        }
+    };
+    if let GenEvent::Rejected { reason } = &first {
+        return send(
+            w,
+            reject_status(*reason),
+            "application/json",
+            &error_body(reason.message()),
+            keep,
+            &sh.metrics,
+        );
+    }
+    sh.metrics.record_http_status(200);
+    let head = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\n\
+         Transfer-Encoding: chunked\r\nConnection: {}\r\n\r\n",
+        if keep { "keep-alive" } else { "close" }
+    );
+    if w.write_all(head.as_bytes()).is_err() {
+        return false;
+    }
+    let mut ev = first;
+    loop {
+        match ev {
+            GenEvent::Token(t) => {
+                if write_chunk(w, &format!("{{\"token\":{t}}}\n")).is_err() {
+                    return false;
+                }
+            }
+            GenEvent::Done(resp) => {
+                let mut j = response_obj(&resp);
+                j.set("done", Json::Bool(true));
+                if write_chunk(w, &format!("{}\n", j.dump())).is_err() {
+                    return false;
+                }
+                return w.write_all(b"0\r\n\r\n").is_ok();
+            }
+            // rejections can only be the first event; treat a late one as
+            // a broken stream
+            GenEvent::Rejected { .. } => return false,
+        }
+        ev = match rx_ev.recv() {
+            Ok(e) => e,
+            Err(_) => return false,
+        };
+    }
+}
+
+// ---------------------------------------------------------------------
+// wire types + parsing (unit-tested)
+// ---------------------------------------------------------------------
+
+/// One parsed HTTP request (head + body).
+#[derive(Debug)]
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+    keep_alive: bool,
+}
+
+#[derive(Debug)]
+enum HttpReadError {
+    /// read timeout with no request bytes: idle keep-alive poll
+    Idle,
+    /// clean close before any request bytes
+    Eof,
+    /// declared `Content-Length` exceeds the configured cap
+    BodyTooLarge,
+    /// protocol violation (answered with 400)
+    Malformed(String),
+    /// transport error mid-request (connection dropped)
+    Io(String),
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+    )
+}
+
+/// Read one request off the connection. Generic over [`BufRead`] so the
+/// parser is testable without sockets.
+fn read_http_request<R: BufRead>(
+    r: &mut R,
+    max_body: usize,
+) -> Result<HttpRequest, HttpReadError> {
+    // request line (tolerate a few stray blank lines between pipelined
+    // keep-alive requests)
+    let mut line = String::new();
+    for _ in 0..4 {
+        line.clear();
+        match r.read_line(&mut line) {
+            Ok(0) => return Err(HttpReadError::Eof),
+            Ok(_) => {}
+            Err(e) if is_timeout(&e) && line.is_empty() => {
+                return Err(HttpReadError::Idle)
+            }
+            Err(e) => return Err(HttpReadError::Io(e.to_string())),
+        }
+        if !line.trim().is_empty() {
+            break;
+        }
+    }
+    if line.trim().is_empty() {
+        return Err(HttpReadError::Malformed("empty request line".into()));
+    }
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    if parts.len() != 3 {
+        return Err(HttpReadError::Malformed("bad request line".into()));
+    }
+    let (method, path, version) = (parts[0], parts[1], parts[2]);
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpReadError::Malformed(format!(
+            "unsupported protocol version {version}"
+        )));
+    }
+    // HTTP/1.1 defaults to keep-alive, HTTP/1.0 to close
+    let mut keep_alive = version == "HTTP/1.1";
+
+    // headers
+    let mut content_len = 0usize;
+    let mut header_bytes = line.len();
+    loop {
+        let mut h = String::new();
+        match r.read_line(&mut h) {
+            Ok(0) => {
+                return Err(HttpReadError::Malformed(
+                    "connection closed inside headers".into(),
+                ))
+            }
+            Ok(n) => header_bytes += n,
+            Err(e) if is_timeout(&e) => {
+                return Err(HttpReadError::Io("timeout inside headers".into()))
+            }
+            Err(e) => return Err(HttpReadError::Io(e.to_string())),
+        }
+        if header_bytes > MAX_HEADER_BYTES {
+            return Err(HttpReadError::Malformed("header section too large".into()));
+        }
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        let Some((k, v)) = t.split_once(':') else {
+            return Err(HttpReadError::Malformed("malformed header line".into()));
+        };
+        let k = k.trim().to_ascii_lowercase();
+        let v = v.trim();
+        match k.as_str() {
+            "content-length" => {
+                content_len = v.parse::<usize>().map_err(|_| {
+                    HttpReadError::Malformed("bad Content-Length".into())
+                })?;
+            }
+            "connection" => {
+                let vl = v.to_ascii_lowercase();
+                if vl.contains("close") {
+                    keep_alive = false;
+                } else if vl.contains("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            "transfer-encoding" => {
+                return Err(HttpReadError::Malformed(
+                    "chunked request bodies are not supported".into(),
+                ));
+            }
+            _ => {}
+        }
+    }
+    if content_len > max_body {
+        return Err(HttpReadError::BodyTooLarge);
+    }
+    let mut body = vec![0u8; content_len];
+    if content_len > 0 {
+        r.read_exact(&mut body)
+            .map_err(|e| HttpReadError::Io(e.to_string()))?;
+    }
+    Ok(HttpRequest {
+        method: method.to_string(),
+        path: path.to_string(),
+        body,
+        keep_alive,
+    })
+}
+
+/// Validated `/v1/generate` request body.
+#[derive(Debug, PartialEq)]
+struct ApiRequest {
+    prompt: Vec<u16>,
+    max_new_tokens: usize,
+    variant: Variant,
+    stream: bool,
+}
+
+fn parse_generate_body(s: &str, lim: &BodyLimits) -> Result<ApiRequest, String> {
+    let j = Json::parse_with_depth(s, MAX_BODY_DEPTH)
+        .map_err(|e| format!("invalid JSON: {e}"))?;
+    let Json::Obj(map) = &j else {
+        return Err("body must be a JSON object".into());
+    };
+    for k in map.keys() {
+        if !matches!(
+            k.as_str(),
+            "prompt" | "max_new_tokens" | "variant" | "stream"
+        ) {
+            return Err(format!("unknown field '{k}'"));
+        }
+    }
+    let arr = j
+        .get("prompt")
+        .ok_or("missing 'prompt'")?
+        .as_arr()
+        .ok_or("'prompt' must be an array of token ids")?;
+    if arr.is_empty() {
+        return Err("'prompt' must not be empty".into());
+    }
+    if arr.len() > lim.max_prompt_len {
+        return Err(format!(
+            "'prompt' longer than the {}-token limit",
+            lim.max_prompt_len
+        ));
+    }
+    let mut prompt = Vec::with_capacity(arr.len());
+    for t in arr {
+        let n = t.as_f64().ok_or("'prompt' must contain only numbers")?;
+        if n.fract() != 0.0 || n < 0.0 || n >= lim.vocab as f64 {
+            return Err(format!(
+                "token id {n} outside the vocabulary (0..{})",
+                lim.vocab
+            ));
+        }
+        prompt.push(n as u16);
+    }
+    let max_new_tokens = match j.get("max_new_tokens") {
+        None => lim.default_max_new.min(lim.max_new_cap),
+        Some(v) => {
+            let n = v
+                .as_f64()
+                .filter(|n| n.fract() == 0.0 && *n >= 1.0)
+                .ok_or("'max_new_tokens' must be a positive integer")?;
+            n as usize
+        }
+    };
+    if max_new_tokens > lim.max_new_cap {
+        return Err(format!(
+            "'max_new_tokens' above the cap of {}",
+            lim.max_new_cap
+        ));
+    }
+    let variant = match j.get("variant") {
+        None => lim.default_variant,
+        Some(v) => {
+            let name = v.as_str().ok_or("'variant' must be a string")?;
+            Variant::parse(name).ok_or_else(|| format!("unknown variant '{name}'"))?
+        }
+    };
+    let stream = match j.get("stream") {
+        None => false,
+        Some(Json::Bool(b)) => *b,
+        Some(_) => return Err("'stream' must be a boolean".into()),
+    };
+    Ok(ApiRequest {
+        prompt,
+        max_new_tokens,
+        variant,
+        stream,
+    })
+}
+
+/// Response JSON of a completed generation (the non-streaming body; the
+/// streaming path appends `"done":true` to the same object).
+fn response_obj(resp: &GenerateResponse) -> Json {
+    let mut j = Json::obj();
+    j.set("id", Json::Num(resp.id as f64))
+        .set("variant", Json::Str(resp.variant.artifact_key().into()))
+        .set(
+            "tokens",
+            Json::Arr(resp.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+        )
+        .set("prompt_len", Json::Num(resp.prompt_len as f64))
+        .set("finish", Json::Str(resp.finish.name().into()))
+        .set("prefill_ms", Json::Num(resp.prefill_ms))
+        .set("decode_ms", Json::Num(resp.decode_ms))
+        .set("total_ms", Json::Num(resp.total_ms));
+    j
+}
+
+fn error_body(msg: &str) -> String {
+    let mut j = Json::obj();
+    j.set("error", Json::Str(msg.into()));
+    j.dump()
+}
+
+fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete (non-chunked) response.
+fn write_simple<W: Write>(
+    w: &mut W,
+    status: u16,
+    ctype: &str,
+    body: &str,
+    keep: bool,
+) -> std::io::Result<()> {
+    let retry = if status == 429 || status == 503 {
+        "Retry-After: 1\r\n"
+    } else {
+        ""
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\n\
+         {retry}Connection: {}\r\n\r\n",
+        status_text(status),
+        body.len(),
+        if keep { "keep-alive" } else { "close" }
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body.as_bytes())
+}
+
+/// Record the status and write the response; returns whether the
+/// connection is still usable.
+fn send<W: Write>(
+    w: &mut W,
+    status: u16,
+    ctype: &str,
+    body: &str,
+    keep: bool,
+    metrics: &Metrics,
+) -> bool {
+    metrics.record_http_status(status);
+    write_simple(w, status, ctype, body, keep).is_ok()
+}
+
+/// One chunk of a chunked-transfer-encoded response.
+fn write_chunk<W: Write>(w: &mut W, data: &str) -> std::io::Result<()> {
+    w.write_all(format!("{:x}\r\n", data.len()).as_bytes())?;
+    w.write_all(data.as_bytes())?;
+    w.write_all(b"\r\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn limits() -> BodyLimits {
+        BodyLimits {
+            max_prompt_len: 64,
+            max_new_cap: 32,
+            default_max_new: 16,
+            vocab: 256,
+            default_variant: Variant::ArcPacked,
+        }
+    }
+
+    #[test]
+    fn parses_minimal_body_with_defaults() {
+        let a = parse_generate_body(r#"{"prompt":[1,2,3]}"#, &limits()).unwrap();
+        assert_eq!(a.prompt, vec![1, 2, 3]);
+        assert_eq!(a.max_new_tokens, 16);
+        assert_eq!(a.variant, Variant::ArcPacked);
+        assert!(!a.stream);
+    }
+
+    #[test]
+    fn parses_full_body() {
+        let a = parse_generate_body(
+            r#"{"prompt":[0,255],"max_new_tokens":4,"variant":"fp32","stream":true}"#,
+            &limits(),
+        )
+        .unwrap();
+        assert_eq!(a.prompt, vec![0, 255]);
+        assert_eq!(a.max_new_tokens, 4);
+        assert_eq!(a.variant, Variant::Fp32);
+        assert!(a.stream);
+    }
+
+    #[test]
+    fn rejects_bad_bodies() {
+        let l = limits();
+        for (body, why) in [
+            ("{", "truncated JSON"),
+            ("[1,2]", "non-object"),
+            (r#"{"max_new_tokens":4}"#, "missing prompt"),
+            (r#"{"prompt":[]}"#, "empty prompt"),
+            (r#"{"prompt":"abc"}"#, "prompt not an array"),
+            (r#"{"prompt":[1.5]}"#, "fractional token"),
+            (r#"{"prompt":[-1]}"#, "negative token"),
+            (r#"{"prompt":[256]}"#, "token outside vocab"),
+            (r#"{"prompt":[1],"max_new_tokens":0}"#, "zero budget"),
+            (r#"{"prompt":[1],"max_new_tokens":33}"#, "budget above cap"),
+            (r#"{"prompt":[1],"variant":"bogus"}"#, "unknown variant"),
+            (r#"{"prompt":[1],"stream":"yes"}"#, "non-bool stream"),
+            (r#"{"prompt":[1],"extra":1}"#, "unknown field"),
+        ] {
+            assert!(
+                parse_generate_body(body, &l).is_err(),
+                "should reject {why}: {body}"
+            );
+        }
+        // oversized prompt
+        let long: Vec<String> = (0..65).map(|_| "1".to_string()).collect();
+        let body = format!(r#"{{"prompt":[{}]}}"#, long.join(","));
+        assert!(parse_generate_body(&body, &l).is_err());
+    }
+
+    #[test]
+    fn reads_get_request() {
+        let raw = "GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n";
+        let r = read_http_request(&mut Cursor::new(raw), 1024).unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/healthz");
+        assert!(r.body.is_empty());
+        assert!(r.keep_alive, "HTTP/1.1 defaults to keep-alive");
+    }
+
+    #[test]
+    fn reads_post_with_body_and_connection_close() {
+        let raw = "POST /v1/generate HTTP/1.1\r\nContent-Length: 4\r\n\
+                   Connection: close\r\n\r\nabcd";
+        let r = read_http_request(&mut Cursor::new(raw), 1024).unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.body, b"abcd");
+        assert!(!r.keep_alive);
+    }
+
+    #[test]
+    fn http10_defaults_to_close() {
+        let raw = "GET /metrics HTTP/1.0\r\n\r\n";
+        let r = read_http_request(&mut Cursor::new(raw), 1024).unwrap();
+        assert!(!r.keep_alive);
+    }
+
+    #[test]
+    fn read_rejects_malformed() {
+        for raw in [
+            "GARBAGE\r\n\r\n",
+            "GET /x\r\n\r\n",
+            "GET /x SPDY/3\r\n\r\n",
+            "GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n",
+            "POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n",
+            "POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+        ] {
+            assert!(
+                matches!(
+                    read_http_request(&mut Cursor::new(raw), 1024),
+                    Err(HttpReadError::Malformed(_))
+                ),
+                "should be malformed: {raw:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn read_reports_eof_and_oversize() {
+        assert!(matches!(
+            read_http_request(&mut Cursor::new(""), 1024),
+            Err(HttpReadError::Eof)
+        ));
+        let raw = "POST /x HTTP/1.1\r\nContent-Length: 2048\r\n\r\n";
+        assert!(matches!(
+            read_http_request(&mut Cursor::new(raw), 1024),
+            Err(HttpReadError::BodyTooLarge)
+        ));
+    }
+
+    #[test]
+    fn simple_response_shape() {
+        let mut out = Vec::new();
+        write_simple(&mut out, 200, "application/json", "{}", true).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("Content-Length: 2\r\n"));
+        assert!(s.contains("Connection: keep-alive\r\n"));
+        assert!(s.ends_with("\r\n\r\n{}"));
+        let mut out = Vec::new();
+        write_simple(&mut out, 429, "application/json", "x", false).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.contains("Retry-After: 1\r\n"));
+        assert!(s.contains("Connection: close\r\n"));
+    }
+
+    #[test]
+    fn chunk_format() {
+        let mut out = Vec::new();
+        write_chunk(&mut out, "{\"token\":7}\n").unwrap();
+        assert_eq!(out, b"c\r\n{\"token\":7}\n\r\n");
+    }
+
+    #[test]
+    fn reject_status_mapping() {
+        assert_eq!(reject_status(RejectReason::QueueFull), 429);
+        assert_eq!(reject_status(RejectReason::PageBudget), 503);
+        assert_eq!(reject_status(RejectReason::VariantUnavailable), 503);
+        assert_eq!(reject_status(RejectReason::ShuttingDown), 503);
+        assert_eq!(reject_status(RejectReason::Internal), 500);
+    }
+
+    #[test]
+    fn response_json_has_all_fields() {
+        use super::super::request::FinishReason;
+        let resp = GenerateResponse {
+            id: 3,
+            variant: Variant::Fp32,
+            tokens: vec![7, 9],
+            prompt_len: 4,
+            finish: FinishReason::Length,
+            prefill_ms: 1.5,
+            decode_ms: 2.5,
+            total_ms: 4.5,
+        };
+        let s = response_obj(&resp).dump();
+        for needle in [
+            "\"id\":3",
+            "\"variant\":\"fp32\"",
+            "\"tokens\":[7,9]",
+            "\"prompt_len\":4",
+            "\"finish\":\"length\"",
+        ] {
+            assert!(s.contains(needle), "missing {needle} in {s}");
+        }
+    }
+}

@@ -1,0 +1,457 @@
+//! Closed-loop HTTP load generator + the minimal HTTP/1.1 client it
+//! (and the integration tests) drive the serving frontend with.
+//!
+//! `arcquant loadgen` runs N keep-alive connections against a
+//! [`super::http::HttpServer`]; each connection issues requests
+//! back-to-back (closed loop: a new request starts only when the
+//! previous response lands), so concurrency equals the connection count
+//! and the server's continuous batching is what turns concurrent
+//! connections into shared decode ticks. The report carries end-to-end
+//! tokens/s plus latency percentiles — the series committed in
+//! `BENCH_http.json` at connection counts {1, 4, 16}.
+//!
+//! The client half ([`HttpClient`]) is intentionally tiny: blocking
+//! `TcpStream`, `Content-Length` and chunked-transfer decoding, nothing
+//! else. It exists because the build is offline (no reqwest/hyper) and
+//! doubles as the test harness's way of speaking real HTTP to the
+//! server.
+
+use super::request::Variant;
+use crate::util::json::Json;
+use crate::util::{stats, Timer};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Mutex;
+
+/// One parsed HTTP response.
+#[derive(Clone, Debug)]
+pub struct HttpReply {
+    pub status: u16,
+    /// lowercased header names
+    pub headers: Vec<(String, String)>,
+    /// full body (chunked replies are reassembled)
+    pub body: String,
+    /// for chunked replies: each chunk separately, in arrival order
+    /// (streaming tests assert per-token chunk boundaries)
+    pub chunks: Option<Vec<String>>,
+}
+
+impl HttpReply {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// A blocking keep-alive HTTP/1.1 client over one `TcpStream`.
+pub struct HttpClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl HttpClient {
+    pub fn connect(addr: &str) -> Result<HttpClient, String> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        let reader = BufReader::new(
+            stream.try_clone().map_err(|e| e.to_string())?,
+        );
+        Ok(HttpClient {
+            reader,
+            writer: stream,
+        })
+    }
+
+    /// One request/response round trip on the keep-alive connection.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<HttpReply, String> {
+        let body = body.unwrap_or("");
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: arcquant\r\n\
+             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            body.len()
+        );
+        self.writer
+            .write_all(head.as_bytes())
+            .and_then(|()| self.writer.write_all(body.as_bytes()))
+            .map_err(|e| format!("send: {e}"))?;
+        read_http_reply(&mut self.reader)
+    }
+}
+
+/// Parse one response off a buffered connection (status line, headers,
+/// then a `Content-Length` or chunked body).
+fn read_http_reply<R: BufRead>(r: &mut R) -> Result<HttpReply, String> {
+    let mut line = String::new();
+    r.read_line(&mut line).map_err(|e| format!("status line: {e}"))?;
+    if line.is_empty() {
+        return Err("connection closed before status line".into());
+    }
+    let mut parts = line.split_whitespace();
+    let version = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/1.") {
+        return Err(format!("bad status line: {line:?}"));
+    }
+    let status: u16 = parts
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| format!("bad status line: {line:?}"))?;
+
+    let mut headers = Vec::new();
+    let mut content_len: Option<usize> = None;
+    let mut chunked = false;
+    loop {
+        let mut h = String::new();
+        let n = r.read_line(&mut h).map_err(|e| format!("header: {e}"))?;
+        if n == 0 {
+            return Err("connection closed inside headers".into());
+        }
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        let Some((k, v)) = t.split_once(':') else {
+            return Err(format!("malformed header {t:?}"));
+        };
+        let k = k.trim().to_ascii_lowercase();
+        let v = v.trim().to_string();
+        if k == "content-length" {
+            content_len =
+                Some(v.parse().map_err(|e| format!("content-length: {e}"))?);
+        }
+        if k == "transfer-encoding" && v.to_ascii_lowercase().contains("chunked") {
+            chunked = true;
+        }
+        headers.push((k, v));
+    }
+
+    if chunked {
+        let mut chunks = Vec::new();
+        let mut body = String::new();
+        loop {
+            let mut sz = String::new();
+            r.read_line(&mut sz).map_err(|e| format!("chunk size: {e}"))?;
+            let n = usize::from_str_radix(sz.trim(), 16)
+                .map_err(|e| format!("chunk size {sz:?}: {e}"))?;
+            if n == 0 {
+                // terminating chunk: consume the trailing CRLF
+                let mut crlf = String::new();
+                let _ = r.read_line(&mut crlf);
+                break;
+            }
+            let mut buf = vec![0u8; n + 2]; // data + CRLF
+            r.read_exact(&mut buf).map_err(|e| format!("chunk: {e}"))?;
+            let data = String::from_utf8(buf[..n].to_vec())
+                .map_err(|e| format!("chunk utf8: {e}"))?;
+            body.push_str(&data);
+            chunks.push(data);
+        }
+        return Ok(HttpReply {
+            status,
+            headers,
+            body,
+            chunks: Some(chunks),
+        });
+    }
+
+    let n = content_len.ok_or("response without Content-Length or chunking")?;
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf).map_err(|e| format!("body: {e}"))?;
+    let body = String::from_utf8(buf).map_err(|e| format!("body utf8: {e}"))?;
+    Ok(HttpReply {
+        status,
+        headers,
+        body,
+        chunks: None,
+    })
+}
+
+/// Config of a closed-loop load-generation run.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// server address, `host:port`
+    pub addr: String,
+    /// concurrent keep-alive connections (the closed-loop concurrency)
+    pub connections: usize,
+    /// requests issued back-to-back per connection
+    pub requests_per_conn: usize,
+    /// prompt length in tokens (client-synthesized, deterministic)
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    /// `None` = let the server apply its default variant
+    pub variant: Option<Variant>,
+    /// token-id range for synthesized prompts (must be ≤ server vocab)
+    pub vocab: usize,
+    /// request token streaming (chunked responses) instead of unary
+    pub stream: bool,
+    /// prompt-content seed, mixed into every token
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: String::new(),
+            connections: 4,
+            requests_per_conn: 8,
+            prompt_len: 16,
+            max_new_tokens: 8,
+            variant: None,
+            vocab: 256,
+            stream: false,
+            seed: 0,
+        }
+    }
+}
+
+/// Outcome of a load-generation run.
+#[derive(Clone, Debug)]
+pub struct LoadgenReport {
+    /// requests issued (connections × requests_per_conn)
+    pub requests: usize,
+    /// 200-status responses with the full token budget
+    pub ok: usize,
+    /// transport failures + non-200 responses
+    pub errors: usize,
+    pub by_status: BTreeMap<u16, usize>,
+    /// tokens received across all 200 responses
+    pub generated_tokens: usize,
+    pub wall_ms: f64,
+    /// end-to-end generated tokens/s over the whole run
+    pub tok_s: f64,
+    pub req_s: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+}
+
+/// Deterministic synthetic prompt for (connection, request) — the same
+/// construction the integration tests replay against the reference
+/// decode loop.
+pub fn loadgen_prompt(
+    conn: usize,
+    req: usize,
+    prompt_len: usize,
+    vocab: usize,
+    seed: u64,
+) -> Vec<u16> {
+    (0..prompt_len)
+        .map(|i| {
+            ((i * 37 + conn * 91 + req * 13 + 7 + seed as usize) % vocab) as u16
+        })
+        .collect()
+}
+
+/// Build the `/v1/generate` body for one loadgen request.
+pub fn loadgen_body(prompt: &[u16], max_new: usize, variant: Option<Variant>, stream: bool) -> String {
+    let mut j = Json::obj();
+    j.set(
+        "prompt",
+        Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect()),
+    )
+    .set("max_new_tokens", Json::Num(max_new as f64));
+    if let Some(v) = variant {
+        j.set("variant", Json::Str(v.artifact_key().into()));
+    }
+    if stream {
+        j.set("stream", Json::Bool(true));
+    }
+    j.dump()
+}
+
+/// Run the closed-loop workload: `connections` threads, each with one
+/// keep-alive connection issuing `requests_per_conn` requests
+/// back-to-back. Fails only on setup errors; per-request failures are
+/// counted in the report.
+pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
+    if cfg.connections == 0 || cfg.requests_per_conn == 0 {
+        return Err("loadgen: connections and requests must be ≥ 1".into());
+    }
+    if cfg.prompt_len == 0 {
+        return Err("loadgen: prompt_len must be ≥ 1".into());
+    }
+    let latencies = Mutex::new(Vec::<f64>::new());
+    let by_status = Mutex::new(BTreeMap::<u16, usize>::new());
+    let tokens = Mutex::new(0usize);
+    let transport_errors = Mutex::new(0usize);
+
+    let wall = Timer::start();
+    std::thread::scope(|scope| {
+        for conn in 0..cfg.connections {
+            let latencies = &latencies;
+            let by_status = &by_status;
+            let tokens = &tokens;
+            let transport_errors = &transport_errors;
+            scope.spawn(move || {
+                let mut client = match HttpClient::connect(&cfg.addr) {
+                    Ok(c) => c,
+                    Err(_) => {
+                        *transport_errors.lock().unwrap() += cfg.requests_per_conn;
+                        return;
+                    }
+                };
+                for req in 0..cfg.requests_per_conn {
+                    let prompt = loadgen_prompt(
+                        conn,
+                        req,
+                        cfg.prompt_len,
+                        cfg.vocab,
+                        cfg.seed,
+                    );
+                    let body = loadgen_body(
+                        &prompt,
+                        cfg.max_new_tokens,
+                        cfg.variant,
+                        cfg.stream,
+                    );
+                    let t = Timer::start();
+                    match client.request("POST", "/v1/generate", Some(&body)) {
+                        Ok(reply) => {
+                            latencies.lock().unwrap().push(t.ms());
+                            *by_status
+                                .lock()
+                                .unwrap()
+                                .entry(reply.status)
+                                .or_insert(0) += 1;
+                            if reply.status == 200 {
+                                *tokens.lock().unwrap() +=
+                                    count_tokens(&reply);
+                            }
+                        }
+                        Err(_) => {
+                            *transport_errors.lock().unwrap() +=
+                                cfg.requests_per_conn - req;
+                            return; // connection is unusable
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let wall_ms = wall.ms();
+
+    let latencies = latencies.into_inner().unwrap();
+    let by_status = by_status.into_inner().unwrap();
+    let generated_tokens = tokens.into_inner().unwrap();
+    let transport_errors = transport_errors.into_inner().unwrap();
+    let requests = cfg.connections * cfg.requests_per_conn;
+    let ok = by_status.get(&200).copied().unwrap_or(0);
+    let errors = transport_errors
+        + by_status
+            .iter()
+            .filter(|(s, _)| **s != 200)
+            .map(|(_, n)| n)
+            .sum::<usize>();
+    Ok(LoadgenReport {
+        requests,
+        ok,
+        errors,
+        by_status,
+        generated_tokens,
+        wall_ms,
+        tok_s: generated_tokens as f64 / (wall_ms / 1e3),
+        req_s: ok as f64 / (wall_ms / 1e3),
+        p50_ms: stats::percentile(&latencies, 50.0),
+        p90_ms: stats::percentile(&latencies, 90.0),
+        p99_ms: stats::percentile(&latencies, 99.0),
+        mean_ms: if latencies.is_empty() {
+            0.0
+        } else {
+            latencies.iter().sum::<f64>() / latencies.len() as f64
+        },
+    })
+}
+
+/// Tokens in a 200 reply — the `tokens` array of the unary (or final
+/// streamed) response object.
+fn count_tokens(reply: &HttpReply) -> usize {
+    // streamed: the last chunk is the {"done":true,...} summary
+    let body = match &reply.chunks {
+        Some(chunks) => match chunks.last() {
+            Some(last) => last.as_str(),
+            None => return 0,
+        },
+        None => reply.body.as_str(),
+    };
+    Json::parse(body.trim())
+        .ok()
+        .and_then(|j| j.get("tokens").and_then(|t| t.as_arr().map(|a| a.len())))
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_content_length_reply() {
+        let raw = "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
+                   Content-Length: 2\r\n\r\n{}";
+        let r = read_http_reply(&mut Cursor::new(raw)).unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.body, "{}");
+        assert!(r.chunks.is_none());
+        assert_eq!(r.header("content-type"), Some("application/json"));
+    }
+
+    #[test]
+    fn parses_chunked_reply() {
+        let raw = "HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\n\
+                   3\r\nabc\r\n2\r\nde\r\n0\r\n\r\n";
+        let r = read_http_reply(&mut Cursor::new(raw)).unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.body, "abcde");
+        assert_eq!(r.chunks, Some(vec!["abc".to_string(), "de".to_string()]));
+    }
+
+    #[test]
+    fn rejects_garbage_reply() {
+        assert!(read_http_reply(&mut Cursor::new("nope\r\n\r\n")).is_err());
+        assert!(read_http_reply(&mut Cursor::new("")).is_err());
+    }
+
+    #[test]
+    fn prompt_and_body_are_deterministic() {
+        let p1 = loadgen_prompt(2, 3, 8, 256, 5);
+        let p2 = loadgen_prompt(2, 3, 8, 256, 5);
+        assert_eq!(p1, p2);
+        assert_eq!(p1.len(), 8);
+        assert!(p1.iter().all(|&t| (t as usize) < 256));
+        let b = loadgen_body(&p1, 4, Some(Variant::Fp32), true);
+        assert!(b.contains("\"variant\":\"fp32\""));
+        assert!(b.contains("\"stream\":true"));
+        assert!(b.contains("\"max_new_tokens\":4"));
+    }
+
+    #[test]
+    fn token_counting_reads_unary_and_streamed() {
+        let unary = HttpReply {
+            status: 200,
+            headers: vec![],
+            body: r#"{"tokens":[1,2,3]}"#.into(),
+            chunks: None,
+        };
+        assert_eq!(count_tokens(&unary), 3);
+        let streamed = HttpReply {
+            status: 200,
+            headers: vec![],
+            body: String::new(),
+            chunks: Some(vec![
+                "{\"token\":1}\n".into(),
+                "{\"done\":true,\"tokens\":[1,9]}\n".into(),
+            ]),
+        };
+        assert_eq!(count_tokens(&streamed), 2);
+    }
+}

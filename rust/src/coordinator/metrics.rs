@@ -1,11 +1,86 @@
-//! Metrics registry: counters + stage latency accumulators.
+//! Metrics registry: counters + stage latency accumulators, plus the
+//! serving-surface metrics the HTTP frontend exports in Prometheus text
+//! format (`GET /metrics`).
 //!
-//! Thread-safe via atomics/mutex; the Figure 8b prefill breakdown and the
-//! serving report read from here.
+//! Thread-safe via atomics/mutex; the Figure 8b prefill breakdown, the
+//! serving reports and [`Metrics::render_prometheus`] all read from here.
+//! The networked surface adds: an end-to-end request-latency
+//! [`Histogram`], scheduler queue-depth and KV page-occupancy gauges,
+//! decode tick/token counters, per-variant generated-token counters and
+//! HTTP response counts by status code.
 
+use super::request::Variant;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+/// Request-latency bucket upper bounds in milliseconds (Prometheus
+/// cumulative-histogram convention; an implicit `+Inf` bucket follows).
+pub const LATENCY_BUCKETS_MS: [f64; 10] =
+    [1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 1000.0, 4000.0];
+
+/// Fixed-bucket latency histogram, lock-free on the observe path.
+/// Rendered in the Prometheus cumulative form (`_bucket{le=...}`,
+/// `_sum`, `_count`).
+pub struct Histogram {
+    bounds: Vec<f64>,
+    /// one counter per bound plus a trailing overflow (`+Inf`) bucket
+    counts: Vec<AtomicU64>,
+    /// accumulated in integer microseconds so the sum can stay atomic
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new(&LATENCY_BUCKETS_MS)
+    }
+}
+
+impl Histogram {
+    pub fn new(bounds: &[f64]) -> Histogram {
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, ms: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| ms <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us
+            .fetch_add((ms.max(0.0) * 1e3) as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_ms(&self) -> f64 {
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Cumulative `(upper_bound_ms, count)` pairs; the final entry is the
+    /// `+Inf` bucket and equals [`Histogram::count`].
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut acc = 0u64;
+        let mut out = Vec::with_capacity(self.bounds.len() + 1);
+        for (i, b) in self.bounds.iter().enumerate() {
+            acc += self.counts[i].load(Ordering::Relaxed);
+            out.push((*b, acc));
+        }
+        acc += self.counts[self.bounds.len()].load(Ordering::Relaxed);
+        out.push((f64::INFINITY, acc));
+        out
+    }
+}
 
 #[derive(Default)]
 pub struct Metrics {
@@ -13,10 +88,33 @@ pub struct Metrics {
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
     pub batches: AtomicU64,
+    /// gauge: scheduler backlog (pending + running requests)
+    pub queue_depth: AtomicU64,
+    /// gauges: KV page-pool occupancy, refreshed every scheduler tick
+    pub kv_pages_used: AtomicU64,
+    pub kv_pages_total: AtomicU64,
+    /// batched decode ticks executed / tokens sampled from them
+    pub decode_ticks: AtomicU64,
+    pub decode_tokens: AtomicU64,
+    /// generated tokens per variant, indexed by [`Variant::index`]
+    pub tokens_by_variant: [AtomicU64; 4],
+    /// end-to-end request latency (submit → completion), ms
+    pub request_latency: Histogram,
+    /// HTTP responses by status code
+    http_by_status: Mutex<BTreeMap<u16, u64>>,
     /// stage name -> (total_ms, samples)
     stages: Mutex<BTreeMap<String, (f64, u64)>>,
-    latencies_ms: Mutex<Vec<f64>>,
+    /// rolling `(window, write-cursor)` of raw latencies for the exact
+    /// percentiles the closed-loop reports print — capped at
+    /// [`LATENCY_WINDOW`] so an indefinitely-running HTTP server cannot
+    /// grow it without bound (the [`Histogram`] is the unbounded-safe
+    /// aggregate)
+    latencies_ms: Mutex<(Vec<f64>, usize)>,
 }
+
+/// Raw-latency samples retained for percentile reports; beyond this the
+/// window rolls (oldest samples overwritten).
+pub const LATENCY_WINDOW: usize = 4096;
 
 impl Metrics {
     pub fn new() -> Metrics {
@@ -31,7 +129,29 @@ impl Metrics {
     }
 
     pub fn record_latency(&self, ms: f64) {
-        self.latencies_ms.lock().unwrap().push(ms);
+        {
+            let mut l = self.latencies_ms.lock().unwrap();
+            if l.0.len() < LATENCY_WINDOW {
+                l.0.push(ms);
+            } else {
+                let i = l.1;
+                l.0[i] = ms;
+            }
+            l.1 = (l.1 + 1) % LATENCY_WINDOW;
+        }
+        self.request_latency.observe(ms);
+    }
+
+    pub fn record_http_status(&self, status: u16) {
+        *self.http_by_status.lock().unwrap().entry(status).or_insert(0) += 1;
+    }
+
+    pub fn http_statuses(&self) -> BTreeMap<u16, u64> {
+        self.http_by_status.lock().unwrap().clone()
+    }
+
+    pub fn add_variant_tokens(&self, v: Variant, n: u64) {
+        self.tokens_by_variant[v.index()].fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn stage_totals(&self) -> BTreeMap<String, (f64, u64)> {
@@ -41,9 +161,9 @@ impl Metrics {
     pub fn latency_percentiles(&self) -> (f64, f64, f64) {
         let l = self.latencies_ms.lock().unwrap();
         (
-            crate::util::stats::percentile(&l, 50.0),
-            crate::util::stats::percentile(&l, 90.0),
-            crate::util::stats::percentile(&l, 99.0),
+            crate::util::stats::percentile(&l.0, 50.0),
+            crate::util::stats::percentile(&l.0, 90.0),
+            crate::util::stats::percentile(&l.0, 99.0),
         )
     }
 
@@ -51,8 +171,16 @@ impl Metrics {
         counter.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn get(counter: &AtomicU64) -> u64 {
         counter.load(Ordering::Relaxed)
+    }
+
+    pub fn set_gauge(counter: &AtomicU64, value: u64) {
+        counter.store(value, Ordering::Relaxed);
     }
 
     /// Figure 8b-style breakdown: share of total time per stage.
@@ -65,6 +193,130 @@ impl Metrics {
                 (name, ms, share)
             })
             .collect()
+    }
+
+    /// Render the full registry in the Prometheus text exposition format
+    /// (version 0.0.4) — the body of `GET /metrics`. The metric catalog
+    /// is documented in `docs/http_serving.md` (and pinned against it by
+    /// `rust/tests/docs_readme.rs`).
+    pub fn render_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut o = String::with_capacity(4096);
+        let mut counter = |name: &str, help: &str, v: u64| {
+            let _ = writeln!(o, "# HELP {name} {help}");
+            let _ = writeln!(o, "# TYPE {name} counter");
+            let _ = writeln!(o, "{name} {v}");
+        };
+        counter(
+            "arcquant_requests_submitted_total",
+            "Generation requests accepted into the scheduler queue.",
+            Metrics::get(&self.submitted),
+        );
+        counter(
+            "arcquant_requests_completed_total",
+            "Generation requests completed (including OutOfPages truncations).",
+            Metrics::get(&self.completed),
+        );
+        counter(
+            "arcquant_requests_rejected_total",
+            "Requests rejected before any forward ran.",
+            Metrics::get(&self.rejected),
+        );
+        counter(
+            "arcquant_decode_ticks_total",
+            "Batched decode steps executed by the scheduler.",
+            Metrics::get(&self.decode_ticks),
+        );
+        counter(
+            "arcquant_decode_tokens_total",
+            "Tokens sampled from batched decode steps.",
+            Metrics::get(&self.decode_tokens),
+        );
+
+        let _ = writeln!(
+            o,
+            "# HELP arcquant_generated_tokens_total Generated tokens per model variant."
+        );
+        let _ = writeln!(o, "# TYPE arcquant_generated_tokens_total counter");
+        for v in Variant::ALL {
+            let _ = writeln!(
+                o,
+                "arcquant_generated_tokens_total{{variant=\"{}\"}} {}",
+                v.artifact_key(),
+                self.tokens_by_variant[v.index()].load(Ordering::Relaxed)
+            );
+        }
+
+        let _ = writeln!(
+            o,
+            "# HELP arcquant_http_responses_total HTTP responses by status code."
+        );
+        let _ = writeln!(o, "# TYPE arcquant_http_responses_total counter");
+        for (status, n) in self.http_statuses() {
+            let _ =
+                writeln!(o, "arcquant_http_responses_total{{status=\"{status}\"}} {n}");
+        }
+
+        let mut gauge = |name: &str, help: &str, v: u64| {
+            let _ = writeln!(o, "# HELP {name} {help}");
+            let _ = writeln!(o, "# TYPE {name} gauge");
+            let _ = writeln!(o, "{name} {v}");
+        };
+        gauge(
+            "arcquant_queue_depth",
+            "Scheduler backlog: pending + running generation requests.",
+            Metrics::get(&self.queue_depth),
+        );
+        gauge(
+            "arcquant_kv_pages_used",
+            "KV cache pages currently allocated to running sequences.",
+            Metrics::get(&self.kv_pages_used),
+        );
+        gauge(
+            "arcquant_kv_pages_total",
+            "Total pages in the KV page pool.",
+            Metrics::get(&self.kv_pages_total),
+        );
+
+        let _ = writeln!(
+            o,
+            "# HELP arcquant_request_latency_ms End-to-end request latency \
+             (submit to completion), milliseconds."
+        );
+        let _ = writeln!(o, "# TYPE arcquant_request_latency_ms histogram");
+        for (le, n) in self.request_latency.cumulative() {
+            if le.is_finite() {
+                let _ = writeln!(
+                    o,
+                    "arcquant_request_latency_ms_bucket{{le=\"{le}\"}} {n}"
+                );
+            } else {
+                let _ = writeln!(
+                    o,
+                    "arcquant_request_latency_ms_bucket{{le=\"+Inf\"}} {n}"
+                );
+            }
+        }
+        let _ = writeln!(
+            o,
+            "arcquant_request_latency_ms_sum {}",
+            self.request_latency.sum_ms()
+        );
+        let _ = writeln!(
+            o,
+            "arcquant_request_latency_ms_count {}",
+            self.request_latency.count()
+        );
+
+        let _ = writeln!(
+            o,
+            "# HELP arcquant_stage_ms_total Accumulated wall time per pipeline stage."
+        );
+        let _ = writeln!(o, "# TYPE arcquant_stage_ms_total counter");
+        for (stage, (ms, _)) in self.stage_totals() {
+            let _ = writeln!(o, "arcquant_stage_ms_total{{stage=\"{stage}\"}} {ms}");
+        }
+        o
     }
 }
 
@@ -105,5 +357,97 @@ mod tests {
         let (p50, p90, p99) = m.latency_percentiles();
         assert!(p50 <= p90 && p90 <= p99);
         assert!((p50 - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn latency_window_is_bounded() {
+        let m = Metrics::new();
+        for i in 0..(LATENCY_WINDOW + 100) {
+            m.record_latency(i as f64);
+        }
+        // raw window capped; the histogram kept every observation
+        assert_eq!(m.latencies_ms.lock().unwrap().0.len(), LATENCY_WINDOW);
+        assert_eq!(m.request_latency.count() as usize, LATENCY_WINDOW + 100);
+        // oldest samples were overwritten: the window minimum moved up
+        let min = m
+            .latencies_ms
+            .lock()
+            .unwrap()
+            .0
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        assert!(min >= 100.0, "oldest samples should be gone, min {min}");
+    }
+
+    #[test]
+    fn histogram_cumulative_buckets() {
+        let h = Histogram::new(&[1.0, 10.0, 100.0]);
+        for ms in [0.5, 0.7, 5.0, 50.0, 5000.0] {
+            h.observe(ms);
+        }
+        let c = h.cumulative();
+        assert_eq!(c.len(), 4);
+        assert_eq!(c[0], (1.0, 2));
+        assert_eq!(c[1], (10.0, 3));
+        assert_eq!(c[2], (100.0, 4));
+        assert!(c[3].0.is_infinite());
+        assert_eq!(c[3].1, 5);
+        assert_eq!(h.count(), 5);
+        assert!((h.sum_ms() - 5056.2).abs() < 0.01);
+    }
+
+    #[test]
+    fn prometheus_rendering_has_all_families() {
+        let m = Metrics::new();
+        Metrics::inc(&m.submitted);
+        m.record_latency(3.0);
+        m.record_http_status(200);
+        m.record_http_status(200);
+        m.record_http_status(429);
+        m.add_variant_tokens(Variant::ArcPacked, 7);
+        Metrics::set_gauge(&m.kv_pages_total, 64);
+        m.record_stage("decode:fp32", 2.5);
+        let text = m.render_prometheus();
+        for needle in [
+            "arcquant_requests_submitted_total 1",
+            "arcquant_requests_completed_total 0",
+            "arcquant_requests_rejected_total 0",
+            "arcquant_decode_ticks_total 0",
+            "arcquant_decode_tokens_total 0",
+            "arcquant_generated_tokens_total{variant=\"arcquant-packed\"} 7",
+            "arcquant_http_responses_total{status=\"200\"} 2",
+            "arcquant_http_responses_total{status=\"429\"} 1",
+            "arcquant_queue_depth 0",
+            "arcquant_kv_pages_used 0",
+            "arcquant_kv_pages_total 64",
+            "arcquant_request_latency_ms_bucket{le=\"+Inf\"} 1",
+            "arcquant_request_latency_ms_count 1",
+            "arcquant_stage_ms_total{stage=\"decode:fp32\"} 2.5",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // every bucket line is cumulative and non-decreasing
+        let buckets: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("arcquant_request_latency_ms_bucket"))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert_eq!(buckets.len(), LATENCY_BUCKETS_MS.len() + 1);
+        assert!(buckets.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn variant_token_counters_cover_all_variants() {
+        let m = Metrics::new();
+        for v in Variant::ALL {
+            m.add_variant_tokens(v, 1 + v.index() as u64);
+        }
+        for v in Variant::ALL {
+            assert_eq!(
+                m.tokens_by_variant[v.index()].load(Ordering::Relaxed),
+                1 + v.index() as u64
+            );
+        }
     }
 }

@@ -27,10 +27,20 @@
 //! advances one batched `decode_batch` step per scheduler tick
 //! (Orca-style iteration-level scheduling), releasing pages as sequences
 //! retire. See `docs/decode_serving.md`.
+//!
+//! The **network frontend** ([`http`]) exposes that generation path over
+//! a dependency-free HTTP/1.1 server: concurrent TCP clients POST
+//! `/v1/generate` (optionally token-streaming via chunked transfer
+//! encoding) and are batched into shared decode ticks by a single
+//! scheduler thread; `/healthz` and `/metrics` (Prometheus text format)
+//! cover operations. [`loadgen`] is the matching closed-loop
+//! client/benchmark. See `docs/http_serving.md`.
 
 pub mod batcher;
 pub mod generate;
+pub mod http;
 pub mod kvcache;
+pub mod loadgen;
 pub mod metrics;
 pub mod request;
 pub mod router;
@@ -41,11 +51,15 @@ pub use generate::{
     serve_generate_native, session_rng, GenVariantStats, GenerateReport,
     GenerateServeConfig,
 };
+pub use http::{HttpServeConfig, HttpServer};
 pub use kvcache::{KvPageManager, PageError};
+pub use loadgen::{
+    run_loadgen, HttpClient, HttpReply, LoadgenConfig, LoadgenReport,
+};
 pub use metrics::Metrics;
 pub use request::{
-    FinishReason, GenerateRequest, GenerateResponse, PrefillRequest, PrefillResponse,
-    Variant,
+    FinishReason, GenEvent, GenerateRequest, GenerateResponse, PrefillRequest,
+    PrefillResponse, RejectReason, Variant,
 };
 pub use router::{Router, RouterConfig, RouterDecision};
 pub use server::{

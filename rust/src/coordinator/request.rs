@@ -39,6 +39,15 @@ impl Variant {
             _ => None,
         }
     }
+
+    /// Position of this variant in [`Variant::ALL`] — the index the
+    /// per-variant metrics counters are keyed on.
+    pub fn index(self) -> usize {
+        Variant::ALL
+            .iter()
+            .position(|v| *v == self)
+            .expect("ALL covers every variant")
+    }
 }
 
 /// One prefill request: a token sequence to run through the model.
@@ -116,6 +125,66 @@ pub enum FinishReason {
     Rejected,
 }
 
+impl FinishReason {
+    /// Stable wire name, as the HTTP response JSON reports it.
+    pub fn name(self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::OutOfPages => "out_of_pages",
+            FinishReason::Rejected => "rejected",
+        }
+    }
+}
+
+/// Why the scheduler refused a request outright (no forward ever ran).
+/// The HTTP layer maps these onto status codes — transient backpressure
+/// (`QueueFull`) is retryable (429), `Internal` is a server fault (500),
+/// the rest are 503.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// No engine is loaded for the requested variant.
+    VariantUnavailable,
+    /// Worst case (prompt + generation budget) exceeds the entire page
+    /// pool — the request could never complete, even on an idle server.
+    PageBudget,
+    /// The scheduler backlog (pending + running) is at capacity; retry.
+    QueueFull,
+    /// The server is draining for shutdown.
+    ShuttingDown,
+    /// Prefill failed (cache capacity raced) — should not happen with the
+    /// admission pre-check, but never left unanswered if it does.
+    Internal,
+}
+
+impl RejectReason {
+    pub fn message(self) -> &'static str {
+        match self {
+            RejectReason::VariantUnavailable => "no engine loaded for variant",
+            RejectReason::PageBudget => {
+                "prompt + max_new_tokens exceeds the KV page budget"
+            }
+            RejectReason::QueueFull => "scheduler queue full — retry later",
+            RejectReason::ShuttingDown => "server is shutting down",
+            RejectReason::Internal => "internal capacity error",
+        }
+    }
+}
+
+/// Per-generation event stream, sent from the scheduler to whoever is
+/// watching a request (the HTTP connection handler). Every sampled token
+/// is forwarded as it is produced — chunked streaming reads these —
+/// followed by exactly one terminal event ([`GenEvent::Done`] or
+/// [`GenEvent::Rejected`]).
+#[derive(Clone, Debug)]
+pub enum GenEvent {
+    /// One sampled token (prefill-sampled first token included).
+    Token(u16),
+    /// Terminal: the completed response (tokens repeated in full).
+    Done(GenerateResponse),
+    /// Terminal: rejected before any forward ran.
+    Rejected { reason: RejectReason },
+}
+
 /// Completed (or rejected) generation: the sampled tokens + timing.
 #[derive(Clone, Debug)]
 pub struct GenerateResponse {
@@ -163,5 +232,19 @@ mod tests {
     fn artifact_keys_stable() {
         assert_eq!(Variant::ArcQuant.artifact_key(), "arcquant");
         assert_eq!(Variant::Fp32.artifact_key(), "fp32");
+    }
+
+    #[test]
+    fn variant_index_matches_all_order() {
+        for (i, v) in Variant::ALL.iter().enumerate() {
+            assert_eq!(v.index(), i);
+        }
+    }
+
+    #[test]
+    fn finish_reason_wire_names() {
+        assert_eq!(FinishReason::Length.name(), "length");
+        assert_eq!(FinishReason::OutOfPages.name(), "out_of_pages");
+        assert_eq!(FinishReason::Rejected.name(), "rejected");
     }
 }

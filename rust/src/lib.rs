@@ -54,13 +54,23 @@
 //! concurrent sequences (`arcquant serve --native --generate N
 //! --kv-format nvfp4`).
 //!
+//! The same generation scheduler also runs behind a **networked
+//! frontend** ([`coordinator::HttpServer`], `arcquant serve --http
+//! ADDR --native`): a dependency-free HTTP/1.1 server whose concurrent
+//! clients are batched into shared decode ticks, with chunked
+//! token streaming, Prometheus metrics and 429/503 backpressure — and a
+//! matching closed-loop load generator ([`coordinator::run_loadgen`],
+//! `arcquant loadgen`).
+//!
 //! Documentation map: `docs/README.md` is the index —
 //! `docs/ARCHITECTURE.md` (module map + serve-request dataflow),
 //! `docs/packed_path.md` (Appendix-D K+S interleaving, duplicated
 //! outlier blocks, the v2 kernels), `docs/decode_serving.md` (the
-//! generation path) and `docs/kv_cache.md` (quantized KV pages:
-//! geometry, capacity, accuracy guards). The top-level `README.md`
-//! carries the full CLI reference, pinned to the dispatcher by test.
+//! generation path), `docs/kv_cache.md` (quantized KV pages: geometry,
+//! capacity, accuracy guards) and `docs/http_serving.md` (the HTTP API,
+//! streaming protocol, backpressure semantics and metrics catalog). The
+//! top-level `README.md` carries the full CLI reference, pinned to the
+//! dispatcher by test.
 
 pub mod baselines;
 pub mod calib;

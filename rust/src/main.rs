@@ -3,20 +3,23 @@
 //! Subcommands:
 //!   report     regenerate paper tables/figures (`--table N`, `--figure N`,
 //!              `--bounds`, `--all`)
-//!   serve      run the serving coordinator on the AOT artifacts
+//!   serve      run the serving coordinator on the AOT artifacts, the
+//!              Rust-native engines (`--native`), or as a networked
+//!              HTTP frontend (`--http ADDR`)
+//!   loadgen    closed-loop HTTP client against a `serve --http` server
 //!   calibrate  run the Rust calibration pipeline and save plans
-//!   eval       evaluate one (model, method) pair
+//!   eval      evaluate one (model, method) pair
 //!   bench-kernels  PJRT kernel-latency sweep (Fig. 8a measured rows)
 //!   info       artifact/manifest summary
 
 use arcquant::baselines::Method;
 use arcquant::coordinator::{
-    serve_generate_native, serve_workload, serve_workload_native, BatcherConfig,
-    GenerateReport, GenerateServeConfig, NativeServeConfig, RouterConfig, ServeConfig,
-    ServeReport, Variant,
+    run_loadgen, serve_generate_native, serve_workload, serve_workload_native,
+    BatcherConfig, GenerateReport, GenerateServeConfig, HttpServeConfig, HttpServer,
+    LoadgenConfig, NativeServeConfig, RouterConfig, ServeConfig, ServeReport, Variant,
 };
 use arcquant::formats::{Format, KvFormat};
-use arcquant::model::{Engine, EngineMode, Sampler};
+use arcquant::model::{tiny_test_fixture, Engine, EngineMode, Sampler};
 use arcquant::report::{ctx::model_domain, figures, tables, Ctx, EvalBudget};
 use arcquant::util::cli::Args;
 use arcquant::util::Timer;
@@ -32,6 +35,7 @@ fn main() {
     let code = match args.subcommand.as_deref() {
         Some("report") => cmd_report(&args),
         Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("calibrate") => cmd_calibrate(&args),
         Some("eval") => cmd_eval(&args),
         Some("bench-kernels") => cmd_bench_kernels(&args),
@@ -58,15 +62,26 @@ USAGE: arcquant <subcommand> [--flags]
   serve     [--model llama8b-sim] [--requests 24]
             [--variant arc|fp32|rtn|packed|mix] [--artifacts DIR]
             [--native]   (run the Rust engines instead of PJRT artifacts;
-                          required for the packed-execution variant)
+                          required for the packed-execution variant;
+                          --model tiny-test needs no artifacts)
             [--generate N]  (generation workload: N new tokens/request via
                              the continuous-batching decode executor —
                              needs --native)
+            [--http ADDR]  (HTTP/1.1 frontend over the continuous-batching
+                            engine: POST /v1/generate, GET /healthz,
+                            GET /metrics — needs --native; port 0 picks a
+                            free port, printed on stdout)
             [--prompt-len 32] [--kv-pages 512] [--decode-batch 8]
             [--kv-format fp32|nvfp4|mxfp4]  (K/V page storage: 4-bit
                           formats pack ~6-7x more tokens per page, so the
                           same --kv-pages budget admits more sequences)
             [--top-k K]  (sample instead of greedy decode)
+            [--queue-cap 64] [--max-len 512] [--serve-for SECS] (HTTP knobs)
+  loadgen   --addr HOST:PORT [--connections 4] [--requests 8]
+            [--prompt-len 16] [--max-new 8] [--variant V] [--vocab 256]
+            [--stream] [--smoke]   (closed-loop HTTP load generator:
+                          tok/s + latency percentiles; --smoke shrinks
+                          everything for CI)
   calibrate --model NAME [--windows 8] [--window-len 128] [--out FILE]
   eval      --model NAME --method fp16|rtn|smooth|quarot|atom|flatquant|w4a8|arcquant
             [--format nvfp4|mxfp4|int4]
@@ -208,12 +223,96 @@ fn print_generate_report(r: &GenerateReport) {
     }
 }
 
+/// Build one Rust-native engine per distinct workload variant, plus the
+/// token stream closed-loop workloads draw prompts from. The special
+/// model name `tiny-test` builds the in-tree synthetic tiny model with
+/// an in-process calibration pass — no artifact directory needed (this
+/// is what the CI serving smoke job runs); any other name loads
+/// config/weights/calibration from `artifacts`. ArcPacked selects the
+/// packed-execution datapath (real NVFP4 codes end-to-end).
+fn build_native_engines(
+    artifacts: &str,
+    model: &str,
+    workload: &[(Variant, usize)],
+) -> Result<(Vec<(Variant, Engine)>, Vec<u16>), String> {
+    if model == "tiny-test" {
+        let (cfg, weights, coll) = tiny_test_fixture(3, 64);
+        let arc = Method::ArcQuant { fmt: Format::Nvfp4, max_s: Some(64) };
+        let mut engines: Vec<(Variant, Engine)> = Vec::new();
+        for &(v, _) in workload {
+            if engines.iter().any(|(ev, _)| *ev == v) {
+                continue;
+            }
+            let e = match v {
+                Variant::Fp32 => {
+                    Engine::new(cfg.clone(), weights.clone(), EngineMode::Fp32, None)?
+                }
+                Variant::ArcQuant => Engine::new(
+                    cfg.clone(),
+                    weights.clone(),
+                    EngineMode::Quantized(arc.clone()),
+                    Some(&coll),
+                )?,
+                Variant::Nvfp4Rtn => Engine::new(
+                    cfg.clone(),
+                    weights.clone(),
+                    EngineMode::Quantized(Method::Rtn { fmt: Format::Nvfp4 }),
+                    Some(&coll),
+                )?,
+                Variant::ArcPacked => Engine::new(
+                    cfg.clone(),
+                    weights.clone(),
+                    EngineMode::QuantizedPacked(arc.clone()),
+                    Some(&coll),
+                )?,
+            };
+            println!(
+                "prepared {} engine (tiny-test, {} weight KB)",
+                v.artifact_key(),
+                e.weight_bytes() / 1024
+            );
+            engines.push((v, e));
+        }
+        let stream: Vec<u16> =
+            (0..4096u32).map(|i| ((i * 37 + 11) % 256) as u16).collect();
+        return Ok((engines, stream));
+    }
+    let ctx = Ctx::new(artifacts, EvalBudget::quick());
+    let stream = ctx.eval_stream(model_domain(model))?;
+    let arc = Method::ArcQuant { fmt: Format::Nvfp4, max_s: Some(512) };
+    let mut engines: Vec<(Variant, Engine)> = Vec::new();
+    for &(v, _) in workload {
+        if engines.iter().any(|(ev, _)| *ev == v) {
+            continue;
+        }
+        let mode = match v {
+            Variant::Fp32 => EngineMode::Fp32,
+            Variant::ArcQuant => EngineMode::Quantized(arc.clone()),
+            Variant::Nvfp4Rtn => {
+                EngineMode::Quantized(Method::Rtn { fmt: Format::Nvfp4 })
+            }
+            Variant::ArcPacked => EngineMode::QuantizedPacked(arc.clone()),
+        };
+        let (e, prep_s) = ctx
+            .engine(model, mode)
+            .map_err(|e| format!("engine build failed for {}: {e}", v.artifact_key()))?;
+        println!(
+            "prepared {} engine in {prep_s:.2}s ({} weight MB)",
+            v.artifact_key(),
+            e.weight_bytes() / (1u64 << 20)
+        );
+        engines.push((v, e));
+    }
+    Ok((engines, stream))
+}
+
 fn cmd_serve(args: &Args) -> i32 {
     let artifacts = args.str_or("artifacts", "artifacts");
     let model = args.str_or("model", "llama8b-sim");
     let n = args.usize_or("requests", 24).unwrap_or(24);
     let variant = args.str_or("variant", "mix");
     let native = args.bool_flag("native");
+    let http_addr = args.str_flag("http").map(|s| s.to_string());
     let generate = args.str_flag("generate").map(|s| s.parse::<usize>());
     let generate = match generate {
         Some(Ok(g)) if g > 0 => Some(g),
@@ -225,6 +324,10 @@ fn cmd_serve(args: &Args) -> i32 {
     };
     if generate.is_some() && !native {
         eprintln!("--generate runs on the Rust engines — pass --native");
+        return 2;
+    }
+    if http_addr.is_some() && !native {
+        eprintln!("--http serves the Rust engines — pass --native");
         return 2;
     }
     let workload = match variant.as_str() {
@@ -253,59 +356,37 @@ fn cmd_serve(args: &Args) -> i32 {
         );
         return 2;
     }
-    let ctx = Ctx::new(&artifacts, EvalBudget::quick());
-    let stream = match ctx.eval_stream(model_domain(&model)) {
-        Ok(s) => s,
-        Err(e) => {
-            eprintln!("{e}");
-            return 1;
-        }
-    };
     if native {
-        // Build one Rust engine per distinct variant; ArcPacked selects
-        // the packed-execution datapath (real NVFP4 codes end-to-end).
-        let arc = Method::ArcQuant { fmt: Format::Nvfp4, max_s: Some(512) };
-        let mut engines: Vec<(Variant, Engine)> = Vec::new();
-        for &(v, _) in &workload {
-            if engines.iter().any(|(ev, _)| *ev == v) {
-                continue;
-            }
-            let mode = match v {
-                Variant::Fp32 => EngineMode::Fp32,
-                Variant::ArcQuant => EngineMode::Quantized(arc.clone()),
-                Variant::Nvfp4Rtn => {
-                    EngineMode::Quantized(Method::Rtn { fmt: Format::Nvfp4 })
-                }
-                Variant::ArcPacked => EngineMode::QuantizedPacked(arc.clone()),
-            };
-            match ctx.engine(&model, mode) {
-                Ok((e, prep_s)) => {
-                    println!(
-                        "prepared {} engine in {prep_s:.2}s ({} weight MB)",
-                        v.artifact_key(),
-                        e.weight_bytes() / (1u64 << 20)
-                    );
-                    engines.push((v, e));
-                }
+        let (engines, stream) =
+            match build_native_engines(&artifacts, &model, &workload) {
+                Ok(x) => x,
                 Err(e) => {
-                    eprintln!("engine build failed for {}: {e}", v.artifact_key());
+                    eprintln!("{e}");
                     return 1;
                 }
+            };
+        let sampler = match args.usize_or("top-k", 0) {
+            Ok(0) => Sampler::Greedy,
+            Ok(k) => Sampler::TopK { k, temperature: 0.8 },
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
             }
+        };
+        let kv_format_s = args.str_or("kv-format", "fp32");
+        let Some(kv_format) = KvFormat::parse(&kv_format_s) else {
+            eprintln!("unknown --kv-format {kv_format_s} (fp32|nvfp4|mxfp4)");
+            return 2;
+        };
+        if let Some(addr) = http_addr {
+            // networked frontend: serve until killed (or --serve-for)
+            return cmd_serve_http(args, &addr, engines, sampler, kv_format, generate);
         }
         let refs: Vec<(Variant, &Engine)> =
             engines.iter().map(|(v, e)| (*v, e)).collect();
         if let Some(max_new) = generate {
             // generation workload: continuous-batching decode over the
             // paged KV-cache, decode tokens/s per variant
-            let sampler = match args.usize_or("top-k", 0) {
-                Ok(0) => Sampler::Greedy,
-                Ok(k) => Sampler::TopK { k, temperature: 0.8 },
-                Err(e) => {
-                    eprintln!("{e}");
-                    return 2;
-                }
-            };
             let parsed = (|| -> Result<(usize, usize, usize), String> {
                 Ok((
                     args.usize_or("prompt-len", 32)?,
@@ -319,11 +400,6 @@ fn cmd_serve(args: &Args) -> i32 {
                     eprintln!("{e}");
                     return 2;
                 }
-            };
-            let kv_format = args.str_or("kv-format", "fp32");
-            let Some(kv_format) = KvFormat::parse(&kv_format) else {
-                eprintln!("unknown --kv-format {kv_format} (fp32|nvfp4|mxfp4)");
-                return 2;
             };
             let gcfg = GenerateServeConfig {
                 workload,
@@ -369,6 +445,14 @@ fn cmd_serve(args: &Args) -> i32 {
             }
         };
     }
+    let ctx = Ctx::new(&artifacts, EvalBudget::quick());
+    let stream = match ctx.eval_stream(model_domain(&model)) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
     let cfg = ServeConfig {
         artifacts,
         model,
@@ -384,6 +468,163 @@ fn cmd_serve(args: &Args) -> i32 {
         }
         Err(e) => {
             eprintln!("serve failed: {e}");
+            1
+        }
+    }
+}
+
+/// `serve --http`: start the networked frontend and block (forever, or
+/// for `--serve-for SECS` followed by a graceful drain). Prints the
+/// bound address on stdout — `--http 127.0.0.1:0` picks a free port and
+/// the printed line is what the CI smoke job greps for.
+fn cmd_serve_http(
+    args: &Args,
+    addr: &str,
+    engines: Vec<(Variant, Engine)>,
+    sampler: Sampler,
+    kv_format: KvFormat,
+    generate: Option<usize>,
+) -> i32 {
+    use std::io::Write as _;
+    let parsed = (|| -> Result<(usize, usize, usize, usize, usize, u64), String> {
+        Ok((
+            args.usize_or("decode-batch", 8)?,
+            args.usize_or("kv-pages", 512)?,
+            args.usize_or("queue-cap", 64)?,
+            args.usize_or("max-len", 512)?,
+            args.usize_or("serve-for", 0)?,
+            args.u64_or("seed", 0)?,
+        ))
+    })();
+    let (decode_batch, kv_pages, queue_cap, max_len, serve_for, seed) =
+        match parsed {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+    let hcfg = HttpServeConfig {
+        max_decode_batch: decode_batch,
+        kv_pages,
+        kv_format,
+        queue_cap,
+        max_prompt_len: max_len,
+        default_max_new: generate.unwrap_or(16),
+        sampler,
+        seed,
+        ..Default::default()
+    };
+    let variants: Vec<&'static str> =
+        engines.iter().map(|(v, _)| v.artifact_key()).collect();
+    let server = match HttpServer::start(hcfg, addr, engines) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("http server failed: {e}");
+            return 1;
+        }
+    };
+    println!("arcquant http: listening on http://{}", server.addr());
+    println!(
+        "arcquant http: POST /v1/generate | GET /healthz | GET /metrics  \
+         (variants: {}, kv-format {}, {} pages)",
+        variants.join(","),
+        kv_format.name(),
+        kv_pages
+    );
+    // the port line must reach pipes/files promptly — CI greps for it
+    let _ = std::io::stdout().flush();
+    if serve_for > 0 {
+        std::thread::sleep(std::time::Duration::from_secs(serve_for as u64));
+        println!("arcquant http: draining after {serve_for}s");
+        server.shutdown();
+        return 0;
+    }
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// `loadgen`: closed-loop HTTP client workload against `serve --http`.
+fn cmd_loadgen(args: &Args) -> i32 {
+    let Some(addr) = args.str_flag("addr") else {
+        eprintln!("loadgen needs --addr HOST:PORT (the serve --http address)");
+        return 2;
+    };
+    let smoke = args.bool_flag("smoke");
+    let d = |full: usize, small: usize| if smoke { small } else { full };
+    let parsed = (|| -> Result<(usize, usize, usize, usize, usize, u64), String> {
+        Ok((
+            args.usize_or("connections", d(4, 2))?,
+            args.usize_or("requests", d(8, 2))?,
+            args.usize_or("prompt-len", d(16, 8))?,
+            args.usize_or("max-new", d(8, 4))?,
+            args.usize_or("vocab", 256)?,
+            args.u64_or("seed", 0)?,
+        ))
+    })();
+    let (connections, requests, prompt_len, max_new, vocab, seed) = match parsed {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let variant = match args.str_flag("variant") {
+        None => None,
+        Some(v) => match Variant::parse(v) {
+            Some(v) => Some(v),
+            None => {
+                eprintln!("unknown variant {v}");
+                return 2;
+            }
+        },
+    };
+    let cfg = LoadgenConfig {
+        addr: addr.to_string(),
+        connections,
+        requests_per_conn: requests,
+        prompt_len,
+        max_new_tokens: max_new,
+        variant,
+        vocab,
+        stream: args.bool_flag("stream"),
+        seed,
+    };
+    match run_loadgen(&cfg) {
+        Ok(r) => {
+            println!(
+                "loadgen: {connections} connections x {requests} requests \
+                 against http://{addr} (closed loop)"
+            );
+            println!(
+                "  ok {}/{}  errors {}  wall {:.1}ms",
+                r.ok, r.requests, r.errors, r.wall_ms
+            );
+            println!(
+                "  throughput {:.1} tok/s  {:.2} req/s  ({} tokens)",
+                r.tok_s, r.req_s, r.generated_tokens
+            );
+            println!(
+                "  latency p50 {:.1}ms  p90 {:.1}ms  p99 {:.1}ms  mean {:.1}ms",
+                r.p50_ms, r.p90_ms, r.p99_ms, r.mean_ms
+            );
+            for (status, count) in &r.by_status {
+                println!("  status {status}: {count}");
+            }
+            // single greppable summary line for CI logs
+            println!(
+                "LOADGEN ok={} errors={} tok_s={:.1} p99_ms={:.1}",
+                r.ok, r.errors, r.tok_s, r.p99_ms
+            );
+            if r.errors == 0 && r.ok == r.requests {
+                0
+            } else {
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("loadgen failed: {e}");
             1
         }
     }

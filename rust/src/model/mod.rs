@@ -17,6 +17,31 @@ pub use engine::{Engine, EngineMode, KvCache};
 pub use sampling::Sampler;
 pub use weights::Weights;
 
+/// Synthetic tiny-model fixture shared by the CLI's `tiny-test` model,
+/// the HTTP integration tests and the serving benches: the tiny config,
+/// `seed`-derived synthetic weights, and an in-process calibration
+/// collected from one fp32 forward over `calib_tokens` deterministic
+/// tokens. Keeping the construction in one place is what makes
+/// "same fixture ⇒ same numerics" hold between a server under test and
+/// the reference engines its responses are replayed against.
+pub fn tiny_test_fixture(
+    seed: u64,
+    calib_tokens: usize,
+) -> (
+    ModelConfig,
+    Weights,
+    std::collections::BTreeMap<String, crate::baselines::LayerCalib>,
+) {
+    let cfg = ModelConfig::tiny_test();
+    let weights = Weights::synthetic(&cfg, seed);
+    let fp = Engine::new(cfg.clone(), weights.clone(), EngineMode::Fp32, None)
+        .expect("fp32 tiny engine");
+    let mut calib = std::collections::BTreeMap::new();
+    let toks: Vec<u16> = (0..calib_tokens as u16).map(|i| (i * 37) % 256).collect();
+    fp.forward(&toks, Some(&mut calib), None);
+    (cfg, weights, calib)
+}
+
 /// Per-layer quantization-site identifiers, matching the Python side.
 pub fn site_names(layers: usize) -> Vec<String> {
     let mut out = Vec::with_capacity(layers * 4);

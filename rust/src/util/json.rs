@@ -1,8 +1,14 @@
 //! Minimal JSON writer + parser (no external deps).
 //!
 //! Used for calibration artifacts (reorder indices, per-layer S), metrics
-//! dumps and report series. Supports the full JSON data model; numbers are
-//! parsed as f64 and integers preserved exactly up to 2^53.
+//! dumps, report series — and, since the HTTP serving frontend, for
+//! **untrusted network request bodies**, which is why the parser is
+//! hardened: nesting depth is capped (recursive descent would otherwise
+//! be a stack-overflow lever — [`Json::parse_with_depth`] lets the
+//! server use a tight cap), non-finite numbers (`1e999`) are rejected,
+//! and `\uXXXX` escapes decode UTF-16 surrogate pairs instead of
+//! replacing them. Supports the full JSON data model; numbers are parsed
+//! as f64 and integers preserved exactly up to 2^53.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -141,10 +147,27 @@ impl Json {
         }
     }
 
-    /// Parse a JSON document.
+    /// Maximum nesting depth [`Json::parse`] accepts — generous for
+    /// trusted artifacts; network-facing callers should pass something
+    /// far tighter to [`Json::parse_with_depth`].
+    pub const DEFAULT_MAX_DEPTH: usize = 128;
+
+    /// Parse a JSON document (trusted-input depth limit).
     pub fn parse(text: &str) -> Result<Json, String> {
+        Json::parse_with_depth(text, Json::DEFAULT_MAX_DEPTH)
+    }
+
+    /// Parse a JSON document, refusing containers nested deeper than
+    /// `max_depth` (the recursive-descent hardening knob for untrusted
+    /// input).
+    pub fn parse_with_depth(text: &str, max_depth: usize) -> Result<Json, String> {
         let bytes = text.as_bytes();
-        let mut p = Parser { b: bytes, i: 0 };
+        let mut p = Parser {
+            b: bytes,
+            i: 0,
+            depth: 0,
+            max_depth,
+        };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -158,6 +181,8 @@ impl Json {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
+    max_depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -183,8 +208,8 @@ impl<'a> Parser<'a> {
     fn value(&mut self) -> Result<Json, String> {
         self.skip_ws();
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.nested(Parser::object),
+            Some(b'[') => self.nested(Parser::array),
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
@@ -192,6 +217,23 @@ impl<'a> Parser<'a> {
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             _ => Err(format!("unexpected byte at {}", self.i)),
         }
+    }
+
+    /// Enter a container, enforcing the nesting-depth cap.
+    fn nested(
+        &mut self,
+        f: fn(&mut Parser<'a>) -> Result<Json, String>,
+    ) -> Result<Json, String> {
+        if self.depth >= self.max_depth {
+            return Err(format!(
+                "nesting deeper than {} at byte {}",
+                self.max_depth, self.i
+            ));
+        }
+        self.depth += 1;
+        let v = f(self);
+        self.depth -= 1;
+        v
     }
 
     fn lit(&mut self, s: &str, v: Json) -> Result<Json, String> {
@@ -215,11 +257,26 @@ impl<'a> Parser<'a> {
         {
             self.i += 1;
         }
-        std::str::from_utf8(&self.b[start..self.i])
+        let n = std::str::from_utf8(&self.b[start..self.i])
             .map_err(|e| e.to_string())?
             .parse::<f64>()
-            .map(Json::Num)
-            .map_err(|e| format!("bad number at byte {start}: {e}"))
+            .map_err(|e| format!("bad number at byte {start}: {e}"))?;
+        if !n.is_finite() {
+            // 1e999-style overflow: never hand Inf/NaN to consumers
+            return Err(format!("number out of range at byte {start}"));
+        }
+        Ok(Json::Num(n))
+    }
+
+    /// Four hex digits starting at byte `at` (the payload of a `\uXXXX`
+    /// escape).
+    fn hex4(&self, at: usize) -> Result<u32, String> {
+        let hex = self.b.get(at..at + 4).ok_or("truncated \\u escape")?;
+        u32::from_str_radix(
+            std::str::from_utf8(hex).map_err(|e| e.to_string())?,
+            16,
+        )
+        .map_err(|e| e.to_string())
     }
 
     fn string(&mut self) -> Result<String, String> {
@@ -244,17 +301,38 @@ impl<'a> Parser<'a> {
                         Some(b'b') => s.push('\u{8}'),
                         Some(b'f') => s.push('\u{c}'),
                         Some(b'u') => {
-                            let hex = self
-                                .b
-                                .get(self.i + 1..self.i + 5)
-                                .ok_or("truncated \\u escape")?;
-                            let code = u32::from_str_radix(
-                                std::str::from_utf8(hex).map_err(|e| e.to_string())?,
-                                16,
-                            )
-                            .map_err(|e| e.to_string())?;
-                            s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
-                            self.i += 4;
+                            let code = self.hex4(self.i + 1)?;
+                            if (0xD800..0xDC00).contains(&code) {
+                                // UTF-16 high surrogate: combine with an
+                                // immediately following \uXXXX low half
+                                let follows = self.b.get(self.i + 5)
+                                    == Some(&b'\\')
+                                    && self.b.get(self.i + 6) == Some(&b'u');
+                                let lo = if follows {
+                                    self.hex4(self.i + 7).ok()
+                                } else {
+                                    None
+                                };
+                                match lo {
+                                    Some(l) if (0xDC00..0xE000).contains(&l) => {
+                                        let c = 0x10000
+                                            + ((code - 0xD800) << 10)
+                                            + (l - 0xDC00);
+                                        s.push(
+                                            char::from_u32(c).unwrap_or('\u{FFFD}'),
+                                        );
+                                        self.i += 10;
+                                    }
+                                    // lone surrogate: replacement char
+                                    _ => {
+                                        s.push('\u{FFFD}');
+                                        self.i += 4;
+                                    }
+                                }
+                            } else {
+                                s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                                self.i += 4;
+                            }
                         }
                         _ => return Err("bad escape".into()),
                     }
@@ -385,5 +463,54 @@ mod tests {
     fn integers_exact() {
         let j = Json::Num(123456789.0);
         assert_eq!(j.dump(), "123456789");
+    }
+
+    #[test]
+    fn depth_cap_rejects_nesting_bombs() {
+        // a 4096-deep array must not be allowed to recurse the stack away
+        let bomb = "[".repeat(4096) + &"]".repeat(4096);
+        let err = Json::parse(&bomb).unwrap_err();
+        assert!(err.contains("nesting"), "{err}");
+        // mixed object/array nesting counts too
+        let mixed = "{\"a\":".repeat(200) + "1" + &"}".repeat(200);
+        assert!(Json::parse(&mixed).is_err());
+        // a tight limit for network input
+        assert!(Json::parse_with_depth("[[[[1]]]]", 3).is_err());
+        assert!(Json::parse_with_depth("[[[1]]]", 3).is_ok());
+        // depth under the default cap still parses
+        let ok = "[".repeat(100) + &"]".repeat(100);
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn non_finite_numbers_rejected() {
+        assert!(Json::parse("1e999").is_err());
+        assert!(Json::parse("-1e999").is_err());
+        assert!(Json::parse("{\"x\":1e999}").is_err());
+        // large-but-finite still fine
+        assert_eq!(Json::parse("1e300").unwrap().as_f64(), Some(1e300));
+    }
+
+    #[test]
+    fn surrogate_pairs_decode() {
+        // \uD83D\uDE00 is the UTF-16 escape of U+1F600 (the emoji)
+        let j = Json::parse(r#""\uD83D\uDE00""#).unwrap();
+        assert_eq!(j.as_str(), Some("\u{1F600}"));
+        // lone halves degrade to the replacement character, not an error
+        assert_eq!(
+            Json::parse(r#""\uD83D""#).unwrap().as_str(),
+            Some("\u{FFFD}")
+        );
+        assert_eq!(
+            Json::parse(r#""\uDE00""#).unwrap().as_str(),
+            Some("\u{FFFD}")
+        );
+        // BMP escapes unchanged
+        assert_eq!(Json::parse(r#""A""#).unwrap().as_str(), Some("A"));
+        // a lone high surrogate followed by a non-escape keeps parsing
+        assert_eq!(
+            Json::parse(r#""\uD83Dxy""#).unwrap().as_str(),
+            Some("\u{FFFD}xy")
+        );
     }
 }

@@ -81,11 +81,78 @@ fn docs_index_links_resolve() {
         "packed_path.md",
         "decode_serving.md",
         "kv_cache.md",
+        "http_serving.md",
     ] {
         assert!(index.contains(doc), "docs/README.md must link {doc}");
         assert!(
             repo_root().join("docs").join(doc).exists(),
             "docs/{doc} linked from the index but missing"
+        );
+    }
+}
+
+#[test]
+fn readme_documents_the_http_frontend() {
+    let readme = read("README.md");
+    for needle in ["--http", "/v1/generate", "loadgen", "/healthz", "/metrics"] {
+        assert!(
+            readme.contains(needle),
+            "README must document the HTTP frontend ({needle})"
+        );
+    }
+}
+
+#[test]
+fn http_doc_covers_protocol_and_backpressure() {
+    let doc = read("docs/http_serving.md");
+    for needle in [
+        "/v1/generate",
+        "/healthz",
+        "/metrics",
+        "stream",
+        "chunked",
+        "429",
+        "503",
+        "400",
+        "413",
+        "Retry-After",
+        "loadgen",
+    ] {
+        assert!(doc.contains(needle), "docs/http_serving.md must cover {needle}");
+    }
+}
+
+#[test]
+fn http_doc_catalogs_every_exported_metric() {
+    // the metrics catalog cannot drift: every family the server renders
+    // must be documented (names are extracted from a live rendering)
+    use arcquant::coordinator::Metrics;
+    let m = Metrics::new();
+    m.record_latency(1.0);
+    m.record_http_status(200);
+    m.record_stage("decode:fp32", 1.0);
+    let rendered = m.render_prometheus();
+    let doc = read("docs/http_serving.md");
+    let mut families = 0;
+    for line in rendered.lines() {
+        let Some(rest) = line.strip_prefix("# TYPE ") else { continue };
+        let name = rest.split_whitespace().next().unwrap();
+        assert!(
+            doc.contains(name),
+            "docs/http_serving.md metrics catalog is missing `{name}`"
+        );
+        families += 1;
+    }
+    assert!(families >= 10, "expected ≥10 metric families, saw {families}");
+}
+
+#[test]
+fn architecture_doc_names_the_http_modules() {
+    let arch = read("docs/ARCHITECTURE.md");
+    for needle in ["coordinator/http.rs", "coordinator/loadgen.rs"] {
+        assert!(
+            arch.contains(needle),
+            "docs/ARCHITECTURE.md must name {needle}"
         );
     }
 }

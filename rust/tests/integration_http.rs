@@ -1,0 +1,563 @@
+//! Integration: the networked HTTP serving frontend, end to end over
+//! real sockets — concurrent clients batched into shared decode ticks
+//! with responses bit-exact against the single-sequence reference decode
+//! loop, the streaming protocol, malformed/oversized-request rejection,
+//! and OutOfPages/queue backpressure (429/503).
+
+use arcquant::baselines::Method;
+use arcquant::coordinator::{
+    session_rng, HttpClient, HttpServeConfig, HttpServer, Variant,
+};
+use arcquant::formats::{Format, KvFormat};
+use arcquant::model::{tiny_test_fixture, Engine, EngineMode, KvCache, Sampler};
+use arcquant::util::json::Json;
+
+/// Tiny fp32 + QDQ + packed engines over one synthetic calibration —
+/// built from the shared [`tiny_test_fixture`], the same construction
+/// the CLI's `tiny-test` model uses, so server engines and reference
+/// engines share numerics by construction.
+fn gen_engines() -> Vec<(Variant, Engine)> {
+    let (cfg, weights, coll) = tiny_test_fixture(3, 64);
+    let method = Method::ArcQuant { fmt: Format::Nvfp4, max_s: Some(64) };
+    let fp =
+        Engine::new(cfg.clone(), weights.clone(), EngineMode::Fp32, None).unwrap();
+    let qdq = Engine::new(
+        cfg.clone(),
+        weights.clone(),
+        EngineMode::Quantized(method.clone()),
+        Some(&coll),
+    )
+    .unwrap();
+    let packed = Engine::new(
+        cfg,
+        weights,
+        EngineMode::QuantizedPacked(method),
+        Some(&coll),
+    )
+    .unwrap();
+    vec![
+        (Variant::Fp32, fp),
+        (Variant::ArcQuant, qdq),
+        (Variant::ArcPacked, packed),
+    ]
+}
+
+/// Reference engines for replay (same construction = same numerics).
+fn ref_engine(variant: Variant) -> Engine {
+    gen_engines()
+        .into_iter()
+        .find(|(v, _)| *v == variant)
+        .map(|(_, e)| e)
+        .unwrap()
+}
+
+fn prompt_for(i: usize, len: usize) -> Vec<u16> {
+    (0..len).map(|k| ((k * 37 + i * 91 + 11) % 256) as u16).collect()
+}
+
+/// Request body via the real client-side builder — the tests must speak
+/// exactly the wire shape `loadgen` speaks.
+fn body_for(prompt: &[u16], max_new: usize, variant: Variant, stream: bool) -> String {
+    arcquant::coordinator::loadgen::loadgen_body(prompt, max_new, Some(variant), stream)
+}
+
+fn tokens_of(body: &str) -> Vec<u16> {
+    let j = Json::parse(body).unwrap_or_else(|e| panic!("bad body {body:?}: {e}"));
+    j.get("tokens")
+        .and_then(|t| t.as_arr())
+        .unwrap_or_else(|| panic!("no tokens in {body}"))
+        .iter()
+        .map(|t| t.as_f64().unwrap() as u16)
+        .collect()
+}
+
+/// Greedy single-sequence reference replay: prefill + decode_step loop,
+/// exactly what the served tokens must be bit-equal to.
+fn reference_tokens(
+    engine: &Engine,
+    prompt: &[u16],
+    max_new: usize,
+    kv: KvFormat,
+    seed: u64,
+    id: u64,
+) -> Vec<u16> {
+    let sampler = Sampler::Greedy;
+    let mut rng = session_rng(seed, id);
+    let mut cache = KvCache::with_format(&engine.cfg, prompt.len() + max_new, kv);
+    let mut tok = sampler.sample(&engine.prefill(prompt, &mut cache).unwrap(), &mut rng);
+    let mut out = vec![tok];
+    for _ in 1..max_new {
+        tok = sampler.sample(&engine.decode_step(tok, &mut cache).unwrap(), &mut rng);
+        out.push(tok);
+    }
+    out
+}
+
+/// Pull a metric value out of the Prometheus text rendering.
+fn metric_value(metrics_text: &str, name: &str) -> f64 {
+    metrics_text
+        .lines()
+        .find(|l| l.starts_with(name) && !l.starts_with('#'))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("metric {name} not found in:\n{metrics_text}"))
+}
+
+#[test]
+fn eight_concurrent_clients_share_decode_ticks_bit_exact() {
+    // ≥8 concurrent POST /v1/generate clients on one variant, one
+    // max_decode_batch=8 server: every response must be bit-exact to the
+    // reference decode loop, and the tick counters must prove the
+    // clients were served from *shared* batched decode ticks.
+    const CLIENTS: usize = 8;
+    const PROMPT: usize = 24;
+    const MAX_NEW: usize = 16;
+    let cfg = HttpServeConfig {
+        max_decode_batch: CLIENTS,
+        kv_pages: 256,
+        ..Default::default()
+    };
+    let server = HttpServer::start(cfg, "127.0.0.1:0", gen_engines()).unwrap();
+    let addr = server.addr().to_string();
+
+    // all clients connect first, then fire together — the scheduler's
+    // intake loop sweeps them into the same running batch
+    let barrier = std::sync::Barrier::new(CLIENTS);
+    let results: Vec<(Vec<u16>, Vec<u16>, u64)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|i| {
+                let addr = addr.clone();
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    let mut cli = HttpClient::connect(&addr).unwrap();
+                    let prompt = prompt_for(i, PROMPT);
+                    let body = body_for(&prompt, MAX_NEW, Variant::ArcPacked, false);
+                    barrier.wait();
+                    let reply = cli
+                        .request("POST", "/v1/generate", Some(&body))
+                        .unwrap();
+                    assert_eq!(reply.status, 200, "client {i}: {}", reply.body);
+                    let j = Json::parse(&reply.body).unwrap();
+                    let id = j.get("id").unwrap().as_f64().unwrap() as u64;
+                    assert_eq!(j.get("finish").unwrap().as_str(), Some("length"));
+                    (prompt, tokens_of(&reply.body), id)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // bit-exactness: each served generation equals its reference replay
+    let engine = ref_engine(Variant::ArcPacked);
+    for (prompt, served, id) in &results {
+        assert_eq!(served.len(), MAX_NEW);
+        let want =
+            reference_tokens(&engine, prompt, MAX_NEW, KvFormat::Fp32, 0, *id);
+        assert_eq!(served, &want, "served generation diverged (id {id})");
+    }
+
+    // shared ticks: 8 sequences produced 8*(MAX_NEW-1) decode tokens; if
+    // each client had been served alone that would need 8*(MAX_NEW-1)
+    // ticks. Batching must have packed them substantially tighter.
+    let mut cli = HttpClient::connect(&addr).unwrap();
+    let m = cli.request("GET", "/metrics", None).unwrap();
+    assert_eq!(m.status, 200);
+    let ticks = metric_value(&m.body, "arcquant_decode_ticks_total");
+    let toks = metric_value(&m.body, "arcquant_decode_tokens_total");
+    assert_eq!(toks as usize, CLIENTS * (MAX_NEW - 1));
+    let mean_batch = toks / ticks;
+    assert!(
+        mean_batch > 1.5,
+        "decode ticks were not shared: {toks} tokens over {ticks} ticks"
+    );
+    let completed = metric_value(&m.body, "arcquant_requests_completed_total");
+    assert_eq!(completed as usize, CLIENTS);
+    drop(cli);
+    server.shutdown();
+}
+
+#[test]
+fn every_exec_path_served_bit_exact_over_http() {
+    // 3 concurrent clients per variant (fp32 / QDQ arcquant / packed):
+    // the full ExecPath matrix over one server, all bit-exact.
+    const PER_VARIANT: usize = 3;
+    const PROMPT: usize = 16;
+    const MAX_NEW: usize = 8;
+    let variants = [Variant::Fp32, Variant::ArcQuant, Variant::ArcPacked];
+    let server =
+        HttpServer::start(HttpServeConfig::default(), "127.0.0.1:0", gen_engines())
+            .unwrap();
+    let addr = server.addr().to_string();
+
+    let results: Vec<(Variant, Vec<u16>, Vec<u16>, u64)> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..PER_VARIANT * variants.len())
+                .map(|i| {
+                    let addr = addr.clone();
+                    let variant = variants[i % variants.len()];
+                    scope.spawn(move || {
+                        let mut cli = HttpClient::connect(&addr).unwrap();
+                        let prompt = prompt_for(i, PROMPT);
+                        let body = body_for(&prompt, MAX_NEW, variant, false);
+                        let reply = cli
+                            .request("POST", "/v1/generate", Some(&body))
+                            .unwrap();
+                        assert_eq!(reply.status, 200, "{}", reply.body);
+                        let j = Json::parse(&reply.body).unwrap();
+                        assert_eq!(
+                            j.get("variant").unwrap().as_str(),
+                            Some(variant.artifact_key())
+                        );
+                        let id = j.get("id").unwrap().as_f64().unwrap() as u64;
+                        (variant, prompt, tokens_of(&reply.body), id)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+    server.shutdown();
+
+    for variant in variants {
+        let engine = ref_engine(variant);
+        for (v, prompt, served, id) in &results {
+            if *v != variant {
+                continue;
+            }
+            let want =
+                reference_tokens(&engine, prompt, MAX_NEW, KvFormat::Fp32, 0, *id);
+            assert_eq!(
+                served, &want,
+                "{variant:?} served generation diverged (id {id})"
+            );
+        }
+    }
+}
+
+#[test]
+fn nvfp4_kv_pages_serve_bit_exact_over_http() {
+    // The quantized-KV serving path over the network: responses must
+    // replay bit-exactly against a reference loop over an NVFP4 cache.
+    const CLIENTS: usize = 4;
+    const PROMPT: usize = 24;
+    const MAX_NEW: usize = 8;
+    let cfg = HttpServeConfig {
+        kv_format: KvFormat::Nvfp4,
+        kv_pages: 8,
+        ..Default::default()
+    };
+    let server = HttpServer::start(cfg, "127.0.0.1:0", gen_engines()).unwrap();
+    let addr = server.addr().to_string();
+    let results: Vec<(Vec<u16>, Vec<u16>, u64)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|i| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let mut cli = HttpClient::connect(&addr).unwrap();
+                    let prompt = prompt_for(i, PROMPT);
+                    let body = body_for(&prompt, MAX_NEW, Variant::ArcPacked, false);
+                    let reply =
+                        cli.request("POST", "/v1/generate", Some(&body)).unwrap();
+                    assert_eq!(reply.status, 200, "{}", reply.body);
+                    let id = Json::parse(&reply.body)
+                        .unwrap()
+                        .get("id")
+                        .unwrap()
+                        .as_f64()
+                        .unwrap() as u64;
+                    (prompt, tokens_of(&reply.body), id)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // page gauges reflect the quantized geometry (8 pages total)
+    let mut cli = HttpClient::connect(&addr).unwrap();
+    let m = cli.request("GET", "/metrics", None).unwrap();
+    assert_eq!(metric_value(&m.body, "arcquant_kv_pages_total") as usize, 8);
+    drop(cli);
+    server.shutdown();
+
+    let engine = ref_engine(Variant::ArcPacked);
+    for (prompt, served, id) in &results {
+        let want =
+            reference_tokens(&engine, prompt, MAX_NEW, KvFormat::Nvfp4, 0, *id);
+        assert_eq!(served, &want, "nvfp4-KV served generation diverged");
+    }
+}
+
+#[test]
+fn streaming_chunks_match_unary_response() {
+    let server =
+        HttpServer::start(HttpServeConfig::default(), "127.0.0.1:0", gen_engines())
+            .unwrap();
+    let addr = server.addr().to_string();
+    let prompt = prompt_for(0, 16);
+    const MAX_NEW: usize = 6;
+
+    let mut cli = HttpClient::connect(&addr).unwrap();
+    // unary first
+    let unary = cli
+        .request(
+            "POST",
+            "/v1/generate",
+            Some(&body_for(&prompt, MAX_NEW, Variant::Fp32, false)),
+        )
+        .unwrap();
+    assert_eq!(unary.status, 200);
+    let unary_tokens = tokens_of(&unary.body);
+    assert_eq!(unary_tokens.len(), MAX_NEW);
+
+    // then streamed on the same keep-alive connection
+    let streamed = cli
+        .request(
+            "POST",
+            "/v1/generate",
+            Some(&body_for(&prompt, MAX_NEW, Variant::Fp32, true)),
+        )
+        .unwrap();
+    assert_eq!(streamed.status, 200);
+    assert_eq!(
+        streamed.header("transfer-encoding").map(str::to_ascii_lowercase),
+        Some("chunked".to_string())
+    );
+    let chunks = streamed.chunks.as_ref().expect("chunked reply");
+    // one chunk per token + the final summary chunk
+    assert_eq!(chunks.len(), MAX_NEW + 1, "chunks: {chunks:?}");
+    let stream_tokens: Vec<u16> = chunks[..MAX_NEW]
+        .iter()
+        .map(|c| {
+            Json::parse(c.trim())
+                .unwrap()
+                .get("token")
+                .unwrap()
+                .as_f64()
+                .unwrap() as u16
+        })
+        .collect();
+    let done = Json::parse(chunks[MAX_NEW].trim()).unwrap();
+    assert_eq!(done.get("done"), Some(&Json::Bool(true)));
+    assert_eq!(done.get("finish").unwrap().as_str(), Some("length"));
+    let final_tokens: Vec<u16> = done
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_f64().unwrap() as u16)
+        .collect();
+    // greedy decode: identical prompt ⇒ identical tokens, streamed or not
+    assert_eq!(stream_tokens, unary_tokens);
+    assert_eq!(final_tokens, unary_tokens);
+    drop(cli);
+    server.shutdown();
+}
+
+#[test]
+fn malformed_requests_get_400_and_unknown_routes_404() {
+    let server =
+        HttpServer::start(HttpServeConfig::default(), "127.0.0.1:0", gen_engines())
+            .unwrap();
+    let addr = server.addr().to_string();
+    let mut cli = HttpClient::connect(&addr).unwrap();
+
+    // valid-JSON protocol violations → 400 with an error body, and the
+    // keep-alive connection stays usable afterwards
+    for body in [
+        r#"{"max_new_tokens":4}"#,                  // missing prompt
+        r#"{"prompt":[]}"#,                          // empty prompt
+        r#"{"prompt":[70000]}"#,                     // token outside vocab
+        r#"{"prompt":[1.5]}"#,                       // fractional token
+        r#"{"prompt":[1],"variant":"bogus"}"#,       // unknown variant
+        r#"{"prompt":[1],"max_new_tokens":0}"#,      // zero budget
+        r#"{"prompt":[1],"max_new_tokens":100000}"#, // budget above cap
+        r#"{"prompt":[1],"stream":"yes"}"#,          // non-bool stream
+        r#"{"prompt":[1],"wat":1}"#,                 // unknown field
+        r#"[1,2,3]"#,                                // non-object body
+        "[[[[[[[[[[[[[[[[[[[1]]]]]]]]]]]]]]]]]]]",   // nesting bomb
+    ] {
+        let reply = cli.request("POST", "/v1/generate", Some(body)).unwrap();
+        assert_eq!(reply.status, 400, "body {body} -> {}", reply.body);
+        assert!(
+            Json::parse(&reply.body).unwrap().get("error").is_some(),
+            "400 body carries an error message"
+        );
+    }
+
+    // unknown route / wrong method
+    let reply = cli.request("GET", "/nope", None).unwrap();
+    assert_eq!(reply.status, 404);
+    let reply = cli.request("GET", "/v1/generate", None).unwrap();
+    assert_eq!(reply.status, 405);
+    let reply = cli.request("POST", "/healthz", None).unwrap();
+    assert_eq!(reply.status, 405);
+
+    // healthz still fine on the same connection
+    let reply = cli.request("GET", "/healthz", None).unwrap();
+    assert_eq!(reply.status, 200);
+    assert!(reply.body.contains("\"status\":\"ok\""));
+
+    // syntactically broken JSON closes with 400 (fresh connection: the
+    // server drops malformed-request connections)
+    let mut cli2 = HttpClient::connect(&addr).unwrap();
+    let reply = cli2.request("POST", "/v1/generate", Some("{nope")).unwrap();
+    assert_eq!(reply.status, 400);
+    drop(cli);
+    drop(cli2);
+    server.shutdown();
+}
+
+#[test]
+fn oversized_bodies_get_413() {
+    let cfg = HttpServeConfig {
+        max_body_bytes: 256,
+        ..Default::default()
+    };
+    let server = HttpServer::start(cfg, "127.0.0.1:0", gen_engines()).unwrap();
+    let addr = server.addr().to_string();
+    let mut cli = HttpClient::connect(&addr).unwrap();
+    let big = format!(
+        r#"{{"prompt":[{}]}}"#,
+        (0..500).map(|_| "1").collect::<Vec<_>>().join(",")
+    );
+    assert!(big.len() > 256);
+    let reply = cli.request("POST", "/v1/generate", Some(&big)).unwrap();
+    assert_eq!(reply.status, 413, "{}", reply.body);
+    drop(cli);
+    server.shutdown();
+}
+
+#[test]
+fn backpressure_maps_to_503_and_429() {
+    // 503: a request whose worst case exceeds the entire page pool can
+    // never run (1 page = 16 fp32 tokens; 24-token prompt needs 2).
+    let cfg = HttpServeConfig {
+        kv_pages: 1,
+        ..Default::default()
+    };
+    let server = HttpServer::start(cfg, "127.0.0.1:0", gen_engines()).unwrap();
+    let addr = server.addr().to_string();
+    let mut cli = HttpClient::connect(&addr).unwrap();
+    let body = body_for(&prompt_for(0, 24), 8, Variant::Fp32, false);
+    let reply = cli.request("POST", "/v1/generate", Some(&body)).unwrap();
+    assert_eq!(reply.status, 503, "{}", reply.body);
+    assert!(reply.header("retry-after").is_some());
+    drop(cli);
+    server.shutdown();
+
+    // 429: a zero-capacity scheduler queue sheds every request
+    let cfg = HttpServeConfig {
+        queue_cap: 0,
+        ..Default::default()
+    };
+    let server = HttpServer::start(cfg, "127.0.0.1:0", gen_engines()).unwrap();
+    let addr = server.addr().to_string();
+    let mut cli = HttpClient::connect(&addr).unwrap();
+    let body = body_for(&prompt_for(0, 8), 4, Variant::Fp32, false);
+    let reply = cli.request("POST", "/v1/generate", Some(&body)).unwrap();
+    assert_eq!(reply.status, 429, "{}", reply.body);
+    assert!(reply.header("retry-after").is_some());
+
+    // rejected — but the server stays healthy
+    let reply = cli.request("GET", "/healthz", None).unwrap();
+    assert_eq!(reply.status, 200);
+    let m = cli.request("GET", "/metrics", None).unwrap();
+    assert!(metric_value(&m.body, "arcquant_requests_rejected_total") >= 1.0);
+    drop(cli);
+    server.shutdown();
+}
+
+#[test]
+fn missing_engine_variant_gets_503() {
+    // server loaded with fp32 only; a packed request cannot be served
+    let engines: Vec<(Variant, Engine)> = gen_engines()
+        .into_iter()
+        .filter(|(v, _)| *v == Variant::Fp32)
+        .collect();
+    let server =
+        HttpServer::start(HttpServeConfig::default(), "127.0.0.1:0", engines)
+            .unwrap();
+    let addr = server.addr().to_string();
+    let mut cli = HttpClient::connect(&addr).unwrap();
+    let body = body_for(&prompt_for(0, 8), 4, Variant::ArcPacked, false);
+    let reply = cli.request("POST", "/v1/generate", Some(&body)).unwrap();
+    assert_eq!(reply.status, 503, "{}", reply.body);
+    // the default variant (first engine) still serves
+    let mut j = Json::obj();
+    j.set(
+        "prompt",
+        Json::Arr(prompt_for(0, 8).iter().map(|&t| Json::Num(t as f64)).collect()),
+    )
+    .set("max_new_tokens", Json::Num(4.0));
+    let reply = cli.request("POST", "/v1/generate", Some(&j.dump())).unwrap();
+    assert_eq!(reply.status, 200, "{}", reply.body);
+    let parsed = Json::parse(&reply.body).unwrap();
+    assert_eq!(parsed.get("variant").unwrap().as_str(), Some("fp32"));
+    drop(cli);
+    server.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_drains_and_refuses_new_connections() {
+    let server =
+        HttpServer::start(HttpServeConfig::default(), "127.0.0.1:0", gen_engines())
+            .unwrap();
+    let addr = server.addr().to_string();
+    let mut cli = HttpClient::connect(&addr).unwrap();
+    let body = body_for(&prompt_for(0, 8), 4, Variant::Fp32, false);
+    let reply = cli.request("POST", "/v1/generate", Some(&body)).unwrap();
+    assert_eq!(reply.status, 200);
+    drop(cli);
+    server.shutdown(); // blocks until acceptor + scheduler exited
+    // the listener is gone: connecting now fails (or is closed instantly
+    // without serving). Either way no request can be made.
+    match HttpClient::connect(&addr) {
+        Err(_) => {}
+        Ok(mut cli) => {
+            assert!(cli.request("GET", "/healthz", None).is_err());
+        }
+    }
+}
+
+#[test]
+fn metrics_catalog_renders_over_http() {
+    let server =
+        HttpServer::start(HttpServeConfig::default(), "127.0.0.1:0", gen_engines())
+            .unwrap();
+    let addr = server.addr().to_string();
+    let mut cli = HttpClient::connect(&addr).unwrap();
+    let body = body_for(&prompt_for(0, 8), 4, Variant::ArcPacked, false);
+    let reply = cli.request("POST", "/v1/generate", Some(&body)).unwrap();
+    assert_eq!(reply.status, 200);
+    let m = cli.request("GET", "/metrics", None).unwrap();
+    assert_eq!(m.status, 200);
+    assert!(m
+        .header("content-type")
+        .is_some_and(|c| c.starts_with("text/plain")));
+    for family in [
+        "arcquant_requests_submitted_total",
+        "arcquant_requests_completed_total",
+        "arcquant_requests_rejected_total",
+        "arcquant_decode_ticks_total",
+        "arcquant_decode_tokens_total",
+        "arcquant_generated_tokens_total",
+        "arcquant_http_responses_total",
+        "arcquant_queue_depth",
+        "arcquant_kv_pages_used",
+        "arcquant_kv_pages_total",
+        "arcquant_request_latency_ms_bucket",
+        "arcquant_request_latency_ms_sum",
+        "arcquant_request_latency_ms_count",
+        "arcquant_stage_ms_total",
+    ] {
+        assert!(m.body.contains(family), "metrics missing {family}");
+    }
+    // the served request shows up in the per-variant token counter
+    assert!(metric_value(
+        &m.body,
+        "arcquant_generated_tokens_total{variant=\"arcquant-packed\"}"
+    ) >= 4.0);
+    assert!(metric_value(&m.body, "arcquant_request_latency_ms_count") >= 1.0);
+    drop(cli);
+    server.shutdown();
+}

@@ -1,13 +1,15 @@
 #!/usr/bin/env bash
-# Repo-root bench runner: runs the GEMM + decode benches at pinned
-# shapes/seeds (seeds are hardcoded in the bench sources) and rewrites
-# BENCH_gemm_packed.json / BENCH_decode.json in the repo root — the
-# perf-trajectory files committed with each PR.
+# Repo-root bench runner: runs the GEMM + decode + HTTP-serving benches
+# at pinned shapes/seeds (seeds are hardcoded in the bench sources) and
+# rewrites BENCH_gemm_packed.json / BENCH_decode.json / BENCH_http.json
+# in the repo root — the perf-trajectory files committed with each PR.
 #
 # bench_decode includes the KV-format series (decode throughput with f32
 # vs NVFP4/MXFP4 K/V pages + admitted-sequence capacity at a fixed page
-# budget); --smoke runs it at reduced shapes too, so CI exercises the
-# quantized KV decode path every push.
+# budget); bench_http boots a real in-process HTTP server and drives it
+# with the closed-loop loadgen at connection counts {1, 4, 16}; --smoke
+# runs both at reduced shapes too, so CI exercises the quantized KV
+# decode path and the socket serving path every push.
 #
 # Usage:
 #   scripts/bench.sh            # full run, rewrites BENCH_*.json
@@ -37,7 +39,8 @@ fi
 
 cargo bench --bench bench_gemm_aug
 cargo bench --bench bench_decode
+cargo bench --bench bench_http
 
 if [[ "$SMOKE" == "0" ]]; then
-  echo "# rewrote BENCH_gemm_packed.json and BENCH_decode.json"
+  echo "# rewrote BENCH_gemm_packed.json, BENCH_decode.json and BENCH_http.json"
 fi
