@@ -8,7 +8,11 @@
 //! Also records a decode-site kernel comparison: the pre-v2 packed kernel
 //! ([`matmul_nt_packed_ref`]) vs the v2 tiled/row kernels
 //! ([`matmul_nt_packed`]) at the [B, K]·[M, K]ᵀ shapes a decode tick
-//! issues per layer, B ∈ {1, 4, 8}.
+//! issues per layer, B ∈ {1, 4, 8} — plus the SIMD dispatch series
+//! (v2 forced scalar vs best detected path, `decode_site_simd`) and the
+//! KV decode-on-access read cost (`kv_read`: `dequant_into` scalar vs
+//! SIMD vs the raw f32 copy, the read `attention_over_cache` issues).
+//! Emits stable `GATE key value` lines for `scripts/bench_gate.py`.
 //!
 //! Method: per sample, prefill `batch` fresh prompts (untimed), then time
 //! `steps` consecutive `decode_batch` ticks and report
@@ -30,6 +34,7 @@ use arcquant::baselines::Method;
 use arcquant::coordinator::kvcache::KvPageManager;
 use arcquant::formats::{Format, KvFormat, RowQuantizer};
 use arcquant::model::{sampling, Engine, EngineMode, KvCache, ModelConfig, Weights};
+use arcquant::tensor::simd::{self, SimdPath};
 use arcquant::tensor::{matmul_nt_packed, matmul_nt_packed_ref, Mat};
 use arcquant::util::bench::{smoke_mode, Bencher};
 use arcquant::util::json::Json;
@@ -87,9 +92,14 @@ fn decode_tok_s(engine: &Engine, batch: usize, bc: &Cfg, kv: KvFormat) -> (f64, 
 }
 
 /// Kernel v1-vs-v2 at the per-layer GEMM shape a decode tick issues:
-/// [B, K] activations (already packed) against an [M, K] packed weight.
-/// Returns the geomean speedup over the batch sizes.
-fn bench_decode_site_kernels(rows: &mut Vec<Json>) -> f64 {
+/// [B, K] activations (already packed) against an [M, K] packed weight,
+/// plus the SIMD dispatch series (v2 forced scalar vs best detected
+/// path) on the same operands. Returns the (v2/v1, best/scalar) geomean
+/// speedups over the batch sizes.
+fn bench_decode_site_kernels(
+    rows: &mut Vec<Json>,
+    simd_rows: &mut Vec<Json>,
+) -> (f64, f64) {
     let (k, m) = if smoke_mode() { (256usize, 32usize) } else { (2048usize, 512usize) };
     let batches: &[usize] = if smoke_mode() { &[1, 2] } else { &[1, 4, 8] };
     let b = if smoke_mode() { Bencher::smoke() } else { Bencher::quick() };
@@ -98,7 +108,9 @@ fn bench_decode_site_kernels(rows: &mut Vec<Json>) -> f64 {
     let mut w = Mat::zeros(m, k);
     w.fill_random_normal(&mut rng, 0.4);
     let qw = q.quantize(&w);
+    let best_path = if simd::avx2_available() { "avx2" } else { "scalar" };
     let mut speedups: Vec<f64> = Vec::new();
+    let mut simd_speedups: Vec<f64> = Vec::new();
     for &batch in batches {
         let x = outlier_mat(&mut rng, batch, k);
         let qx = q.quantize_rowwise(&x);
@@ -122,8 +134,92 @@ fn bench_decode_site_kernels(rows: &mut Vec<Json>) -> f64 {
             .set("v2_median_us", Json::Num(r_v2.median_us))
             .set("speedup_v2_over_v1", Json::Num(speedup));
         rows.push(row);
+
+        simd::set_path_override(Some(SimdPath::Scalar));
+        let r_scalar = b.run(&format!("decode_site_simd_scalar_b{batch}"), || {
+            matmul_nt_packed(&qx, &qw)
+        });
+        simd::set_path_override(Some(SimdPath::Avx2));
+        let r_best = b.run(&format!("decode_site_simd_{best_path}_b{batch}"), || {
+            matmul_nt_packed(&qx, &qw)
+        });
+        simd::set_path_override(None);
+        let sp = r_scalar.median_us / r_best.median_us;
+        simd_speedups.push(sp);
+        println!(
+            "#   decode-site simd b{batch}: scalar {:.1}us {best_path} {:.1}us ({sp:.2}x)",
+            r_scalar.median_us, r_best.median_us
+        );
+        let mut sr = Json::obj();
+        sr.set("batch", Json::Num(batch as f64))
+            .set("k", Json::Num(k as f64))
+            .set("m", Json::Num(m as f64))
+            .set("scalar_median_us", Json::Num(r_scalar.median_us))
+            .set("best_median_us", Json::Num(r_best.median_us))
+            .set("best_path", Json::Str(best_path.into()))
+            .set("speedup_best_over_scalar", Json::Num(sp));
+        simd_rows.push(sr);
     }
-    stats::geomean(&speedups)
+    (stats::geomean(&speedups), stats::geomean(&simd_speedups))
+}
+
+/// KV decode-on-access read cost: `dequant_into` of a [T, d] NVFP4 K/V
+/// matrix — the per-layer read `attention_over_cache` issues — forced
+/// scalar vs the best detected path, with the raw f32 copy as the
+/// zero-decode baseline. Returns the best-path speedup at the largest T.
+fn bench_kv_read(rows: &mut Vec<Json>) -> f64 {
+    let d = 128usize;
+    let ts: &[usize] = if smoke_mode() { &[8] } else { &[48, 512] };
+    let b = if smoke_mode() { Bencher::smoke() } else { Bencher::quick() };
+    let best_path = if simd::avx2_available() { "avx2" } else { "scalar" };
+    let mut rng = Prng::new(11);
+    let q = RowQuantizer::new(Format::Nvfp4);
+    let mut last_sp = 1.0;
+    for &t in ts {
+        let mut kmat = Mat::zeros(t, d);
+        kmat.fill_random_normal(&mut rng, 0.8);
+        let qk = q.quantize(&kmat);
+        let mut out = vec![0f32; t * d];
+        let r_copy = b.run(&format!("kv_read_f32_copy_t{t}"), || {
+            out.copy_from_slice(&kmat.data);
+            out[0]
+        });
+        simd::set_path_override(Some(SimdPath::Scalar));
+        let r_scalar = b.run(&format!("kv_read_dequant_scalar_t{t}"), || {
+            qk.dequant_into(&mut out);
+            out[0]
+        });
+        simd::set_path_override(Some(SimdPath::Avx2));
+        let r_best = b.run(&format!("kv_read_dequant_{best_path}_t{t}"), || {
+            qk.dequant_into(&mut out);
+            out[0]
+        });
+        simd::set_path_override(None);
+        let sp = r_scalar.median_us / r_best.median_us;
+        last_sp = sp;
+        println!(
+            "#   kv read t={t} d={d}: f32 copy {:.2}us, dequant scalar {:.2}us \
+             ({:.2}x over copy), {best_path} {:.2}us ({:.2}x over copy, {sp:.2}x over scalar)",
+            r_copy.median_us,
+            r_scalar.median_us,
+            r_scalar.median_us / r_copy.median_us,
+            r_best.median_us,
+            r_best.median_us / r_copy.median_us,
+        );
+        let mut row = Json::obj();
+        row.set("t", Json::Num(t as f64))
+            .set("d", Json::Num(d as f64))
+            .set("kv_format", Json::Str("nvfp4".into()))
+            .set("f32_copy_median_us", Json::Num(r_copy.median_us))
+            .set("dequant_scalar_median_us", Json::Num(r_scalar.median_us))
+            .set("dequant_best_median_us", Json::Num(r_best.median_us))
+            .set("best_path", Json::Str(best_path.into()))
+            .set("scalar_over_f32_copy", Json::Num(r_scalar.median_us / r_copy.median_us))
+            .set("best_over_f32_copy", Json::Num(r_best.median_us / r_copy.median_us))
+            .set("speedup_best_over_scalar", Json::Num(sp));
+        rows.push(row);
+    }
+    last_sp
 }
 
 /// KV-format capacity series: max sequences a fixed page budget admits
@@ -236,8 +332,20 @@ fn main() {
     }
 
     let mut kernel_rows: Vec<Json> = Vec::new();
-    let site_geomean = bench_decode_site_kernels(&mut kernel_rows);
+    let mut simd_rows: Vec<Json> = Vec::new();
+    let (site_geomean, simd_geomean) =
+        bench_decode_site_kernels(&mut kernel_rows, &mut simd_rows);
     println!("# decode-site kernel geomean speedup v2/v1: {site_geomean:.2}x");
+    println!("# decode-site simd geomean speedup best/scalar: {simd_geomean:.2}x");
+
+    let mut kv_read_rows: Vec<Json> = Vec::new();
+    let kv_read_sp = bench_kv_read(&mut kv_read_rows);
+
+    // GATE lines: stable key/value pairs scripts/bench_gate.py floors in
+    // CI (printed in smoke mode too).
+    println!("GATE decode_site_geomean_v2_over_v1 {site_geomean:.4}");
+    println!("GATE decode_site_simd_geomean_best_over_scalar {simd_geomean:.4}");
+    println!("GATE decode_kv_read_speedup_best_over_scalar {kv_read_sp:.4}");
 
     // ---- KV-format series: same packed engine, K/V pages f32 vs 4-bit ----
     let kv_engine = Engine::new(
@@ -302,6 +410,9 @@ fn main() {
         .set("rows", Json::Arr(rows))
         .set("decode_site_kernel", Json::Arr(kernel_rows))
         .set("decode_site_kernel_geomean_speedup", Json::Num(site_geomean))
+        .set("decode_site_simd", Json::Arr(simd_rows))
+        .set("decode_site_simd_geomean_speedup", Json::Num(simd_geomean))
+        .set("kv_read", Json::Arr(kv_read_rows))
         .set("kv_format_rows", Json::Arr(kv_rows))
         .set("kv_capacity", Json::Arr(kv_cap_rows))
         .set("kv_capacity_ratio_nvfp4_over_fp32", Json::Num(cap_ratio));

@@ -11,7 +11,14 @@
 //!   ([`matmul_nt_packed`]) on identical packed operands, at
 //!   the K=4096 shapes for both prefill (n=16) and decode (n=1), with
 //!   the geometric-mean speedup — the acceptance series for the v2
-//!   rewrite.
+//!   rewrite;
+//! * **SIMD dispatch** (`kernel_simd`): the v2 kernel forced scalar vs
+//!   the best runtime-detected path (AVX2 shuffle decode — see
+//!   `tensor::simd`) via the in-process override, same operands, with
+//!   the geomean — the acceptance series for the explicit-SIMD layer.
+//!
+//! Emits stable `GATE key value` lines that `scripts/bench_gate.py`
+//! floors in CI (printed in smoke mode too).
 //!
 //! `ARCQUANT_BENCH_SMOKE=1` shrinks every shape and skips the JSON
 //! rewrite — CI uses it to catch kernel-routing panics cheaply.
@@ -19,6 +26,7 @@
 use arcquant::costmodel::{gemm_us, GemmPath, Gpu};
 use arcquant::formats::Format;
 use arcquant::quant::{ArcQuantLinear, LayerPlan, PackedArcLinear, Permutation};
+use arcquant::tensor::simd::{self, SimdPath};
 use arcquant::tensor::{matmul_nt, matmul_nt_packed, matmul_nt_packed_ref, Mat};
 use arcquant::util::bench::{smoke_mode, Bencher};
 use arcquant::util::json::Json;
@@ -35,7 +43,12 @@ fn bench_packed_vs_qdq(b: &Bencher) {
     let mut rng = Prng::new(1);
     let mut rows: Vec<Json> = Vec::new();
     let mut kernel_rows: Vec<Json> = Vec::new();
+    let mut simd_rows: Vec<Json> = Vec::new();
     let mut speedups: Vec<f64> = Vec::new();
+    let mut simd_speedups: Vec<f64> = Vec::new();
+    // the best path the dispatch can reach on this host (override never
+    // forces past detection, so this is what Some(Avx2) resolves to)
+    let best_path = if simd::avx2_available() { "avx2" } else { "scalar" };
     println!("# packed vs QDQ ARCQuant forward (N={n}, K={k}, M={m})");
     for &s in s_list {
         let x = outlier_mat(&mut rng, n, k);
@@ -84,6 +97,36 @@ fn bench_packed_vs_qdq(b: &Bencher) {
                 .set("v2_median_us", Json::Num(r_v2.median_us))
                 .set("speedup_v2_over_v1", Json::Num(speedup));
             kernel_rows.push(kr);
+
+            // SIMD dispatch series: the same v2 kernel forced scalar vs
+            // the best detected path (both via the in-process override;
+            // outputs are bit-identical, only the arm differs).
+            simd::set_path_override(Some(SimdPath::Scalar));
+            let r_scalar = b.run(&format!("kernel_simd_scalar_{label}_k{k}_s{s}"), || {
+                matmul_nt_packed(&aug.qm, &packed.w_packed)
+            });
+            simd::set_path_override(Some(SimdPath::Avx2));
+            let r_best = b.run(&format!("kernel_simd_{best_path}_{label}_k{k}_s{s}"), || {
+                matmul_nt_packed(&aug.qm, &packed.w_packed)
+            });
+            simd::set_path_override(None);
+            let sp = r_scalar.median_us / r_best.median_us;
+            simd_speedups.push(sp);
+            println!(
+                "#   kernel simd {label} s={s}: scalar {:.1}us {best_path} {:.1}us ({sp:.2}x)",
+                r_scalar.median_us, r_best.median_us
+            );
+            let mut sr = Json::obj();
+            sr.set("shape", Json::Str(label.into()))
+                .set("n", Json::Num(rows_n as f64))
+                .set("k", Json::Num(k as f64))
+                .set("m", Json::Num(m as f64))
+                .set("s", Json::Num(s as f64))
+                .set("scalar_median_us", Json::Num(r_scalar.median_us))
+                .set("best_median_us", Json::Num(r_best.median_us))
+                .set("best_path", Json::Str(best_path.into()))
+                .set("speedup_best_over_scalar", Json::Num(sp));
+            simd_rows.push(sr);
         }
 
         // Bytes moved per forward, weight side + activation side. QDQ
@@ -128,7 +171,14 @@ fn bench_packed_vs_qdq(b: &Bencher) {
         rows.push(row);
     }
     let geomean = stats::geomean(&speedups);
+    let simd_geomean = stats::geomean(&simd_speedups);
     println!("# kernel geomean speedup v2/v1: {geomean:.2}x");
+    println!("# kernel simd geomean speedup {best_path}/scalar: {simd_geomean:.2}x");
+    // GATE lines: stable key/value pairs scripts/bench_gate.py parses —
+    // printed in smoke mode too, so CI can sanity-floor every run.
+    println!("GATE gemm_kernel_geomean_v2_over_v1 {geomean:.4}");
+    println!("GATE gemm_simd_geomean_best_over_scalar {simd_geomean:.4}");
+    println!("GATE gemm_simd_best_path {best_path}");
 
     if smoke_mode() {
         println!("# smoke mode: BENCH_gemm_packed.json not rewritten");
@@ -141,13 +191,16 @@ fn bench_packed_vs_qdq(b: &Bencher) {
         "source",
         Json::Str("cargo bench --bench bench_gemm_aug (in-tree harness)".into()),
     )
-    .set("threads", Json::Num(pool::num_threads() as f64));
+    .set("threads", Json::Num(pool::num_threads() as f64))
+    .set("simd_best_path", Json::Str(best_path.into()));
     let mut out = Json::obj();
     out.set("bench", Json::Str("gemm_packed".into()))
         .set("provenance", prov)
         .set("shapes", Json::Arr(rows))
         .set("kernel", Json::Arr(kernel_rows))
-        .set("kernel_geomean_speedup_v2_over_v1", Json::Num(geomean));
+        .set("kernel_geomean_speedup_v2_over_v1", Json::Num(geomean))
+        .set("kernel_simd", Json::Arr(simd_rows))
+        .set("kernel_simd_geomean_speedup", Json::Num(simd_geomean));
     let path = "BENCH_gemm_packed.json";
     match std::fs::write(path, out.dump()) {
         Ok(()) => println!("# wrote {path}"),

@@ -278,6 +278,20 @@ impl Metrics {
             Metrics::get(&self.kv_pages_total),
         );
 
+        // Info-style gauge: constant 1, the label carries the value. The
+        // path is resolved once per process (see `tensor::simd`), so this
+        // is stable for the lifetime of the exposition endpoint.
+        let _ = writeln!(
+            o,
+            "# HELP arcquant_simd_path Kernel path the packed GEMM/dequant dispatch selected."
+        );
+        let _ = writeln!(o, "# TYPE arcquant_simd_path gauge");
+        let _ = writeln!(
+            o,
+            "arcquant_simd_path{{selected_simd_path=\"{}\"}} 1",
+            crate::tensor::selected_path().name()
+        );
+
         let _ = writeln!(
             o,
             "# HELP arcquant_request_latency_ms End-to-end request latency \
@@ -427,6 +441,13 @@ mod tests {
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
         }
+        // the dispatch gauge carries its value in the label; the label
+        // must match whatever the process actually selected
+        let want = format!(
+            "arcquant_simd_path{{selected_simd_path=\"{}\"}} 1",
+            crate::tensor::selected_path().name()
+        );
+        assert!(text.contains(&want), "missing {want:?} in:\n{text}");
         // every bucket line is cumulative and non-decreasing
         let buckets: Vec<u64> = text
             .lines()

@@ -17,7 +17,7 @@
 
 use super::Format;
 use crate::numerics::{codec, E8M0, INT4};
-use crate::tensor::Mat;
+use crate::tensor::{simd, Mat};
 use crate::util::pool;
 
 /// Arithmetic round-to-nearest-even onto the signed E2M1 grid,
@@ -66,6 +66,31 @@ pub const E2M1_LUT_X2: [i32; 16] = [
 pub const INT4_LUT: [i32; 16] = [
     0, 1, 2, 3, 4, 5, 6, 7, //
     -8, -7, -6, -5, -4, -3, -2, -1,
+];
+
+// The i8 views below are the code-plane tables the SIMD layer's
+// `pshufb` shuffle needs (16 signed bytes = one xmm register); each is
+// pinned against its i32/f32 source by `i8_lut_views_match_sources`.
+
+/// [`E2M1_LUT_X2`] as signed bytes — every doubled grid value fits i8.
+pub const E2M1_LUT_X2_I8: [i8; 16] = [
+    0, 1, 2, 3, 4, 6, 8, 12, //
+    0, -1, -2, -3, -4, -6, -8, -12,
+];
+
+/// [`INT4_LUT`] as signed bytes.
+pub const INT4_LUT_I8: [i8; 16] = [
+    0, 1, 2, 3, 4, 5, 6, 7, //
+    -8, -7, -6, -5, -4, -3, -2, -1,
+];
+
+/// |E2M1 grid|·2 magnitudes, sign-duplicated: the f32 dequant shuffle
+/// looks magnitudes up here and re-applies the sign from nibble bit 3 —
+/// which is what lets the AVX2 dequant reproduce the `-0.0` entry of
+/// [`E2M1_LUT`] bit-for-bit.
+pub const E2M1_MAG_X2_I8: [i8; 16] = [
+    0, 1, 2, 3, 4, 6, 8, 12, //
+    0, 1, 2, 3, 4, 6, 8, 12,
 ];
 
 /// Exact 4-bit code of a value already on the signed E2M1 grid
@@ -480,6 +505,11 @@ impl QuantizedMat {
         debug_assert_eq!(out.len(), (b1 * g).min(self.cols) - b0 * g);
         let elem = self.fmt.element();
         let four_bit = self.fmt.element_bits() == 4;
+        // Dispatched once per call: full 4-bit blocks take the AVX2
+        // shuffle decoders (bit-identical to the scalar LUT loops — see
+        // tensor::simd); the ragged tail block and the wider minifloats
+        // keep the scalar form below.
+        let simd_4bit = four_bit && simd::selected_path() == simd::SimdPath::Avx2;
         for b in b0..b1 {
             let s = self.block_scale(r, b);
             let n_valid = ((b + 1) * g).min(self.cols) - b * g;
@@ -487,6 +517,10 @@ impl QuantizedMat {
             let bytes = self.block_codes(r, b);
             match elem {
                 Some(crate::numerics::FpKind::E2M1) => {
+                    if simd_4bit && n_valid == g {
+                        simd::dequant_block_e2m1_avx2(bytes, &E2M1_MAG_X2_I8, s, dst);
+                        continue;
+                    }
                     for (i, v) in dst.iter_mut().enumerate() {
                         let byte = bytes[i / 2];
                         let nib = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
@@ -505,6 +539,12 @@ impl QuantizedMat {
                 }
                 None => {
                     debug_assert!(four_bit);
+                    if simd_4bit && n_valid == g {
+                        // INT4.dequantize(code, s) is `code as f32 * s` —
+                        // the shuffle arm computes the identical product.
+                        simd::dequant_block_int4_avx2(bytes, &INT4_LUT_I8, s, dst);
+                        continue;
+                    }
                     for (i, v) in dst.iter_mut().enumerate() {
                         let byte = bytes[i / 2];
                         let nib = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
@@ -1054,5 +1094,41 @@ mod tests {
         let mut buf = vec![7.0f32; 4 * 50];
         qm.dequant_into(&mut buf);
         assert_eq!(buf, full.data);
+    }
+
+    #[test]
+    fn i8_lut_views_match_sources() {
+        for i in 0..16 {
+            assert_eq!(E2M1_LUT_X2_I8[i] as i32, E2M1_LUT_X2[i], "x2 {i}");
+            assert_eq!(INT4_LUT_I8[i] as i32, INT4_LUT[i], "int4 {i}");
+            assert_eq!(
+                E2M1_MAG_X2_I8[i] as f32 * 0.5,
+                E2M1_LUT[i].abs(),
+                "mag {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn dequant_bit_identical_across_simd_paths() {
+        // Forces both dispatch arms on one host and compares the decoded
+        // bits (including zero signs). The override is process-global, but
+        // every kernel is path-invariant by construction, so flipping it
+        // can't perturb concurrently running tests.
+        let mut rng = Prng::new(96);
+        for cols in [41usize, 64, 96] {
+            let m = rand_mat(&mut rng, 5, cols, true);
+            for fmt in [Format::Nvfp4, Format::Mxfp4, Format::Int4 { group: 16 }] {
+                let qm = RowQuantizer::new(fmt).quantize(&m);
+                simd::set_path_override(Some(simd::SimdPath::Scalar));
+                let scalar = qm.dequantize();
+                simd::set_path_override(Some(simd::SimdPath::Avx2));
+                let vector = qm.dequantize();
+                simd::set_path_override(None);
+                let a: Vec<u32> = scalar.data.iter().map(|v| v.to_bits()).collect();
+                let b: Vec<u32> = vector.data.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(a, b, "{fmt:?} cols={cols}");
+            }
+        }
     }
 }

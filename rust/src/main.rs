@@ -365,6 +365,12 @@ fn cmd_serve(args: &Args) -> i32 {
                     return 1;
                 }
             };
+        // surfaced again as the arcquant_simd_path gauge on /metrics
+        println!(
+            "arcquant native: kernel path {} (ARCQUANT_SIMD={})",
+            arcquant::tensor::selected_path().name(),
+            std::env::var("ARCQUANT_SIMD").unwrap_or_else(|_| "auto".into()),
+        );
         let sampler = match args.usize_or("top-k", 0) {
             Ok(0) => Sampler::Greedy,
             Ok(k) => Sampler::TopK { k, temperature: 0.8 },

@@ -425,6 +425,11 @@ impl Engine {
     /// decode the packed GEMM uses, run the identical attention math, and
     /// return the scratch — the **decode-on-access** read path
     /// (quantize once on write, decode per read, never re-quantize).
+    ///
+    /// On AVX2 hosts the `dequant_into` calls ride the shuffle-decode
+    /// kernels ([`crate::tensor::simd`]), which cuts the decode-over-f32
+    /// read penalty roughly in half; outputs stay bit-identical to the
+    /// scalar decode, so the KV pins don't care which arm ran.
     fn attention_over_cache(
         &self,
         q: &Mat,

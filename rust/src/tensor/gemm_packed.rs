@@ -25,7 +25,12 @@
 //!   weights) decode through cached per-format 256-entry f32 LUTs;
 //! * output parallelism rides [`crate::util::pool`]'s persistent workers,
 //!   with the band height shrunk for small n so a B = 4 decode batch
-//!   still fans out across the pool.
+//!   still fans out across the pool;
+//! * on AVX2 hosts ([`crate::tensor::simd::selected_path`]) the panel
+//!   decode, the MR×NR micro-tile, and the row kernel's fused
+//!   decode-dot all route through the explicit shuffle kernels in
+//!   [`crate::tensor::simd`] — same per-element math, bit-identical
+//!   output, pinned by `forced_simd_paths_match_scalar_bit_exact`.
 //!
 //! Every path computes each output element with the *same* per-block
 //! formula in the same block order — `acc += (isum·factor) · s_a·s_b`
@@ -41,8 +46,8 @@
 //! `dequantize()`d operands) to ≤1e-6 relative to the dot-product scale
 //! `‖a_row‖·‖b_row‖` — property-tested here and in `quant::packed`.
 
-use super::Mat;
-use crate::formats::blockquant::{E2M1_LUT_X2, INT4_LUT};
+use super::{simd, Mat};
+use crate::formats::blockquant::{E2M1_LUT_X2, E2M1_LUT_X2_I8, INT4_LUT, INT4_LUT_I8};
 use crate::formats::{Format, QuantizedMat};
 use crate::numerics::{codec, FpKind};
 use crate::util::pool;
@@ -156,6 +161,17 @@ fn elem_lut_i32(qm: &QuantizedMat) -> Option<(&'static [i32; 16], f32)> {
         Some(FpKind::E2M1) => Some((&E2M1_LUT_X2, 0.25)),
         None => Some((&INT4_LUT, 1.0)),
         _ => None,
+    }
+}
+
+/// The same table as 16 signed bytes — the shuffle-register form the
+/// AVX2 arm's `pshufb` decode indexes. Only reachable from the integer
+/// paths, whose formats [`elem_lut_i32`] already restricted to 4-bit.
+fn elem_lut_i8(qm: &QuantizedMat) -> &'static [i8; 16] {
+    match qm.fmt.element() {
+        Some(FpKind::E2M1) => &E2M1_LUT_X2_I8,
+        None => &INT4_LUT_I8,
+        _ => unreachable!("integer kernels require a 4-bit element format"),
     }
 }
 
@@ -280,6 +296,9 @@ fn gemm_int_row(
     lut16: &'static [i32; 16],
     factor: f32,
 ) {
+    if simd::selected_path() == simd::SimdPath::Avx2 {
+        return gemm_int_row_avx2(a, b, c, elem_lut_i8(a), factor);
+    }
     let g = a.fmt.group();
     let bpr = a.blocks_per_row();
     let bb = a.block_bytes();
@@ -316,6 +335,68 @@ fn gemm_int_row(
     pool::put_i32(ai_buf);
 }
 
+/// AVX2 arm of the row kernel: same decomposition (one shared decoded A
+/// row, column-parallel output), but the A decode and every block dot go
+/// through the shuffle kernels, and g = 16 formats batch four blocks
+/// (32 code bytes) per pass. The per-block epilogue is the scalar
+/// expression verbatim — dots are exact integers, so the output is
+/// bit-identical to [`gemm_int_row`].
+fn gemm_int_row_avx2(
+    a: &QuantizedMat,
+    b: &QuantizedMat,
+    c: &mut Mat,
+    lut8: &'static [i8; 16],
+    factor: f32,
+) {
+    let g = a.fmt.group();
+    let bpr = a.blocks_per_row();
+    let bb = a.block_bytes();
+    let m = b.rows;
+    let mut ai_buf = pool::take_i16(bpr * g);
+    simd::decode_codes_i16_avx2(a.row_codes(0), lut8, &mut ai_buf);
+    let ai: &[i16] = &ai_buf;
+    let sa = a.row_scales(0);
+    let chunk = m.div_ceil(pool::num_threads() * 2).max(16);
+    // four g=16 blocks span two 16-byte code loads — the x4 kernel's shape
+    let quads = if bb == 8 { bpr / 4 } else { 0 };
+    pool::par_chunks_mut(&mut c.data, chunk, |offset, seg| {
+        for (dj, out) in seg.iter_mut().enumerate() {
+            let j = offset + dj;
+            let sb = b.row_scales(j);
+            let brow = b.row_codes(j);
+            let mut acc = 0f64;
+            for q4 in 0..quads {
+                let blk0 = q4 * 4;
+                let sums = simd::dot_codes_i16_x4_avx2(
+                    &ai[blk0 * 16..blk0 * 16 + 64],
+                    &brow[blk0 * 8..blk0 * 8 + 32],
+                    lut8,
+                );
+                for (d, &isum) in sums.iter().enumerate() {
+                    let sab = sa[blk0 + d] * sb[blk0 + d];
+                    if sab != 0.0 {
+                        acc += (isum as f32 * factor) as f64 * sab as f64;
+                    }
+                }
+            }
+            for blk in quads * 4..bpr {
+                let sab = sa[blk] * sb[blk];
+                if sab == 0.0 {
+                    continue;
+                }
+                let isum = simd::dot_codes_i16_avx2(
+                    &ai[blk * g..(blk + 1) * g],
+                    &brow[blk * bb..(blk + 1) * bb],
+                    lut8,
+                );
+                acc += (isum as f32 * factor) as f64 * sab as f64;
+            }
+            *out = acc as f32;
+        }
+    });
+    pool::put_i16(ai_buf);
+}
+
 /// Decode one packed row into `out` (padded layout: blocks_per_row · g
 /// i16 entries) through a 16-entry LUT. 4-bit codes only.
 fn decode_row_i16(qm: &QuantizedMat, r: usize, lut: &[i32; 16], out: &mut [i16]) {
@@ -323,6 +404,23 @@ fn decode_row_i16(qm: &QuantizedMat, r: usize, lut: &[i32; 16], out: &mut [i16])
     for (t, byte) in qm.row_codes(r).iter().enumerate() {
         out[2 * t] = lut[(byte & 0x0F) as usize] as i16;
         out[2 * t + 1] = lut[(byte >> 4) as usize] as i16;
+    }
+}
+
+/// Path-dispatched row decode: the AVX2 arm shuffle-decodes 16 codes per
+/// `pshufb`; both arms write identical panels (exact integer decode).
+fn decode_row_i16_dispatch(
+    avx2: bool,
+    qm: &QuantizedMat,
+    r: usize,
+    lut16: &[i32; 16],
+    lut8: &'static [i8; 16],
+    out: &mut [i16],
+) {
+    if avx2 {
+        simd::decode_codes_i16_avx2(qm.row_codes(r), lut8, out);
+    } else {
+        decode_row_i16(qm, r, lut16, out);
     }
 }
 
@@ -356,6 +454,9 @@ fn gemm_int_tiled(
     let kk = bpr * g;
     let n = a.rows;
     let m = b.rows;
+    // Resolved once per GEMM: decode and micro-kernel ride the same arm.
+    let avx2 = simd::selected_path() == simd::SimdPath::Avx2;
+    let lut8 = elem_lut_i8(a);
     // Decoded-panel budget: the transformer linears all fit in one strip;
     // only very wide B (e.g. a large-vocab head) streams in several, which
     // bounds scratch without changing any per-element result.
@@ -372,7 +473,7 @@ fn gemm_int_tiled(
         // Decode this strip of B rows once, row-parallel, into the pooled
         // i16 panel — amortized over every A band below.
         pool::par_chunks_mut(&mut bd_buf[..(strip1 - strip0) * kk], kk, |offset, row| {
-            decode_row_i16(b, strip0 + offset / kk, lut16, row);
+            decode_row_i16_dispatch(avx2, b, strip0 + offset / kk, lut16, lut8, row);
         });
         let bd: &[i16] = &bd_buf[..(strip1 - strip0) * kk];
         pool::par_chunks_mut(&mut c.data, band_rows * m, |offset, band| {
@@ -380,7 +481,8 @@ fn gemm_int_tiled(
             let mr = band.len() / m;
             let mut ad = pool::take_i16(MR * kk);
             for ii in 0..mr {
-                decode_row_i16(a, i0 + ii, lut16, &mut ad[ii * kk..(ii + 1) * kk]);
+                let dst = &mut ad[ii * kk..(ii + 1) * kk];
+                decode_row_i16_dispatch(avx2, a, i0 + ii, lut16, lut8, dst);
             }
             let a_scales: [&[f32]; MR] = core::array::from_fn(|ii| {
                 if ii < mr {
@@ -400,7 +502,23 @@ fn gemm_int_tiled(
                     }
                 });
                 let mut acc = [[0f64; NR]; MR];
-                if nr == NR {
+                if nr == NR && avx2 {
+                    let pb_rows: [&[i16]; NR] = core::array::from_fn(|jj| {
+                        let r = j0 + jj - strip0;
+                        &bd[r * kk..(r + 1) * kk]
+                    });
+                    simd::microtile_nr4_avx2(
+                        &ad[..mr * kk],
+                        kk,
+                        mr,
+                        pb_rows,
+                        a_scales,
+                        b_scales,
+                        g,
+                        factor,
+                        &mut acc,
+                    );
+                } else if nr == NR {
                     let pb_rows: [&[i16]; NR] = core::array::from_fn(|jj| {
                         let r = j0 + jj - strip0;
                         &bd[r * kk..(r + 1) * kk]
@@ -858,6 +976,45 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn forced_simd_paths_match_scalar_bit_exact() {
+        // The AVX2 arm must be invisible: every output bit identical to the
+        // scalar kernels for every 4-bit format, across shapes that route
+        // both kernels (n = 1 → row, n ≥ 2 → tiled) and stress ragged k /
+        // tile edges. On hosts without AVX2 the override degrades to
+        // scalar and this trivially passes.
+        use crate::tensor::simd::{self, SimdPath};
+        if !simd::avx2_available() {
+            return;
+        }
+        let mut rng = Prng::new(76);
+        let shapes = [
+            (1usize, 41usize, 11usize),
+            (1, 4096, 8), // row kernel's 4-block batch path (g=16)
+            (2, 33, 5),
+            (4, 16, 4),
+            (5, 95, 13),
+            (7, 160, 17),
+            (9, 47, 1),
+        ];
+        for fmt in [Format::Nvfp4, Format::Mxfp4, Format::Int4 { group: 16 }] {
+            for &(n, k, m) in &shapes {
+                let x = outlier_mat(&mut rng, n, k);
+                let mut w = Mat::zeros(m, k);
+                w.fill_random_normal(&mut rng, 0.6);
+                let q = RowQuantizer::new(fmt);
+                let (qa, qb) = (q.quantize(&x), q.quantize(&w));
+                simd::set_path_override(Some(SimdPath::Scalar));
+                let y_s = matmul_nt_packed(&qa, &qb);
+                simd::set_path_override(Some(SimdPath::Avx2));
+                let y_v = matmul_nt_packed(&qa, &qb);
+                simd::set_path_override(None);
+                let bits = |m: &Mat| m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&y_s), bits(&y_v), "{fmt:?} shape ({n},{k},{m})");
+            }
+        }
     }
 
     #[test]

@@ -8,9 +8,11 @@
 
 pub mod gemm;
 pub mod gemm_packed;
+pub mod simd;
 
 pub use gemm::matmul_nt;
 pub use gemm_packed::{matmul_nt_packed, matmul_nt_packed_ref, QuantizedAct};
+pub use simd::{selected_path, SimdPath};
 
 /// Row-major 2-D matrix of f32.
 #[derive(Clone, Debug, PartialEq)]

@@ -1,0 +1,500 @@
+//! Explicit-SIMD layer for the packed execution path, behind one-time
+//! runtime feature detection.
+//!
+//! The scalar kernels in [`crate::tensor::gemm_packed`] and
+//! [`crate::formats::blockquant`] stay exactly as they are — they are the
+//! bit-exactness reference — and this module adds an AVX2 arm for the
+//! three decode-bound hot spots:
+//!
+//! * the v2 tiled GEMM's i16 panel decode and MR×NR inner block-dot,
+//! * the n = 1 column-parallel row kernel (fused shuffle-decode dot),
+//! * [`crate::formats::QuantizedMat::dequant_into`] — the KV
+//!   decode-on-access read in `Engine::attention_over_cache`.
+//!
+//! The headline trick is a 16-entry nibble→i8 shuffle table: `pshufb`
+//! decodes 16 E2M1/INT4 codes per instruction straight into `pmaddwd`
+//! multiply-accumulate (see [`x86`]). Everything the AVX2 arm computes is
+//! either an exact integer (decodes, i32 block sums — order-independent)
+//! or the *same* f32/f64 operation sequence as the scalar epilogue, so
+//! outputs are bit-identical across paths by construction; the property
+//! tests here and in the kernel modules pin that.
+//!
+//! Dispatch: [`selected_path`] resolves once per process from
+//! `ARCQUANT_SIMD` (`auto` | `avx2` | `scalar`, default `auto` =
+//! best-detected) cached in a `OnceLock`, with an in-process
+//! [`set_path_override`] for tests and benches (mirrors
+//! `pool::set_thread_override`). `Avx2` is only ever returned when
+//! `is_x86_feature_detected!("avx2")` succeeded — that invariant is what
+//! makes the `unsafe` target-feature calls sound. Non-x86_64 builds
+//! always select `Scalar` (NEON/AVX-512 arms were considered and left
+//! out: the autovectorized scalar path is the portable fallback, and a
+//! blind-written NEON arm couldn't be validated on this host).
+
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Which kernel implementation the packed path dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdPath {
+    /// The reference kernels (autovectorized by LLVM where it can).
+    Scalar,
+    /// Explicit AVX2 shuffle-decode kernels (x86-64, runtime-detected).
+    Avx2,
+}
+
+impl SimdPath {
+    /// Stable lowercase name — used by the `/metrics` gauge label, the
+    /// serve startup log, and the `ARCQUANT_SIMD` values.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdPath::Scalar => "scalar",
+            SimdPath::Avx2 => "avx2",
+        }
+    }
+}
+
+/// One-time AVX2 runtime detection (false off x86-64).
+pub fn avx2_available() -> bool {
+    static AVAIL: OnceLock<bool> = OnceLock::new();
+    *AVAIL.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            std::arch::is_x86_feature_detected!("avx2")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    })
+}
+
+fn auto_path() -> SimdPath {
+    if avx2_available() {
+        SimdPath::Avx2
+    } else {
+        SimdPath::Scalar
+    }
+}
+
+/// `ARCQUANT_SIMD` parsed once per process. An explicit `avx2` request on
+/// a CPU without AVX2 downgrades to scalar (with a warning) rather than
+/// crashing — forcing *up* past detection would be unsound.
+fn env_path() -> SimdPath {
+    static ENV_PATH: OnceLock<SimdPath> = OnceLock::new();
+    *ENV_PATH.get_or_init(|| match std::env::var("ARCQUANT_SIMD").as_deref() {
+        Ok("scalar") => SimdPath::Scalar,
+        Ok("avx2") => {
+            if avx2_available() {
+                SimdPath::Avx2
+            } else {
+                eprintln!("ARCQUANT_SIMD=avx2: AVX2 unavailable on this CPU, using scalar");
+                SimdPath::Scalar
+            }
+        }
+        Ok("auto") | Ok("") | Err(_) => auto_path(),
+        Ok(other) => {
+            eprintln!("ARCQUANT_SIMD={other}: unknown value (auto|avx2|scalar), using auto");
+            auto_path()
+        }
+    })
+}
+
+/// Runtime override (0 = none): tests and benches flip paths in-process,
+/// where re-exporting the environment would be racy.
+static PATH_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// The kernel path every packed-GEMM / dequant call dispatches on.
+/// Resolution order: [`set_path_override`] if set, else `ARCQUANT_SIMD`,
+/// else best-detected. Never returns [`SimdPath::Avx2`] unless
+/// [`avx2_available`] — the soundness invariant of the `unsafe` arm.
+pub fn selected_path() -> SimdPath {
+    match PATH_OVERRIDE.load(Ordering::Relaxed) {
+        1 => SimdPath::Scalar,
+        2 => auto_path(), // Avx2 requested: honor detection, never force up
+        _ => env_path(),
+    }
+}
+
+/// Override the dispatched path at runtime (`None` restores the
+/// environment/auto default). Outputs never depend on the path — this
+/// exists so one host can run both arms of the bit-identity pins and the
+/// scalar-vs-SIMD bench series in a single process. Global: affects every
+/// subsequent kernel call; an `Avx2` request still degrades to scalar
+/// when the CPU lacks it.
+pub fn set_path_override(p: Option<SimdPath>) {
+    let v = match p {
+        None => 0,
+        Some(SimdPath::Scalar) => 1,
+        Some(SimdPath::Avx2) => 2,
+    };
+    PATH_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn assert_avx2() {
+    // Cached bool; callers reach these wrappers via `selected_path()`,
+    // which already guarantees availability — this is the hard backstop
+    // that keeps the wrappers safe even for a caller that doesn't.
+    assert!(avx2_available(), "AVX2 wrapper called without CPU support");
+}
+
+// ---------------------------------------------------------------------------
+// Safe wrappers over the AVX2 arm
+// ---------------------------------------------------------------------------
+//
+// On non-x86_64 these are unreachable by construction (`selected_path`
+// can only return `Scalar` there); the panicking stubs keep call sites
+// free of `cfg` noise.
+
+/// [`x86::decode_codes_i16`]: nibble-decode a packed code row into i16
+/// (two per byte, low nibble first). `out.len() == 2 * codes.len()`.
+pub fn decode_codes_i16_avx2(codes: &[u8], lut8: &[i8; 16], out: &mut [i16]) {
+    assert_eq!(out.len(), 2 * codes.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        assert_avx2();
+        unsafe { x86::decode_codes_i16(codes, lut8, out) }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (codes, lut8, out);
+        unreachable!("AVX2 path selected on a non-x86_64 build");
+    }
+}
+
+/// [`x86::dot_codes_i16`]: fused decode+dot of one block's packed bytes
+/// against decoded i16 activations. `a.len() == 2 * codes.len()`.
+pub fn dot_codes_i16_avx2(a: &[i16], codes: &[u8], lut8: &[i8; 16]) -> i32 {
+    assert_eq!(a.len(), 2 * codes.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        assert_avx2();
+        unsafe { x86::dot_codes_i16(a, codes, lut8) }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (a, codes, lut8);
+        unreachable!("AVX2 path selected on a non-x86_64 build");
+    }
+}
+
+/// [`x86::dot_codes_i16_x4`]: four consecutive 8-byte (g=16) blocks in
+/// one pass, one exact i32 sum per block. `a.len() == 64`,
+/// `codes.len() == 32`.
+pub fn dot_codes_i16_x4_avx2(a: &[i16], codes: &[u8], lut8: &[i8; 16]) -> [i32; 4] {
+    assert_eq!(codes.len(), 32);
+    assert_eq!(a.len(), 64);
+    #[cfg(target_arch = "x86_64")]
+    {
+        assert_avx2();
+        unsafe { x86::dot_codes_i16_x4(a, codes, lut8) }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (a, codes, lut8);
+        unreachable!("AVX2 path selected on a non-x86_64 build");
+    }
+}
+
+/// [`x86::microtile_nr4`]: one MR×4 micro-tile of the tiled kernel —
+/// integer dots and the f64 scale epilogue, bit-identical to the scalar
+/// tile loop. See the x86 doc for the `-0.0` blend that reproduces the
+/// scalar `sab == 0` skip exactly.
+#[allow(clippy::too_many_arguments)]
+pub fn microtile_nr4_avx2(
+    ad: &[i16],
+    kk: usize,
+    mr: usize,
+    pb: [&[i16]; 4],
+    sa: [&[f32]; 4],
+    sb: [&[f32]; 4],
+    g: usize,
+    factor: f32,
+    acc: &mut [[f64; 4]; 4],
+) {
+    assert!((1..=4).contains(&mr));
+    assert!(ad.len() >= mr * kk);
+    assert!(g > 0 && kk % g == 0);
+    #[cfg(target_arch = "x86_64")]
+    {
+        assert_avx2();
+        unsafe { x86::microtile_nr4(ad, kk, mr, pb, sa, sb, g, factor, acc) }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (ad, kk, mr, pb, sa, sb, g, factor, acc);
+        unreachable!("AVX2 path selected on a non-x86_64 build");
+    }
+}
+
+/// [`x86::dequant_block_e2m1`]: f32 block dequant `LUT[nib] * s`,
+/// bit-for-bit including the `-0.0` code. `mag2_lut` is
+/// `E2M1_MAG_X2_I8`; `out.len() == 2 * bytes.len()`.
+pub fn dequant_block_e2m1_avx2(bytes: &[u8], mag2_lut: &[i8; 16], s: f32, out: &mut [f32]) {
+    assert_eq!(out.len(), 2 * bytes.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        assert_avx2();
+        unsafe { x86::dequant_block_e2m1(bytes, mag2_lut, s, out) }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (bytes, mag2_lut, s, out);
+        unreachable!("AVX2 path selected on a non-x86_64 build");
+    }
+}
+
+/// [`x86::dequant_block_int4`]: f32 block dequant of two's-complement
+/// nibbles, `INT4_LUT[nib] as f32 * s` bit-for-bit.
+/// `out.len() == 2 * bytes.len()`.
+pub fn dequant_block_int4_avx2(bytes: &[u8], lut8: &[i8; 16], s: f32, out: &mut [f32]) {
+    assert_eq!(out.len(), 2 * bytes.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        assert_avx2();
+        unsafe { x86::dequant_block_int4(bytes, lut8, s, out) }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (bytes, lut8, s, out);
+        unreachable!("AVX2 path selected on a non-x86_64 build");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::blockquant::{E2M1_LUT, E2M1_LUT_X2_I8, E2M1_MAG_X2_I8, INT4_LUT_I8};
+    use crate::util::Prng;
+
+    // Scalar mirrors of the wrapper contracts — deliberately the same
+    // loops as the production scalar kernels, kept local so these tests
+    // exercise the AVX2 arm in isolation (no global path override, so
+    // they can't race the dispatch-driven tests elsewhere).
+
+    fn decode_scalar(codes: &[u8], lut8: &[i8; 16], out: &mut [i16]) {
+        for (t, byte) in codes.iter().enumerate() {
+            out[2 * t] = lut8[(byte & 0x0F) as usize] as i16;
+            out[2 * t + 1] = lut8[(byte >> 4) as usize] as i16;
+        }
+    }
+
+    fn dot_scalar(a: &[i16], codes: &[u8], lut8: &[i8; 16]) -> i32 {
+        let mut s = 0i32;
+        for (t, byte) in codes.iter().enumerate() {
+            s += a[2 * t] as i32 * lut8[(byte & 0x0F) as usize] as i32
+                + a[2 * t + 1] as i32 * lut8[(byte >> 4) as usize] as i32;
+        }
+        s
+    }
+
+    fn random_codes(rng: &mut Prng, n: usize) -> Vec<u8> {
+        (0..n).map(|_| rng.below(256) as u8).collect()
+    }
+
+    fn random_i16(rng: &mut Prng, n: usize) -> Vec<i16> {
+        (0..n).map(|_| rng.below(25) as i16 - 12).collect()
+    }
+
+    #[test]
+    fn selected_path_never_exceeds_detection() {
+        let p = selected_path();
+        if p == SimdPath::Avx2 {
+            assert!(avx2_available());
+        }
+        assert_eq!(SimdPath::Scalar.name(), "scalar");
+        assert_eq!(SimdPath::Avx2.name(), "avx2");
+    }
+
+    #[test]
+    fn avx2_decode_matches_scalar_all_lengths() {
+        if !avx2_available() {
+            return;
+        }
+        let mut rng = Prng::new(90);
+        for lut in [&E2M1_LUT_X2_I8, &INT4_LUT_I8] {
+            // sweep lengths across the 16-byte, 8-byte and scalar tails
+            for n in (0..64).chain([100, 127, 128, 1000]) {
+                let codes = random_codes(&mut rng, n);
+                let mut want = vec![0i16; 2 * n];
+                let mut got = vec![0i16; 2 * n];
+                decode_scalar(&codes, lut, &mut want);
+                decode_codes_i16_avx2(&codes, lut, &mut got);
+                assert_eq!(want, got, "len {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_dot_matches_scalar_all_lengths() {
+        if !avx2_available() {
+            return;
+        }
+        let mut rng = Prng::new(91);
+        for lut in [&E2M1_LUT_X2_I8, &INT4_LUT_I8] {
+            for n in 0..80 {
+                let codes = random_codes(&mut rng, n);
+                let a = random_i16(&mut rng, 2 * n);
+                let want = dot_scalar(&a, &codes, lut);
+                let got = dot_codes_i16_avx2(&a, &codes, lut);
+                assert_eq!(want, got, "len {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_dot_x4_matches_per_block_dots() {
+        if !avx2_available() {
+            return;
+        }
+        let mut rng = Prng::new(92);
+        for lut in [&E2M1_LUT_X2_I8, &INT4_LUT_I8] {
+            for _ in 0..50 {
+                let codes = random_codes(&mut rng, 32);
+                let a = random_i16(&mut rng, 64);
+                let got = dot_codes_i16_x4_avx2(&a, &codes, lut);
+                for q in 0..4 {
+                    let want = dot_scalar(&a[q * 16..(q + 1) * 16], &codes[q * 8..(q + 1) * 8], lut);
+                    assert_eq!(want, got[q], "block {q}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_microtile_matches_scalar_tile_bitwise() {
+        if !avx2_available() {
+            return;
+        }
+        let mut rng = Prng::new(93);
+        for &(g, bpr) in &[(16usize, 1usize), (16, 5), (32, 3), (10, 4), (48, 2)] {
+            let kk = g * bpr;
+            for mr in 1..=4usize {
+                let ad = random_i16(&mut rng, 4 * kk);
+                let bd: Vec<Vec<i16>> = (0..4).map(|_| random_i16(&mut rng, kk)).collect();
+                // scales include exact zeros to exercise the -0.0 blend
+                let mk_scales = |rng: &mut Prng| -> Vec<f32> {
+                    (0..bpr)
+                        .map(|_| {
+                            if rng.below(4) == 0 {
+                                0.0
+                            } else {
+                                rng.below(100) as f32 / 25.0 - 1.0
+                            }
+                        })
+                        .collect()
+                };
+                let sa: Vec<Vec<f32>> = (0..4).map(|_| mk_scales(&mut rng)).collect();
+                let sb: Vec<Vec<f32>> = (0..4).map(|_| mk_scales(&mut rng)).collect();
+                let factor = 0.25f32;
+
+                // scalar reference: the exact tile loop from gemm_int_tiled
+                let mut want = [[0f64; 4]; 4];
+                for blk in 0..bpr {
+                    let lo = blk * g;
+                    for ii in 0..mr {
+                        let pa = &ad[ii * kk + lo..ii * kk + lo + g];
+                        for jj in 0..4 {
+                            let sab = sa[ii][blk] * sb[jj][blk];
+                            if sab != 0.0 {
+                                let pbj = &bd[jj][lo..lo + g];
+                                let mut isum = 0i32;
+                                for (&x, &y) in pa.iter().zip(pbj.iter()) {
+                                    isum += x as i32 * y as i32;
+                                }
+                                want[ii][jj] += (isum as f32 * factor) as f64 * sab as f64;
+                            }
+                        }
+                    }
+                }
+
+                let mut got = [[0f64; 4]; 4];
+                microtile_nr4_avx2(
+                    &ad[..mr * kk],
+                    kk,
+                    mr,
+                    [&bd[0], &bd[1], &bd[2], &bd[3]],
+                    [&sa[0], &sa[1], &sa[2], &sa[3]],
+                    [&sb[0], &sb[1], &sb[2], &sb[3]],
+                    g,
+                    factor,
+                    &mut got,
+                );
+                for ii in 0..mr {
+                    for jj in 0..4 {
+                        assert_eq!(
+                            want[ii][jj].to_bits(),
+                            got[ii][jj].to_bits(),
+                            "g={g} bpr={bpr} mr={mr} ({ii},{jj}): {} vs {}",
+                            want[ii][jj],
+                            got[ii][jj]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_dequant_e2m1_bitwise_including_negative_zero() {
+        if !avx2_available() {
+            return;
+        }
+        let mut rng = Prng::new(94);
+        // 0x88 packs two -0.0 codes; sweep ragged lengths and scales
+        for n in [1usize, 7, 8, 9, 16, 33] {
+            let mut codes = random_codes(&mut rng, n);
+            codes[0] = 0x88;
+            for s in [1.0f32, 0.37, 0.0, 3.5e4, 1e-30] {
+                let mut want = vec![0f32; 2 * n];
+                let mut got = vec![0f32; 2 * n];
+                for (t, byte) in codes.iter().enumerate() {
+                    want[2 * t] = E2M1_LUT[(byte & 0x0F) as usize] * s;
+                    want[2 * t + 1] = E2M1_LUT[(byte >> 4) as usize] * s;
+                }
+                dequant_block_e2m1_avx2(&codes, &E2M1_MAG_X2_I8, s, &mut got);
+                for i in 0..2 * n {
+                    assert_eq!(
+                        want[i].to_bits(),
+                        got[i].to_bits(),
+                        "n={n} s={s} elem {i}: {} vs {}",
+                        want[i],
+                        got[i]
+                    );
+                }
+            }
+        }
+        // the sign of zero must survive: -0.0 * 1.0 keeps its bit
+        let mut out = [0f32; 2];
+        dequant_block_e2m1_avx2(&[0x88], &E2M1_MAG_X2_I8, 1.0, &mut out);
+        assert_eq!(out[0].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(out[1].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn avx2_dequant_int4_bitwise() {
+        if !avx2_available() {
+            return;
+        }
+        let mut rng = Prng::new(95);
+        for n in [1usize, 5, 8, 13, 24] {
+            let codes = random_codes(&mut rng, n);
+            for s in [1.0f32, -0.8, 0.125, 0.0] {
+                let mut want = vec![0f32; 2 * n];
+                let mut got = vec![0f32; 2 * n];
+                for (t, byte) in codes.iter().enumerate() {
+                    want[2 * t] = INT4_LUT_I8[(byte & 0x0F) as usize] as f32 * s;
+                    want[2 * t + 1] = INT4_LUT_I8[(byte >> 4) as usize] as f32 * s;
+                }
+                dequant_block_int4_avx2(&codes, &INT4_LUT_I8, s, &mut got);
+                for i in 0..2 * n {
+                    assert_eq!(want[i].to_bits(), got[i].to_bits(), "n={n} s={s} elem {i}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,341 @@
+//! AVX2 implementations of the packed-path kernels (x86-64 only).
+//!
+//! Every function here is `unsafe fn` + `#[target_feature(enable =
+//! "avx2")]`: the safe wrappers in the parent module assert runtime
+//! detection before calling in, and callers only reach those wrappers
+//! through [`super::selected_path`], which never returns
+//! [`super::SimdPath::Avx2`] unless `is_x86_feature_detected!("avx2")`
+//! succeeded. No function here takes raw pointers from the caller — all
+//! inputs are slices whose lengths are checked (debug) at the boundary,
+//! and every load/store stays inside them.
+//!
+//! The decode recipe shared by everything below: load packed bytes, mask
+//! the low and high nibbles, look both up through a 16-entry signed-i8
+//! table with `pshufb` (`_mm_shuffle_epi8`), and interleave with
+//! `punpcklbw`/`punpckhbw` so element order (2t, 2t+1) = (low, high)
+//! matches the scalar decoders. Integer dots then sign-extend to i16 and
+//! multiply-accumulate with `pmaddwd` (`_mm256_madd_epi16`) — exact,
+//! because decoded values fit i8 (|v| ≤ 12), products fit 8 bits of
+//! headroom in i16 pairs, and block sums fit i32 with room to spare.
+
+#![cfg(target_arch = "x86_64")]
+
+use core::arch::x86_64::*;
+
+/// Decode the lo/hi nibbles of 16 packed bytes through `tbl` and return
+/// the 32 decoded codes in element order as two 16×i16 vectors.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn decode16(b: __m128i, tbl: __m128i, mask: __m128i) -> (__m256i, __m256i) {
+    let lo = _mm_and_si128(b, mask);
+    let hi = _mm_and_si128(_mm_srli_epi16(b, 4), mask);
+    let vlo = _mm_shuffle_epi8(tbl, lo);
+    let vhi = _mm_shuffle_epi8(tbl, hi);
+    let w0 = _mm256_cvtepi8_epi16(_mm_unpacklo_epi8(vlo, vhi));
+    let w1 = _mm256_cvtepi8_epi16(_mm_unpackhi_epi8(vlo, vhi));
+    (w0, w1)
+}
+
+/// Horizontal sum of the 8 i32 lanes.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_epi32(v: __m256i) -> i32 {
+    let mut s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256(v, 1));
+    s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0x4E));
+    s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0xB1));
+    _mm_cvtsi128_si32(s)
+}
+
+/// Reduce four 8-lane i32 accumulators to `[Σa0, Σa1, Σa2, Σa3]` with
+/// three `vphaddd` — the per-column sums of a 4-wide micro-tile in one
+/// xmm instead of four separate horizontal reductions.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum4_transpose(a0: __m256i, a1: __m256i, a2: __m256i, a3: __m256i) -> __m128i {
+    let s01 = _mm256_hadd_epi32(a0, a1);
+    let s23 = _mm256_hadd_epi32(a2, a3);
+    let s = _mm256_hadd_epi32(s01, s23);
+    _mm_add_epi32(_mm256_castsi256_si128(s), _mm256_extracti128_si256(s, 1))
+}
+
+/// Nibble-decode `codes` into `out` (two i16 per byte, low nibble first)
+/// through the 16-entry signed table — the shuffle form of
+/// `decode_row_i16`. `out.len() == 2 * codes.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn decode_codes_i16(codes: &[u8], lut8: &[i8; 16], out: &mut [i16]) {
+    debug_assert_eq!(out.len(), 2 * codes.len());
+    let tbl = _mm_loadu_si128(lut8.as_ptr() as *const __m128i);
+    let mask = _mm_set1_epi8(0x0F);
+    let n = codes.len();
+    let src = codes.as_ptr();
+    let dst = out.as_mut_ptr();
+    let mut t = 0usize;
+    while t + 16 <= n {
+        let b = _mm_loadu_si128(src.add(t) as *const __m128i);
+        let (w0, w1) = decode16(b, tbl, mask);
+        _mm256_storeu_si256(dst.add(2 * t) as *mut __m256i, w0);
+        _mm256_storeu_si256(dst.add(2 * t + 16) as *mut __m256i, w1);
+        t += 16;
+    }
+    while t + 8 <= n {
+        let b = _mm_loadl_epi64(src.add(t) as *const __m128i);
+        let (w0, _) = decode16(b, tbl, mask);
+        _mm256_storeu_si256(dst.add(2 * t) as *mut __m256i, w0);
+        t += 8;
+    }
+    while t < n {
+        let byte = *src.add(t);
+        *dst.add(2 * t) = lut8[(byte & 0x0F) as usize] as i16;
+        *dst.add(2 * t + 1) = lut8[(byte >> 4) as usize] as i16;
+        t += 1;
+    }
+}
+
+/// Fused decode+dot of one block: `Σ a[i] · decode(codes)[i]` with the
+/// decoded i16 stream never leaving registers. `a.len() == 2 * codes.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_codes_i16(a: &[i16], codes: &[u8], lut8: &[i8; 16]) -> i32 {
+    debug_assert_eq!(a.len(), 2 * codes.len());
+    let tbl = _mm_loadu_si128(lut8.as_ptr() as *const __m128i);
+    let mask = _mm_set1_epi8(0x0F);
+    let n = codes.len();
+    let src = codes.as_ptr();
+    let ap = a.as_ptr();
+    let mut acc = _mm256_setzero_si256();
+    let mut t = 0usize;
+    while t + 16 <= n {
+        let b = _mm_loadu_si128(src.add(t) as *const __m128i);
+        let (w0, w1) = decode16(b, tbl, mask);
+        let a0 = _mm256_loadu_si256(ap.add(2 * t) as *const __m256i);
+        let a1 = _mm256_loadu_si256(ap.add(2 * t + 16) as *const __m256i);
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(a0, w0));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(a1, w1));
+        t += 16;
+    }
+    while t + 8 <= n {
+        let b = _mm_loadl_epi64(src.add(t) as *const __m128i);
+        let (w0, _) = decode16(b, tbl, mask);
+        let a0 = _mm256_loadu_si256(ap.add(2 * t) as *const __m256i);
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(a0, w0));
+        t += 8;
+    }
+    let mut s = hsum_epi32(acc);
+    while t < n {
+        let byte = *src.add(t);
+        s += *ap.add(2 * t) as i32 * lut8[(byte & 0x0F) as usize] as i32
+            + *ap.add(2 * t + 1) as i32 * lut8[(byte >> 4) as usize] as i32;
+        t += 1;
+    }
+    s
+}
+
+/// Four consecutive 8-byte blocks (the NVFP4 g=16 shape) fused
+/// decode+dot in one pass: 32 code bytes against 64 decoded i16
+/// activations, one exact i32 sum per block, reduced together through
+/// [`hsum4_transpose`]. `a.len() == 64`, `codes.len() == 32`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_codes_i16_x4(a: &[i16], codes: &[u8], lut8: &[i8; 16]) -> [i32; 4] {
+    debug_assert_eq!(codes.len(), 32);
+    debug_assert_eq!(a.len(), 64);
+    let tbl = _mm_loadu_si128(lut8.as_ptr() as *const __m128i);
+    let mask = _mm_set1_epi8(0x0F);
+    let src = codes.as_ptr();
+    let ap = a.as_ptr();
+    let b0 = _mm_loadu_si128(src as *const __m128i);
+    let b1 = _mm_loadu_si128(src.add(16) as *const __m128i);
+    let (w0, w1) = decode16(b0, tbl, mask);
+    let (w2, w3) = decode16(b1, tbl, mask);
+    let p0 = _mm256_madd_epi16(_mm256_loadu_si256(ap as *const __m256i), w0);
+    let p1 = _mm256_madd_epi16(_mm256_loadu_si256(ap.add(16) as *const __m256i), w1);
+    let p2 = _mm256_madd_epi16(_mm256_loadu_si256(ap.add(32) as *const __m256i), w2);
+    let p3 = _mm256_madd_epi16(_mm256_loadu_si256(ap.add(48) as *const __m256i), w3);
+    let mut sums = [0i32; 4];
+    _mm_storeu_si128(sums.as_mut_ptr() as *mut __m128i, hsum4_transpose(p0, p1, p2, p3));
+    sums
+}
+
+/// One MR×NR=…×4 micro-tile of the v2 tiled kernel over decoded i16
+/// panels, integer dot *and* scale epilogue vectorized. Per block:
+/// 4 `pmaddwd` per A row, the 4 column sums reduced together, then the
+/// per-element formula `acc += (isum·factor) · s_a·s_b` evaluated 4-wide
+/// in f64 lanes. The scalar path's `sab == 0` *skip* becomes a blend to
+/// `-0.0` — IEEE-754 guarantees `x + (-0.0) == x` bit-for-bit for every
+/// x (including ±0.0), so skipped lanes leave the accumulator untouched
+/// exactly like the scalar `continue`.
+///
+/// `ad` holds `mr` decoded A rows of `kk` i16 each; `pb` the 4 decoded B
+/// rows; `sa`/`sb` the per-block scales (only `sa[..mr]` are read);
+/// `acc[ii][jj]` accumulates in the same (blk-major) order as the scalar
+/// kernel.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub unsafe fn microtile_nr4(
+    ad: &[i16],
+    kk: usize,
+    mr: usize,
+    pb: [&[i16]; 4],
+    sa: [&[f32]; 4],
+    sb: [&[f32]; 4],
+    g: usize,
+    factor: f32,
+    acc: &mut [[f64; 4]; 4],
+) {
+    debug_assert!((1..=4).contains(&mr));
+    debug_assert!(ad.len() >= mr * kk);
+    debug_assert!(g > 0 && kk % g == 0);
+    for row in &pb {
+        debug_assert_eq!(row.len(), kk);
+    }
+    let bpr = kk / g;
+    let mut vacc = [_mm256_setzero_pd(); 4];
+    let vfac = _mm_set1_ps(factor);
+    let negz = _mm256_set1_pd(-0.0);
+    let zero = _mm256_setzero_pd();
+    for blk in 0..bpr {
+        let lo = blk * g;
+        let sb4 = [sb[0][blk], sb[1][blk], sb[2][blk], sb[3][blk]];
+        let vsb = _mm_loadu_ps(sb4.as_ptr());
+        for ii in 0..mr {
+            let sa_blk = sa[ii][blk];
+            let pa = ad.as_ptr().add(ii * kk + lo);
+            let pb0 = pb[0].as_ptr().add(lo);
+            let pb1 = pb[1].as_ptr().add(lo);
+            let pb2 = pb[2].as_ptr().add(lo);
+            let pb3 = pb[3].as_ptr().add(lo);
+            let mut a0 = _mm256_setzero_si256();
+            let mut a1 = _mm256_setzero_si256();
+            let mut a2 = _mm256_setzero_si256();
+            let mut a3 = _mm256_setzero_si256();
+            let mut x = 0usize;
+            while x + 16 <= g {
+                let va = _mm256_loadu_si256(pa.add(x) as *const __m256i);
+                let l0 = _mm256_loadu_si256(pb0.add(x) as *const __m256i);
+                let l1 = _mm256_loadu_si256(pb1.add(x) as *const __m256i);
+                let l2 = _mm256_loadu_si256(pb2.add(x) as *const __m256i);
+                let l3 = _mm256_loadu_si256(pb3.add(x) as *const __m256i);
+                a0 = _mm256_add_epi32(a0, _mm256_madd_epi16(va, l0));
+                a1 = _mm256_add_epi32(a1, _mm256_madd_epi16(va, l1));
+                a2 = _mm256_add_epi32(a2, _mm256_madd_epi16(va, l2));
+                a3 = _mm256_add_epi32(a3, _mm256_madd_epi16(va, l3));
+                x += 16;
+            }
+            let mut sums = [0i32; 4];
+            _mm_storeu_si128(
+                sums.as_mut_ptr() as *mut __m128i,
+                hsum4_transpose(a0, a1, a2, a3),
+            );
+            while x < g {
+                let av = *pa.add(x) as i32;
+                sums[0] += av * *pb0.add(x) as i32;
+                sums[1] += av * *pb1.add(x) as i32;
+                sums[2] += av * *pb2.add(x) as i32;
+                sums[3] += av * *pb3.add(x) as i32;
+                x += 1;
+            }
+            let isums = _mm_loadu_si128(sums.as_ptr() as *const __m128i);
+            let prod1 = _mm_mul_ps(_mm_cvtepi32_ps(isums), vfac);
+            let vsab = _mm_mul_ps(_mm_set1_ps(sa_blk), vsb);
+            let sab_pd = _mm256_cvtps_pd(vsab);
+            let pd = _mm256_mul_pd(_mm256_cvtps_pd(prod1), sab_pd);
+            let skip = _mm256_cmp_pd(sab_pd, zero, _CMP_EQ_OQ);
+            vacc[ii] = _mm256_add_pd(vacc[ii], _mm256_blendv_pd(pd, negz, skip));
+        }
+    }
+    for ii in 0..mr {
+        _mm256_storeu_pd(acc[ii].as_mut_ptr(), vacc[ii]);
+    }
+}
+
+/// E2M1 f32 block dequant: `out[i] = E2M1_LUT[nib_i] * s`, bit-for-bit.
+/// The shuffle table holds |grid|·2 magnitudes; the sign comes from
+/// nibble bit 3, shifted into the f32 sign bit and OR-ed in *before* the
+/// scale multiply — so a negative-zero code (0x8) produces `-0.0 * s`
+/// exactly like the scalar LUT, and the ×0.5 prescale is exact (every
+/// magnitude·2 is an integer ≤ 12). `out.len() == 2 * bytes.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dequant_block_e2m1(bytes: &[u8], mag2_lut: &[i8; 16], s: f32, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), 2 * bytes.len());
+    let tbl = _mm_loadu_si128(mag2_lut.as_ptr() as *const __m128i);
+    let mask = _mm_set1_epi8(0x0F);
+    let signm = _mm_set1_epi8(8);
+    let half = _mm256_set1_ps(0.5);
+    let vs = _mm256_set1_ps(s);
+    let n = bytes.len();
+    let src = bytes.as_ptr();
+    let dst = out.as_mut_ptr();
+    let mut t = 0usize;
+    while t + 8 <= n {
+        let b = _mm_loadl_epi64(src.add(t) as *const __m128i);
+        let lo = _mm_and_si128(b, mask);
+        let hi = _mm_and_si128(_mm_srli_epi16(b, 4), mask);
+        let nib = _mm_unpacklo_epi8(lo, hi);
+        let mag = _mm_shuffle_epi8(tbl, nib);
+        let sg = _mm_and_si128(nib, signm);
+        let m0 = _mm256_cvtepi8_epi32(mag);
+        let m1 = _mm256_cvtepi8_epi32(_mm_srli_si128(mag, 8));
+        let g0 = _mm256_slli_epi32(_mm256_cvtepi8_epi32(sg), 28);
+        let g1 = _mm256_slli_epi32(_mm256_cvtepi8_epi32(_mm_srli_si128(sg, 8)), 28);
+        let v0 = _mm256_or_ps(
+            _mm256_mul_ps(_mm256_cvtepi32_ps(m0), half),
+            _mm256_castsi256_ps(g0),
+        );
+        let v1 = _mm256_or_ps(
+            _mm256_mul_ps(_mm256_cvtepi32_ps(m1), half),
+            _mm256_castsi256_ps(g1),
+        );
+        _mm256_storeu_ps(dst.add(2 * t), _mm256_mul_ps(v0, vs));
+        _mm256_storeu_ps(dst.add(2 * t + 8), _mm256_mul_ps(v1, vs));
+        t += 8;
+    }
+    while t < n {
+        let byte = *src.add(t);
+        *dst.add(2 * t) = e2m1_scalar(byte & 0x0F, mag2_lut) * s;
+        *dst.add(2 * t + 1) = e2m1_scalar(byte >> 4, mag2_lut) * s;
+        t += 1;
+    }
+}
+
+/// Scalar E2M1 decode through the magnitude table (tail lanes only):
+/// same sign-magnitude construction as the vector lanes.
+#[inline]
+fn e2m1_scalar(nib: u8, mag2_lut: &[i8; 16]) -> f32 {
+    let mag = mag2_lut[nib as usize] as f32 * 0.5;
+    if nib & 8 != 0 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// INT4 f32 block dequant: `out[i] = INT4_LUT[nib_i] as f32 * s`,
+/// bit-for-bit (no negative zero in the two's-complement grid).
+/// `out.len() == 2 * bytes.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dequant_block_int4(bytes: &[u8], lut8: &[i8; 16], s: f32, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), 2 * bytes.len());
+    let tbl = _mm_loadu_si128(lut8.as_ptr() as *const __m128i);
+    let mask = _mm_set1_epi8(0x0F);
+    let vs = _mm256_set1_ps(s);
+    let n = bytes.len();
+    let src = bytes.as_ptr();
+    let dst = out.as_mut_ptr();
+    let mut t = 0usize;
+    while t + 8 <= n {
+        let b = _mm_loadl_epi64(src.add(t) as *const __m128i);
+        let lo = _mm_and_si128(b, mask);
+        let hi = _mm_and_si128(_mm_srli_epi16(b, 4), mask);
+        let nib = _mm_unpacklo_epi8(lo, hi);
+        let v8 = _mm_shuffle_epi8(tbl, nib);
+        let i0 = _mm256_cvtepi8_epi32(v8);
+        let i1 = _mm256_cvtepi8_epi32(_mm_srli_si128(v8, 8));
+        _mm256_storeu_ps(dst.add(2 * t), _mm256_mul_ps(_mm256_cvtepi32_ps(i0), vs));
+        _mm256_storeu_ps(dst.add(2 * t + 8), _mm256_mul_ps(_mm256_cvtepi32_ps(i1), vs));
+        t += 8;
+    }
+    while t < n {
+        let byte = *src.add(t);
+        *dst.add(2 * t) = lut8[(byte & 0x0F) as usize] as f32 * s;
+        *dst.add(2 * t + 1) = lut8[(byte >> 4) as usize] as f32 * s;
+        t += 1;
+    }
+}

@@ -74,6 +74,24 @@ fn readme_documents_the_kv_format_flag() {
 }
 
 #[test]
+fn readme_documents_the_simd_knob() {
+    let readme = read("README.md");
+    assert!(
+        readme.contains("ARCQUANT_SIMD"),
+        "README must document the ARCQUANT_SIMD dispatch override"
+    );
+    for value in ["auto", "avx2", "scalar"] {
+        assert!(readme.contains(value), "README must name the {value} SIMD mode");
+    }
+    // and the design doc must carry the dispatch section the README
+    // points into
+    let doc = read("docs/packed_path.md");
+    for needle in ["SIMD dispatch", "ARCQUANT_SIMD", "pshufb", "arcquant_simd_path"] {
+        assert!(doc.contains(needle), "docs/packed_path.md must cover {needle}");
+    }
+}
+
+#[test]
 fn docs_index_links_resolve() {
     let index = read("docs/README.md");
     for doc in [

@@ -8,13 +8,26 @@
 //! tests pin it. They live in their own integration binary because the
 //! thread override is process-global: unit tests of the library run in
 //! one process and must not race against it.
+//!
+//! The same reasoning covers the SIMD path override
+//! ([`arcquant::tensor::simd::set_path_override`]): the scalar and AVX2
+//! kernel arms are bit-identical by construction, and the tests here pin
+//! scalar-vs-SIMD equality over the full packed forward (including the
+//! augmented S ∈ {0, 128, 256} shapes) with the overrides serialized by
+//! a local mutex so the two global knobs cannot race each other.
 
 use arcquant::formats::{Format, RowQuantizer};
-use arcquant::quant::{LayerPlan, PackedArcLinear};
+use arcquant::quant::{LayerPlan, PackedArcLinear, Permutation};
+use arcquant::tensor::simd::{self, SimdPath};
 use arcquant::tensor::{matmul_nt, matmul_nt_packed, matmul_nt_packed_ref, Mat};
 use arcquant::util::pool;
 use arcquant::util::prop::gens::outlier_mat;
 use arcquant::util::Prng;
+use std::sync::Mutex;
+
+/// Serializes every test that mutates a process-global override (thread
+/// count or SIMD path) so they cannot interleave.
+static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
 
 /// Everything the serving hot path parallelises, evaluated once: the
 /// returned buffers are compared bitwise across thread counts.
@@ -46,6 +59,7 @@ fn run_all(x: &Mat, w: &Mat) -> Vec<Vec<f32>> {
 
 #[test]
 fn single_vs_multi_thread_runs_are_bit_identical() {
+    let _guard = OVERRIDE_LOCK.lock().unwrap();
     let mut rng = Prng::new(400);
     let x = outlier_mat(&mut rng, 6, 128);
     let mut w = Mat::zeros(9, 128);
@@ -66,5 +80,91 @@ fn single_vs_multi_thread_runs_are_bit_identical() {
     }
     for (i, (a, b)) in single.iter().zip(&default).enumerate() {
         assert_eq!(a, b, "output {i} differs between 1 and default threads");
+    }
+}
+
+/// Bitwise f32 comparison: `Vec<f32> ==` would conflate `0.0` and
+/// `-0.0`; the SIMD pins must be exact down to the sign of zero.
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: element {i} differs between scalar and SIMD ({x} vs {y})"
+        );
+    }
+}
+
+#[test]
+fn scalar_vs_simd_runs_are_bit_identical() {
+    let _guard = OVERRIDE_LOCK.lock().unwrap();
+    // On hosts without AVX2 the Avx2 override degrades to scalar and the
+    // comparison is trivially true — the CI avx2 matrix leg runs on
+    // hardware where both arms are real.
+    let mut rng = Prng::new(401);
+    let x = outlier_mat(&mut rng, 6, 128);
+    let mut w = Mat::zeros(9, 128);
+    w.fill_random_normal(&mut rng, 0.5);
+
+    simd::set_path_override(Some(SimdPath::Scalar));
+    let scalar = run_all(&x, &w);
+    simd::set_path_override(Some(SimdPath::Avx2));
+    let vector = run_all(&x, &w);
+    simd::set_path_override(None);
+
+    assert_eq!(scalar.len(), vector.len());
+    for (i, (a, b)) in scalar.iter().zip(&vector).enumerate() {
+        assert_bits_eq(a, b, &format!("output {i}"));
+    }
+}
+
+#[test]
+fn scalar_vs_simd_packed_forward_augmented_shapes() {
+    let _guard = OVERRIDE_LOCK.lock().unwrap();
+    // The paper's serving shape: K = 1024 with S ∈ {0, 128, 256}
+    // augmented residual channels, through the full PackedArcLinear
+    // forward (reorder → augment → two quantizations → packed GEMM) and
+    // the decode-on-access KV dequant — every stage that dispatches on
+    // the SIMD path. Scalar and SIMD arms must agree bit-for-bit.
+    let (n, k, m) = (5usize, 1024usize, 24usize);
+    let mut rng = Prng::new(402);
+    let x = outlier_mat(&mut rng, n, k);
+    let mut w = Mat::zeros(m, k);
+    w.fill_random_normal(&mut rng, 0.4);
+
+    for s in [0usize, 128, 256] {
+        for fmt in [Format::Nvfp4, Format::Mxfp4] {
+            let plan = LayerPlan { perm: Permutation::identity(k), s, fmt };
+            let lin = PackedArcLinear::prepare(&w, plan).unwrap();
+
+            simd::set_path_override(Some(SimdPath::Scalar));
+            let y_scalar = lin.forward(&x);
+            let row = Mat::from_vec(1, k, x.row(0).to_vec());
+            let y1_scalar = lin.forward(&row); // n = 1 row-kernel route
+            simd::set_path_override(Some(SimdPath::Avx2));
+            let y_vector = lin.forward(&x);
+            let y1_vector = lin.forward(&row);
+            simd::set_path_override(None);
+
+            assert_bits_eq(&y_scalar.data, &y_vector.data, &format!("{fmt:?} s={s} batch"));
+            assert_bits_eq(&y1_scalar.data, &y1_vector.data, &format!("{fmt:?} s={s} n=1"));
+        }
+    }
+
+    // KV read: dequant_into of a quantized [T, d] matrix (ragged tail
+    // included via d = 120 on NVFP4's g = 16 and MXFP4's g = 32).
+    for (fmt, d) in [(Format::Nvfp4, 120usize), (Format::Mxfp4, 104)] {
+        let mut kmat = Mat::zeros(33, d);
+        kmat.fill_random_normal(&mut rng, 0.8);
+        let qk = RowQuantizer::new(fmt).quantize(&kmat);
+        let mut out_scalar = vec![0f32; 33 * d];
+        let mut out_vector = vec![0f32; 33 * d];
+        simd::set_path_override(Some(SimdPath::Scalar));
+        qk.dequant_into(&mut out_scalar);
+        simd::set_path_override(Some(SimdPath::Avx2));
+        qk.dequant_into(&mut out_vector);
+        simd::set_path_override(None);
+        assert_bits_eq(&out_scalar, &out_vector, &format!("{fmt:?} kv dequant"));
     }
 }

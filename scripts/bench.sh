@@ -12,9 +12,10 @@
 # decode path and the socket serving path every push.
 #
 # Usage:
-#   scripts/bench.sh            # full run, rewrites BENCH_*.json
-#   scripts/bench.sh --smoke    # reduced shapes, no JSON rewrite (CI uses
-#                               # this to catch kernel-routing panics)
+#   scripts/bench.sh            # full run, rewrites BENCH_*.json and runs
+#                               # the trajectory gate against HEAD
+#   scripts/bench.sh --smoke    # reduced shapes, no JSON rewrite; the
+#                               # gate sanity-floors the GATE lines (CI)
 #
 # ARCQUANT_THREADS pins the worker pool; defaults to 4 here so trajectory
 # numbers are comparable across differently-sized hosts.
@@ -37,10 +38,24 @@ if [[ "$SMOKE" == "1" ]]; then
   echo "# smoke mode: reduced shapes, BENCH_*.json left untouched"
 fi
 
-cargo bench --bench bench_gemm_aug
-cargo bench --bench bench_decode
-cargo bench --bench bench_http
+# Bench output is teed to a log so the trajectory gate can parse the
+# stable `GATE key value` lines afterwards.
+LOG="$(mktemp -t arcquant-bench.XXXXXX.log)"
+trap 'rm -f "$LOG"' EXIT
 
-if [[ "$SMOKE" == "0" ]]; then
+cargo bench --bench bench_gemm_aug | tee -a "$LOG"
+cargo bench --bench bench_decode | tee -a "$LOG"
+cargo bench --bench bench_http | tee -a "$LOG"
+
+# Trajectory gate (scripts/bench_gate.py):
+#  * smoke: sanity-floor the GATE lines — catches kernel misroutes;
+#  * full:  compare the freshly rewritten BENCH_*.json against the
+#    committed copies (git show HEAD:...) and fail on regressions beyond
+#    BENCH_GATE_TOLERANCE, but only when the committed provenance.source
+#    matches the fresh one (cross-harness baselines are informational).
+if [[ "$SMOKE" == "1" ]]; then
+  python3 scripts/bench_gate.py --smoke "$LOG"
+else
   echo "# rewrote BENCH_gemm_packed.json, BENCH_decode.json and BENCH_http.json"
+  python3 scripts/bench_gate.py --full
 fi
