@@ -100,6 +100,7 @@ fn main() {
             vocab: 256,
             stream: false,
             seed: 0,
+            shared_prefix_len: 0,
         };
         // untimed warmup pass at the smallest shape, then the measured run
         if conns == bc.connections[0] {
@@ -144,6 +145,7 @@ fn main() {
         vocab: 256,
         stream: true,
         seed: 1,
+        shared_prefix_len: 0,
     })
     .expect("streaming loadgen");
     assert_eq!(stream_r.errors, 0, "streaming traffic must be error-free");
@@ -152,7 +154,72 @@ fn main() {
         stream_r.tok_s, stream_r.p99_ms
     );
 
+    // shared-prefix pass: every request leads with the same 214-token
+    // system prompt (= two full nvfp4 pages at the tiny-test shape), so
+    // the content-addressed prefix cache serves the bulk of each prompt.
+    // Streaming is on because TTFT is the headline of this scenario.
+    let prefix_cfg = |addr: &str| LoadgenConfig {
+        addr: addr.to_string(),
+        connections: if smoke { 2 } else { 4 },
+        requests_per_conn: bc.requests_per_conn,
+        prompt_len: bc.prompt_len,
+        max_new_tokens: bc.max_new,
+        variant: Some(Variant::ArcPacked),
+        vocab: 256,
+        stream: true,
+        seed: 2,
+        shared_prefix_len: 214,
+    };
+    let prefix_on = run_loadgen(&prefix_cfg(&addr)).expect("shared-prefix loadgen");
+    assert_eq!(prefix_on.errors, 0, "shared-prefix traffic must be error-free");
     server.shutdown();
+
+    // identical workload against a sharing-off server — the baseline the
+    // reuse win is measured against (outputs are bit-identical; only
+    // pages and prefill work differ)
+    let off_server = HttpServer::start(
+        HttpServeConfig {
+            max_decode_batch: 16,
+            kv_pages: 512,
+            kv_format: KvFormat::Nvfp4,
+            queue_cap: 128,
+            share_prefix: false,
+            ..Default::default()
+        },
+        "127.0.0.1:0",
+        engines(),
+    )
+    .expect("bench server (sharing off)");
+    let prefix_off = run_loadgen(&prefix_cfg(&off_server.addr().to_string()))
+        .expect("shared-prefix loadgen (sharing off)");
+    assert_eq!(prefix_off.errors, 0, "sharing-off traffic must be error-free");
+    off_server.shutdown();
+
+    println!(
+        "BENCH http_prefix_on tok_s={:.1} ttft_p50_ms={:.2} ttft_p99_ms={:.2} \
+         hit_rate={:.3} pages_saved={}",
+        prefix_on.tok_s,
+        prefix_on.ttft_p50_ms,
+        prefix_on.ttft_p99_ms,
+        prefix_on.prefix_hit_rate,
+        prefix_on.pages_saved
+    );
+    println!(
+        "BENCH http_prefix_off tok_s={:.1} ttft_p50_ms={:.2} ttft_p99_ms={:.2}",
+        prefix_off.tok_s, prefix_off.ttft_p50_ms, prefix_off.ttft_p99_ms
+    );
+    let ttft_speedup = if prefix_on.ttft_p50_ms > 0.0 {
+        prefix_off.ttft_p50_ms / prefix_on.ttft_p50_ms
+    } else {
+        1.0
+    };
+    // the smoke gate floors this at 0.5 (scripts/bench_gate.py)
+    println!("GATE http_prefix_hit_rate {:.3}", prefix_on.prefix_hit_rate);
+    println!(
+        "#   shared-prefix TTFT p50 {:.2}ms -> {:.2}ms ({ttft_speedup:.2}x, \
+         {} pages saved)",
+        prefix_off.ttft_p50_ms, prefix_on.ttft_p50_ms, prefix_on.pages_saved
+    );
 
     let lo = bc.connections[0];
     let hi = bc.connections[bc.connections.len() - 1];
@@ -179,6 +246,21 @@ fn main() {
         .set("connections", Json::Num(2.0))
         .set("tokens_per_s", Json::Num(stream_r.tok_s))
         .set("p99_ms", Json::Num(stream_r.p99_ms));
+    let prefix_row = |r: &arcquant::coordinator::LoadgenReport| {
+        let mut row = Json::obj();
+        row.set("tokens_per_s", Json::Num(r.tok_s))
+            .set("ttft_p50_ms", Json::Num(r.ttft_p50_ms))
+            .set("ttft_p99_ms", Json::Num(r.ttft_p99_ms))
+            .set("prefix_hit_rate", Json::Num(r.prefix_hit_rate))
+            .set("pages_saved", Json::Num(r.pages_saved as f64));
+        row
+    };
+    let mut prefix_reuse = Json::obj();
+    prefix_reuse
+        .set("shared_prefix_len", Json::Num(214.0))
+        .set("connections", Json::Num(4.0))
+        .set("sharing_on", prefix_row(&prefix_on))
+        .set("sharing_off", prefix_row(&prefix_off));
     let mut out = Json::obj();
     out.set("bench", Json::Str("http".into()))
         .set("provenance", prov)
@@ -188,7 +270,11 @@ fn main() {
         .set("max_new_tokens", Json::Num(bc.max_new as f64))
         .set("requests_per_conn", Json::Num(bc.requests_per_conn as f64))
         .set("rows", Json::Arr(rows))
-        .set("streaming", stream_row);
+        .set("streaming", stream_row)
+        .set("prefix_reuse", prefix_reuse)
+        // headline scalars for the trajectory gate
+        .set("prefix_hit_rate", Json::Num(prefix_on.prefix_hit_rate))
+        .set("prefix_ttft_speedup", Json::Num(ttft_speedup));
     let path = "BENCH_http.json";
     match std::fs::write(path, out.dump()) {
         Ok(()) => println!("# wrote {path}"),

@@ -7,16 +7,25 @@
 //! iteration-level scheduler: every loop tick it
 //!
 //! 1. **admits** pending requests whose variant has decode-batch room and
-//!    whose **worst case** (prompt + full generation budget) fits the free
-//!    KV pages ([`KvPageManager::admit`] then reserves the prompt pages;
-//!    decode growth allocates incrementally). Too few free pages is
-//!    backpressure — the request simply waits for running sequences to
-//!    retire; a request that could not complete even on an idle pool is
-//!    rejected outright. The headroom check counts only this sequence's
-//!    own growth, so concurrent admissions can still over-commit the pool
-//!    — that is what the mid-decode `OutOfPages` truncation below handles,
-//! 2. **prefills** the newly admitted prompts (one forward each, timed as
-//!    `prefill:{variant}`) and samples their first token,
+//!    whose **worst case** (prompt + full generation budget) fits the
+//!    available KV pages ([`KvPageManager::admit_shared`] then reserves
+//!    the prompt pages, serving already-published prefix chunks from the
+//!    content-addressed index for free; decode growth allocates
+//!    incrementally). Too few available pages is backpressure — the
+//!    request simply waits for running sequences to retire; a request
+//!    that could not complete even on an idle pool is rejected outright.
+//!    The headroom check counts only this sequence's own growth, so
+//!    concurrent admissions can still over-commit the pool — that is
+//!    what the mid-decode `OutOfPages` truncation below handles,
+//! 2. **prefills** running prompts one bounded chunk per tick
+//!    (Sarathi-style, [`Engine::prefill_range`], timed as
+//!    `prefill:{variant}`) instead of whole prompts at admission — a long
+//!    admission no longer stalls the decode batch. Prompt chunks that
+//!    fill a whole KV page are published into the prefix index
+//!    ([`KvPageManager::register_prefix`]) so later admissions with the
+//!    same leading tokens alias them (refcounted, copy-on-write at the
+//!    page boundary) and skip both the pages and the recomputation. The
+//!    tick that finishes a prompt samples the first token,
 //! 3. runs **one batched decode step per variant** over all running
 //!    sequences ([`Engine::decode_batch`] — a single [B, D] GEMM per
 //!    linear site, QDQ and packed alike, bit-identical per sequence to a
@@ -49,9 +58,9 @@ use super::request::{
 use super::router::{Router, RouterConfig, RouterDecision};
 use crate::coordinator::kvcache::KvPageManager;
 use crate::formats::KvFormat;
-use crate::model::{sampling::Sampler, Engine, KvCache, ModelConfig};
+use crate::model::{sampling::Sampler, Engine, KvCache, KvSeg, ModelConfig};
 use crate::util::{Prng, Timer};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::mpsc;
 use std::sync::Arc;
 
@@ -80,6 +89,15 @@ pub struct GenerateServeConfig {
     pub sampler: Sampler,
     /// seed for the per-sequence sampling streams (see [`session_rng`])
     pub seed: u64,
+    /// max prompt tokens prefilled per scheduler tick per sequence
+    /// (Sarathi-style chunked prefill; 0 = whole prompt in one chunk).
+    /// Chunking never changes outputs — prefill is chunk-invariant
+    /// ([`Engine::prefill_range`]) — only admission-to-decode interleaving.
+    pub prefill_chunk: usize,
+    /// share identical prompt prefixes between sequences through the
+    /// content-addressed page index (`false` = every admission private,
+    /// the pre-sharing behavior; outputs are bit-identical either way)
+    pub share_prefix: bool,
 }
 
 impl Default for GenerateServeConfig {
@@ -95,6 +113,8 @@ impl Default for GenerateServeConfig {
             router: RouterConfig::default(),
             sampler: Sampler::Greedy,
             seed: 0,
+            prefill_chunk: 64,
+            share_prefix: true,
         }
     }
 }
@@ -158,9 +178,16 @@ pub struct GenerateReport {
 pub(crate) struct GenSession {
     pub(crate) id: u64,
     pub(crate) variant: Variant,
-    pub(crate) prompt_len: usize,
+    /// the full prompt — retained until prefill completes (chunked
+    /// prefill forwards it range by range)
+    pub(crate) prompt: Vec<u16>,
+    /// prompt tokens already in the KV cache (aliased shared-prefix
+    /// tokens + prefilled chunks); the session joins decode ticks once
+    /// this reaches `prompt.len()`
+    pub(crate) prefilled: usize,
     pub(crate) max_new: usize,
-    /// last sampled token — the next decode input
+    /// last sampled token — the next decode input (meaningless until
+    /// [`Self::ready`])
     pub(crate) next_token: u16,
     pub(crate) generated: Vec<u16>,
     pub(crate) cache: KvCache,
@@ -209,11 +236,28 @@ pub(crate) struct SchedCore<'e> {
     pub(crate) kv_format: KvFormat,
     pub(crate) sampler: Sampler,
     pub(crate) seed: u64,
+    /// see [`GenerateServeConfig::prefill_chunk`]
+    pub(crate) prefill_chunk: usize,
+    /// see [`GenerateServeConfig::share_prefix`]
+    pub(crate) share_prefix: bool,
     pub(crate) pages: KvPageManager,
+    /// K/V rows of every published prefix node, keyed by its chain key —
+    /// the data plane behind [`KvPageManager`]'s accounting. Entries are
+    /// inserted when a chunk is published, dropped when the manager
+    /// evicts the node; sequences currently aliasing a segment keep it
+    /// alive through their own [`Arc`], so eviction can never invalidate
+    /// a live reader.
+    pub(crate) prefix_data: HashMap<u64, Arc<KvSeg>>,
     pub(crate) sessions: Vec<GenSession>,
     pub(crate) per_variant: BTreeMap<&'static str, GenVariantStats>,
     pub(crate) kv_pages_peak: usize,
     pub(crate) kv_bytes_peak: u64,
+}
+
+/// Prefix-index namespace of a variant: engines differ numerically, so
+/// their K/V rows must never cross-match.
+fn variant_class(v: Variant) -> u32 {
+    v.index() as u32
 }
 
 impl<'e> SchedCore<'e> {
@@ -226,6 +270,8 @@ impl<'e> SchedCore<'e> {
         max_decode_batch: usize,
         sampler: Sampler,
         seed: u64,
+        prefill_chunk: usize,
+        share_prefix: bool,
     ) -> SchedCore<'e> {
         SchedCore {
             engines,
@@ -234,12 +280,15 @@ impl<'e> SchedCore<'e> {
             kv_format,
             sampler,
             seed,
+            prefill_chunk,
+            share_prefix,
             pages: KvPageManager::with_format(
                 kv_pages,
                 model_cfg.d,
                 model_cfg.l,
                 kv_format,
             ),
+            prefix_data: HashMap::new(),
             sessions: Vec::new(),
             per_variant: BTreeMap::new(),
             kv_pages_peak: 0,
@@ -247,17 +296,40 @@ impl<'e> SchedCore<'e> {
         }
     }
 
+    /// Drop the K/V data of prefix nodes the manager evicted since the
+    /// last allocation (LRU, under pressure). Call after any operation
+    /// that can allocate pages.
+    fn sync_evicted(&mut self) {
+        for key in self.pages.drain_evicted() {
+            self.prefix_data.remove(&key);
+        }
+    }
+
+    /// Mirror the page manager's sharing counters into the exported
+    /// metrics (monotonic sources, so setting is safe for counters).
+    fn publish_share_metrics(&self, metrics: &Metrics) {
+        Metrics::set_gauge(&metrics.prefix_lookups, self.pages.prefix_lookups);
+        Metrics::set_gauge(&metrics.prefix_hits, self.pages.prefix_hits);
+        Metrics::set_gauge(&metrics.kv_pages_saved, self.pages.pages_saved);
+        Metrics::set_gauge(
+            &metrics.kv_shared_pages,
+            self.pages.shared_pages() as u64,
+        );
+    }
+
     /// Admission check (no state change): can `req` start right now?
-    /// Admit when the decode batch has room AND the free pages cover the
-    /// request's own worst case (prompt + budget); only the prompt pages
-    /// are reserved at [`SchedCore::enroll`], growth allocates per decode
-    /// step.
+    /// Admit when the decode batch has room AND the available pages cover
+    /// the request's own worst case (prompt + budget) — with prefix
+    /// sharing on, prompt chunks already published in the index cost
+    /// nothing, which is exactly what lets shared-prefix prompts admit
+    /// where distinct ones would wait. Only the prompt pages are reserved
+    /// at [`SchedCore::enroll`]; growth allocates per decode step.
     pub(crate) fn admission(&self, req: &GenerateRequest) -> Admit {
         if !self.engines.iter().any(|(ev, _)| *ev == req.variant) {
             return Admit::Reject(RejectReason::VariantUnavailable);
         }
-        let worst = self.pages.pages_for(req.prompt.len() + req.max_new_tokens);
-        if worst > self.pages.total_pages() {
+        let total = req.prompt.len() + req.max_new_tokens;
+        if self.pages.pages_for(total) > self.pages.total_pages() {
             // could never complete, even on an idle pool
             return Admit::Reject(RejectReason::PageBudget);
         }
@@ -266,17 +338,25 @@ impl<'e> SchedCore<'e> {
             .iter()
             .filter(|s| s.variant == req.variant)
             .count();
-        if running >= self.max_decode_batch || self.pages.free_pages() < worst {
+        let fits = if self.share_prefix {
+            self.pages
+                .can_admit_shared(variant_class(req.variant), &req.prompt, total)
+        } else {
+            self.pages.pages_for(total) <= self.pages.available_pages()
+        };
+        if running >= self.max_decode_batch || !fits {
             // backpressure: pages/slots free up as sequences retire
             return Admit::Wait;
         }
         Admit::Run
     }
 
-    /// Reserve prompt pages, prefill, sample the first token and join the
-    /// running set. The caller must have seen [`Admit::Run`] this tick;
-    /// on failure the request (and its watcher) are handed back with a
-    /// reject reason.
+    /// Reserve prompt pages (serving matched prefix chunks from the
+    /// index), alias the matched segments onto a fresh cache, and join
+    /// the running set — **without** forwarding anything: prefill happens
+    /// chunk by chunk in [`Self::prefill_tick`]. The caller must have
+    /// seen [`Admit::Run`] this tick; on failure the request (and its
+    /// watcher) are handed back with a reject reason.
     #[allow(clippy::type_complexity)]
     pub(crate) fn enroll(
         &mut self,
@@ -285,97 +365,211 @@ impl<'e> SchedCore<'e> {
         metrics: &Metrics,
     ) -> Result<(), (GenerateRequest, Option<mpsc::Sender<GenEvent>>, RejectReason)>
     {
-        let Some(engine) = self
-            .engines
-            .iter()
-            .find(|(ev, _)| *ev == req.variant)
-            .map(|(_, e)| *e)
-        else {
+        if !self.engines.iter().any(|(ev, _)| *ev == req.variant) {
             return Err((req, watch, RejectReason::VariantUnavailable));
+        }
+        let admitted = if self.share_prefix {
+            self.pages
+                .admit_shared(req.id, variant_class(req.variant), &req.prompt)
+        } else {
+            self.pages
+                .admit(req.id, req.prompt.len())
+                .map(|()| super::kvcache::SharedAdmit {
+                    matched_tokens: 0,
+                    shared_keys: Vec::new(),
+                })
         };
-        if self.pages.admit(req.id, req.prompt.len()).is_err() {
+        let Ok(admitted) = admitted else {
             // cannot happen after an Admit::Run check on the same tick,
             // but never panic the scheduler thread if it does
             return Err((req, watch, RejectReason::Internal));
-        }
+        };
+        self.sync_evicted();
         self.kv_pages_peak = self.kv_pages_peak.max(self.pages.used_pages());
         self.kv_bytes_peak = self.kv_bytes_peak.max(self.pages.bytes_used());
         Metrics::set_gauge(&metrics.kv_pages_used, self.pages.used_pages() as u64);
+        self.publish_share_metrics(metrics);
 
-        let key = req.variant.artifact_key();
         let mut cache = KvCache::with_format(
             self.model_cfg,
             req.prompt.len() + req.max_new_tokens,
             self.kv_format,
         );
-        let t = Timer::start();
-        let first_logits = match engine.prefill(&req.prompt, &mut cache) {
-            Ok(l) => l,
-            Err(_) => {
-                // capacity mismatch — cannot happen with the page
-                // pre-check, but never leak pages if it does
-                let _ = self.pages.release(req.id);
-                return Err((req, watch, RejectReason::Internal));
+        // Alias the matched chunks' K/V data. A key whose data is gone
+        // (can only happen if accounting and data plane desynced) falls
+        // back to recomputing: un-admit and retry fully private.
+        let mut prefilled = 0usize;
+        for key in &admitted.shared_keys {
+            let seg = self.prefix_data.get(key).cloned();
+            match seg.and_then(|s| cache.push_prefix_seg(s).ok()) {
+                Some(()) => prefilled += self.pages.page_tokens,
+                None => {
+                    debug_assert!(false, "prefix node {key:#x} lost its data");
+                    let _ = self.pages.release(req.id);
+                    if self.pages.admit(req.id, req.prompt.len()).is_err() {
+                        return Err((req, watch, RejectReason::Internal));
+                    }
+                    self.sync_evicted();
+                    cache = KvCache::with_format(
+                        self.model_cfg,
+                        req.prompt.len() + req.max_new_tokens,
+                        self.kv_format,
+                    );
+                    prefilled = 0;
+                    break;
+                }
             }
-        };
-        let prefill_ms = t.ms();
-        metrics.record_stage(&format!("prefill:{key}"), prefill_ms);
-        let mut rng = session_rng(self.seed, req.id);
-        let first = self.sampler.sample(&first_logits, &mut rng);
-        let stats = self.per_variant.entry(key).or_default();
-        stats.prefill_ms += prefill_ms;
-        stats.generated_tokens += 1;
-        metrics.add_variant_tokens(req.variant, 1);
-        if let Some(w) = &watch {
-            let _ = w.send(GenEvent::Token(first));
         }
-        let mut session = GenSession {
+        self.sessions.push(GenSession {
             id: req.id,
             variant: req.variant,
-            prompt_len: req.prompt.len(),
+            prompt: req.prompt,
+            prefilled,
             max_new: req.max_new_tokens,
-            next_token: first,
-            generated: vec![first],
+            next_token: 0,
+            generated: Vec::new(),
             cache,
-            rng,
+            rng: session_rng(self.seed, req.id),
             t_submit: req.t_submit,
-            prefill_ms,
+            prefill_ms: 0.0,
             decode_ms: 0.0,
             finish: None,
             watch,
-        };
-        if session.generated.len() >= session.max_new {
-            session.finish = Some(FinishReason::Length);
-        }
-        self.sessions.push(session);
+        });
         Ok(())
     }
 
+    /// One chunked-prefill step: every running sequence whose prompt is
+    /// not fully cached forwards its next chunk (at most
+    /// [`Self::prefill_chunk`] tokens; 0 = the whole remainder). Prompt
+    /// chunks that fill a whole KV page are published into the prefix
+    /// index as they complete, so concurrent same-prefix admissions hit
+    /// even before the donor finishes its prompt. The chunk that
+    /// completes the prompt samples the first token (TTFT is paid here,
+    /// interleaved with other sequences' decode ticks instead of
+    /// serializing ahead of them).
+    pub(crate) fn prefill_tick(&mut self, metrics: &Metrics) {
+        for idx in 0..self.sessions.len() {
+            let s = &mut self.sessions[idx];
+            if s.finish.is_some() || s.prefilled >= s.prompt.len() {
+                continue;
+            }
+            let Some(engine) = self
+                .engines
+                .iter()
+                .find(|(ev, _)| *ev == s.variant)
+                .map(|(_, e)| *e)
+            else {
+                continue;
+            };
+            let remaining = s.prompt.len() - s.prefilled;
+            let chunk = if self.prefill_chunk == 0 {
+                remaining
+            } else {
+                self.prefill_chunk.min(remaining)
+            };
+            let end = s.prefilled + chunk;
+            let key = s.variant.artifact_key();
+            let t = Timer::start();
+            let logits =
+                match engine.prefill_range(&s.prompt[..end], s.prefilled, &mut s.cache)
+                {
+                    Ok(l) => l,
+                    Err(_) => {
+                        // cache/page accounting desync — never panic the
+                        // scheduler thread; retire the sequence instead
+                        debug_assert!(false, "prefill_range rejected a planned chunk");
+                        s.finish = Some(FinishReason::OutOfPages);
+                        let _ = self.pages.release(s.id);
+                        continue;
+                    }
+                };
+            let ms = t.ms();
+            s.prefilled = end;
+            s.prefill_ms += ms;
+            metrics.record_stage(&format!("prefill:{key}"), ms);
+            Metrics::inc(&metrics.prefill_chunks);
+            self.per_variant.entry(key).or_default().prefill_ms += ms;
+
+            if self.share_prefix {
+                // publish every newly completed, still-matchable chunk
+                let pt = self.pages.page_tokens;
+                let cap = self.pages.matchable_chunks(s.prompt.len());
+                loop {
+                    let c = self.pages.seq_shared_chunks(s.id).unwrap_or(cap);
+                    if c >= cap || (c + 1) * pt > s.prefilled {
+                        break;
+                    }
+                    let chunk_toks = &s.prompt[c * pt..(c + 1) * pt];
+                    let class = variant_class(s.variant);
+                    let Some(node_key) =
+                        self.pages.register_prefix(s.id, class, chunk_toks)
+                    else {
+                        // address already published by a concurrent
+                        // admission — keep the page private (loses
+                        // sharing for this sequence, never correctness)
+                        break;
+                    };
+                    match s.cache.extract_seg(c * pt, pt) {
+                        Ok(seg) => {
+                            self.prefix_data.insert(node_key, Arc::new(seg));
+                        }
+                        Err(_) => {
+                            debug_assert!(false, "published chunk not extractable");
+                            break;
+                        }
+                    }
+                }
+            }
+
+            if s.prefilled == s.prompt.len() {
+                // prompt complete: the last chunk's logits are the final
+                // prompt position's — sample the first token
+                let first = self.sampler.sample(&logits, &mut s.rng);
+                s.next_token = first;
+                s.generated.push(first);
+                metrics.add_variant_tokens(s.variant, 1);
+                self.per_variant.entry(key).or_default().generated_tokens += 1;
+                if let Some(w) = &s.watch {
+                    let _ = w.send(GenEvent::Token(first));
+                }
+                if s.generated.len() >= s.max_new {
+                    s.finish = Some(FinishReason::Length);
+                }
+            }
+        }
+        if self.share_prefix {
+            self.publish_share_metrics(metrics);
+        }
+    }
+
     /// One scheduler tick: a single batched decode step per variant over
-    /// all running sequences. Page extension happens first — every
-    /// participant reserves room for the token this step appends;
-    /// exhaustion retires early ([`FinishReason::OutOfPages`]), and the
-    /// retired sequence's pages are released immediately so later slots
-    /// in the same tick can take them.
+    /// all running sequences whose prompt is fully prefilled. Page
+    /// extension happens first — every participant reserves room for the
+    /// token this step appends; exhaustion retires early
+    /// ([`FinishReason::OutOfPages`]), and the retired sequence's pages
+    /// are released immediately so later slots in the same tick can take
+    /// them.
     pub(crate) fn decode_tick(&mut self, metrics: &Metrics) {
         for v in Variant::ALL {
             for s in self
                 .sessions
                 .iter_mut()
-                .filter(|s| s.variant == v && s.finish.is_none())
+                .filter(|s| s.variant == v && s.finish.is_none() && s.ready())
             {
                 if self.pages.extend(s.id, 1).is_err() {
                     s.finish = Some(FinishReason::OutOfPages);
                     let _ = self.pages.release(s.id);
                 }
             }
+            self.sync_evicted();
             self.kv_pages_peak = self.kv_pages_peak.max(self.pages.used_pages());
             self.kv_bytes_peak = self.kv_bytes_peak.max(self.pages.bytes_used());
 
             let mut group: Vec<&mut GenSession> = self
                 .sessions
                 .iter_mut()
-                .filter(|s| s.variant == v && s.finish.is_none())
+                .filter(|s| s.variant == v && s.finish.is_none() && s.ready())
                 .collect();
             if group.is_empty() {
                 continue;
@@ -448,7 +642,7 @@ impl<'e> SchedCore<'e> {
                 id: s.id,
                 variant: s.variant,
                 tokens: s.generated,
-                prompt_len: s.prompt_len,
+                prompt_len: s.prompt.len(),
                 finish,
                 prefill_ms: s.prefill_ms,
                 decode_ms: s.decode_ms,
@@ -489,6 +683,11 @@ impl<'e> SchedCore<'e> {
 impl GenSession {
     fn cache_mut(&mut self) -> &mut KvCache {
         &mut self.cache
+    }
+
+    /// Prompt fully cached — eligible for decode ticks.
+    fn ready(&self) -> bool {
+        self.prefilled >= self.prompt.len()
     }
 }
 
@@ -633,6 +832,8 @@ fn run_generate_executor(
         cfg.max_decode_batch,
         cfg.sampler,
         cfg.seed,
+        cfg.prefill_chunk,
+        cfg.share_prefix,
     );
     Metrics::set_gauge(&metrics.kv_pages_total, cfg.kv_pages as u64);
     let mut pending: Vec<GenerateRequest> = Vec::new();
@@ -700,7 +901,9 @@ fn run_generate_executor(
         }
         pending = still_pending;
 
-        // ---- one batched decode step per variant + retire ----
+        // ---- one chunked-prefill step + one batched decode step per
+        // variant + retire ----
+        core.prefill_tick(metrics);
         core.decode_tick(metrics);
         for resp in core.retire(metrics) {
             let _ = tx_resp.send(resp);
@@ -712,4 +915,243 @@ fn run_generate_executor(
     }
 
     core.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tiny_test_fixture;
+    use crate::model::EngineMode;
+
+    fn fp_engine() -> Engine {
+        let (cfg, weights, _) = tiny_test_fixture(3, 64);
+        Engine::new(cfg, weights, EngineMode::Fp32, None).unwrap()
+    }
+
+    /// Drive a [`SchedCore`] to quiescence with the executor's own
+    /// admission→prefill→decode→retire tick order.
+    fn drive(
+        core: &mut SchedCore,
+        mut pending: Vec<GenerateRequest>,
+        metrics: &Metrics,
+    ) -> Vec<GenerateResponse> {
+        let mut out = Vec::new();
+        let mut ticks = 0usize;
+        while !pending.is_empty() || !core.sessions.is_empty() {
+            ticks += 1;
+            assert!(ticks < 10_000, "scheduler did not converge");
+            let mut still = Vec::with_capacity(pending.len());
+            for req in pending.drain(..) {
+                match core.admission(&req) {
+                    Admit::Run => assert!(core.enroll(req, None, metrics).is_ok()),
+                    Admit::Wait => still.push(req),
+                    Admit::Reject(_) => panic!("unexpected reject"),
+                }
+            }
+            pending = still;
+            core.prefill_tick(metrics);
+            core.decode_tick(metrics);
+            out.extend(core.retire(metrics));
+        }
+        out
+    }
+
+    /// Reference generation: private whole-prompt prefill + decode_step
+    /// loop — by construction the no-sharing, no-chunking output.
+    fn reference(
+        engine: &Engine,
+        prompt: &[u16],
+        max_new: usize,
+        kv: KvFormat,
+        seed: u64,
+        id: u64,
+    ) -> Vec<u16> {
+        let mut cache =
+            KvCache::with_format(&engine.cfg, prompt.len() + max_new, kv);
+        let mut rng = session_rng(seed, id);
+        let sampler = Sampler::Greedy;
+        let mut tok =
+            sampler.sample(&engine.prefill(prompt, &mut cache).unwrap(), &mut rng);
+        let mut toks = vec![tok];
+        for _ in 1..max_new {
+            tok = sampler
+                .sample(&engine.decode_step(tok, &mut cache).unwrap(), &mut rng);
+            toks.push(tok);
+        }
+        toks
+    }
+
+    fn req(id: u64, prompt: Vec<u16>, max_new: usize) -> GenerateRequest {
+        GenerateRequest::new(id, prompt, max_new, Variant::Fp32)
+    }
+
+    #[test]
+    fn three_page_pool_serializes_distinct_but_batches_shared_prompts() {
+        let engine = fp_engine();
+        let engines: Vec<(Variant, &Engine)> = vec![(Variant::Fp32, &engine)];
+        let model_cfg = engine.cfg.clone();
+        let metrics = Metrics::new();
+        // fp32 pages hold 16 tokens: a 20-token prompt + 8-token budget is
+        // a 2-page worst case, so a 3-page pool cannot run two *distinct*
+        // prompts at once...
+        let prompt_a: Vec<u16> = (0..20u16).map(|i| (i * 31 + 2) % 256).collect();
+        let prompt_b: Vec<u16> = (0..20u16).map(|i| (i * 17 + 9) % 256).collect();
+        let mut core = SchedCore::new(
+            &engines,
+            &model_cfg,
+            3,
+            KvFormat::Fp32,
+            8,
+            Sampler::Greedy,
+            0,
+            64,
+            true,
+        );
+        let rs = drive(
+            &mut core,
+            vec![req(1, prompt_a.clone(), 8), req(2, prompt_b.clone(), 8)],
+            &metrics,
+        );
+        assert_eq!(rs.len(), 2);
+        assert!(rs.iter().all(|r| r.finish == FinishReason::Length));
+        let stats = &core.per_variant["fp32"];
+        assert_eq!(
+            stats.decode_tokens, stats.decode_ticks,
+            "distinct prompts on 3 pages must decode one at a time"
+        );
+        assert_eq!(core.pages.prefix_hits, 0);
+        core.pages.check_invariants().unwrap();
+
+        // ...but two prompts sharing the prefix admit together: the
+        // second request's matched chunk costs nothing, so both decode in
+        // the same ticks.
+        let mut core = SchedCore::new(
+            &engines,
+            &model_cfg,
+            3,
+            KvFormat::Fp32,
+            8,
+            Sampler::Greedy,
+            0,
+            64,
+            true,
+        );
+        let rs = drive(
+            &mut core,
+            vec![req(1, prompt_a.clone(), 8), req(2, prompt_a.clone(), 8)],
+            &metrics,
+        );
+        assert_eq!(rs.len(), 2);
+        assert!(rs.iter().all(|r| r.finish == FinishReason::Length));
+        let stats = &core.per_variant["fp32"];
+        assert!(
+            stats.decode_tokens > stats.decode_ticks,
+            "shared-prefix prompts never overlapped: {} tokens / {} ticks",
+            stats.decode_tokens,
+            stats.decode_ticks
+        );
+        assert!(core.pages.prefix_hits >= 1);
+        assert!(core.pages.pages_saved >= 1);
+        // identical prompt + greedy ⇒ identical tokens, and both equal the
+        // private (no-sharing) reference loop
+        let want = reference(&engine, &prompt_a, 8, KvFormat::Fp32, 0, 1);
+        for r in &rs {
+            assert_eq!(r.tokens, want, "id {}", r.id);
+        }
+        core.pages.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sharing_and_chunking_do_not_change_served_tokens() {
+        let engine = fp_engine();
+        let engines: Vec<(Variant, &Engine)> = vec![(Variant::Fp32, &engine)];
+        let model_cfg = engine.cfg.clone();
+        // quantized KV pages: 107 tokens/page at the tiny-test shape, so a
+        // 110-token prompt has exactly one shareable chunk. The 3-page
+        // pool staggers admissions: followers can only join by matching
+        // the donor's published chunk, so the sharing path is exercised
+        // (a roomy pool would admit all three privately in tick one).
+        let prompt: Vec<u16> = (0..110u16).map(|i| (i * 13 + 5) % 256).collect();
+        let reqs = || {
+            vec![
+                req(1, prompt.clone(), 6),
+                req(2, prompt.clone(), 6),
+                req(3, prompt.clone(), 6),
+            ]
+        };
+        let run = |share: bool, chunk: usize| {
+            let metrics = Metrics::new();
+            let mut core = SchedCore::new(
+                &engines,
+                &model_cfg,
+                3,
+                KvFormat::Nvfp4,
+                8,
+                Sampler::Greedy,
+                0,
+                chunk,
+                share,
+            );
+            let mut rs = drive(&mut core, reqs(), &metrics);
+            rs.sort_by_key(|r| r.id);
+            core.pages.check_invariants().unwrap();
+            (rs, core.pages.prefix_hits, Metrics::get(&metrics.prefill_chunks))
+        };
+        let (shared, hits_on, _) = run(true, 64);
+        let (private, hits_off, _) = run(false, 64);
+        let (whole, _, chunks_whole) = run(true, 0);
+        let (tiny_chunks, _, chunks_tiny) = run(true, 17);
+        assert!(hits_on >= 1, "sharing run never hit the prefix cache");
+        assert_eq!(hits_off, 0, "share_prefix=false must not touch the index");
+        // whole-prompt mode forwards each prompt once; 17-token chunks
+        // split a 110-token prompt into 7 (donor) or fewer (aliased)
+        assert!(chunks_whole <= 3);
+        assert!(chunks_tiny >= 7, "expected chunked forwards, saw {chunks_tiny}");
+        let want = reference(&engine, &prompt, 6, KvFormat::Nvfp4, 0, 1);
+        for rs in [&shared, &private, &whole, &tiny_chunks] {
+            assert_eq!(rs.len(), 3);
+            for r in rs.iter() {
+                assert_eq!(r.finish, FinishReason::Length);
+                assert_eq!(
+                    r.tokens, want,
+                    "id {}: sharing/chunking changed served tokens",
+                    r.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn retired_prefix_stays_warm_for_later_requests() {
+        let engine = fp_engine();
+        let engines: Vec<(Variant, &Engine)> = vec![(Variant::Fp32, &engine)];
+        let model_cfg = engine.cfg.clone();
+        let metrics = Metrics::new();
+        let prompt: Vec<u16> = (0..40u16).map(|i| (i * 7 + 3) % 256).collect();
+        let mut core = SchedCore::new(
+            &engines,
+            &model_cfg,
+            16,
+            KvFormat::Fp32,
+            8,
+            Sampler::Greedy,
+            0,
+            64,
+            true,
+        );
+        // first conversation retires completely...
+        let rs = drive(&mut core, vec![req(1, prompt.clone(), 4)], &metrics);
+        assert_eq!(rs.len(), 1);
+        let hits_before = core.pages.prefix_hits;
+        // ...and a later one over the same system prompt still hits the
+        // cached (refs-0) pages instead of re-prefilling them
+        let rs = drive(&mut core, vec![req(2, prompt.clone(), 4)], &metrics);
+        assert_eq!(rs.len(), 1);
+        assert!(
+            core.pages.prefix_hits > hits_before,
+            "refs-0 prefix pages were not reused across retirements"
+        );
+        assert_eq!(rs[0].tokens, reference(&engine, &prompt, 4, KvFormat::Fp32, 0, 2));
+        core.pages.check_invariants().unwrap();
+    }
 }

@@ -91,6 +91,12 @@ pub struct HttpServeConfig {
     pub sampler: Sampler,
     /// seed of the per-session sampling streams (`session_rng`)
     pub seed: u64,
+    /// max prompt tokens prefilled per scheduler tick per sequence
+    /// (Sarathi-style chunked prefill; 0 = whole prompt in one chunk)
+    pub prefill_chunk: usize,
+    /// content-addressed shared-prefix page reuse (`false` = every
+    /// admission prefills privately; outputs are bit-identical either way)
+    pub share_prefix: bool,
     /// socket read timeout — the cadence at which idle keep-alive
     /// handlers re-check the shutdown flag, and also the inter-read
     /// deadline while a request is being received: a client that stalls
@@ -112,6 +118,8 @@ impl Default for HttpServeConfig {
             default_max_new: 16,
             sampler: Sampler::Greedy,
             seed: 0,
+            prefill_chunk: 64,
+            share_prefix: true,
             read_timeout_ms: 250,
         }
     }
@@ -307,6 +315,8 @@ fn run_scheduler(
         cfg.max_decode_batch,
         cfg.sampler,
         cfg.seed,
+        cfg.prefill_chunk,
+        cfg.share_prefix,
     );
     Metrics::set_gauge(&metrics.kv_pages_total, cfg.kv_pages as u64);
     let mut pending: VecDeque<Job> = VecDeque::new();
@@ -354,7 +364,7 @@ fn run_scheduler(
             }
         }
 
-        // ---- admission + prefill ----
+        // ---- admission (prefill happens chunked, in the tick below) ----
         let mut still = VecDeque::with_capacity(pending.len());
         for job in pending.drain(..) {
             match core.admission(&job.req) {
@@ -381,7 +391,9 @@ fn run_scheduler(
             (pending.len() + core.sessions.len()) as u64,
         );
 
-        // ---- one batched decode step per variant + retire ----
+        // ---- one chunked-prefill step + one batched decode step per
+        // variant + retire ----
+        core.prefill_tick(&metrics);
         core.decode_tick(&metrics);
         let _ = core.retire(&metrics);
         Metrics::set_gauge(

@@ -1,4 +1,5 @@
-//! Paged KV-cache manager (vLLM-style block allocator).
+//! Paged KV-cache manager (vLLM-style block allocator) with a
+//! refcounted, content-addressed prefix index.
 //!
 //! Owns page accounting for decode sessions: fixed-size token pages,
 //! per-sequence page tables, allocation/free with an LRU-evictable
@@ -14,9 +15,37 @@
 //! page holds ~6–7× more tokens and the same page budget admits several
 //! times more concurrent sequences (`docs/kv_cache.md` has the measured
 //! table; the per-format math lives in [`KvFormat::bytes_per_token`]).
+//!
+//! # Shared-prefix index
+//!
+//! On top of flat per-sequence allocation the manager keeps a
+//! **content-addressed prefix index**: full pages of prompt tokens are
+//! keyed by a chained hash of `(class, chunk₀, chunk₁, …)` where each
+//! chunk is exactly `page_tokens` token ids and `class` separates
+//! engines whose K/V bytes differ (one per variant). [`Self::admit_shared`]
+//! walks the chain and returns a mix of **shared** pages (refcount
+//! bumped, no allocation, no recompute) and private pages for the
+//! unmatched remainder. The quantize-once-on-write KV design makes a
+//! shared page immutable by construction — history is never
+//! re-quantized — so sharing is bit-exact.
+//!
+//! Copy-on-write rule: only *full* prompt chunks are ever shared
+//! (at most `(prompt_len − 1) / page_tokens` of them, so at least the
+//! final prompt token is always prefilled privately for its logits).
+//! The trailing partially-filled page is private from the start, and
+//! decode appends only ever touch private pages — the cache is
+//! append-only, so "copy-on-write" degenerates to "writes go to fresh
+//! private pages past the shared boundary" and no page is ever copied.
+//!
+//! Refcount lifecycle: [`Self::register_prefix`] moves a private page
+//! into the index (refs = 1 for the publisher), admission of a matching
+//! prompt bumps refs, [`Self::release`] decrements. A node at refs 0 is
+//! *not* freed: it parks on an LRU `cached` list and keeps serving
+//! matches until allocation pressure evicts it ([`Self::drain_evicted`]
+//! tells the scheduler which keys died so it can drop the page data).
 
 use crate::formats::KvFormat;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 
 /// Tokens per page in the reference f32 format. This also fixes the page
 /// *byte* size for every format: one page is always the slab that holds
@@ -29,16 +58,84 @@ pub enum PageError {
     UnknownSequence,
 }
 
+/// One sequence's page table: shared prefix pages (by index key, in
+/// chain order) followed by privately owned pages.
 #[derive(Clone, Debug, Default)]
 pub struct SeqAlloc {
+    /// prefix-index keys of the shared pages this sequence references
+    pub shared: Vec<u64>,
+    /// pages owned by this sequence alone
     pub pages: Vec<usize>,
     pub tokens: usize,
+}
+
+/// One published prefix page: the page it pins, how many sequences
+/// reference it, and the content address that names it (parent key +
+/// this page's token ids — stored verbatim as the hash-collision guard).
+#[derive(Clone, Debug)]
+pub struct PrefixNode {
+    pub page: usize,
+    pub refs: usize,
+    parent: u64,
+    chunk: Vec<u16>,
+}
+
+/// What a shared admission matched: the prompt-prefix token count whose
+/// recompute is skipped, and the index keys (chain order) of the shared
+/// pages so the scheduler can attach their K/V data.
+#[derive(Clone, Debug)]
+pub struct SharedAdmit {
+    pub matched_tokens: usize,
+    pub shared_keys: Vec<u64>,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_step(mut h: u64, byte: u8) -> u64 {
+    h ^= byte as u64;
+    h.wrapping_mul(FNV_PRIME)
+}
+
+/// Chain root for a sharing class (one class per engine variant — K/V
+/// bytes are only interchangeable within one set of weights).
+pub fn root_key(class: u32) -> u64 {
+    let mut h = FNV_OFFSET;
+    for b in class.to_le_bytes() {
+        h = fnv_step(h, b);
+    }
+    h
+}
+
+/// Content address of the page holding `chunk` immediately after the
+/// prefix named by `parent`. Collisions are guarded by comparing the
+/// stored `(parent, chunk)` on every match, so a collision can only cost
+/// sharing, never correctness.
+fn chain_key(parent: u64, chunk: &[u16]) -> u64 {
+    let mut h = parent.wrapping_mul(FNV_PRIME) ^ FNV_OFFSET;
+    for &t in chunk {
+        h = fnv_step(h, (t & 0xff) as u8);
+        h = fnv_step(h, (t >> 8) as u8);
+    }
+    h
 }
 
 pub struct KvPageManager {
     total_pages: usize,
     free: Vec<usize>,
     seqs: BTreeMap<u64, SeqAlloc>,
+    /// content-addressed prefix index: chain key → published page
+    nodes: HashMap<u64, PrefixNode>,
+    /// refs-0 prefix nodes in LRU order (front = evicted first)
+    cached: VecDeque<u64>,
+    /// prefix keys evicted since the last [`Self::drain_evicted`]
+    evicted: Vec<u64>,
+    /// cumulative prompt chunks probed against the index at admission
+    pub prefix_lookups: u64,
+    /// cumulative prompt chunks served from the index at admission
+    pub prefix_hits: u64,
+    /// cumulative pages whose allocation + recompute was avoided
+    pub pages_saved: u64,
     /// K/V storage format the pages account for.
     pub format: KvFormat,
     /// Tokens one page holds under `format` (16 for f32; the full slab
@@ -73,6 +170,12 @@ impl KvPageManager {
             total_pages,
             free: (0..total_pages).rev().collect(),
             seqs: BTreeMap::new(),
+            nodes: HashMap::new(),
+            cached: VecDeque::new(),
+            evicted: Vec::new(),
+            prefix_lookups: 0,
+            prefix_hits: 0,
+            pages_saved: 0,
             format,
             page_tokens,
             bytes_per_page: page_tokens as u64 * per_token,
@@ -91,6 +194,18 @@ impl KvPageManager {
         self.total_pages - self.free.len()
     }
 
+    /// Pages currently published in the prefix index (referenced or
+    /// parked on the refs-0 cache).
+    pub fn shared_pages(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Pages allocatable right now: the freelist plus every refs-0
+    /// cached prefix page (evictable on demand).
+    pub fn available_pages(&self) -> usize {
+        self.free.len() + self.cached.len()
+    }
+
     pub fn bytes_used(&self) -> u64 {
         self.used_pages() as u64 * self.bytes_per_page
     }
@@ -100,56 +215,237 @@ impl KvPageManager {
         tokens.div_ceil(self.page_tokens)
     }
 
-    /// Can a sequence of `tokens` tokens be admitted right now?
+    /// Can a sequence of `tokens` tokens be admitted right now (no
+    /// prefix sharing assumed)?
     pub fn can_admit(&self, tokens: usize) -> bool {
-        self.pages_for(tokens) <= self.free.len()
+        self.pages_for(tokens) <= self.available_pages()
     }
 
-    /// Reserve pages for a new sequence. All-or-nothing.
+    /// Prompt chunks eligible for sharing: full pages only, and never
+    /// the one holding the final prompt token (its prefill produces the
+    /// first sampled token's logits, so it must always run).
+    pub fn matchable_chunks(&self, prompt_len: usize) -> usize {
+        prompt_len.saturating_sub(1) / self.page_tokens
+    }
+
+    /// Walk the prefix chain for `prompt`, returning the keys of every
+    /// already-published leading chunk.
+    fn matched_keys(&self, class: u32, prompt: &[u16]) -> Vec<u64> {
+        let pt = self.page_tokens;
+        let mut key = root_key(class);
+        let mut out = Vec::new();
+        for c in 0..self.matchable_chunks(prompt.len()) {
+            let chunk = &prompt[c * pt..(c + 1) * pt];
+            let next = chain_key(key, chunk);
+            match self.nodes.get(&next) {
+                Some(n) if n.parent == key && n.chunk == chunk => {
+                    out.push(next);
+                    key = next;
+                }
+                _ => break,
+            }
+        }
+        out
+    }
+
+    /// Prompt-prefix tokens a shared admission would serve from the
+    /// index right now (a read-only probe for admission planning).
+    pub fn probe_matched_tokens(&self, class: u32, prompt: &[u16]) -> usize {
+        self.matched_keys(class, prompt).len() * self.page_tokens
+    }
+
+    /// Would [`Self::admit_shared`] succeed for `prompt` with worst-case
+    /// growth to `total_tokens`? Mirrors its headroom math exactly:
+    /// matched pages cost nothing, but matched pages sitting on the
+    /// refs-0 cache are not evictable for the private remainder.
+    pub fn can_admit_shared(
+        &self,
+        class: u32,
+        prompt: &[u16],
+        total_tokens: usize,
+    ) -> bool {
+        let matched = self.matched_keys(class, prompt);
+        let matched_in_cached =
+            matched.iter().filter(|k| self.cached.contains(k)).count();
+        let need = self.pages_for(total_tokens).saturating_sub(matched.len());
+        need <= self.free.len() + self.cached.len() - matched_in_cached
+    }
+
+    /// Grab one free page, evicting the LRU refs-0 prefix node if the
+    /// freelist is empty. Callers must have checked headroom.
+    fn alloc_page(&mut self) -> usize {
+        if let Some(p) = self.free.pop() {
+            return p;
+        }
+        let key = self
+            .cached
+            .pop_front()
+            .expect("alloc_page called without headroom");
+        let node = self.nodes.remove(&key).expect("cached key has a node");
+        self.evicted.push(key);
+        node.page
+    }
+
+    /// Reserve pages for a new sequence, no prefix sharing. All-or-nothing.
     pub fn admit(&mut self, seq_id: u64, tokens: usize) -> Result<(), PageError> {
         let need = self.pages_for(tokens);
-        if need > self.free.len() {
+        if need > self.available_pages() {
             return Err(PageError::OutOfPages);
         }
-        let pages: Vec<usize> = (0..need).map(|_| self.free.pop().unwrap()).collect();
-        self.seqs.insert(seq_id, SeqAlloc { pages, tokens });
+        let pages: Vec<usize> = (0..need).map(|_| self.alloc_page()).collect();
+        self.seqs.insert(
+            seq_id,
+            SeqAlloc {
+                shared: Vec::new(),
+                pages,
+                tokens,
+            },
+        );
         Ok(())
     }
 
-    /// Extend a sequence by `new_tokens` (decode steps), allocating pages
-    /// as page boundaries are crossed.
+    /// Reserve pages for a new sequence, serving leading full prompt
+    /// chunks from the prefix index where their content matches.
+    /// All-or-nothing: on `OutOfPages` nothing is mutated.
+    pub fn admit_shared(
+        &mut self,
+        seq_id: u64,
+        class: u32,
+        prompt: &[u16],
+    ) -> Result<SharedAdmit, PageError> {
+        let matched = self.matched_keys(class, prompt);
+        let matched_in_cached =
+            matched.iter().filter(|k| self.cached.contains(k)).count();
+        let need = self.pages_for(prompt.len()).saturating_sub(matched.len());
+        if need > self.free.len() + self.cached.len() - matched_in_cached {
+            return Err(PageError::OutOfPages);
+        }
+        self.prefix_lookups += self.matchable_chunks(prompt.len()) as u64;
+        self.prefix_hits += matched.len() as u64;
+        self.pages_saved += matched.len() as u64;
+        for k in &matched {
+            if self.nodes[k].refs == 0 {
+                let k = *k;
+                self.cached.retain(|c| *c != k);
+            }
+            self.nodes.get_mut(k).expect("matched key has a node").refs += 1;
+        }
+        let pages: Vec<usize> = (0..need).map(|_| self.alloc_page()).collect();
+        self.seqs.insert(
+            seq_id,
+            SeqAlloc {
+                shared: matched.clone(),
+                pages,
+                tokens: prompt.len(),
+            },
+        );
+        Ok(SharedAdmit {
+            matched_tokens: matched.len() * self.page_tokens,
+            shared_keys: matched,
+        })
+    }
+
+    /// Publish the sequence's next full prompt chunk into the prefix
+    /// index: its first private page moves into a node (refs = 1, still
+    /// counted against this sequence). `chunk` must be the page_tokens
+    /// token ids immediately after the sequence's current shared prefix.
+    /// Returns the new key, or `None` if the address is already taken
+    /// (a concurrent publisher won the race — the page stays private,
+    /// which loses sharing but never correctness) or the chunk is not
+    /// publishable.
+    pub fn register_prefix(
+        &mut self,
+        seq_id: u64,
+        class: u32,
+        chunk: &[u16],
+    ) -> Option<u64> {
+        if chunk.len() != self.page_tokens {
+            return None;
+        }
+        let alloc = self.seqs.get(&seq_id)?;
+        if alloc.pages.is_empty() {
+            return None;
+        }
+        let parent = alloc.shared.last().copied().unwrap_or_else(|| root_key(class));
+        let key = chain_key(parent, chunk);
+        if self.nodes.contains_key(&key) {
+            return None;
+        }
+        let alloc = self.seqs.get_mut(&seq_id).expect("checked above");
+        let page = alloc.pages.remove(0);
+        alloc.shared.push(key);
+        self.nodes.insert(
+            key,
+            PrefixNode {
+                page,
+                refs: 1,
+                parent,
+                chunk: chunk.to_vec(),
+            },
+        );
+        Some(key)
+    }
+
+    /// Extend a sequence by `new_tokens` (decode steps), allocating
+    /// private pages as page boundaries are crossed.
     pub fn extend(&mut self, seq_id: u64, new_tokens: usize) -> Result<(), PageError> {
         let page_tokens = self.page_tokens;
-        let alloc = self
-            .seqs
-            .get_mut(&seq_id)
-            .ok_or(PageError::UnknownSequence)?;
-        let need_total = (alloc.tokens + new_tokens).div_ceil(page_tokens);
-        let extra = need_total.saturating_sub(alloc.pages.len());
-        if extra > self.free.len() {
+        let (held, tokens) = {
+            let a = self.seqs.get(&seq_id).ok_or(PageError::UnknownSequence)?;
+            (a.shared.len() + a.pages.len(), a.tokens)
+        };
+        let extra = (tokens + new_tokens)
+            .div_ceil(page_tokens)
+            .saturating_sub(held);
+        if extra > self.available_pages() {
             return Err(PageError::OutOfPages);
         }
-        for _ in 0..extra {
-            alloc.pages.push(self.free.pop().unwrap());
-        }
-        alloc.tokens += new_tokens;
+        let fresh: Vec<usize> = (0..extra).map(|_| self.alloc_page()).collect();
+        let a = self.seqs.get_mut(&seq_id).expect("checked above");
+        a.pages.extend(fresh);
+        a.tokens += new_tokens;
         Ok(())
     }
 
-    /// Release a sequence's pages.
+    /// Release a sequence: private pages return to the freelist, shared
+    /// refcounts decrement (a node reaching refs 0 parks on the LRU
+    /// cache instead of freeing — its content keeps serving matches).
+    /// Returns the total pages the sequence referenced.
     pub fn release(&mut self, seq_id: u64) -> Result<usize, PageError> {
         let alloc = self.seqs.remove(&seq_id).ok_or(PageError::UnknownSequence)?;
-        let n = alloc.pages.len();
+        let n = alloc.shared.len() + alloc.pages.len();
+        for key in alloc.shared {
+            let node = self.nodes.get_mut(&key).expect("shared key has a node");
+            node.refs -= 1;
+            if node.refs == 0 {
+                self.cached.push_back(key);
+            }
+        }
         self.free.extend(alloc.pages);
         Ok(n)
+    }
+
+    /// Prefix keys evicted (LRU, under allocation pressure) since the
+    /// last call — the scheduler drops the corresponding K/V data.
+    pub fn drain_evicted(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.evicted)
     }
 
     pub fn seq_tokens(&self, seq_id: u64) -> Option<usize> {
         self.seqs.get(&seq_id).map(|a| a.tokens)
     }
 
-    /// Internal consistency: every page is either free or owned by
-    /// exactly one sequence.
+    /// Shared-prefix pages a sequence currently references (its
+    /// published + matched chunk count).
+    pub fn seq_shared_chunks(&self, seq_id: u64) -> Option<usize> {
+        self.seqs.get(&seq_id).map(|a| a.shared.len())
+    }
+
+    /// Internal consistency: every page is exactly one of free, owned by
+    /// one prefix node, or private to exactly one sequence; node
+    /// refcounts equal the number of sequences referencing them; the
+    /// refs-0 cache lists exactly the refs-0 nodes; per-sequence page
+    /// counts match their token accounting.
     pub fn check_invariants(&self) -> Result<(), String> {
         let mut seen = vec![false; self.total_pages];
         for &p in &self.free {
@@ -158,15 +454,56 @@ impl KvPageManager {
             }
             seen[p] = true;
         }
+        for (key, node) in &self.nodes {
+            if seen[node.page] {
+                return Err(format!("prefix page {} aliased (key {key:x})", node.page));
+            }
+            seen[node.page] = true;
+            if node.chunk.len() != self.page_tokens {
+                return Err(format!("prefix node {key:x}: short chunk"));
+            }
+        }
+        let mut refs: HashMap<u64, usize> = HashMap::new();
         for (id, alloc) in &self.seqs {
-            if alloc.pages.len() != self.pages_for(alloc.tokens) {
+            if alloc.shared.len() + alloc.pages.len() != self.pages_for(alloc.tokens)
+            {
                 return Err(format!("seq {id}: page count mismatch"));
+            }
+            for &k in &alloc.shared {
+                if !self.nodes.contains_key(&k) {
+                    return Err(format!("seq {id}: shared key {k:x} has no node"));
+                }
+                *refs.entry(k).or_insert(0) += 1;
             }
             for &p in &alloc.pages {
                 if seen[p] {
                     return Err(format!("page {p} aliased (seq {id})"));
                 }
                 seen[p] = true;
+            }
+        }
+        for (key, node) in &self.nodes {
+            let counted = refs.get(key).copied().unwrap_or(0);
+            if node.refs != counted {
+                return Err(format!(
+                    "node {key:x}: refs {} but {counted} sequences reference it",
+                    node.refs
+                ));
+            }
+            if node.refs == 0 && !self.cached.contains(key) {
+                return Err(format!("node {key:x}: refs 0 but not cached"));
+            }
+        }
+        for (i, key) in self.cached.iter().enumerate() {
+            match self.nodes.get(key) {
+                None => return Err(format!("cached key {key:x} has no node")),
+                Some(n) if n.refs != 0 => {
+                    return Err(format!("cached key {key:x} has refs {}", n.refs))
+                }
+                _ => {}
+            }
+            if self.cached.iter().skip(i + 1).any(|k| k == key) {
+                return Err(format!("cached key {key:x} listed twice"));
             }
         }
         if !seen.iter().all(|&s| s) {
@@ -280,6 +617,138 @@ mod tests {
         m.check_invariants().unwrap();
     }
 
+    /// page_tokens = 16 at this geometry, so a 40-token prompt is two
+    /// matchable full chunks + one private trailing page.
+    fn prompt(tag: u16, len: usize) -> Vec<u16> {
+        (0..len).map(|i| (i as u16) ^ (tag << 8)).collect()
+    }
+
+    #[test]
+    fn shared_admission_matches_published_chunks() {
+        let mut m = KvPageManager::new(16, 64, 2);
+        let p = prompt(0, 40); // 3 pages, 2 matchable chunks
+        let a = m.admit_shared(1, 0, &p).unwrap();
+        assert_eq!(a.matched_tokens, 0, "empty index matches nothing");
+        assert_eq!(m.used_pages(), 3);
+        // publish both full chunks, in order
+        assert!(m.register_prefix(1, 0, &p[0..16]).is_some());
+        assert!(m.register_prefix(1, 0, &p[16..32]).is_some());
+        assert_eq!(m.shared_pages(), 2);
+        assert_eq!(m.seq_shared_chunks(1), Some(2));
+        m.check_invariants().unwrap();
+
+        // a same-prefix prompt now admits with 2 chunks served shared
+        let b = m.admit_shared(2, 0, &p).unwrap();
+        assert_eq!(b.matched_tokens, 32);
+        assert_eq!(b.shared_keys.len(), 2);
+        assert_eq!(m.used_pages(), 4, "second admit allocates only the tail");
+        assert_eq!(m.prefix_hits, 2);
+        assert_eq!(m.prefix_lookups, 4);
+        assert_eq!(m.pages_saved, 2);
+        m.check_invariants().unwrap();
+
+        // a different class sees nothing
+        assert_eq!(m.probe_matched_tokens(1, &p), 0);
+        // a diverging prompt matches only the common leading chunk
+        let mut q = p.clone();
+        q[20] ^= 1;
+        assert_eq!(m.probe_matched_tokens(0, &q), 16);
+
+        assert_eq!(m.release(1).unwrap(), 3);
+        assert_eq!(m.release(2).unwrap(), 3);
+        // nodes survive release at refs 0 (cached), pages stay pinned
+        assert_eq!(m.shared_pages(), 2);
+        assert_eq!(m.used_pages(), 2);
+        assert_eq!(m.available_pages(), 16);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cached_nodes_serve_matches_then_evict_under_pressure() {
+        let mut m = KvPageManager::new(4, 64, 2);
+        let p = prompt(0, 33); // 3 pages, 2 matchable
+        m.admit_shared(1, 0, &p).unwrap();
+        m.register_prefix(1, 0, &p[0..16]).unwrap();
+        m.register_prefix(1, 0, &p[16..32]).unwrap();
+        m.release(1).unwrap();
+        // refs-0 nodes still match
+        assert_eq!(m.probe_matched_tokens(0, &p), 32);
+        let a = m.admit_shared(2, 0, &p).unwrap();
+        assert_eq!(a.matched_tokens, 32);
+        m.release(2).unwrap();
+        assert!(m.drain_evicted().is_empty());
+        // allocation pressure evicts the LRU node (chunk 0 first)
+        m.admit(3, 48).unwrap(); // needs 3 of 4 pages; 2 free + evict 1
+        let dead = m.drain_evicted();
+        assert_eq!(dead.len(), 1);
+        assert_eq!(m.shared_pages(), 1);
+        // the surviving chunk-1 node is an orphan: unreachable by the
+        // chain walk until its parent is republished
+        assert_eq!(m.probe_matched_tokens(0, &p), 0);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn orphan_reattaches_when_parent_is_republished() {
+        let mut m = KvPageManager::new(8, 64, 2);
+        let p = prompt(0, 40);
+        m.admit_shared(1, 0, &p).unwrap();
+        m.register_prefix(1, 0, &p[0..16]).unwrap();
+        m.register_prefix(1, 0, &p[16..32]).unwrap();
+        m.release(1).unwrap();
+        // evict exactly the LRU node (chunk 0): burn the freelist first
+        m.admit(9, 6 * 16).unwrap(); // 6 pages; 6 free → freelist empty
+        m.admit(10, 16).unwrap(); // evicts chunk 0
+        assert_eq!(m.drain_evicted().len(), 1);
+        m.release(9).unwrap();
+        m.release(10).unwrap();
+        assert_eq!(m.probe_matched_tokens(0, &p), 0, "chain broken at chunk 0");
+        // a new sequence republishes chunk 0; the orphan chunk-1 node is
+        // content-addressed, so the chain heals and both match again
+        m.admit_shared(2, 0, &p).unwrap();
+        m.register_prefix(2, 0, &p[0..16]).unwrap();
+        assert_eq!(m.probe_matched_tokens(0, &p), 32);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn occupied_address_keeps_the_page_private() {
+        let mut m = KvPageManager::new(8, 64, 2);
+        let p = prompt(0, 33);
+        m.admit_shared(1, 0, &p).unwrap();
+        m.admit_shared(2, 0, &p).unwrap(); // concurrent admit: no match yet
+        assert!(m.register_prefix(1, 0, &p[0..16]).is_some());
+        // same address already published: seq 2 keeps its private page
+        assert!(m.register_prefix(2, 0, &p[0..16]).is_none());
+        assert_eq!(m.seq_shared_chunks(2), Some(0));
+        assert_eq!(m.shared_pages(), 1);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn three_page_pool_rejects_distinct_but_admits_shared() {
+        // The ISSUE acceptance shape, at the accounting level: two
+        // 2-page prompts cannot coexist in 3 pages when distinct, but
+        // can when they share their leading chunk.
+        let mut distinct = KvPageManager::new(3, 64, 2);
+        distinct.admit_shared(1, 0, &prompt(1, 20)).unwrap(); // 2 pages
+        assert_eq!(
+            distinct.admit_shared(2, 0, &prompt(2, 20)),
+            Err(PageError::OutOfPages)
+        );
+
+        let mut shared = KvPageManager::new(3, 64, 2);
+        let p = prompt(3, 20); // chunk 0 full + 4-token tail
+        let mut q = p.clone();
+        q[18] ^= 1; // distinct tails, common 16-token prefix
+        shared.admit_shared(1, 0, &p).unwrap();
+        shared.register_prefix(1, 0, &p[0..16]).unwrap();
+        let b = shared.admit_shared(2, 0, &q).unwrap();
+        assert_eq!(b.matched_tokens, 16);
+        assert_eq!(shared.used_pages(), 3); // 1 shared + 2 private tails
+        shared.check_invariants().unwrap();
+    }
+
     #[test]
     fn prop_no_alias_no_leak() {
         // Random admit/extend/release traffic: pages never alias, never
@@ -314,6 +783,80 @@ mod tests {
                     m.check_invariants()?;
                 }
                 Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_shared_cycles_never_leak_or_double_free() {
+        // The refcount state space: random admit_shared / register /
+        // extend / release traffic over prompts drawn from a small pool
+        // of shared stems (forcing heavy prefix overlap), with LRU
+        // eviction in play on a tight 12-page pool. Invariants must hold
+        // after every op.
+        prop::forall(
+            "kv_prefix_refcount_invariant",
+            prop::Config { cases: 64, ..Default::default() },
+            |rng| {
+                (0..rng.below(100) + 30)
+                    .map(|_| {
+                        (
+                            rng.below(4) as u8,
+                            rng.below(6) as u64,
+                            rng.below(3) as u16, // stem pool of 3
+                            rng.below(60) + 4,
+                        )
+                    })
+                    .collect::<Vec<(u8, u64, u16, usize)>>()
+            },
+            |ops| {
+                let mut m = KvPageManager::new(12, 64, 2);
+                let mut live: Vec<(u64, u16)> = Vec::new();
+                for &(op, id, stem, len) in ops {
+                    match op {
+                        0 => {
+                            if !live.iter().any(|(x, _)| *x == id)
+                                && m.admit_shared(id, 0, &prompt(stem, len)).is_ok()
+                            {
+                                live.push((id, stem));
+                            }
+                        }
+                        1 => {
+                            // publish the next full chunk if the seq has one
+                            if let (Some(done), Some(tok)) =
+                                (m.seq_shared_chunks(id), m.seq_tokens(id))
+                            {
+                                let pt = m.page_tokens;
+                                let stem = live
+                                    .iter()
+                                    .find(|(x, _)| *x == id)
+                                    .map(|(_, s)| *s)
+                                    .unwrap_or(0);
+                                if (done + 1) * pt < tok {
+                                    let p = prompt(stem, (done + 1) * pt);
+                                    let _ =
+                                        m.register_prefix(id, 0, &p[done * pt..]);
+                                }
+                            }
+                        }
+                        2 => {
+                            let _ = m.extend(id, len);
+                        }
+                        _ => {
+                            if m.release(id).is_ok() {
+                                live.retain(|(x, _)| *x != id);
+                            }
+                        }
+                    }
+                    let _ = m.drain_evicted();
+                    m.check_invariants()?;
+                }
+                // full teardown: releasing everything must leave only
+                // free + cached pages, never a leak
+                for (id, _) in live.clone() {
+                    m.release(id).map_err(|e| format!("teardown: {e:?}"))?;
+                }
+                m.check_invariants()
             },
         );
     }

@@ -10,6 +10,15 @@
 //! tokens/s plus latency percentiles — the series committed in
 //! `BENCH_http.json` at connection counts {1, 4, 16}.
 //!
+//! With [`LoadgenConfig::shared_prefix_len`] > 0 the generator runs the
+//! **shared-prefix scenario**: every request carries the same
+//! deterministic "system prompt" of that many tokens followed by a
+//! distinct per-(connection, request) tail, which is exactly the shape
+//! the server's content-addressed prefix cache accelerates. The report
+//! then also carries client-side time-to-first-token percentiles and the
+//! server's prefix-cache hit rate / pages-saved deltas (scraped from
+//! `/metrics` before and after the run).
+//!
 //! The client half ([`HttpClient`]) is intentionally tiny: blocking
 //! `TcpStream`, `Content-Length` and chunked-transfer decoding, nothing
 //! else. It exists because the build is offline (no reqwest/hyper) and
@@ -86,11 +95,47 @@ impl HttpClient {
             .map_err(|e| format!("send: {e}"))?;
         read_http_reply(&mut self.reader)
     }
+
+    /// Like [`HttpClient::request`], but also reports the caller's timer
+    /// reading at the moment the first body bytes landed — the
+    /// client-side time-to-first-token for streamed replies (the server
+    /// emits one chunk per token), and time-to-full-response for unary
+    /// ones.
+    pub fn request_timed(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+        timer: &Timer,
+    ) -> Result<(HttpReply, f64), String> {
+        let body = body.unwrap_or("");
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: arcquant\r\n\
+             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            body.len()
+        );
+        self.writer
+            .write_all(head.as_bytes())
+            .and_then(|()| self.writer.write_all(body.as_bytes()))
+            .map_err(|e| format!("send: {e}"))?;
+        let (reply, ttft) = read_reply_with_ttft(&mut self.reader, Some(timer))?;
+        Ok((reply, ttft.unwrap_or(0.0)))
+    }
 }
 
 /// Parse one response off a buffered connection (status line, headers,
 /// then a `Content-Length` or chunked body).
 fn read_http_reply<R: BufRead>(r: &mut R) -> Result<HttpReply, String> {
+    read_reply_with_ttft(r, None).map(|(reply, _)| reply)
+}
+
+/// Core response parser. When `timer` is given, stamps its reading at
+/// the moment the first body bytes are fully read: the first chunk for
+/// chunked replies, the whole body for `Content-Length` ones.
+fn read_reply_with_ttft<R: BufRead>(
+    r: &mut R,
+    timer: Option<&Timer>,
+) -> Result<(HttpReply, Option<f64>), String> {
     let mut line = String::new();
     r.read_line(&mut line).map_err(|e| format!("status line: {e}"))?;
     if line.is_empty() {
@@ -134,6 +179,7 @@ fn read_http_reply<R: BufRead>(r: &mut R) -> Result<HttpReply, String> {
         headers.push((k, v));
     }
 
+    let mut ttft: Option<f64> = None;
     if chunked {
         let mut chunks = Vec::new();
         let mut body = String::new();
@@ -150,29 +196,39 @@ fn read_http_reply<R: BufRead>(r: &mut R) -> Result<HttpReply, String> {
             }
             let mut buf = vec![0u8; n + 2]; // data + CRLF
             r.read_exact(&mut buf).map_err(|e| format!("chunk: {e}"))?;
+            if ttft.is_none() {
+                ttft = timer.map(|t| t.ms());
+            }
             let data = String::from_utf8(buf[..n].to_vec())
                 .map_err(|e| format!("chunk utf8: {e}"))?;
             body.push_str(&data);
             chunks.push(data);
         }
-        return Ok(HttpReply {
-            status,
-            headers,
-            body,
-            chunks: Some(chunks),
-        });
+        return Ok((
+            HttpReply {
+                status,
+                headers,
+                body,
+                chunks: Some(chunks),
+            },
+            ttft,
+        ));
     }
 
     let n = content_len.ok_or("response without Content-Length or chunking")?;
     let mut buf = vec![0u8; n];
     r.read_exact(&mut buf).map_err(|e| format!("body: {e}"))?;
+    let ttft = timer.map(|t| t.ms());
     let body = String::from_utf8(buf).map_err(|e| format!("body utf8: {e}"))?;
-    Ok(HttpReply {
-        status,
-        headers,
-        body,
-        chunks: None,
-    })
+    Ok((
+        HttpReply {
+            status,
+            headers,
+            body,
+            chunks: None,
+        },
+        ttft,
+    ))
 }
 
 /// Config of a closed-loop load-generation run.
@@ -195,6 +251,11 @@ pub struct LoadgenConfig {
     pub stream: bool,
     /// prompt-content seed, mixed into every token
     pub seed: u64,
+    /// shared-prefix scenario: tokens of identical "system prompt"
+    /// prepended to every request's distinct tail (0 = off). With this
+    /// on, the report also carries TTFT percentiles and the server's
+    /// prefix-cache deltas scraped from `/metrics`.
+    pub shared_prefix_len: usize,
 }
 
 impl Default for LoadgenConfig {
@@ -209,6 +270,7 @@ impl Default for LoadgenConfig {
             vocab: 256,
             stream: false,
             seed: 0,
+            shared_prefix_len: 0,
         }
     }
 }
@@ -233,6 +295,17 @@ pub struct LoadgenReport {
     pub p90_ms: f64,
     pub p99_ms: f64,
     pub mean_ms: f64,
+    /// client-side time-to-first-token percentiles: first streamed chunk
+    /// for `stream` runs, whole-response time for unary ones
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+    /// prefix-cache hit rate over this run (Δhits / Δlookups scraped
+    /// from `/metrics`; 0.0 when no lookups happened or the scrape
+    /// failed)
+    pub prefix_hit_rate: f64,
+    /// KV pages the server avoided allocating thanks to prefix sharing
+    /// during this run (Δ of `arcquant_kv_pages_saved_total`)
+    pub pages_saved: u64,
 }
 
 /// Deterministic synthetic prompt for (connection, request) — the same
@@ -250,6 +323,56 @@ pub fn loadgen_prompt(
             ((i * 37 + conn * 91 + req * 13 + 7 + seed as usize) % vocab) as u16
         })
         .collect()
+}
+
+/// The deterministic common "system prompt" of the shared-prefix
+/// scenario: depends only on (len, vocab, seed), never on the
+/// connection or request index, so every request shares it verbatim.
+pub fn shared_prefix(len: usize, vocab: usize, seed: u64) -> Vec<u16> {
+    (0..len)
+        .map(|i| ((i * 53 + 11 + seed as usize * 17) % vocab) as u16)
+        .collect()
+}
+
+/// Read one un-labelled numeric sample out of a Prometheus text render:
+/// the value on the first line whose first token equals `family`.
+pub fn scrape_metric(metrics_body: &str, family: &str) -> Option<f64> {
+    metrics_body
+        .lines()
+        .filter(|l| !l.starts_with('#'))
+        .find_map(|l| {
+            let mut parts = l.split_whitespace();
+            (parts.next() == Some(family))
+                .then(|| parts.next().and_then(|v| v.parse().ok()))
+                .flatten()
+        })
+}
+
+/// Prefix-cache counter snapshot scraped from `/metrics`, for
+/// before/after deltas around a loadgen run. All zeros when the scrape
+/// fails (e.g. server without the families) — deltas then read 0.
+#[derive(Clone, Copy, Debug, Default)]
+struct PrefixCounters {
+    lookups: f64,
+    hits: f64,
+    pages_saved: f64,
+}
+
+fn scrape_prefix_counters(addr: &str) -> PrefixCounters {
+    let Ok(mut client) = HttpClient::connect(addr) else {
+        return PrefixCounters::default();
+    };
+    let Ok(reply) = client.request("GET", "/metrics", None) else {
+        return PrefixCounters::default();
+    };
+    PrefixCounters {
+        lookups: scrape_metric(&reply.body, "arcquant_prefix_cache_lookups_total")
+            .unwrap_or(0.0),
+        hits: scrape_metric(&reply.body, "arcquant_prefix_cache_hits_total")
+            .unwrap_or(0.0),
+        pages_saved: scrape_metric(&reply.body, "arcquant_kv_pages_saved_total")
+            .unwrap_or(0.0),
+    }
 }
 
 /// Build the `/v1/generate` body for one loadgen request.
@@ -281,17 +404,22 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
         return Err("loadgen: prompt_len must be ≥ 1".into());
     }
     let latencies = Mutex::new(Vec::<f64>::new());
+    let ttfts = Mutex::new(Vec::<f64>::new());
     let by_status = Mutex::new(BTreeMap::<u16, usize>::new());
     let tokens = Mutex::new(0usize);
     let transport_errors = Mutex::new(0usize);
+    let prefix = shared_prefix(cfg.shared_prefix_len, cfg.vocab, cfg.seed);
+    let counters_before = scrape_prefix_counters(&cfg.addr);
 
     let wall = Timer::start();
     std::thread::scope(|scope| {
         for conn in 0..cfg.connections {
             let latencies = &latencies;
+            let ttfts = &ttfts;
             let by_status = &by_status;
             let tokens = &tokens;
             let transport_errors = &transport_errors;
+            let prefix = &prefix;
             scope.spawn(move || {
                 let mut client = match HttpClient::connect(&cfg.addr) {
                     Ok(c) => c,
@@ -301,13 +429,14 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
                     }
                 };
                 for req in 0..cfg.requests_per_conn {
-                    let prompt = loadgen_prompt(
+                    let mut prompt = prefix.clone();
+                    prompt.extend(loadgen_prompt(
                         conn,
                         req,
                         cfg.prompt_len,
                         cfg.vocab,
                         cfg.seed,
-                    );
+                    ));
                     let body = loadgen_body(
                         &prompt,
                         cfg.max_new_tokens,
@@ -315,8 +444,9 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
                         cfg.stream,
                     );
                     let t = Timer::start();
-                    match client.request("POST", "/v1/generate", Some(&body)) {
-                        Ok(reply) => {
+                    match client.request_timed("POST", "/v1/generate", Some(&body), &t)
+                    {
+                        Ok((reply, ttft_ms)) => {
                             latencies.lock().unwrap().push(t.ms());
                             *by_status
                                 .lock()
@@ -324,6 +454,7 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
                                 .entry(reply.status)
                                 .or_insert(0) += 1;
                             if reply.status == 200 {
+                                ttfts.lock().unwrap().push(ttft_ms);
                                 *tokens.lock().unwrap() +=
                                     count_tokens(&reply);
                             }
@@ -339,8 +470,10 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
         }
     });
     let wall_ms = wall.ms();
+    let counters_after = scrape_prefix_counters(&cfg.addr);
 
     let latencies = latencies.into_inner().unwrap();
+    let ttfts = ttfts.into_inner().unwrap();
     let by_status = by_status.into_inner().unwrap();
     let generated_tokens = tokens.into_inner().unwrap();
     let transport_errors = transport_errors.into_inner().unwrap();
@@ -369,6 +502,18 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
         } else {
             latencies.iter().sum::<f64>() / latencies.len() as f64
         },
+        ttft_p50_ms: stats::percentile(&ttfts, 50.0),
+        ttft_p99_ms: stats::percentile(&ttfts, 99.0),
+        prefix_hit_rate: {
+            let lookups = counters_after.lookups - counters_before.lookups;
+            if lookups > 0.0 {
+                (counters_after.hits - counters_before.hits) / lookups
+            } else {
+                0.0
+            }
+        },
+        pages_saved: (counters_after.pages_saved - counters_before.pages_saved)
+            .max(0.0) as u64,
     })
 }
 
@@ -432,6 +577,54 @@ mod tests {
         assert!(b.contains("\"variant\":\"fp32\""));
         assert!(b.contains("\"stream\":true"));
         assert!(b.contains("\"max_new_tokens\":4"));
+    }
+
+    #[test]
+    fn shared_prefix_is_common_across_conn_and_req() {
+        let p = shared_prefix(12, 256, 5);
+        assert_eq!(p, shared_prefix(12, 256, 5));
+        assert_eq!(p.len(), 12);
+        assert!(p.iter().all(|&t| (t as usize) < 256));
+        // different seed ⇒ different content (with these constants)
+        assert_ne!(p, shared_prefix(12, 256, 6));
+        assert!(shared_prefix(0, 256, 5).is_empty());
+    }
+
+    #[test]
+    fn scrape_metric_reads_prometheus_families() {
+        let body = "# HELP arcquant_prefix_cache_hits_total hits\n\
+                    # TYPE arcquant_prefix_cache_hits_total counter\n\
+                    arcquant_prefix_cache_hits_total 42\n\
+                    arcquant_prefix_cache_hit_rate 0.75\n";
+        assert_eq!(
+            scrape_metric(body, "arcquant_prefix_cache_hits_total"),
+            Some(42.0)
+        );
+        assert_eq!(
+            scrape_metric(body, "arcquant_prefix_cache_hit_rate"),
+            Some(0.75)
+        );
+        assert_eq!(scrape_metric(body, "arcquant_missing"), None);
+    }
+
+    #[test]
+    fn ttft_stamped_at_first_chunk_and_unary_body() {
+        let t = Timer::start();
+        let raw = "HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\n\
+                   3\r\nabc\r\n2\r\nde\r\n0\r\n\r\n";
+        let (r, ttft) =
+            read_reply_with_ttft(&mut Cursor::new(raw), Some(&t)).unwrap();
+        assert_eq!(r.body, "abcde");
+        assert!(ttft.is_some());
+        let raw = "HTTP/1.1 200 OK\r\nContent-Length: 2\r\n\r\n{}";
+        let (r, ttft) =
+            read_reply_with_ttft(&mut Cursor::new(raw), Some(&t)).unwrap();
+        assert_eq!(r.body, "{}");
+        assert!(ttft.is_some());
+        // without a timer no stamp is produced
+        let raw = "HTTP/1.1 200 OK\r\nContent-Length: 2\r\n\r\n{}";
+        let (_, ttft) = read_reply_with_ttft(&mut Cursor::new(raw), None).unwrap();
+        assert!(ttft.is_none());
     }
 
     #[test]

@@ -96,6 +96,17 @@ pub struct Metrics {
     /// batched decode ticks executed / tokens sampled from them
     pub decode_ticks: AtomicU64,
     pub decode_tokens: AtomicU64,
+    /// chunked-prefill forwards executed (one per sequence per tick
+    /// while its prompt is filling)
+    pub prefill_chunks: AtomicU64,
+    /// prefix-cache accounting, mirrored from the page manager every
+    /// admission: matchable prompt chunks probed / chunks served from
+    /// the index / pages (prefills) the sharing saved
+    pub prefix_lookups: AtomicU64,
+    pub prefix_hits: AtomicU64,
+    pub kv_pages_saved: AtomicU64,
+    /// gauge: pages currently owned by the shared prefix index
+    pub kv_shared_pages: AtomicU64,
     /// generated tokens per variant, indexed by [`Variant::index`]
     pub tokens_by_variant: [AtomicU64; 4],
     /// end-to-end request latency (submit → completion), ms
@@ -232,6 +243,26 @@ impl Metrics {
             "Tokens sampled from batched decode steps.",
             Metrics::get(&self.decode_tokens),
         );
+        counter(
+            "arcquant_prefill_chunks_total",
+            "Chunked-prefill forwards executed (Sarathi-style admission).",
+            Metrics::get(&self.prefill_chunks),
+        );
+        counter(
+            "arcquant_prefix_cache_lookups_total",
+            "Matchable prompt chunks probed against the shared-prefix index.",
+            Metrics::get(&self.prefix_lookups),
+        );
+        counter(
+            "arcquant_prefix_cache_hits_total",
+            "Prompt chunks served from the shared-prefix index (refcount bumps).",
+            Metrics::get(&self.prefix_hits),
+        );
+        counter(
+            "arcquant_kv_pages_saved_total",
+            "KV pages (and their prefill recomputation) saved by prefix sharing.",
+            Metrics::get(&self.kv_pages_saved),
+        );
 
         let _ = writeln!(
             o,
@@ -277,6 +308,27 @@ impl Metrics {
             "Total pages in the KV page pool.",
             Metrics::get(&self.kv_pages_total),
         );
+        gauge(
+            "arcquant_kv_shared_pages",
+            "Pages currently owned by the shared prefix index.",
+            Metrics::get(&self.kv_shared_pages),
+        );
+        {
+            let lookups = Metrics::get(&self.prefix_lookups);
+            let hits = Metrics::get(&self.prefix_hits);
+            let rate = if lookups > 0 {
+                hits as f64 / lookups as f64
+            } else {
+                0.0
+            };
+            let _ = writeln!(
+                o,
+                "# HELP arcquant_prefix_cache_hit_rate Prefix-cache hit rate \
+                 (hits / lookups since start)."
+            );
+            let _ = writeln!(o, "# TYPE arcquant_prefix_cache_hit_rate gauge");
+            let _ = writeln!(o, "arcquant_prefix_cache_hit_rate {rate}");
+        }
 
         // Info-style gauge: constant 1, the label carries the value. The
         // path is resolved once per process (see `tensor::simd`), so this
@@ -421,6 +473,11 @@ mod tests {
         m.record_http_status(429);
         m.add_variant_tokens(Variant::ArcPacked, 7);
         Metrics::set_gauge(&m.kv_pages_total, 64);
+        Metrics::set_gauge(&m.prefix_lookups, 4);
+        Metrics::set_gauge(&m.prefix_hits, 3);
+        Metrics::set_gauge(&m.kv_pages_saved, 3);
+        Metrics::set_gauge(&m.kv_shared_pages, 2);
+        Metrics::inc(&m.prefill_chunks);
         m.record_stage("decode:fp32", 2.5);
         let text = m.render_prometheus();
         for needle in [
@@ -435,6 +492,12 @@ mod tests {
             "arcquant_queue_depth 0",
             "arcquant_kv_pages_used 0",
             "arcquant_kv_pages_total 64",
+            "arcquant_prefill_chunks_total 1",
+            "arcquant_prefix_cache_lookups_total 4",
+            "arcquant_prefix_cache_hits_total 3",
+            "arcquant_kv_pages_saved_total 3",
+            "arcquant_kv_shared_pages 2",
+            "arcquant_prefix_cache_hit_rate 0.75",
             "arcquant_request_latency_ms_bucket{le=\"+Inf\"} 1",
             "arcquant_request_latency_ms_count 1",
             "arcquant_stage_ms_total{stage=\"decode:fp32\"} 2.5",

@@ -23,10 +23,12 @@
 //!
 //! The **generation path** ([`generate`]) runs the same front door into a
 //! continuous-batching decode executor: requests admit against the page
-//! manager, prefill once, then join a per-variant running batch that
+//! manager (crediting shared-prefix pages already resident in the
+//! content-addressed prefix index), prefill in bounded chunks interleaved
+//! with decode (Sarathi-style), then join a per-variant running batch that
 //! advances one batched `decode_batch` step per scheduler tick
 //! (Orca-style iteration-level scheduling), releasing pages as sequences
-//! retire. See `docs/decode_serving.md`.
+//! retire. See `docs/decode_serving.md` and `docs/kv_cache.md`.
 //!
 //! The **network frontend** ([`http`]) exposes that generation path over
 //! a dependency-free HTTP/1.1 server: concurrent TCP clients POST
@@ -52,9 +54,10 @@ pub use generate::{
     GenerateServeConfig,
 };
 pub use http::{HttpServeConfig, HttpServer};
-pub use kvcache::{KvPageManager, PageError};
+pub use kvcache::{KvPageManager, PageError, SharedAdmit};
 pub use loadgen::{
-    run_loadgen, HttpClient, HttpReply, LoadgenConfig, LoadgenReport,
+    run_loadgen, scrape_metric, shared_prefix, HttpClient, HttpReply,
+    LoadgenConfig, LoadgenReport,
 };
 pub use metrics::Metrics;
 pub use request::{

@@ -1,5 +1,14 @@
 //! Admission router: variant selection, length validation, and
 //! queue-depth backpressure — the front door of the serving stack.
+//!
+//! There is exactly **one** page/batch admission codepath, and it is not
+//! here: the `Router` only performs stateless front-door checks (empty or
+//! oversized prompts, queue shedding). KV-page accounting — including
+//! shared-prefix-aware admission via
+//! `KvPageManager::can_admit_shared` — happens in `SchedCore::admission`
+//! (see [`super::generate`]), which owns the page manager and the running
+//! batch. Keeping the router free of page math means the two layers can
+//! never disagree about whether a request fits.
 
 use super::batcher::BatcherConfig;
 use super::request::{GenerateRequest, PrefillRequest, Variant};
@@ -62,8 +71,9 @@ impl Router {
 
     /// Admission decision for a generation request. Same front-door checks
     /// as prefill (empty/oversized prompt, queue shedding) plus a zero
-    /// generation budget check; KV **page** admission happens later, at
-    /// the executor, which owns the page manager.
+    /// generation budget check; KV **page** admission happens later, in
+    /// `SchedCore::admission` — the sole page/batch admission codepath —
+    /// which owns the page manager and can credit shared-prefix matches.
     pub fn admit_generate(
         &self,
         req: &GenerateRequest,

@@ -635,6 +635,33 @@ impl QuantizedMat {
         }
     }
 
+    /// Slice rows `[r0, r0+n)` into a standalone matrix — a pure byte
+    /// copy at the uniform per-row strides (codes, scale codes, decoded
+    /// scales), no re-quantization. Because decoding is per-(row, block)
+    /// through `scales_f32`, the extracted rows decode *bit-identically*
+    /// to the same rows of `self`; this is how the KV cache carves
+    /// immutable shared-prefix segments out of a sequence's pages. The
+    /// advisory `tensor_scale` is carried over unchanged (per-row scale
+    /// codes stay authoritative, as in [`RowQuantizer::quantize_rowwise`]).
+    pub fn row_range(&self, r0: usize, n: usize) -> QuantizedMat {
+        assert!(r0 + n <= self.rows, "row_range: rows out of bounds");
+        let bpr = self.blocks_per_row();
+        let rb = bpr * self.block_bytes();
+        QuantizedMat {
+            fmt: self.fmt,
+            rows: n,
+            cols: self.cols,
+            codes: self.codes[r0 * rb..(r0 + n) * rb].to_vec(),
+            scale_codes: if self.scale_codes.is_empty() {
+                Vec::new()
+            } else {
+                self.scale_codes[r0 * bpr..(r0 + n) * bpr].to_vec()
+            },
+            scales_f32: self.scales_f32[r0 * bpr..(r0 + n) * bpr].to_vec(),
+            tensor_scale: self.tensor_scale,
+        }
+    }
+
     /// Actual packed storage footprint in bytes.
     pub fn packed_bytes(&self) -> u64 {
         (self.codes.len() + self.scale_codes.len()) as u64
@@ -1083,6 +1110,39 @@ mod tests {
         q.append_row(&mut grown, &spike);
         assert_eq!(&grown.codes[..codes_before.len()], &codes_before[..]);
         assert_eq!(&grown.scales_f32[..scales_before.len()], &scales_before[..]);
+    }
+
+    #[test]
+    fn row_range_decodes_bit_identically_to_source_rows() {
+        // The shared-prefix extraction contract: a row_range slice must
+        // decode to exactly the bits the same rows decode to in place —
+        // for every format class (E4M3 scale codes, E8M0, f32-only) and
+        // for ragged cols.
+        let mut rng = Prng::new(97);
+        for cols in [41usize, 64] {
+            let m = rand_mat(&mut rng, 7, cols, true);
+            for fmt in [Format::Nvfp4, Format::Mxfp4, Format::Int4 { group: 16 }] {
+                let qm = RowQuantizer::new(fmt).quantize_rowwise(&m);
+                let full = qm.dequantize();
+                for (r0, n) in [(0usize, 3usize), (2, 4), (6, 1), (0, 7), (3, 0)] {
+                    let seg = qm.row_range(r0, n);
+                    assert_eq!((seg.rows, seg.cols), (n, cols));
+                    let got = seg.dequantize();
+                    let want: Vec<u32> = (r0..r0 + n)
+                        .flat_map(|r| full.row(r).iter().map(|v| v.to_bits()))
+                        .collect();
+                    let bits: Vec<u32> =
+                        got.data.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(bits, want, "{fmt:?} cols={cols} [{r0},+{n})");
+                    // and appending to the slice keeps working
+                    if n > 0 {
+                        let mut grown = seg.clone();
+                        RowQuantizer::new(fmt).append_row(&mut grown, m.row(0));
+                        assert_eq!(grown.rows, n + 1);
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -77,11 +77,21 @@ USAGE: arcquant <subcommand> [--flags]
                           same --kv-pages budget admits more sequences)
             [--top-k K]  (sample instead of greedy decode)
             [--queue-cap 64] [--max-len 512] [--serve-for SECS] (HTTP knobs)
+            [--prefill-chunk 64]  (Sarathi-style chunked prefill: at most
+                          this many prompt tokens per scheduler tick;
+                          0 = whole prompt in one chunk)
+            [--no-prefix-share]  (disable the content-addressed
+                          shared-prefix KV cache; outputs are bit-identical
+                          either way, sharing only saves pages and prefill)
   loadgen   --addr HOST:PORT [--connections 4] [--requests 8]
             [--prompt-len 16] [--max-new 8] [--variant V] [--vocab 256]
             [--stream] [--smoke]   (closed-loop HTTP load generator:
                           tok/s + latency percentiles; --smoke shrinks
                           everything for CI)
+            [--shared-prefix N]  (shared-prefix scenario: every request
+                          carries the same N-token system prompt plus a
+                          distinct tail; implies --stream and reports TTFT
+                          p50/p99 + prefix-cache hit rate / pages saved)
   calibrate --model NAME [--windows 8] [--window-len 128] [--out FILE]
   eval      --model NAME --method fp16|rtn|smooth|quarot|atom|flatquant|w4a8|arcquant
             [--format nvfp4|mxfp4|int4]
@@ -393,14 +403,16 @@ fn cmd_serve(args: &Args) -> i32 {
         if let Some(max_new) = generate {
             // generation workload: continuous-batching decode over the
             // paged KV-cache, decode tokens/s per variant
-            let parsed = (|| -> Result<(usize, usize, usize), String> {
+            let parsed = (|| -> Result<(usize, usize, usize, usize), String> {
                 Ok((
                     args.usize_or("prompt-len", 32)?,
                     args.usize_or("decode-batch", 8)?,
                     args.usize_or("kv-pages", 512)?,
+                    args.usize_or("prefill-chunk", 64)?,
                 ))
             })();
-            let (prompt_len, decode_batch, kv_pages) = match parsed {
+            let (prompt_len, decode_batch, kv_pages, prefill_chunk) = match parsed
+            {
                 Ok(v) => v,
                 Err(e) => {
                     eprintln!("{e}");
@@ -415,6 +427,8 @@ fn cmd_serve(args: &Args) -> i32 {
                 kv_pages,
                 kv_format,
                 sampler,
+                prefill_chunk,
+                share_prefix: !args.bool_flag("no-prefix-share"),
                 // the router's prompt cap must track the requested prompt
                 // length or every request would be shed at the front door
                 router: RouterConfig {
@@ -492,17 +506,19 @@ fn cmd_serve_http(
     generate: Option<usize>,
 ) -> i32 {
     use std::io::Write as _;
-    let parsed = (|| -> Result<(usize, usize, usize, usize, usize, u64), String> {
-        Ok((
-            args.usize_or("decode-batch", 8)?,
-            args.usize_or("kv-pages", 512)?,
-            args.usize_or("queue-cap", 64)?,
-            args.usize_or("max-len", 512)?,
-            args.usize_or("serve-for", 0)?,
-            args.u64_or("seed", 0)?,
-        ))
-    })();
-    let (decode_batch, kv_pages, queue_cap, max_len, serve_for, seed) =
+    let parsed =
+        (|| -> Result<(usize, usize, usize, usize, usize, u64, usize), String> {
+            Ok((
+                args.usize_or("decode-batch", 8)?,
+                args.usize_or("kv-pages", 512)?,
+                args.usize_or("queue-cap", 64)?,
+                args.usize_or("max-len", 512)?,
+                args.usize_or("serve-for", 0)?,
+                args.u64_or("seed", 0)?,
+                args.usize_or("prefill-chunk", 64)?,
+            ))
+        })();
+    let (decode_batch, kv_pages, queue_cap, max_len, serve_for, seed, prefill_chunk) =
         match parsed {
             Ok(v) => v,
             Err(e) => {
@@ -519,6 +535,8 @@ fn cmd_serve_http(
         default_max_new: generate.unwrap_or(16),
         sampler,
         seed,
+        prefill_chunk,
+        share_prefix: !args.bool_flag("no-prefix-share"),
         ..Default::default()
     };
     let variants: Vec<&'static str> =
@@ -559,23 +577,26 @@ fn cmd_loadgen(args: &Args) -> i32 {
     };
     let smoke = args.bool_flag("smoke");
     let d = |full: usize, small: usize| if smoke { small } else { full };
-    let parsed = (|| -> Result<(usize, usize, usize, usize, usize, u64), String> {
-        Ok((
-            args.usize_or("connections", d(4, 2))?,
-            args.usize_or("requests", d(8, 2))?,
-            args.usize_or("prompt-len", d(16, 8))?,
-            args.usize_or("max-new", d(8, 4))?,
-            args.usize_or("vocab", 256)?,
-            args.u64_or("seed", 0)?,
-        ))
-    })();
-    let (connections, requests, prompt_len, max_new, vocab, seed) = match parsed {
-        Ok(v) => v,
-        Err(e) => {
-            eprintln!("{e}");
-            return 2;
-        }
-    };
+    let parsed =
+        (|| -> Result<(usize, usize, usize, usize, usize, u64, usize), String> {
+            Ok((
+                args.usize_or("connections", d(4, 2))?,
+                args.usize_or("requests", d(8, 2))?,
+                args.usize_or("prompt-len", d(16, 8))?,
+                args.usize_or("max-new", d(8, 4))?,
+                args.usize_or("vocab", 256)?,
+                args.u64_or("seed", 0)?,
+                args.usize_or("shared-prefix", 0)?,
+            ))
+        })();
+    let (connections, requests, prompt_len, max_new, vocab, seed, shared_prefix) =
+        match parsed {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
     let variant = match args.str_flag("variant") {
         None => None,
         Some(v) => match Variant::parse(v) {
@@ -594,8 +615,11 @@ fn cmd_loadgen(args: &Args) -> i32 {
         max_new_tokens: max_new,
         variant,
         vocab,
-        stream: args.bool_flag("stream"),
+        // TTFT is only observable per-token, so the shared-prefix
+        // scenario always streams
+        stream: args.bool_flag("stream") || shared_prefix > 0,
         seed,
+        shared_prefix_len: shared_prefix,
     };
     match run_loadgen(&cfg) {
         Ok(r) => {
@@ -615,6 +639,17 @@ fn cmd_loadgen(args: &Args) -> i32 {
                 "  latency p50 {:.1}ms  p90 {:.1}ms  p99 {:.1}ms  mean {:.1}ms",
                 r.p50_ms, r.p90_ms, r.p99_ms, r.mean_ms
             );
+            if cfg.shared_prefix_len > 0 {
+                println!(
+                    "  shared prefix {} tokens: ttft p50 {:.1}ms  p99 {:.1}ms  \
+                     prefix hit rate {:.2}  pages saved {}",
+                    cfg.shared_prefix_len,
+                    r.ttft_p50_ms,
+                    r.ttft_p99_ms,
+                    r.prefix_hit_rate,
+                    r.pages_saved
+                );
+            }
             for (status, count) in &r.by_status {
                 println!("  status {status}: {count}");
             }
@@ -623,6 +658,14 @@ fn cmd_loadgen(args: &Args) -> i32 {
                 "LOADGEN ok={} errors={} tok_s={:.1} p99_ms={:.1}",
                 r.ok, r.errors, r.tok_s, r.p99_ms
             );
+            if cfg.shared_prefix_len > 0 {
+                // greppable shared-prefix summary for the CI gate
+                println!(
+                    "LOADGEN_PREFIX hit_rate={:.3} pages_saved={} \
+                     ttft_p50_ms={:.1} ttft_p99_ms={:.1}",
+                    r.prefix_hit_rate, r.pages_saved, r.ttft_p50_ms, r.ttft_p99_ms
+                );
+            }
             if r.errors == 0 && r.ok == r.requests {
                 0
             } else {

@@ -13,6 +13,7 @@ use crate::formats::{KvFormat, QuantizedMat, RowQuantizer};
 use crate::tensor::{matmul_nt, Mat};
 use crate::util::pool;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum EngineMode {
@@ -79,6 +80,43 @@ enum KvStore {
     Quant { k: Vec<QuantizedMat>, v: Vec<QuantizedMat> },
 }
 
+/// An immutable, shareable span of cached K/V rows — the unit of
+/// shared-prefix reuse.
+///
+/// A segment is cut out of a donor cache once a prefix chunk is fully
+/// prefilled ([`KvCache::extract_seg`]) and aliased (behind an [`Arc`])
+/// onto later sequences' caches ([`KvCache::push_prefix_seg`]). Because
+/// K/V rows quantize once on write and history is never re-quantized,
+/// the extracted bytes are a pure function of the token chain and its
+/// absolute positions — reading them in place of a private recompute is
+/// bit-exact, which is what lets the page manager refcount prefix pages
+/// instead of copying them.
+pub struct KvSeg {
+    tokens: usize,
+    store: KvStore,
+}
+
+impl KvSeg {
+    /// Cached tokens this segment spans.
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    /// Decode one layer's K and V into `[tokens * d]` f32 slices.
+    fn write_layer(&self, layer: usize, k_out: &mut [f32], v_out: &mut [f32]) {
+        match &self.store {
+            KvStore::F32 { k, v } => {
+                k_out.copy_from_slice(&k[layer].data);
+                v_out.copy_from_slice(&v[layer].data);
+            }
+            KvStore::Quant { k, v } => {
+                k[layer].dequant_into(k_out);
+                v[layer].dequant_into(v_out);
+            }
+        }
+    }
+}
+
 /// KV cache for incremental decode: per layer, K and V as [T_cur, D]
 /// row-appended matrices (single sequence; the coordinator batches at a
 /// higher level).
@@ -95,12 +133,25 @@ enum KvStore {
 /// [`Engine::decode_step`] and [`Engine::decode_batch`] pre-check it and
 /// return `Err` instead of over-committing; the internal append asserts
 /// it as a backstop for direct [`Engine::forward`] users.
+///
+/// A cache may additionally *alias* another sequence's immutable prefix
+/// pages: `prefix` holds zero or more [`KvSeg`]s (shared, refcounted by
+/// the page manager) that logically precede the private tail in
+/// `store`. All reads ([`Engine::attention_over_cache`],
+/// [`Self::layer_f32`]) see the concatenation; all writes go to the
+/// private tail — the copy-on-write rule at the tensor layer.
 pub struct KvCache {
     store: KvStore,
     format: KvFormat,
     /// Model width D — the row length of every cached K/V row.
     d: usize,
     pub capacity: usize,
+    /// Shared, immutable prefix segments (in order), aliased from other
+    /// sequences via [`Self::push_prefix_seg`]. Empty on the historical
+    /// private-pages path.
+    prefix: Vec<Arc<KvSeg>>,
+    /// Total tokens across `prefix` (cached sum).
+    prefix_tokens: usize,
 }
 
 impl KvCache {
@@ -126,6 +177,8 @@ impl KvCache {
             format,
             d: cfg.d,
             capacity,
+            prefix: Vec::new(),
+            prefix_tokens: 0,
         }
     }
 
@@ -134,6 +187,7 @@ impl KvCache {
         self.format
     }
 
+    /// Private tail rows of one layer (excludes aliased prefix tokens).
     fn layer_len(&self, layer: usize) -> usize {
         match &self.store {
             KvStore::F32 { k, .. } => k[layer].rows,
@@ -141,8 +195,14 @@ impl KvCache {
         }
     }
 
+    /// Logical cached tokens: aliased prefix + private tail.
     pub fn len(&self) -> usize {
-        self.layer_len(0)
+        self.prefix_tokens + self.layer_len(0)
+    }
+
+    /// Tokens covered by shared (aliased) prefix segments.
+    pub fn prefix_tokens(&self) -> usize {
+        self.prefix_tokens
     }
 
     pub fn is_empty(&self) -> bool {
@@ -168,10 +228,10 @@ impl KvCache {
 
     fn append_rows(&mut self, layer: usize, k_rows: &[f32], v_rows: &[f32], n: usize) {
         assert!(
-            self.layer_len(layer) + n <= self.capacity,
+            self.prefix_tokens + self.layer_len(layer) + n <= self.capacity,
             "kv cache over capacity: {} cached + {n} new > {} (pre-check with \
              ensure_room / the page manager before forwarding)",
-            self.layer_len(layer),
+            self.prefix_tokens + self.layer_len(layer),
             self.capacity
         );
         let d = self.d;
@@ -203,12 +263,110 @@ impl KvCache {
 
     /// One layer's K and V decoded to f32 `[T, D]` matrices (a copy —
     /// diagnostic/test accessor, not the attention hot path, which
-    /// decodes into pooled scratch).
+    /// decodes into pooled scratch). Includes aliased prefix segments:
+    /// the view is the same concatenation attention reads.
     pub fn layer_f32(&self, layer: usize) -> (Mat, Mat) {
-        match &self.store {
+        let (tk, tv) = match &self.store {
             KvStore::F32 { k, v } => (k[layer].clone(), v[layer].clone()),
             KvStore::Quant { k, v } => (k[layer].dequantize(), v[layer].dequantize()),
+        };
+        if self.prefix.is_empty() {
+            return (tk, tv);
         }
+        let d = self.d;
+        let t = self.prefix_tokens + tk.rows;
+        let mut k_full = Mat::zeros(t, d);
+        let mut v_full = Mat::zeros(t, d);
+        let mut off = 0;
+        for seg in &self.prefix {
+            let n = seg.tokens * d;
+            seg.write_layer(
+                layer,
+                &mut k_full.data[off..off + n],
+                &mut v_full.data[off..off + n],
+            );
+            off += n;
+        }
+        k_full.data[off..].copy_from_slice(&tk.data);
+        v_full.data[off..].copy_from_slice(&tv.data);
+        (k_full, v_full)
+    }
+
+    /// Alias `seg` as the next shared prefix segment of this cache.
+    ///
+    /// Only legal before any private rows exist (shared pages are a
+    /// *prefix*; the copy-on-write boundary is the end of the last
+    /// pushed segment), and only between caches of the same format and
+    /// width. Counts toward `capacity` like private tokens.
+    pub fn push_prefix_seg(&mut self, seg: Arc<KvSeg>) -> Result<(), String> {
+        if self.layer_len(0) != 0 {
+            return Err("push_prefix_seg: cache already holds private rows".into());
+        }
+        let (layers_match, cols) = match (&seg.store, &self.store) {
+            (KvStore::F32 { k: sk, .. }, KvStore::F32 { k: ck, .. }) => {
+                (sk.len() == ck.len(), sk[0].cols)
+            }
+            (KvStore::Quant { k: sk, .. }, KvStore::Quant { k: ck, .. })
+                if sk[0].fmt == ck[0].fmt =>
+            {
+                (sk.len() == ck.len(), sk[0].cols)
+            }
+            _ => return Err("push_prefix_seg: KV format mismatch".into()),
+        };
+        if !layers_match || cols != self.d {
+            return Err("push_prefix_seg: model shape mismatch".into());
+        }
+        if self.prefix_tokens + seg.tokens > self.capacity {
+            return Err(format!(
+                "push_prefix_seg: {} prefix + {} seg tokens > capacity {}",
+                self.prefix_tokens, seg.tokens, self.capacity
+            ));
+        }
+        self.prefix_tokens += seg.tokens;
+        self.prefix.push(seg);
+        Ok(())
+    }
+
+    /// Copy `len` private-tail rows starting at absolute token position
+    /// `start` out into a standalone [`KvSeg`] — the publish step after
+    /// a prefix chunk is fully prefilled. Rows inside an aliased prefix
+    /// cannot be re-extracted (they already live in a shared segment).
+    ///
+    /// Quantized stores slice packed rows without touching codes or
+    /// scales (uniform per-row strides), so the segment decodes
+    /// bit-identically to the rows it was cut from.
+    pub fn extract_seg(&self, start: usize, len: usize) -> Result<KvSeg, String> {
+        if start < self.prefix_tokens {
+            return Err(format!(
+                "extract_seg: start {start} inside shared prefix ({} tokens)",
+                self.prefix_tokens
+            ));
+        }
+        let local = start - self.prefix_tokens;
+        if local + len > self.layer_len(0) {
+            return Err(format!(
+                "extract_seg: rows {local}..{} out of tail range {}",
+                local + len,
+                self.layer_len(0)
+            ));
+        }
+        let d = self.d;
+        let store = match &self.store {
+            KvStore::F32 { k, v } => {
+                let slice_rows = |m: &Mat| {
+                    Mat::from_vec(len, d, m.data[local * d..(local + len) * d].to_vec())
+                };
+                KvStore::F32 {
+                    k: k.iter().map(slice_rows).collect(),
+                    v: v.iter().map(slice_rows).collect(),
+                }
+            }
+            KvStore::Quant { k, v } => KvStore::Quant {
+                k: k.iter().map(|m| m.row_range(local, len)).collect(),
+                v: v.iter().map(|m| m.row_range(local, len)).collect(),
+            },
+        };
+        Ok(KvSeg { tokens: len, store })
     }
 
     /// Bytes held (Table 8 / serving memory accounting) — **real** per
@@ -216,6 +374,9 @@ impl KvCache {
     /// packed arithmetic of one `[1, D]` row per cached token (codes +
     /// block scales + the per-token tensor scale where the format has
     /// one), mirroring [`Engine::weight_bytes`]'s honest packed sizes.
+    /// Counts only the *private tail*: aliased prefix segments are owned
+    /// (and accounted once) by the page manager, not per aliasing
+    /// sequence.
     pub fn bytes(&self) -> u64 {
         match &self.store {
             KvStore::F32 { k, v } => k
@@ -430,6 +591,10 @@ impl Engine {
     /// kernels ([`crate::tensor::simd`]), which cuts the decode-over-f32
     /// read penalty roughly in half; outputs stay bit-identical to the
     /// scalar decode, so the KV pins don't care which arm ran.
+    ///
+    /// Caches with aliased prefix segments ([`KvCache::push_prefix_seg`])
+    /// take the assembly arm below: segments and tail concatenate into
+    /// one pooled `[T, D]` view before the same attention math runs.
     fn attention_over_cache(
         &self,
         q: &Mat,
@@ -437,25 +602,61 @@ impl Engine {
         layer: usize,
         pos0: usize,
     ) -> Mat {
+        if cache.prefix.is_empty() {
+            return match &cache.store {
+                KvStore::F32 { k, v } => self.attention(q, &k[layer], &v[layer], pos0),
+                KvStore::Quant { k, v } => {
+                    let t = k[layer].rows;
+                    let d = cache.d;
+                    // take_f32 zero-fills before dequant_into overwrites every
+                    // element — accepted cost: handing out uninitialized
+                    // `&mut [f32]` would be UB, and the fill is a small slice
+                    // of the LUT decode that follows.
+                    let mut kd = Mat::from_vec(t, d, pool::take_f32(t * d));
+                    let mut vd = Mat::from_vec(t, d, pool::take_f32(t * d));
+                    k[layer].dequant_into(&mut kd.data);
+                    v[layer].dequant_into(&mut vd.data);
+                    let ctx = self.attention(q, &kd, &vd, pos0);
+                    pool::put_f32(kd.data);
+                    pool::put_f32(vd.data);
+                    ctx
+                }
+            };
+        }
+        // Shared-prefix read path: assemble [seg₀ ‖ seg₁ ‖ … ‖ tail]
+        // into pooled scratch and run the identical attention math.
+        // Every f32 prefix row copies bit-for-bit and every quantized
+        // row decodes per-(row, block) independently, so reading an
+        // aliased segment in place of the rows it was extracted from is
+        // bit-identical to the private-pages run.
+        let d = cache.d;
+        let t = cache.prefix_tokens + cache.layer_len(layer);
+        let mut kd = Mat::from_vec(t, d, pool::take_f32(t * d));
+        let mut vd = Mat::from_vec(t, d, pool::take_f32(t * d));
+        let mut off = 0;
+        for seg in &cache.prefix {
+            let n = seg.tokens * d;
+            seg.write_layer(
+                layer,
+                &mut kd.data[off..off + n],
+                &mut vd.data[off..off + n],
+            );
+            off += n;
+        }
         match &cache.store {
-            KvStore::F32 { k, v } => self.attention(q, &k[layer], &v[layer], pos0),
+            KvStore::F32 { k, v } => {
+                kd.data[off..].copy_from_slice(&k[layer].data);
+                vd.data[off..].copy_from_slice(&v[layer].data);
+            }
             KvStore::Quant { k, v } => {
-                let t = k[layer].rows;
-                let d = cache.d;
-                // take_f32 zero-fills before dequant_into overwrites every
-                // element — accepted cost: handing out uninitialized
-                // `&mut [f32]` would be UB, and the fill is a small slice
-                // of the LUT decode that follows.
-                let mut kd = Mat::from_vec(t, d, pool::take_f32(t * d));
-                let mut vd = Mat::from_vec(t, d, pool::take_f32(t * d));
-                k[layer].dequant_into(&mut kd.data);
-                v[layer].dequant_into(&mut vd.data);
-                let ctx = self.attention(q, &kd, &vd, pos0);
-                pool::put_f32(kd.data);
-                pool::put_f32(vd.data);
-                ctx
+                k[layer].dequant_into(&mut kd.data[off..]);
+                v[layer].dequant_into(&mut vd.data[off..]);
             }
         }
+        let ctx = self.attention(q, &kd, &vd, pos0);
+        pool::put_f32(kd.data);
+        pool::put_f32(vd.data);
+        ctx
     }
 
     /// Full-sequence forward for one sequence of tokens. Returns logits
@@ -545,15 +746,115 @@ impl Engine {
         matmul_nt(&hn, &self.weights.embed) // tied head: [T, V]
     }
 
+    /// One bounded chunk of a prefill: forward `tokens` against (and
+    /// into) `cache` at position `cache.len()`, with **row-wise**
+    /// activation quantization ([`Self::site_forward_rows`]).
+    ///
+    /// Row-wise is what makes prefill *chunk-invariant*: every per-row
+    /// computation (embed, rmsnorm, per-row quantize + GEMM row, RoPE,
+    /// causal attention over the cache, SwiGLU) depends only on that
+    /// row and on cache state from strictly earlier tokens, so
+    /// splitting a prompt at any boundaries yields bit-identical cache
+    /// contents and logits to one whole-prompt pass. (Per-tensor
+    /// activation scales — [`Self::forward`]'s site path — would break
+    /// this: the NVFP4 tensor scale of a `[T, D]` chunk depends on all
+    /// T rows.)
+    fn forward_chunk(&self, tokens: &[u16], cache: &mut KvCache) -> Mat {
+        let pos0 = cache.len();
+        let mut h = self.embed(tokens);
+        for (i, lw) in self.weights.layers.iter().enumerate() {
+            // ---- attention ----
+            let site = format!("layers.{i}.attn_in");
+            let xn = self.rmsnorm(&h, &lw.attn_norm);
+            let mut qkv =
+                self.site_forward_rows(&site, &xn, &[&lw.wq, &lw.wk, &lw.wv]);
+            let v = qkv.pop().unwrap();
+            let mut k = qkv.pop().unwrap();
+            let mut q = qkv.pop().unwrap();
+            self.rope(&mut q, pos0);
+            self.rope(&mut k, pos0);
+
+            cache.append(i, &k, &v);
+            let ctx = self.attention_over_cache(&q, cache, i, pos0);
+
+            let site = format!("layers.{i}.attn_out");
+            let attn_out = self
+                .site_forward_rows(&site, &ctx, &[&lw.wo])
+                .pop()
+                .unwrap();
+            for (a, b) in h.data.iter_mut().zip(&attn_out.data) {
+                *a += b;
+            }
+
+            // ---- MLP ----
+            let site = format!("layers.{i}.mlp_in");
+            let xn = self.rmsnorm(&h, &lw.mlp_norm);
+            let mut gu = self.site_forward_rows(&site, &xn, &[&lw.w1, &lw.w3]);
+            let u = gu.pop().unwrap();
+            let g = gu.pop().unwrap();
+            let mut act = Mat::zeros(h.rows, self.cfg.f);
+            for idx in 0..act.data.len() {
+                let gv = g.data[idx];
+                let silu = gv / (1.0 + (-gv).exp());
+                act.data[idx] = silu * u.data[idx];
+            }
+
+            let site = format!("layers.{i}.mlp_out");
+            let mlp_out = self
+                .site_forward_rows(&site, &act, &[&lw.w2])
+                .pop()
+                .unwrap();
+            for (a, b) in h.data.iter_mut().zip(&mlp_out.data) {
+                *a += b;
+            }
+        }
+        let hn = self.rmsnorm(&h, &self.weights.final_norm);
+        matmul_nt(&hn, &self.weights.embed) // tied head: [T, V]
+    }
+
     /// Prefill + return logits of the last position only. Fails (without
-    /// touching the cache) when the prompt would exceed the cache
+    /// touching the cache) when the prompt would exceed the remaining
     /// capacity.
+    ///
+    /// Runs as one [`Self::forward_chunk`], so a prefill split into
+    /// arbitrary [`Self::prefill_range`] chunks is bit-identical to the
+    /// whole-prompt call (pinned by tests).
     pub fn prefill(&self, tokens: &[u16], cache: &mut KvCache) -> Result<Vec<f32>, String> {
         if tokens.is_empty() {
             return Err("prefill on empty prompt".into());
         }
         cache.ensure_room(tokens.len())?;
-        let logits = self.forward(tokens, None, Some(cache));
+        let logits = self.forward_chunk(tokens, cache);
+        Ok(logits.row(logits.rows - 1).to_vec())
+    }
+
+    /// Prefill the suffix `tokens[start..]` of a prompt whose first
+    /// `start` tokens are already cached — either by earlier chunks
+    /// (Sarathi-style chunked prefill) or by aliased shared-prefix
+    /// segments that skip recomputation entirely. Returns the logits of
+    /// the last forwarded position. Fails (without touching the cache)
+    /// when the cache position disagrees with `start` or the suffix
+    /// would exceed capacity.
+    pub fn prefill_range(
+        &self,
+        tokens: &[u16],
+        start: usize,
+        cache: &mut KvCache,
+    ) -> Result<Vec<f32>, String> {
+        if start >= tokens.len() {
+            return Err(format!(
+                "prefill_range: start {start} >= prompt length {}",
+                tokens.len()
+            ));
+        }
+        if cache.len() != start {
+            return Err(format!(
+                "prefill_range: cache holds {} tokens but range starts at {start}",
+                cache.len()
+            ));
+        }
+        cache.ensure_room(tokens.len() - start)?;
+        let logits = self.forward_chunk(&tokens[start..], cache);
         Ok(logits.row(logits.rows - 1).to_vec())
     }
 
@@ -1207,5 +1508,150 @@ mod tests {
         assert_eq!(cache.remaining(), 0);
         assert!(e.decode_step(1, &mut cache).is_err());
         assert_eq!(cache.len(), 8, "failed decode must not grow the cache");
+    }
+
+    // ---- chunked prefill + shared-prefix page views ----
+
+    /// Chunk-invariance pin: a prompt prefilled in arbitrary
+    /// `prefill_range` chunks leaves bit-identical cache state and
+    /// logits to one whole-prompt `prefill`, per engine mode and KV
+    /// format — the property Sarathi-style chunked admission rests on.
+    fn check_prefill_chunks_bit_identical(mode: EngineMode, kv: KvFormat) {
+        let e = tiny_engine(mode);
+        let prompt: Vec<u16> = (0..23u16).map(|i| (i * 67 + 5) % 256).collect();
+
+        let mut whole = KvCache::with_format(&e.cfg, 64, kv);
+        let want = e.prefill(&prompt, &mut whole).unwrap();
+
+        let mut chunked = KvCache::with_format(&e.cfg, 64, kv);
+        let mut got = Vec::new();
+        for (start, end) in [(0usize, 7usize), (7, 16), (16, 23)] {
+            got = e.prefill_range(&prompt[..end], start, &mut chunked).unwrap();
+        }
+        assert_eq!(got, want, "{kv:?}: chunked last-chunk logits");
+        assert_eq!(chunked.len(), whole.len());
+        for layer in 0..e.cfg.l {
+            let (wk, wv) = whole.layer_f32(layer);
+            let (ck, cv) = chunked.layer_f32(layer);
+            assert_eq!(ck.data, wk.data, "{kv:?}: layer {layer} K");
+            assert_eq!(cv.data, wv.data, "{kv:?}: layer {layer} V");
+        }
+        // and the decode that follows stays bit-identical
+        let a = e.decode_step(9, &mut whole).unwrap();
+        let b = e.decode_step(9, &mut chunked).unwrap();
+        assert_eq!(a, b, "{kv:?}: post-chunking decode");
+    }
+
+    #[test]
+    fn prefill_chunks_bit_identical_fp32() {
+        check_prefill_chunks_bit_identical(EngineMode::Fp32, KvFormat::Fp32);
+        check_prefill_chunks_bit_identical(EngineMode::Fp32, KvFormat::Nvfp4);
+    }
+
+    #[test]
+    fn prefill_chunks_bit_identical_packed() {
+        let mode = EngineMode::QuantizedPacked(Method::ArcQuant {
+            fmt: Format::Nvfp4,
+            max_s: Some(64),
+        });
+        check_prefill_chunks_bit_identical(mode.clone(), KvFormat::Fp32);
+        check_prefill_chunks_bit_identical(mode, KvFormat::Mxfp4);
+    }
+
+    /// Shared-prefix pin: a cache that aliases another sequence's
+    /// extracted prefix segment and prefills only the tail produces
+    /// logits (and a greedy continuation) bit-identical to a private
+    /// whole-prompt recompute — per KV format, since quantized rows are
+    /// packed once on write and decode per-(row, block) independently.
+    fn check_shared_prefix_bit_identical(mode: EngineMode, kv: KvFormat) {
+        let e = tiny_engine(mode);
+        let prefix: Vec<u16> = (0..16u16).map(|i| (i * 31 + 2) % 256).collect();
+        let tails: Vec<Vec<u16>> = (0..2)
+            .map(|s| (0..6 + 3 * s).map(|i| ((i * 47 + s * 19 + 9) % 256) as u16).collect())
+            .collect();
+
+        // donor: prefill the shared prefix privately, then publish it
+        let mut donor = KvCache::with_format(&e.cfg, 64, kv);
+        e.prefill_range(&prefix, 0, &mut donor).unwrap();
+        let seg = Arc::new(donor.extract_seg(0, prefix.len()).unwrap());
+        assert_eq!(seg.tokens(), prefix.len());
+
+        for tail in &tails {
+            let full: Vec<u16> = prefix.iter().chain(tail).copied().collect();
+
+            // reference: private whole-prompt recompute
+            let mut private = KvCache::with_format(&e.cfg, 64, kv);
+            let want = e.prefill(&full, &mut private).unwrap();
+
+            // shared: alias the donor's pages, prefill only the tail
+            let mut shared = KvCache::with_format(&e.cfg, 64, kv);
+            shared.push_prefix_seg(seg.clone()).unwrap();
+            assert_eq!(shared.len(), prefix.len());
+            assert_eq!(shared.prefix_tokens(), prefix.len());
+            let got = e.prefill_range(&full, prefix.len(), &mut shared).unwrap();
+            assert_eq!(got, want, "{kv:?}: shared-prefix prefill logits");
+
+            // greedy continuation stays bit-identical step for step
+            let mut tok = crate::model::sampling::argmax(&want);
+            for _ in 0..4 {
+                let lw = e.decode_step(tok, &mut private).unwrap();
+                let lg = e.decode_step(tok, &mut shared).unwrap();
+                assert_eq!(lg, lw, "{kv:?}: shared-prefix decode logits");
+                tok = crate::model::sampling::argmax(&lw);
+            }
+            // memory accounting: the aliasing cache holds only its tail
+            assert!(shared.bytes() < private.bytes());
+        }
+    }
+
+    #[test]
+    fn shared_prefix_bit_identical_fp32_kv() {
+        check_shared_prefix_bit_identical(EngineMode::Fp32, KvFormat::Fp32);
+    }
+
+    #[test]
+    fn shared_prefix_bit_identical_quant_kv() {
+        check_shared_prefix_bit_identical(EngineMode::Fp32, KvFormat::Nvfp4);
+        check_shared_prefix_bit_identical(EngineMode::Fp32, KvFormat::Mxfp4);
+    }
+
+    #[test]
+    fn shared_prefix_bit_identical_packed_engine() {
+        check_shared_prefix_bit_identical(
+            EngineMode::QuantizedPacked(Method::ArcQuant {
+                fmt: Format::Nvfp4,
+                max_s: Some(64),
+            }),
+            KvFormat::Nvfp4,
+        );
+    }
+
+    #[test]
+    fn prefix_seg_guards() {
+        let e = tiny_engine(EngineMode::Fp32);
+        let prompt: Vec<u16> = (0..12).collect();
+        let mut donor = KvCache::with_format(&e.cfg, 64, KvFormat::Nvfp4);
+        e.prefill(&prompt, &mut donor).unwrap();
+
+        // extract: out-of-range tail rows fail
+        assert!(donor.extract_seg(8, 8).is_err());
+        let seg = Arc::new(donor.extract_seg(0, 8).unwrap());
+
+        // push: format mismatch, capacity, and non-empty-tail all fail
+        let mut wrong_fmt = KvCache::with_format(&e.cfg, 64, KvFormat::Fp32);
+        assert!(wrong_fmt.push_prefix_seg(seg.clone()).is_err());
+        let mut tiny = KvCache::with_format(&e.cfg, 4, KvFormat::Nvfp4);
+        assert!(tiny.push_prefix_seg(seg.clone()).is_err());
+        let mut busy = KvCache::with_format(&e.cfg, 64, KvFormat::Nvfp4);
+        e.prefill(&prompt[..4], &mut busy).unwrap();
+        assert!(busy.push_prefix_seg(seg.clone()).is_err());
+
+        // a prefix-aliasing cache refuses to re-extract shared rows, and
+        // prefill_range insists on position agreement
+        let mut shared = KvCache::with_format(&e.cfg, 64, KvFormat::Nvfp4);
+        shared.push_prefix_seg(seg).unwrap();
+        assert!(shared.extract_seg(0, 4).is_err());
+        assert!(e.prefill_range(&prompt, 4, &mut shared).is_err());
+        assert_eq!(shared.len(), 8, "failed prefill_range must not grow the cache");
     }
 }

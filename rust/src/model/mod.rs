@@ -13,7 +13,7 @@ pub mod sampling;
 pub mod weights;
 
 pub use config::ModelConfig;
-pub use engine::{Engine, EngineMode, KvCache};
+pub use engine::{Engine, EngineMode, KvCache, KvSeg};
 pub use sampling::Sampler;
 pub use weights::Weights;
 

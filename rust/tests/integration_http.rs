@@ -520,6 +520,88 @@ fn graceful_shutdown_drains_and_refuses_new_connections() {
 }
 
 #[test]
+fn shared_prefix_requests_hit_cache_and_match_sharing_off() {
+    // Three sequential requests carrying the same 214-token system
+    // prompt (= two full nvfp4 pages) + distinct tails. The first
+    // donates its prefix pages to the content-addressed index; the
+    // second and third must serve both prefix chunks from it — and all
+    // three must stay bit-exact to the private reference replay AND to
+    // a --no-prefix-share server, the "sharing never changes bytes"
+    // acceptance bar.
+    const MAX_NEW: usize = 4;
+    const TAIL: usize = 12;
+    let prefix = arcquant::coordinator::shared_prefix(214, 256, 0);
+    let prompts: Vec<Vec<u16>> = (0..3)
+        .map(|i| {
+            let mut p = prefix.clone();
+            p.extend(prompt_for(i, TAIL));
+            p
+        })
+        .collect();
+
+    let serve = |share: bool| -> Vec<(Vec<u16>, u64)> {
+        let cfg = HttpServeConfig {
+            kv_format: KvFormat::Nvfp4,
+            kv_pages: 8,
+            share_prefix: share,
+            ..Default::default()
+        };
+        let server = HttpServer::start(cfg, "127.0.0.1:0", gen_engines()).unwrap();
+        let addr = server.addr().to_string();
+        let mut cli = HttpClient::connect(&addr).unwrap();
+        let mut out = Vec::new();
+        for prompt in &prompts {
+            let body = body_for(prompt, MAX_NEW, Variant::ArcPacked, false);
+            let reply = cli.request("POST", "/v1/generate", Some(&body)).unwrap();
+            assert_eq!(reply.status, 200, "{}", reply.body);
+            let j = Json::parse(&reply.body).unwrap();
+            assert_eq!(j.get("finish").unwrap().as_str(), Some("length"));
+            let id = j.get("id").unwrap().as_f64().unwrap() as u64;
+            out.push((tokens_of(&reply.body), id));
+        }
+        let m = cli.request("GET", "/metrics", None).unwrap();
+        assert_eq!(m.status, 200);
+        let hits = metric_value(&m.body, "arcquant_prefix_cache_hits_total");
+        let lookups = metric_value(&m.body, "arcquant_prefix_cache_lookups_total");
+        let saved = metric_value(&m.body, "arcquant_kv_pages_saved_total");
+        if share {
+            // 2 matchable chunks per prompt; the 2nd and 3rd hit both
+            assert_eq!(lookups, 6.0, "lookups:\n{}", m.body);
+            assert_eq!(hits, 4.0, "hits:\n{}", m.body);
+            assert_eq!(saved, 4.0, "pages saved:\n{}", m.body);
+            assert!(
+                metric_value(&m.body, "arcquant_prefix_cache_hit_rate") > 0.5
+            );
+            assert!(metric_value(&m.body, "arcquant_kv_shared_pages") >= 1.0);
+        } else {
+            assert_eq!(lookups, 0.0, "sharing off must not probe the index");
+            assert_eq!(hits, 0.0);
+        }
+        drop(cli);
+        server.shutdown();
+        out
+    };
+
+    let shared = serve(true);
+    let private = serve(false);
+    let engine = ref_engine(Variant::ArcPacked);
+    for (i, ((tok_on, id_on), (tok_off, _))) in
+        shared.iter().zip(private.iter()).enumerate()
+    {
+        let want = reference_tokens(
+            &engine,
+            &prompts[i],
+            MAX_NEW,
+            KvFormat::Nvfp4,
+            0,
+            *id_on,
+        );
+        assert_eq!(tok_on, &want, "sharing-on diverged from reference ({i})");
+        assert_eq!(tok_on, tok_off, "sharing on/off disagree on request {i}");
+    }
+}
+
+#[test]
 fn metrics_catalog_renders_over_http() {
     let server =
         HttpServer::start(HttpServeConfig::default(), "127.0.0.1:0", gen_engines())
