@@ -101,6 +101,9 @@ fn main() {
             stream: false,
             seed: 0,
             shared_prefix_len: 0,
+            // measured rows take one attempt each — retries would fold
+            // backoff sleeps into the latency percentiles
+            no_retry: true,
         };
         // untimed warmup pass at the smallest shape, then the measured run
         if conns == bc.connections[0] {
@@ -146,6 +149,7 @@ fn main() {
         stream: true,
         seed: 1,
         shared_prefix_len: 0,
+        no_retry: true,
     })
     .expect("streaming loadgen");
     assert_eq!(stream_r.errors, 0, "streaming traffic must be error-free");
@@ -169,6 +173,7 @@ fn main() {
         stream: true,
         seed: 2,
         shared_prefix_len: 214,
+        no_retry: true,
     };
     let prefix_on = run_loadgen(&prefix_cfg(&addr)).expect("shared-prefix loadgen");
     assert_eq!(prefix_on.errors, 0, "shared-prefix traffic must be error-free");
@@ -194,6 +199,55 @@ fn main() {
         .expect("shared-prefix loadgen (sharing off)");
     assert_eq!(prefix_off.errors, 0, "sharing-off traffic must be error-free");
     off_server.shutdown();
+
+    // fault-recovery pass: the server's first decode tick panics
+    // (injected), the supervised scheduler fails the in-flight request
+    // (500), rebuilds, and the loadgen retry path resubmits — the
+    // recovery metric is wall time for the whole ride-through, which the
+    // smoke gate caps (scripts/bench_gate.py).
+    let fault_server = HttpServer::start(
+        HttpServeConfig {
+            max_decode_batch: 16,
+            kv_pages: 512,
+            kv_format: KvFormat::Nvfp4,
+            queue_cap: 128,
+            faults: arcquant::util::fault::Faults::parse("tick_decode:1:panic")
+                .expect("fault spec"),
+            ..Default::default()
+        },
+        "127.0.0.1:0",
+        engines(),
+    )
+    .expect("bench server (fault injection)");
+    let fr = run_loadgen(&LoadgenConfig {
+        addr: fault_server.addr().to_string(),
+        connections: 1,
+        requests_per_conn: 2,
+        prompt_len: bc.prompt_len,
+        max_new_tokens: bc.max_new,
+        variant: Some(Variant::ArcPacked),
+        vocab: 256,
+        stream: false,
+        seed: 3,
+        shared_prefix_len: 0,
+        no_retry: false,
+    })
+    .expect("fault-recovery loadgen");
+    fault_server.shutdown();
+    assert_eq!(
+        fr.ok, fr.requests,
+        "retries must ride through the injected panic: {:?}",
+        fr.by_status
+    );
+    assert!(
+        fr.retries >= 1,
+        "the injected tick panic should have forced at least one retry"
+    );
+    println!(
+        "BENCH http_fault_recovery ok={} retries={} wall_ms={:.1}",
+        fr.ok, fr.retries, fr.wall_ms
+    );
+    println!("GATE http_recovery_ms {:.1}", fr.wall_ms);
 
     println!(
         "BENCH http_prefix_on tok_s={:.1} ttft_p50_ms={:.2} ttft_p99_ms={:.2} \
@@ -274,7 +328,9 @@ fn main() {
         .set("prefix_reuse", prefix_reuse)
         // headline scalars for the trajectory gate
         .set("prefix_hit_rate", Json::Num(prefix_on.prefix_hit_rate))
-        .set("prefix_ttft_speedup", Json::Num(ttft_speedup));
+        .set("prefix_ttft_speedup", Json::Num(ttft_speedup))
+        // client-observed ride-through time of one injected tick panic
+        .set("fault_recovery_ms", Json::Num(fr.wall_ms));
     let path = "BENCH_http.json";
     match std::fs::write(path, out.dump()) {
         Ok(()) => println!("# wrote {path}"),

@@ -51,7 +51,7 @@
 //! several times more concurrent sequences — the capacity lever measured
 //! in `docs/kv_cache.md`.
 
-use super::metrics::Metrics;
+use super::metrics::{FailReason, Metrics};
 use super::request::{
     FinishReason, GenEvent, GenerateRequest, GenerateResponse, RejectReason, Variant,
 };
@@ -59,8 +59,10 @@ use super::router::{Router, RouterConfig, RouterDecision};
 use crate::coordinator::kvcache::KvPageManager;
 use crate::formats::KvFormat;
 use crate::model::{sampling::Sampler, Engine, KvCache, KvSeg, ModelConfig};
+use crate::util::fault::Faults;
 use crate::util::{Prng, Timer};
 use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 
@@ -201,6 +203,14 @@ pub(crate) struct GenSession {
     /// [`GenEvent::Token`] and completion as [`GenEvent::Done`] (the HTTP
     /// handlers read these); `None` for the closed-loop executor
     pub(crate) watch: Option<mpsc::Sender<GenEvent>>,
+    /// absolute deadline (from the request's `timeout_ms`, measured at
+    /// submission); [`SchedCore::reap_expired`] retires the session with
+    /// [`FinishReason::Timeout`] once it passes
+    pub(crate) deadline: Option<std::time::Instant>,
+    /// set by the connection handler when the client goes away
+    /// (streaming write failure / closed unary socket); honored at the
+    /// next tick with [`FinishReason::Disconnect`]
+    pub(crate) cancel: Option<Arc<AtomicBool>>,
 }
 
 /// Accumulators a scheduler returns alongside the responses.
@@ -252,6 +262,13 @@ pub(crate) struct SchedCore<'e> {
     pub(crate) per_variant: BTreeMap<&'static str, GenVariantStats>,
     pub(crate) kv_pages_peak: usize,
     pub(crate) kv_bytes_peak: u64,
+    /// armed fault plan (deterministic chaos; [`Faults::none`] in
+    /// production unless `ARCQUANT_FAULTS` is set). Sites: `tick_prefill`
+    /// (before a prompt-chunk forward; `err` retires the sequence),
+    /// `kv_alloc` (decode-step page extension; `err` = out-of-pages),
+    /// `tick_decode` (before a batched decode forward; panic-only — the
+    /// supervised driver must contain it).
+    pub(crate) faults: Faults,
 }
 
 /// Prefix-index namespace of a variant: engines differ numerically, so
@@ -293,7 +310,16 @@ impl<'e> SchedCore<'e> {
             per_variant: BTreeMap::new(),
             kv_pages_peak: 0,
             kv_bytes_peak: 0,
+            faults: Faults::none(),
         }
+    }
+
+    /// KV page-manager consistency (free + private + shared + cached =
+    /// total, refcounts exact, no aliasing) — the supervisor asserts this
+    /// on every rebuilt core, and the fault property tests after every
+    /// recovery.
+    pub(crate) fn kv_invariants(&self) -> Result<(), String> {
+        self.pages.check_invariants()
     }
 
     /// Drop the K/V data of prefix nodes the manager evicted since the
@@ -362,6 +388,7 @@ impl<'e> SchedCore<'e> {
         &mut self,
         req: GenerateRequest,
         watch: Option<mpsc::Sender<GenEvent>>,
+        cancel: Option<Arc<AtomicBool>>,
         metrics: &Metrics,
     ) -> Result<(), (GenerateRequest, Option<mpsc::Sender<GenEvent>>, RejectReason)>
     {
@@ -420,6 +447,9 @@ impl<'e> SchedCore<'e> {
                 }
             }
         }
+        let deadline = req
+            .timeout_ms
+            .map(|ms| req.t_submit + std::time::Duration::from_millis(ms));
         self.sessions.push(GenSession {
             id: req.id,
             variant: req.variant,
@@ -435,8 +465,53 @@ impl<'e> SchedCore<'e> {
             decode_ms: 0.0,
             finish: None,
             watch,
+            deadline,
+            cancel,
         });
         Ok(())
+    }
+
+    /// Honor deadlines and client cancellations: mark expired sessions
+    /// [`FinishReason::Timeout`] and cancelled ones
+    /// [`FinishReason::Disconnect`] so the same tick's [`Self::retire`]
+    /// releases their pages (through the shared-prefix refcount path) —
+    /// a dead client or a blown deadline costs at most one tick of
+    /// decode work. Call at the top of every scheduler tick.
+    pub(crate) fn reap_expired(&mut self) {
+        let now = std::time::Instant::now();
+        for s in &mut self.sessions {
+            if s.finish.is_some() {
+                continue;
+            }
+            if s.cancel.as_ref().is_some_and(|c| c.load(Ordering::Relaxed)) {
+                s.finish = Some(FinishReason::Disconnect);
+            } else if s.deadline.is_some_and(|d| now >= d) {
+                s.finish = Some(FinishReason::Timeout);
+            }
+        }
+    }
+
+    /// Supervisor path, called after a contained tick panic: fail every
+    /// in-flight session with a terminal [`GenEvent::Failed`] (HTTP 500 /
+    /// streamed error chunk) and count them under
+    /// `sessions_failed_total{reason="panic"}`. Returns the number of
+    /// failed sessions and the pages the (about-to-be-discarded) manager
+    /// held — the caller rebuilds the core from scratch, which is what
+    /// actually reclaims them.
+    pub(crate) fn fail_all_sessions(
+        &mut self,
+        message: &'static str,
+        metrics: &Metrics,
+    ) -> (usize, usize) {
+        let drained = std::mem::take(&mut self.sessions);
+        let held = self.pages.used_pages();
+        for s in &drained {
+            metrics.record_session_failed(FailReason::Panic);
+            if let Some(w) = &s.watch {
+                let _ = w.send(GenEvent::Failed { message });
+            }
+        }
+        (drained.len(), held)
     }
 
     /// One chunked-prefill step: every running sequence whose prompt is
@@ -470,6 +545,14 @@ impl<'e> SchedCore<'e> {
             };
             let end = s.prefilled + chunk;
             let key = s.variant.artifact_key();
+            if self.faults.point("tick_prefill") {
+                // injected err-mode fault: the chunk "failed" — take the
+                // truncation path directly (the real Err arm below keeps
+                // its debug_assert for genuine desyncs)
+                s.finish = Some(FinishReason::OutOfPages);
+                let _ = self.pages.release(s.id);
+                continue;
+            }
             let t = Timer::start();
             let logits =
                 match engine.prefill_range(&s.prompt[..end], s.prefilled, &mut s.cache)
@@ -557,7 +640,8 @@ impl<'e> SchedCore<'e> {
                 .iter_mut()
                 .filter(|s| s.variant == v && s.finish.is_none() && s.ready())
             {
-                if self.pages.extend(s.id, 1).is_err() {
+                if self.faults.point("kv_alloc") || self.pages.extend(s.id, 1).is_err()
+                {
                     s.finish = Some(FinishReason::OutOfPages);
                     let _ = self.pages.release(s.id);
                 }
@@ -585,6 +669,12 @@ impl<'e> SchedCore<'e> {
             let bsz = group.len();
             let mut caches: Vec<&mut KvCache> =
                 group.iter_mut().map(|s| s.cache_mut()).collect();
+            if self.faults.point("tick_decode") {
+                // `err` escalates to panic here: a batched decode forward
+                // has no per-sequence error path — this site exists to
+                // exercise the supervised driver's unwind containment
+                panic!("injected fault: tick_decode");
+            }
             let t = Timer::start();
             let logits = engine
                 .decode_batch(&toks, &mut caches)
@@ -628,16 +718,31 @@ impl<'e> SchedCore<'e> {
                 self.sessions.push(s);
                 continue;
             };
-            let _ = self.pages.release(s.id);
+            let released = self.pages.release(s.id).unwrap_or(0);
             let key = s.variant.artifact_key();
             let stats = self.per_variant.entry(key).or_default();
             stats.requests += 1;
             if finish == FinishReason::OutOfPages {
                 stats.oom_truncated += 1;
             }
+            match finish {
+                FinishReason::Timeout => {
+                    Metrics::add(&metrics.kv_pages_reclaimed, released as u64);
+                    metrics.record_session_failed(FailReason::Timeout);
+                }
+                FinishReason::Disconnect => {
+                    Metrics::add(&metrics.kv_pages_reclaimed, released as u64);
+                    metrics.record_session_failed(FailReason::Disconnect);
+                }
+                _ => {}
+            }
             let total_ms = s.t_submit.elapsed().as_secs_f64() * 1e3;
-            metrics.record_latency(total_ms);
-            Metrics::inc(&metrics.completed);
+            if finish != FinishReason::Disconnect {
+                // a disconnected client never reads the response: don't
+                // let abandoned sessions skew completion/latency stats
+                metrics.record_latency(total_ms);
+                Metrics::inc(&metrics.completed);
+            }
             let resp = GenerateResponse {
                 id: s.id,
                 variant: s.variant,
@@ -892,7 +997,7 @@ fn run_generate_executor(
                 }
                 Admit::Wait => still_pending.push(req),
                 Admit::Run => {
-                    if let Err((req, _, _)) = core.enroll(req, None, metrics) {
+                    if let Err((req, _, _)) = core.enroll(req, None, None, metrics) {
                         Metrics::inc(&metrics.rejected);
                         reject(&req, &tx_resp);
                     }
@@ -903,6 +1008,7 @@ fn run_generate_executor(
 
         // ---- one chunked-prefill step + one batched decode step per
         // variant + retire ----
+        core.reap_expired();
         core.prefill_tick(metrics);
         core.decode_tick(metrics);
         for resp in core.retire(metrics) {
@@ -943,12 +1049,15 @@ mod tests {
             let mut still = Vec::with_capacity(pending.len());
             for req in pending.drain(..) {
                 match core.admission(&req) {
-                    Admit::Run => assert!(core.enroll(req, None, metrics).is_ok()),
+                    Admit::Run => {
+                        assert!(core.enroll(req, None, None, metrics).is_ok())
+                    }
                     Admit::Wait => still.push(req),
                     Admit::Reject(_) => panic!("unexpected reject"),
                 }
             }
             pending = still;
+            core.reap_expired();
             core.prefill_tick(metrics);
             core.decode_tick(metrics);
             out.extend(core.retire(metrics));
@@ -1153,5 +1262,313 @@ mod tests {
         );
         assert_eq!(rs[0].tokens, reference(&engine, &prompt, 4, KvFormat::Fp32, 0, 2));
         core.pages.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn deadline_mid_decode_retires_with_timeout_and_partial_tokens() {
+        let engine = fp_engine();
+        let engines: Vec<(Variant, &Engine)> = vec![(Variant::Fp32, &engine)];
+        let model_cfg = engine.cfg.clone();
+        let metrics = Metrics::new();
+        let prompt: Vec<u16> = (0..20u16).map(|i| (i * 5 + 1) % 256).collect();
+        // share_prefix=false so release() frees pages outright and the
+        // pool-empty assertion below is exact
+        let mut core = SchedCore::new(
+            &engines,
+            &model_cfg,
+            16,
+            KvFormat::Fp32,
+            8,
+            Sampler::Greedy,
+            0,
+            64,
+            false,
+        );
+        let r = req(1, prompt, 32).with_timeout_ms(60_000);
+        assert!(core.enroll(r, None, None, &metrics).is_ok());
+        core.prefill_tick(&metrics); // completes the prompt, samples token 1
+        core.decode_tick(&metrics); // token 2
+        assert!(core.retire(&metrics).is_empty(), "nothing finished yet");
+        // force the deadline into the past, deterministically (no sleeps)
+        core.sessions[0].deadline = Some(std::time::Instant::now());
+        core.reap_expired();
+        let rs = core.retire(&metrics);
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].finish, FinishReason::Timeout);
+        let n = rs[0].tokens.len();
+        assert!((2..32).contains(&n), "partial tokens expected, got {n}");
+        // a timeout is truncation, not an error: it still completes...
+        assert_eq!(Metrics::get(&metrics.completed), 1);
+        // ...but is counted and its pages come back the same tick
+        assert_eq!(metrics.sessions_failed_count(FailReason::Timeout), 1);
+        assert!(Metrics::get(&metrics.kv_pages_reclaimed) >= 1);
+        assert_eq!(core.pages.used_pages(), 0, "pages not reclaimed");
+        core.pages.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cancelled_session_retires_as_disconnect_and_survivor_is_unaffected() {
+        let engine = fp_engine();
+        let engines: Vec<(Variant, &Engine)> = vec![(Variant::Fp32, &engine)];
+        let model_cfg = engine.cfg.clone();
+        let metrics = Metrics::new();
+        let prompt: Vec<u16> = (0..20u16).map(|i| (i * 9 + 4) % 256).collect();
+        let mut core = SchedCore::new(
+            &engines,
+            &model_cfg,
+            16,
+            KvFormat::Fp32,
+            8,
+            Sampler::Greedy,
+            0,
+            64,
+            true,
+        );
+        let flag = Arc::new(AtomicBool::new(false));
+        assert!(core
+            .enroll(req(1, prompt.clone(), 8), None, Some(flag.clone()), &metrics)
+            .is_ok());
+        core.prefill_tick(&metrics); // publishes the shared chunk
+        // the follower aliases the donor's prefix pages (refcounted)
+        assert!(core.enroll(req(2, prompt.clone(), 8), None, None, &metrics).is_ok());
+        assert!(core.pages.prefix_hits >= 1, "follower did not share the prefix");
+        core.prefill_tick(&metrics);
+        core.decode_tick(&metrics);
+        // client goes away: the handler flips the flag, the next tick reaps
+        flag.store(true, Ordering::Relaxed);
+        core.reap_expired();
+        let rs = core.retire(&metrics);
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].id, 1);
+        assert_eq!(rs[0].finish, FinishReason::Disconnect);
+        assert_eq!(
+            Metrics::get(&metrics.completed),
+            0,
+            "abandoned sessions must not count as completions"
+        );
+        assert_eq!(metrics.sessions_failed_count(FailReason::Disconnect), 1);
+        assert!(Metrics::get(&metrics.kv_pages_reclaimed) >= 1);
+        // the survivor sharing those prefix pages decodes on, bit-exactly
+        let mut done = Vec::new();
+        let mut ticks = 0;
+        while !core.sessions.is_empty() {
+            ticks += 1;
+            assert!(ticks < 1000, "survivor did not finish");
+            core.reap_expired();
+            core.prefill_tick(&metrics);
+            core.decode_tick(&metrics);
+            done.extend(core.retire(&metrics));
+        }
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].finish, FinishReason::Length);
+        assert_eq!(
+            done[0].tokens,
+            reference(&engine, &prompt, 8, KvFormat::Fp32, 0, 2)
+        );
+        core.pages.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn contained_panic_recovery_replays_bit_identical() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let engine = fp_engine();
+        let engines: Vec<(Variant, &Engine)> = vec![(Variant::Fp32, &engine)];
+        let model_cfg = engine.cfg.clone();
+        let metrics = Metrics::new();
+        let prompt: Vec<u16> = (0..20u16).map(|i| (i * 3 + 7) % 256).collect();
+        let build = |faults: Faults| {
+            let mut c = SchedCore::new(
+                &engines,
+                &model_cfg,
+                16,
+                KvFormat::Fp32,
+                8,
+                Sampler::Greedy,
+                0,
+                64,
+                true,
+            );
+            c.faults = faults;
+            c
+        };
+        let mut core = build(Faults::parse("tick_decode:2:panic").unwrap());
+        // two in-flight sessions holding shared-prefix pages
+        assert!(core.enroll(req(1, prompt.clone(), 8), None, None, &metrics).is_ok());
+        core.prefill_tick(&metrics);
+        assert!(core.enroll(req(2, prompt.clone(), 8), None, None, &metrics).is_ok());
+        // first decode pass is clean; the second hits the armed fault
+        let ok = catch_unwind(AssertUnwindSafe(|| {
+            core.prefill_tick(&metrics);
+            core.decode_tick(&metrics);
+        }));
+        assert!(ok.is_ok());
+        let boom = catch_unwind(AssertUnwindSafe(|| {
+            core.prefill_tick(&metrics);
+            core.decode_tick(&metrics);
+        }));
+        assert!(boom.is_err(), "armed tick_decode fault did not fire");
+        // supervisor path: fail the in-flight sessions, rebuild, verify
+        let (failed, held) = core.fail_all_sessions("scheduler fault", &metrics);
+        assert_eq!(failed, 2);
+        assert!(held >= 1, "in-flight sessions held no pages?");
+        assert_eq!(metrics.sessions_failed_count(FailReason::Panic), 2);
+        core = build(Faults::none());
+        core.kv_invariants().unwrap();
+        // post-recovery requests replay bit-identically to the reference
+        let rs = drive(&mut core, vec![req(3, prompt.clone(), 8)], &metrics);
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].finish, FinishReason::Length);
+        assert_eq!(
+            rs[0].tokens,
+            reference(&engine, &prompt, 8, KvFormat::Fp32, 0, 3)
+        );
+        core.pages.check_invariants().unwrap();
+    }
+
+    /// Satellite: fault-injected panics, timeouts and cancellations at
+    /// arbitrary tick boundaries never leak or double-free KV pages — the
+    /// page-manager invariants hold after every tick and every supervised
+    /// recovery (shared-prefix pages held across the fault included), and
+    /// post-recovery requests replay bit-identically to the reference.
+    #[test]
+    fn prop_faults_at_any_tick_never_leak_pages() {
+        use crate::util::prop::{self, Config};
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+
+        let engine = fp_engine();
+        let engines: Vec<(Variant, &Engine)> = vec![(Variant::Fp32, &engine)];
+        let model_cfg = engine.cfg.clone();
+
+        #[derive(Debug)]
+        struct Scenario {
+            site: &'static str,
+            nth: u64,
+            mode: &'static str,
+            kv_pages: usize,
+            n_reqs: usize,
+            cancel_mask: u8,
+            timeout_mask: u8,
+        }
+
+        prop::forall(
+            "fault_recovery_no_leak",
+            Config { cases: 24, seed: 0xFA017 },
+            |rng| Scenario {
+                site: ["tick_prefill", "kv_alloc", "tick_decode"][rng.below(3)],
+                nth: rng.below(6) as u64 + 1,
+                mode: if rng.below(2) == 0 { "panic" } else { "err" },
+                kv_pages: rng.below(12) + 4,
+                n_reqs: rng.below(4) + 2,
+                cancel_mask: rng.next_u64() as u8,
+                timeout_mask: rng.next_u64() as u8,
+            },
+            |sc| {
+                let metrics = Metrics::new();
+                let stem: Vec<u16> = (0..20u16).map(|i| (i * 11 + 3) % 256).collect();
+                let spec = format!("{}:{}:{}", sc.site, sc.nth, sc.mode);
+                let build = |faults: Faults| {
+                    let mut c = SchedCore::new(
+                        &engines,
+                        &model_cfg,
+                        sc.kv_pages,
+                        KvFormat::Fp32,
+                        8,
+                        Sampler::Greedy,
+                        0,
+                        8,
+                        true,
+                    );
+                    c.faults = faults;
+                    c
+                };
+                let mut core = build(Faults::parse(&spec).unwrap());
+                // shared stem, distinct tails: prefix pages are refcounted
+                // across sessions when the fault lands
+                let mut pending: Vec<GenerateRequest> = (0..sc.n_reqs)
+                    .map(|i| {
+                        let mut p = stem.clone();
+                        p.push(i as u16);
+                        let mut r = req(i as u64 + 1, p, 6);
+                        if sc.timeout_mask >> i & 1 == 1 {
+                            // 0 expires before the first tick; 5ms lands
+                            // mid-flight somewhere scheduler-dependent
+                            r = r.with_timeout_ms(if i % 2 == 0 { 0 } else { 5 });
+                        }
+                        r
+                    })
+                    .collect();
+                let cancels: Vec<Arc<AtomicBool>> = (0..sc.n_reqs)
+                    .map(|_| Arc::new(AtomicBool::new(false)))
+                    .collect();
+                let mut ticks = 0usize;
+                let mut restarts = 0usize;
+                while !pending.is_empty() || !core.sessions.is_empty() {
+                    ticks += 1;
+                    if ticks > 10_000 {
+                        return Err("scheduler did not converge".into());
+                    }
+                    for (i, c) in cancels.iter().enumerate() {
+                        if sc.cancel_mask >> i & 1 == 1 && ticks == (i % 3) + 2 {
+                            c.store(true, Ordering::Relaxed);
+                        }
+                    }
+                    let mut still = Vec::with_capacity(pending.len());
+                    for r in pending.drain(..) {
+                        let i = (r.id - 1) as usize;
+                        match core.admission(&r) {
+                            Admit::Run => {
+                                if core
+                                    .enroll(
+                                        r,
+                                        None,
+                                        Some(cancels[i].clone()),
+                                        &metrics,
+                                    )
+                                    .is_err()
+                                {
+                                    return Err("enroll failed after Run".into());
+                                }
+                            }
+                            Admit::Wait => still.push(r),
+                            Admit::Reject(_) => {
+                                return Err("unexpected reject".into())
+                            }
+                        }
+                    }
+                    pending = still;
+                    let tick = catch_unwind(AssertUnwindSafe(|| {
+                        core.reap_expired();
+                        core.prefill_tick(&metrics);
+                        core.decode_tick(&metrics);
+                        core.retire(&metrics)
+                    }));
+                    if tick.is_err() {
+                        // supervised recovery: fail in-flight sessions,
+                        // rebuild the core, keep serving the backlog
+                        core.fail_all_sessions("scheduler fault", &metrics);
+                        restarts += 1;
+                        if restarts > 1 {
+                            return Err("single armed fault fired twice".into());
+                        }
+                        core = build(Faults::none());
+                    }
+                    core.kv_invariants().map_err(|e| format!("tick {ticks}: {e}"))?;
+                }
+                // post-recovery service check: disarm any unfired plan and
+                // verify a fresh shared-stem request replays bit-exactly
+                core.faults = Faults::none();
+                let mut p = stem.clone();
+                p.push(200);
+                let rs = drive(&mut core, vec![req(99, p.clone(), 6)], &metrics);
+                if rs.len() != 1 {
+                    return Err(format!("replay produced {} responses", rs.len()));
+                }
+                let want = reference(&engine, &p, 6, KvFormat::Fp32, 0, 99);
+                if rs[0].tokens != want {
+                    return Err("post-recovery tokens diverged from reference".into());
+                }
+                core.pages.check_invariants().map_err(|e| format!("final: {e}"))
+            },
+        );
     }
 }

@@ -49,16 +49,18 @@
 //! while the single scheduler thread does the actual batching.
 
 use super::generate::{Admit, SchedCore};
-use super::metrics::Metrics;
+use super::metrics::{FailReason, Metrics};
 use super::request::{
-    GenEvent, GenerateRequest, GenerateResponse, RejectReason, Variant,
+    FinishReason, GenEvent, GenerateRequest, GenerateResponse, RejectReason, Variant,
 };
 use crate::formats::KvFormat;
 use crate::model::{Engine, Sampler};
+use crate::util::fault::Faults;
 use crate::util::json::Json;
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
@@ -103,6 +105,22 @@ pub struct HttpServeConfig {
     /// longer than this mid-request is dropped (connection closed, no
     /// error response) rather than holding a handler thread hostage
     pub read_timeout_ms: u64,
+    /// server-default request deadline, milliseconds from submission
+    /// (0 = none). A request's own `timeout_ms` field always wins. An
+    /// expired session is retired at the next tick with
+    /// `"finish":"timeout"` and whatever tokens it has — still a 200.
+    pub request_timeout_ms: u64,
+    /// supervised-restart budget: contained scheduler panics tolerated
+    /// within `restart_window_ms` before the server stops admitting and
+    /// sheds every request as 503 (a crash loop should fail loudly, not
+    /// flap forever)
+    pub restart_budget: usize,
+    /// rolling window (milliseconds) the restart budget is counted over
+    pub restart_window_ms: u64,
+    /// armed fault plan (deterministic chaos testing — see
+    /// [`crate::util::fault`]; [`Faults::none`] in production unless the
+    /// CLI arms it from `ARCQUANT_FAULTS`)
+    pub faults: Faults,
 }
 
 impl Default for HttpServeConfig {
@@ -121,15 +139,21 @@ impl Default for HttpServeConfig {
             prefill_chunk: 64,
             share_prefix: true,
             read_timeout_ms: 250,
+            request_timeout_ms: 0,
+            restart_budget: 3,
+            restart_window_ms: 60_000,
+            faults: Faults::none(),
         }
     }
 }
 
 /// One enqueued generation: the request plus the channel its events
-/// (tokens, completion, rejection) flow back on.
+/// (tokens, completion, rejection) flow back on, plus the cancel flag
+/// the connection handler flips when the client goes away.
 struct Job {
     req: GenerateRequest,
     watch: mpsc::Sender<GenEvent>,
+    cancel: Arc<AtomicBool>,
 }
 
 /// Request-body limits the connection handlers validate against (split
@@ -280,9 +304,17 @@ fn enqueue(
     pending: &mut VecDeque<Job>,
     running: usize,
     queue_cap: usize,
+    draining: bool,
     metrics: &Metrics,
 ) {
-    if pending.len() + running >= queue_cap {
+    if draining {
+        // restart budget blown: the server is shedding load, every
+        // request is answered 503 until the process is replaced
+        Metrics::inc(&metrics.rejected);
+        let _ = job.watch.send(GenEvent::Rejected {
+            reason: RejectReason::ShuttingDown,
+        });
+    } else if pending.len() + running >= queue_cap {
         Metrics::inc(&metrics.rejected);
         let _ = job.watch.send(GenEvent::Rejected {
             reason: RejectReason::QueueFull,
@@ -298,6 +330,19 @@ fn enqueue(
 /// what fits, then runs one batched decode tick per variant — so
 /// concurrent HTTP clients share ticks exactly like the closed-loop
 /// executor's requests do.
+///
+/// The tick body (reap → prefill → decode → retire) runs under
+/// `catch_unwind`: a panic anywhere inside it is **contained**. Every
+/// in-flight session is failed with a terminal [`GenEvent::Failed`]
+/// (surfacing as HTTP 500, or an error chunk on a committed stream), the
+/// core — page manager, sessions, prefix index — is rebuilt from
+/// scratch, the fresh core's KV invariants are asserted, and serving
+/// resumes with the queued backlog; queued-but-unenrolled jobs survive
+/// the restart untouched. `scheduler_restarts_total` counts recoveries.
+/// More than [`HttpServeConfig::restart_budget`] restarts inside a
+/// rolling [`HttpServeConfig::restart_window_ms`] window flips the
+/// server into draining mode (everything is answered 503): a crash loop
+/// fails loudly instead of flapping.
 fn run_scheduler(
     cfg: HttpServeConfig,
     engines: Vec<(Variant, Engine)>,
@@ -307,20 +352,29 @@ fn run_scheduler(
     let refs: Vec<(Variant, &Engine)> =
         engines.iter().map(|(v, e)| (*v, e)).collect();
     let model_cfg = &engines[0].1.cfg;
-    let mut core = SchedCore::new(
-        &refs,
-        model_cfg,
-        cfg.kv_pages,
-        cfg.kv_format,
-        cfg.max_decode_batch,
-        cfg.sampler,
-        cfg.seed,
-        cfg.prefill_chunk,
-        cfg.share_prefix,
-    );
+    let build_core = || {
+        let mut c = SchedCore::new(
+            &refs,
+            model_cfg,
+            cfg.kv_pages,
+            cfg.kv_format,
+            cfg.max_decode_batch,
+            cfg.sampler,
+            cfg.seed,
+            cfg.prefill_chunk,
+            cfg.share_prefix,
+        );
+        // clones share hit counters: a fault armed for the nth hit fires
+        // once per process, not once per rebuilt core
+        c.faults = cfg.faults.clone();
+        c
+    };
+    let mut core = build_core();
     Metrics::set_gauge(&metrics.kv_pages_total, cfg.kv_pages as u64);
     let mut pending: VecDeque<Job> = VecDeque::new();
     let mut rx_closed = false;
+    let mut restarts: VecDeque<std::time::Instant> = VecDeque::new();
+    let mut draining = false;
 
     loop {
         // ---- pull newly arrived jobs (non-blocking) ----
@@ -332,6 +386,7 @@ fn run_scheduler(
                         &mut pending,
                         core.sessions.len(),
                         cfg.queue_cap,
+                        draining,
                         &metrics,
                     ),
                     Err(mpsc::TryRecvError::Empty) => break,
@@ -354,6 +409,7 @@ fn run_scheduler(
                     &mut pending,
                     core.sessions.len(),
                     cfg.queue_cap,
+                    draining,
                     &metrics,
                 ),
                 Err(mpsc::RecvTimeoutError::Timeout) => continue,
@@ -367,6 +423,31 @@ fn run_scheduler(
         // ---- admission (prefill happens chunked, in the tick below) ----
         let mut still = VecDeque::with_capacity(pending.len());
         for job in pending.drain(..) {
+            // deadline blown while still queued: answer now, without ever
+            // taking a session slot (truncation semantics — still a 200,
+            // with zero tokens)
+            if job.req.expired() {
+                let total_ms = job.req.t_submit.elapsed().as_secs_f64() * 1e3;
+                metrics.record_session_failed(FailReason::Timeout);
+                metrics.record_latency(total_ms);
+                Metrics::inc(&metrics.completed);
+                let _ = job.watch.send(GenEvent::Done(GenerateResponse {
+                    id: job.req.id,
+                    variant: job.req.variant,
+                    tokens: Vec::new(),
+                    prompt_len: job.req.prompt.len(),
+                    finish: FinishReason::Timeout,
+                    prefill_ms: 0.0,
+                    decode_ms: 0.0,
+                    total_ms,
+                }));
+                continue;
+            }
+            // client hung up while queued: nobody is reading — drop it
+            if job.cancel.load(Ordering::Relaxed) {
+                metrics.record_session_failed(FailReason::Disconnect);
+                continue;
+            }
             match core.admission(&job.req) {
                 Admit::Reject(reason) => {
                     Metrics::inc(&metrics.rejected);
@@ -374,9 +455,12 @@ fn run_scheduler(
                 }
                 Admit::Wait => still.push_back(job),
                 Admit::Run => {
-                    if let Err((_, watch, reason)) =
-                        core.enroll(job.req, Some(job.watch), &metrics)
-                    {
+                    if let Err((_, watch, reason)) = core.enroll(
+                        job.req,
+                        Some(job.watch),
+                        Some(job.cancel),
+                        &metrics,
+                    ) {
                         Metrics::inc(&metrics.rejected);
                         if let Some(w) = watch {
                             let _ = w.send(GenEvent::Rejected { reason });
@@ -391,11 +475,43 @@ fn run_scheduler(
             (pending.len() + core.sessions.len()) as u64,
         );
 
-        // ---- one chunked-prefill step + one batched decode step per
-        // variant + retire ----
-        core.prefill_tick(&metrics);
-        core.decode_tick(&metrics);
-        let _ = core.retire(&metrics);
+        // ---- one supervised tick: reap expired/cancelled sessions, one
+        // chunked-prefill step, one batched decode step per variant,
+        // retire ----
+        let tick = catch_unwind(AssertUnwindSafe(|| {
+            core.reap_expired();
+            core.prefill_tick(&metrics);
+            core.decode_tick(&metrics);
+            let _ = core.retire(&metrics);
+        }));
+        if tick.is_err() {
+            // contained panic: fail the in-flight sessions, rebuild the
+            // core, resume with the surviving backlog
+            let (_, held) =
+                core.fail_all_sessions("scheduler fault: tick panicked", &metrics);
+            Metrics::add(&metrics.kv_pages_reclaimed, held as u64);
+            Metrics::inc(&metrics.scheduler_restarts);
+            core = build_core();
+            core.kv_invariants()
+                .expect("rebuilt scheduler core has inconsistent KV accounting");
+            Metrics::set_gauge(&metrics.kv_pages_used, 0);
+            let now = std::time::Instant::now();
+            restarts.push_back(now);
+            while restarts.front().is_some_and(|t| {
+                now.duration_since(*t).as_millis() as u64 > cfg.restart_window_ms
+            }) {
+                restarts.pop_front();
+            }
+            if restarts.len() > cfg.restart_budget && !draining {
+                draining = true;
+                for job in pending.drain(..) {
+                    Metrics::inc(&metrics.rejected);
+                    let _ = job.watch.send(GenEvent::Rejected {
+                        reason: RejectReason::ShuttingDown,
+                    });
+                }
+            }
+        }
         Metrics::set_gauge(
             &metrics.queue_depth,
             (pending.len() + core.sessions.len()) as u64,
@@ -567,11 +683,21 @@ fn handle_generate(
     };
     let id = sh.next_id.fetch_add(1, Ordering::Relaxed) + 1;
     let (tx_ev, rx_ev) = mpsc::channel::<GenEvent>();
-    let greq = GenerateRequest::new(id, api.prompt, api.max_new_tokens, api.variant);
+    let mut greq =
+        GenerateRequest::new(id, api.prompt, api.max_new_tokens, api.variant);
+    // the request's own deadline wins over the server default (0 = none)
+    let timeout = api
+        .timeout_ms
+        .or((sh.cfg.request_timeout_ms > 0).then_some(sh.cfg.request_timeout_ms));
+    if let Some(ms) = timeout {
+        greq = greq.with_timeout_ms(ms);
+    }
+    let cancel = Arc::new(AtomicBool::new(false));
     if job_tx
         .send(Job {
             req: greq,
             watch: tx_ev,
+            cancel: cancel.clone(),
         })
         .is_err()
     {
@@ -585,21 +711,44 @@ fn handle_generate(
         );
     }
     if api.stream {
-        stream_generate(w, &rx_ev, keep, sh)
+        stream_generate(w, &rx_ev, &cancel, keep, sh)
     } else {
-        collect_generate(w, &rx_ev, keep, sh)
+        collect_generate(w, &rx_ev, &cancel, keep, sh)
     }
 }
 
+/// Has the peer of `s` gone away? A non-blocking `peek` distinguishes a
+/// closed socket (EOF / hard error) from a merely quiet one. The blocking
+/// flag is restored before returning; the configured read timeout is
+/// unaffected.
+fn client_gone(s: &TcpStream) -> bool {
+    if s.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let mut buf = [0u8; 1];
+    let gone = match s.peek(&mut buf) {
+        Ok(0) => true,  // orderly close: no one will read the response
+        Ok(_) => false, // pipelined bytes waiting — very much alive
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+        Err(_) => true, // reset / hard error
+    };
+    let _ = s.set_nonblocking(false);
+    gone
+}
+
 /// Non-streaming: wait for the terminal event, answer with one JSON body.
+/// While waiting, the socket is polled for EOF so a client that hangs up
+/// cancels its session — the scheduler reaps it at the next tick and
+/// reclaims its KV pages instead of decoding into the void.
 fn collect_generate(
     w: &mut TcpStream,
     rx_ev: &mpsc::Receiver<GenEvent>,
+    cancel: &Arc<AtomicBool>,
     keep: bool,
     sh: &ConnShared,
 ) -> bool {
     loop {
-        match rx_ev.recv() {
+        match rx_ev.recv_timeout(Duration::from_millis(50)) {
             Ok(GenEvent::Token(_)) => {}
             Ok(GenEvent::Done(resp)) => {
                 return send(
@@ -621,7 +770,24 @@ fn collect_generate(
                     &sh.metrics,
                 );
             }
-            Err(_) => {
+            Ok(GenEvent::Failed { message }) => {
+                // admitted, then lost to a contained scheduler fault
+                return send(
+                    w,
+                    500,
+                    "application/json",
+                    &error_body(message),
+                    false,
+                    &sh.metrics,
+                );
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if client_gone(w) {
+                    cancel.store(true, Ordering::Relaxed);
+                    return false;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
                 return send(
                     w,
                     500,
@@ -642,6 +808,7 @@ fn collect_generate(
 fn stream_generate(
     w: &mut TcpStream,
     rx_ev: &mpsc::Receiver<GenEvent>,
+    cancel: &Arc<AtomicBool>,
     keep: bool,
     sh: &ConnShared,
 ) -> bool {
@@ -668,6 +835,10 @@ fn stream_generate(
             &sh.metrics,
         );
     }
+    if let GenEvent::Failed { message } = &first {
+        // failed before the 200 head was committed: a plain 500
+        return send(w, 500, "application/json", &error_body(message), false, &sh.metrics);
+    }
     sh.metrics.record_http_status(200);
     let head = format!(
         "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\n\
@@ -675,19 +846,39 @@ fn stream_generate(
         if keep { "keep-alive" } else { "close" }
     );
     if w.write_all(head.as_bytes()).is_err() {
+        cancel.store(true, Ordering::Relaxed);
         return false;
     }
     let mut ev = first;
     loop {
         match ev {
             GenEvent::Token(t) => {
-                if write_chunk(w, &format!("{{\"token\":{t}}}\n")).is_err() {
+                // a failed chunk write means the client went away: flag
+                // the session for cancellation so its pages come back at
+                // the next tick. The `socket_write` fault point simulates
+                // exactly that failure, deterministically.
+                if sh.cfg.faults.point("socket_write")
+                    || write_chunk(w, &format!("{{\"token\":{t}}}\n")).is_err()
+                {
+                    cancel.store(true, Ordering::Relaxed);
                     return false;
                 }
             }
             GenEvent::Done(resp) => {
                 let mut j = response_obj(&resp);
                 j.set("done", Json::Bool(true));
+                if write_chunk(w, &format!("{}\n", j.dump())).is_err() {
+                    return false;
+                }
+                return w.write_all(b"0\r\n\r\n").is_ok();
+            }
+            GenEvent::Failed { message } => {
+                // the 200 head is already committed: deliver the failure
+                // as a terminal error chunk so the client sees a
+                // well-formed body instead of a truncated stream
+                let mut j = Json::obj();
+                j.set("error", Json::Str((*message).into()))
+                    .set("done", Json::Bool(true));
                 if write_chunk(w, &format!("{}\n", j.dump())).is_err() {
                     return false;
                 }
@@ -851,6 +1042,9 @@ struct ApiRequest {
     max_new_tokens: usize,
     variant: Variant,
     stream: bool,
+    /// per-request deadline budget, ms from submission (overrides the
+    /// server's `request_timeout_ms` default; `0` expires immediately)
+    timeout_ms: Option<u64>,
 }
 
 fn parse_generate_body(s: &str, lim: &BodyLimits) -> Result<ApiRequest, String> {
@@ -862,7 +1056,7 @@ fn parse_generate_body(s: &str, lim: &BodyLimits) -> Result<ApiRequest, String> 
     for k in map.keys() {
         if !matches!(
             k.as_str(),
-            "prompt" | "max_new_tokens" | "variant" | "stream"
+            "prompt" | "max_new_tokens" | "variant" | "stream" | "timeout_ms"
         ) {
             return Err(format!("unknown field '{k}'"));
         }
@@ -920,11 +1114,22 @@ fn parse_generate_body(s: &str, lim: &BodyLimits) -> Result<ApiRequest, String> 
         Some(Json::Bool(b)) => *b,
         Some(_) => return Err("'stream' must be a boolean".into()),
     };
+    let timeout_ms = match j.get("timeout_ms") {
+        None => None,
+        Some(v) => {
+            let n = v
+                .as_f64()
+                .filter(|n| n.fract() == 0.0 && *n >= 0.0)
+                .ok_or("'timeout_ms' must be a non-negative integer")?;
+            Some(n as u64)
+        }
+    };
     Ok(ApiRequest {
         prompt,
         max_new_tokens,
         variant,
         stream,
+        timeout_ms,
     })
 }
 
@@ -1033,12 +1238,13 @@ mod tests {
         assert_eq!(a.max_new_tokens, 16);
         assert_eq!(a.variant, Variant::ArcPacked);
         assert!(!a.stream);
+        assert_eq!(a.timeout_ms, None);
     }
 
     #[test]
     fn parses_full_body() {
         let a = parse_generate_body(
-            r#"{"prompt":[0,255],"max_new_tokens":4,"variant":"fp32","stream":true}"#,
+            r#"{"prompt":[0,255],"max_new_tokens":4,"variant":"fp32","stream":true,"timeout_ms":1500}"#,
             &limits(),
         )
         .unwrap();
@@ -1046,6 +1252,11 @@ mod tests {
         assert_eq!(a.max_new_tokens, 4);
         assert_eq!(a.variant, Variant::Fp32);
         assert!(a.stream);
+        assert_eq!(a.timeout_ms, Some(1500));
+        // 0 is legal (instantly expired — used to probe timeout paths)
+        let a = parse_generate_body(r#"{"prompt":[1],"timeout_ms":0}"#, &limits())
+            .unwrap();
+        assert_eq!(a.timeout_ms, Some(0));
     }
 
     #[test]
@@ -1065,6 +1276,9 @@ mod tests {
             (r#"{"prompt":[1],"variant":"bogus"}"#, "unknown variant"),
             (r#"{"prompt":[1],"stream":"yes"}"#, "non-bool stream"),
             (r#"{"prompt":[1],"extra":1}"#, "unknown field"),
+            (r#"{"prompt":[1],"timeout_ms":-5}"#, "negative timeout"),
+            (r#"{"prompt":[1],"timeout_ms":1.5}"#, "fractional timeout"),
+            (r#"{"prompt":[1],"timeout_ms":"1s"}"#, "non-numeric timeout"),
         ] {
             assert!(
                 parse_generate_body(body, &l).is_err(),

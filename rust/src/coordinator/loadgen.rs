@@ -27,11 +27,48 @@
 
 use super::request::Variant;
 use crate::util::json::Json;
-use crate::util::{stats, Timer};
+use crate::util::{stats, Prng, Timer};
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::sync::Mutex;
+use std::time::Duration;
+
+/// Retries per request beyond the first attempt (unless
+/// [`LoadgenConfig::no_retry`]).
+const RETRY_MAX: usize = 4;
+/// Backoff base when the server sent no `Retry-After` header.
+const RETRY_BASE_MS: u64 = 100;
+/// Ceiling on any single backoff sleep (pre-jitter).
+const RETRY_CAP_MS: u64 = 2_000;
+
+/// Statuses worth retrying: 429 (queue full) and 503 (draining /
+/// capacity) are explicit backpressure, and 500 is transient under the
+/// server's supervised scheduler restarts — the request that rode
+/// through a tick panic fails, but the next attempt lands on the
+/// rebuilt core.
+fn retryable_status(status: u16) -> bool {
+    matches!(status, 429 | 500 | 503)
+}
+
+/// Capped exponential backoff with deterministic jitter: `base_ms`
+/// (the server's `Retry-After`, else [`RETRY_BASE_MS`]) doubled per
+/// attempt, capped at [`RETRY_CAP_MS`], then scaled by a ±25% factor
+/// drawn from the per-connection PRNG so concurrent connections
+/// decorrelate without losing run-to-run reproducibility.
+fn retry_delay_ms(base_ms: u64, attempt: u32, rng: &mut Prng) -> u64 {
+    let exp = base_ms
+        .saturating_mul(1u64 << attempt.min(16))
+        .min(RETRY_CAP_MS);
+    (exp as f64 * (0.75 + 0.5 * rng.f64())) as u64
+}
+
+/// Poison-tolerant lock: a worker thread that panics mid-update loses at
+/// worst its own sample; the aggregate counters stay usable (same
+/// discipline as the server's metrics registry).
+fn locked<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// One parsed HTTP response.
 #[derive(Clone, Debug)]
@@ -256,6 +293,11 @@ pub struct LoadgenConfig {
     /// on, the report also carries TTFT percentiles and the server's
     /// prefix-cache deltas scraped from `/metrics`.
     pub shared_prefix_len: usize,
+    /// Disable retries: every request gets exactly one attempt and
+    /// backpressure statuses surface directly in the report. By default
+    /// the generator retries 429/500/503 (honoring `Retry-After`) with
+    /// capped exponential backoff and deterministic jitter.
+    pub no_retry: bool,
 }
 
 impl Default for LoadgenConfig {
@@ -271,6 +313,7 @@ impl Default for LoadgenConfig {
             stream: false,
             seed: 0,
             shared_prefix_len: 0,
+            no_retry: false,
         }
     }
 }
@@ -306,6 +349,11 @@ pub struct LoadgenReport {
     /// KV pages the server avoided allocating thanks to prefix sharing
     /// during this run (Δ of `arcquant_kv_pages_saved_total`)
     pub pages_saved: u64,
+    /// retry attempts issued (backoff sleeps taken) across the run
+    pub retries: usize,
+    /// requests that exhausted their retry budget on a retryable
+    /// failure (the final status still lands in `by_status`)
+    pub giveups: usize,
 }
 
 /// Deterministic synthetic prompt for (connection, request) — the same
@@ -408,6 +456,8 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
     let by_status = Mutex::new(BTreeMap::<u16, usize>::new());
     let tokens = Mutex::new(0usize);
     let transport_errors = Mutex::new(0usize);
+    let retries = Mutex::new(0usize);
+    let giveups = Mutex::new(0usize);
     let prefix = shared_prefix(cfg.shared_prefix_len, cfg.vocab, cfg.seed);
     let counters_before = scrape_prefix_counters(&cfg.addr);
 
@@ -419,15 +469,21 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
             let by_status = &by_status;
             let tokens = &tokens;
             let transport_errors = &transport_errors;
+            let retries = &retries;
+            let giveups = &giveups;
             let prefix = &prefix;
             scope.spawn(move || {
+                let mut rng = Prng::new(
+                    cfg.seed ^ (conn as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                );
                 let mut client = match HttpClient::connect(&cfg.addr) {
                     Ok(c) => c,
                     Err(_) => {
-                        *transport_errors.lock().unwrap() += cfg.requests_per_conn;
+                        *locked(transport_errors) += cfg.requests_per_conn;
                         return;
                     }
                 };
+                let max_attempts = if cfg.no_retry { 1 } else { 1 + RETRY_MAX };
                 for req in 0..cfg.requests_per_conn {
                     let mut prompt = prefix.clone();
                     prompt.extend(loadgen_prompt(
@@ -444,25 +500,94 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
                         cfg.stream,
                     );
                     let t = Timer::start();
-                    match client.request_timed("POST", "/v1/generate", Some(&body), &t)
-                    {
-                        Ok((reply, ttft_ms)) => {
-                            latencies.lock().unwrap().push(t.ms());
-                            *by_status
-                                .lock()
-                                .unwrap()
-                                .entry(reply.status)
-                                .or_insert(0) += 1;
-                            if reply.status == 200 {
-                                ttfts.lock().unwrap().push(ttft_ms);
-                                *tokens.lock().unwrap() +=
-                                    count_tokens(&reply);
+                    // Bounded retry loop: on a retryable status, back off
+                    // and reissue; on a transport failure, reconnect and
+                    // reissue. The latency sample covers all attempts
+                    // (client-observed time to a usable answer).
+                    let mut outcome = None;
+                    for attempt in 0..max_attempts {
+                        let last = attempt + 1 == max_attempts;
+                        match client.request_timed(
+                            "POST",
+                            "/v1/generate",
+                            Some(&body),
+                            &t,
+                        ) {
+                            Ok((reply, ttft_ms)) => {
+                                // The server closes the socket after 500s;
+                                // reopen it for whatever comes next.
+                                if reply.header("connection").is_some_and(|v| {
+                                    v.eq_ignore_ascii_case("close")
+                                }) {
+                                    match HttpClient::connect(&cfg.addr) {
+                                        Ok(c) => client = c,
+                                        Err(_) => {
+                                            outcome = Some((reply, ttft_ms));
+                                            break;
+                                        }
+                                    }
+                                }
+                                if last || !retryable_status(reply.status) {
+                                    outcome = Some((reply, ttft_ms));
+                                    break;
+                                }
+                                let base = reply
+                                    .header("retry-after")
+                                    .and_then(|v| v.trim().parse::<u64>().ok())
+                                    .map(|secs| secs.saturating_mul(1000))
+                                    .filter(|ms| *ms > 0)
+                                    .unwrap_or(RETRY_BASE_MS);
+                                *locked(retries) += 1;
+                                std::thread::sleep(Duration::from_millis(
+                                    retry_delay_ms(base, attempt as u32, &mut rng),
+                                ));
+                            }
+                            Err(_) => {
+                                // Dead socket: reconnect and retry, unless
+                                // the budget is spent or the server is gone.
+                                if last {
+                                    break;
+                                }
+                                match HttpClient::connect(&cfg.addr) {
+                                    Ok(c) => client = c,
+                                    Err(_) => break,
+                                }
+                                *locked(retries) += 1;
+                                std::thread::sleep(Duration::from_millis(
+                                    retry_delay_ms(
+                                        RETRY_BASE_MS,
+                                        attempt as u32,
+                                        &mut rng,
+                                    ),
+                                ));
                             }
                         }
-                        Err(_) => {
-                            *transport_errors.lock().unwrap() +=
+                    }
+                    match outcome {
+                        Some((reply, ttft_ms)) => {
+                            locked(latencies).push(t.ms());
+                            *locked(by_status).entry(reply.status).or_insert(0) +=
+                                1;
+                            if reply.status == 200 {
+                                locked(ttfts).push(ttft_ms);
+                                *locked(tokens) += count_tokens(&reply);
+                            } else if !cfg.no_retry
+                                && retryable_status(reply.status)
+                            {
+                                *locked(giveups) += 1;
+                            }
+                        }
+                        None => {
+                            // The socket died and could not be
+                            // re-established: charge this and the remaining
+                            // requests as transport errors and give up on
+                            // the connection.
+                            if !cfg.no_retry {
+                                *locked(giveups) += 1;
+                            }
+                            *locked(transport_errors) +=
                                 cfg.requests_per_conn - req;
-                            return; // connection is unusable
+                            return;
                         }
                     }
                 }
@@ -472,11 +597,16 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
     let wall_ms = wall.ms();
     let counters_after = scrape_prefix_counters(&cfg.addr);
 
-    let latencies = latencies.into_inner().unwrap();
-    let ttfts = ttfts.into_inner().unwrap();
-    let by_status = by_status.into_inner().unwrap();
-    let generated_tokens = tokens.into_inner().unwrap();
-    let transport_errors = transport_errors.into_inner().unwrap();
+    // (`into_inner` mirrors `locked`'s poison tolerance)
+    let latencies = latencies.into_inner().unwrap_or_else(|e| e.into_inner());
+    let ttfts = ttfts.into_inner().unwrap_or_else(|e| e.into_inner());
+    let by_status = by_status.into_inner().unwrap_or_else(|e| e.into_inner());
+    let generated_tokens = tokens.into_inner().unwrap_or_else(|e| e.into_inner());
+    let transport_errors = transport_errors
+        .into_inner()
+        .unwrap_or_else(|e| e.into_inner());
+    let retries = retries.into_inner().unwrap_or_else(|e| e.into_inner());
+    let giveups = giveups.into_inner().unwrap_or_else(|e| e.into_inner());
     let requests = cfg.connections * cfg.requests_per_conn;
     let ok = by_status.get(&200).copied().unwrap_or(0);
     let errors = transport_errors
@@ -514,6 +644,8 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
         },
         pages_saved: (counters_after.pages_saved - counters_before.pages_saved)
             .max(0.0) as u64,
+        retries,
+        giveups,
     })
 }
 
@@ -625,6 +757,39 @@ mod tests {
         let raw = "HTTP/1.1 200 OK\r\nContent-Length: 2\r\n\r\n{}";
         let (_, ttft) = read_reply_with_ttft(&mut Cursor::new(raw), None).unwrap();
         assert!(ttft.is_none());
+    }
+
+    #[test]
+    fn retryable_statuses_are_backpressure_and_faults() {
+        for s in [429, 500, 503] {
+            assert!(retryable_status(s), "{s} should be retryable");
+        }
+        for s in [200, 400, 404, 501] {
+            assert!(!retryable_status(s), "{s} should not be retryable");
+        }
+    }
+
+    #[test]
+    fn retry_backoff_is_capped_deterministic_and_jittered() {
+        // Deterministic: the same seed yields the same delay sequence.
+        let seq = |seed: u64| -> Vec<u64> {
+            let mut rng = Prng::new(seed);
+            (0..6).map(|a| retry_delay_ms(100, a, &mut rng)).collect()
+        };
+        assert_eq!(seq(7), seq(7));
+        // Jitter keeps every delay within ±25% of the capped exponential.
+        let mut rng = Prng::new(42);
+        for attempt in 0..10u32 {
+            let exp = (100u64 << attempt.min(16)).min(RETRY_CAP_MS);
+            let d = retry_delay_ms(100, attempt, &mut rng);
+            assert!(
+                d >= exp * 3 / 4 && d <= exp * 5 / 4,
+                "attempt {attempt}: delay {d} outside jitter band of {exp}"
+            );
+        }
+        // The cap holds even for huge Retry-After bases and attempts.
+        let mut rng = Prng::new(1);
+        assert!(retry_delay_ms(u64::MAX, 60, &mut rng) <= RETRY_CAP_MS * 5 / 4);
     }
 
     #[test]

@@ -12,7 +12,50 @@
 use super::request::Variant;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
+
+/// Why a session was failed/cancelled by the scheduler after admission
+/// — the label set of `arcquant_sessions_failed_total`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailReason {
+    /// Lost to a scheduler panic (supervised restart).
+    Panic,
+    /// Retired at its `timeout_ms` deadline with partial tokens.
+    Timeout,
+    /// Client went away mid-generation; session cancelled.
+    Disconnect,
+}
+
+impl FailReason {
+    pub const ALL: [FailReason; 3] =
+        [FailReason::Panic, FailReason::Timeout, FailReason::Disconnect];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FailReason::Panic => "panic",
+            FailReason::Timeout => "timeout",
+            FailReason::Disconnect => "disconnect",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            FailReason::Panic => 0,
+            FailReason::Timeout => 1,
+            FailReason::Disconnect => 2,
+        }
+    }
+}
+
+/// Lock a metrics mutex, recovering from poisoning. Every guarded value
+/// here is an append-only aggregate (counter maps, a rolling sample
+/// window): a panicking writer leaves at worst one partially-recorded
+/// sample, never a broken invariant — so after a supervised scheduler
+/// restart the handler threads must keep serving `/metrics` rather than
+/// cascade the original panic through a poisoned lock.
+fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Request-latency bucket upper bounds in milliseconds (Prometheus
 /// cumulative-histogram convention; an implicit `+Inf` bucket follows).
@@ -109,6 +152,12 @@ pub struct Metrics {
     pub kv_shared_pages: AtomicU64,
     /// generated tokens per variant, indexed by [`Variant::index`]
     pub tokens_by_variant: [AtomicU64; 4],
+    /// supervised scheduler restarts (panic containment)
+    pub scheduler_restarts: AtomicU64,
+    /// sessions failed after admission, indexed by [`FailReason`]
+    pub sessions_failed: [AtomicU64; 3],
+    /// KV pages reclaimed from failed/cancelled/expired sessions
+    pub kv_pages_reclaimed: AtomicU64,
     /// end-to-end request latency (submit → completion), ms
     pub request_latency: Histogram,
     /// HTTP responses by status code
@@ -133,7 +182,7 @@ impl Metrics {
     }
 
     pub fn record_stage(&self, stage: &str, ms: f64) {
-        let mut m = self.stages.lock().unwrap();
+        let mut m = locked(&self.stages);
         let e = m.entry(stage.to_string()).or_insert((0.0, 0));
         e.0 += ms;
         e.1 += 1;
@@ -141,7 +190,7 @@ impl Metrics {
 
     pub fn record_latency(&self, ms: f64) {
         {
-            let mut l = self.latencies_ms.lock().unwrap();
+            let mut l = locked(&self.latencies_ms);
             if l.0.len() < LATENCY_WINDOW {
                 l.0.push(ms);
             } else {
@@ -154,23 +203,33 @@ impl Metrics {
     }
 
     pub fn record_http_status(&self, status: u16) {
-        *self.http_by_status.lock().unwrap().entry(status).or_insert(0) += 1;
+        *locked(&self.http_by_status).entry(status).or_insert(0) += 1;
     }
 
     pub fn http_statuses(&self) -> BTreeMap<u16, u64> {
-        self.http_by_status.lock().unwrap().clone()
+        locked(&self.http_by_status).clone()
     }
 
     pub fn add_variant_tokens(&self, v: Variant, n: u64) {
         self.tokens_by_variant[v.index()].fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Count one failed/cancelled session under its reason label.
+    pub fn record_session_failed(&self, reason: FailReason) {
+        self.sessions_failed[reason.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Current count of one `sessions_failed_total` label.
+    pub fn sessions_failed_count(&self, reason: FailReason) -> u64 {
+        self.sessions_failed[reason.index()].load(Ordering::Relaxed)
+    }
+
     pub fn stage_totals(&self) -> BTreeMap<String, (f64, u64)> {
-        self.stages.lock().unwrap().clone()
+        locked(&self.stages).clone()
     }
 
     pub fn latency_percentiles(&self) -> (f64, f64, f64) {
-        let l = self.latencies_ms.lock().unwrap();
+        let l = locked(&self.latencies_ms);
         (
             crate::util::stats::percentile(&l.0, 50.0),
             crate::util::stats::percentile(&l.0, 90.0),
@@ -263,6 +322,31 @@ impl Metrics {
             "KV pages (and their prefill recomputation) saved by prefix sharing.",
             Metrics::get(&self.kv_pages_saved),
         );
+        counter(
+            "arcquant_scheduler_restarts_total",
+            "Supervised scheduler restarts after a contained panic.",
+            Metrics::get(&self.scheduler_restarts),
+        );
+        counter(
+            "arcquant_kv_pages_reclaimed_total",
+            "KV pages reclaimed from failed, expired or disconnected sessions.",
+            Metrics::get(&self.kv_pages_reclaimed),
+        );
+
+        let _ = writeln!(
+            o,
+            "# HELP arcquant_sessions_failed_total Sessions failed after \
+             admission, by reason."
+        );
+        let _ = writeln!(o, "# TYPE arcquant_sessions_failed_total counter");
+        for r in FailReason::ALL {
+            let _ = writeln!(
+                o,
+                "arcquant_sessions_failed_total{{reason=\"{}\"}} {}",
+                r.name(),
+                self.sessions_failed[r.index()].load(Ordering::Relaxed)
+            );
+        }
 
         let _ = writeln!(
             o,
@@ -478,6 +562,11 @@ mod tests {
         Metrics::set_gauge(&m.kv_pages_saved, 3);
         Metrics::set_gauge(&m.kv_shared_pages, 2);
         Metrics::inc(&m.prefill_chunks);
+        Metrics::inc(&m.scheduler_restarts);
+        m.record_session_failed(FailReason::Panic);
+        m.record_session_failed(FailReason::Timeout);
+        m.record_session_failed(FailReason::Timeout);
+        Metrics::add(&m.kv_pages_reclaimed, 5);
         m.record_stage("decode:fp32", 2.5);
         let text = m.render_prometheus();
         for needle in [
@@ -497,6 +586,11 @@ mod tests {
             "arcquant_prefix_cache_hits_total 3",
             "arcquant_kv_pages_saved_total 3",
             "arcquant_kv_shared_pages 2",
+            "arcquant_scheduler_restarts_total 1",
+            "arcquant_sessions_failed_total{reason=\"panic\"} 1",
+            "arcquant_sessions_failed_total{reason=\"timeout\"} 2",
+            "arcquant_sessions_failed_total{reason=\"disconnect\"} 0",
+            "arcquant_kv_pages_reclaimed_total 5",
             "arcquant_prefix_cache_hit_rate 0.75",
             "arcquant_request_latency_ms_bucket{le=\"+Inf\"} 1",
             "arcquant_request_latency_ms_count 1",
@@ -519,6 +613,30 @@ mod tests {
             .collect();
         assert_eq!(buckets.len(), LATENCY_BUCKETS_MS.len() + 1);
         assert!(buckets.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn poisoned_locks_recover() {
+        // A handler thread must keep serving /metrics after some other
+        // thread panicked while holding a metrics lock — the supervised
+        // scheduler restart already paid for that panic.
+        let m = std::sync::Arc::new(Metrics::new());
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _stages = m2.stages.lock().unwrap();
+            let _lat = m2.latencies_ms.lock().unwrap();
+            let _http = m2.http_by_status.lock().unwrap();
+            panic!("poison every metrics lock");
+        })
+        .join();
+        m.record_stage("decode:fp32", 1.0);
+        m.record_latency(2.0);
+        m.record_http_status(500);
+        assert_eq!(m.stage_totals()["decode:fp32"].1, 1);
+        assert_eq!(m.http_statuses()[&500], 1);
+        let (p50, _, _) = m.latency_percentiles();
+        assert!(p50 > 0.0);
+        assert!(!m.render_prometheus().is_empty());
     }
 
     #[test]

@@ -99,6 +99,11 @@ pub struct GenerateRequest {
     pub variant: Variant,
     /// enqueue timestamp for latency accounting
     pub t_submit: std::time::Instant,
+    /// Deadline budget in milliseconds, measured from `t_submit` (queue
+    /// wait counts). `None` = no deadline. The scheduler retires an
+    /// expired session at the next tick with [`FinishReason::Timeout`]
+    /// and whatever tokens it has.
+    pub timeout_ms: Option<u64>,
 }
 
 impl GenerateRequest {
@@ -109,6 +114,21 @@ impl GenerateRequest {
             max_new_tokens,
             variant,
             t_submit: std::time::Instant::now(),
+            timeout_ms: None,
+        }
+    }
+
+    /// Attach a deadline budget (milliseconds from submission).
+    pub fn with_timeout_ms(mut self, ms: u64) -> Self {
+        self.timeout_ms = Some(ms);
+        self
+    }
+
+    /// Has this request's deadline passed (relative to `t_submit`)?
+    pub fn expired(&self) -> bool {
+        match self.timeout_ms {
+            Some(ms) => self.t_submit.elapsed().as_millis() as u64 >= ms,
+            None => false,
         }
     }
 }
@@ -123,6 +143,14 @@ pub enum FinishReason {
     OutOfPages,
     /// Rejected before any forward ran (admission or page budget).
     Rejected,
+    /// The request's deadline (`timeout_ms`) passed mid-flight; retired
+    /// with the tokens it had (still a 200 — truncation, not an error).
+    Timeout,
+    /// The client went away mid-generation (streaming write failed or
+    /// the unary socket closed); the session was cancelled and its KV
+    /// pages reclaimed. No one reads this response — it exists so the
+    /// scheduler's retirement path stays uniform.
+    Disconnect,
 }
 
 impl FinishReason {
@@ -132,6 +160,8 @@ impl FinishReason {
             FinishReason::Length => "length",
             FinishReason::OutOfPages => "out_of_pages",
             FinishReason::Rejected => "rejected",
+            FinishReason::Timeout => "timeout",
+            FinishReason::Disconnect => "disconnect",
         }
     }
 }
@@ -173,8 +203,8 @@ impl RejectReason {
 /// Per-generation event stream, sent from the scheduler to whoever is
 /// watching a request (the HTTP connection handler). Every sampled token
 /// is forwarded as it is produced — chunked streaming reads these —
-/// followed by exactly one terminal event ([`GenEvent::Done`] or
-/// [`GenEvent::Rejected`]).
+/// followed by exactly one terminal event ([`GenEvent::Done`],
+/// [`GenEvent::Rejected`] or [`GenEvent::Failed`]).
 #[derive(Clone, Debug)]
 pub enum GenEvent {
     /// One sampled token (prefill-sampled first token included).
@@ -183,6 +213,10 @@ pub enum GenEvent {
     Done(GenerateResponse),
     /// Terminal: rejected before any forward ran.
     Rejected { reason: RejectReason },
+    /// Terminal: the session was admitted and then lost to a scheduler
+    /// fault (panic → supervised restart). Maps to HTTP 500 (or an
+    /// error chunk if streaming already committed a 200).
+    Failed { message: &'static str },
 }
 
 /// Completed (or rejected) generation: the sampled tokens + timing.
@@ -246,5 +280,18 @@ mod tests {
         assert_eq!(FinishReason::Length.name(), "length");
         assert_eq!(FinishReason::OutOfPages.name(), "out_of_pages");
         assert_eq!(FinishReason::Rejected.name(), "rejected");
+        assert_eq!(FinishReason::Timeout.name(), "timeout");
+        assert_eq!(FinishReason::Disconnect.name(), "disconnect");
+    }
+
+    #[test]
+    fn request_deadlines() {
+        let r = GenerateRequest::new(1, vec![1, 2], 4, Variant::Fp32);
+        assert!(r.timeout_ms.is_none() && !r.expired());
+        let r = r.with_timeout_ms(0);
+        assert!(r.expired(), "a zero budget is already expired");
+        let r = GenerateRequest::new(2, vec![1], 4, Variant::Fp32)
+            .with_timeout_ms(60_000);
+        assert!(!r.expired());
     }
 }

@@ -83,11 +83,20 @@ USAGE: arcquant <subcommand> [--flags]
             [--no-prefix-share]  (disable the content-addressed
                           shared-prefix KV cache; outputs are bit-identical
                           either way, sharing only saves pages and prefill)
+            [--request-timeout-ms MS]  (server-default request deadline;
+                          0 = none; a request's \"timeout_ms\" field wins.
+                          Expired requests finish with reason \"timeout\"
+                          and whatever tokens they have)
+            (env ARCQUANT_FAULTS=\"site:nth[:panic|err]\" arms deterministic
+             fault injection for chaos testing; see docs/http_serving.md)
   loadgen   --addr HOST:PORT [--connections 4] [--requests 8]
             [--prompt-len 16] [--max-new 8] [--variant V] [--vocab 256]
             [--stream] [--smoke]   (closed-loop HTTP load generator:
                           tok/s + latency percentiles; --smoke shrinks
                           everything for CI)
+            [--no-retry]  (one attempt per request: disable the default
+                          retry of 429/500/503 with Retry-After-honoring
+                          capped exponential backoff)
             [--shared-prefix N]  (shared-prefix scenario: every request
                           carries the same N-token system prompt plus a
                           distinct tail; implies --stream and reports TTFT
@@ -506,26 +515,42 @@ fn cmd_serve_http(
     generate: Option<usize>,
 ) -> i32 {
     use std::io::Write as _;
-    let parsed =
-        (|| -> Result<(usize, usize, usize, usize, usize, u64, usize), String> {
-            Ok((
-                args.usize_or("decode-batch", 8)?,
-                args.usize_or("kv-pages", 512)?,
-                args.usize_or("queue-cap", 64)?,
-                args.usize_or("max-len", 512)?,
-                args.usize_or("serve-for", 0)?,
-                args.u64_or("seed", 0)?,
-                args.usize_or("prefill-chunk", 64)?,
-            ))
-        })();
-    let (decode_batch, kv_pages, queue_cap, max_len, serve_for, seed, prefill_chunk) =
-        match parsed {
-            Ok(v) => v,
-            Err(e) => {
-                eprintln!("{e}");
-                return 2;
-            }
-        };
+    #[allow(clippy::type_complexity)]
+    let parsed = (|| -> Result<
+        (usize, usize, usize, usize, usize, u64, usize, u64),
+        String,
+    > {
+        Ok((
+            args.usize_or("decode-batch", 8)?,
+            args.usize_or("kv-pages", 512)?,
+            args.usize_or("queue-cap", 64)?,
+            args.usize_or("max-len", 512)?,
+            args.usize_or("serve-for", 0)?,
+            args.u64_or("seed", 0)?,
+            args.usize_or("prefill-chunk", 64)?,
+            args.u64_or("request-timeout-ms", 0)?,
+        ))
+    })();
+    let (
+        decode_batch,
+        kv_pages,
+        queue_cap,
+        max_len,
+        serve_for,
+        seed,
+        prefill_chunk,
+        request_timeout_ms,
+    ) = match parsed {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let faults = arcquant::util::fault::Faults::from_env();
+    if faults.armed() {
+        println!("arcquant http: fault injection armed (ARCQUANT_FAULTS)");
+    }
     let hcfg = HttpServeConfig {
         max_decode_batch: decode_batch,
         kv_pages,
@@ -537,6 +562,8 @@ fn cmd_serve_http(
         seed,
         prefill_chunk,
         share_prefix: !args.bool_flag("no-prefix-share"),
+        request_timeout_ms,
+        faults,
         ..Default::default()
     };
     let variants: Vec<&'static str> =
@@ -620,6 +647,7 @@ fn cmd_loadgen(args: &Args) -> i32 {
         stream: args.bool_flag("stream") || shared_prefix > 0,
         seed,
         shared_prefix_len: shared_prefix,
+        no_retry: args.bool_flag("no-retry"),
     };
     match run_loadgen(&cfg) {
         Ok(r) => {
@@ -628,8 +656,8 @@ fn cmd_loadgen(args: &Args) -> i32 {
                  against http://{addr} (closed loop)"
             );
             println!(
-                "  ok {}/{}  errors {}  wall {:.1}ms",
-                r.ok, r.requests, r.errors, r.wall_ms
+                "  ok {}/{}  errors {}  retries {}  giveups {}  wall {:.1}ms",
+                r.ok, r.requests, r.errors, r.retries, r.giveups, r.wall_ms
             );
             println!(
                 "  throughput {:.1} tok/s  {:.2} req/s  ({} tokens)",
@@ -653,10 +681,12 @@ fn cmd_loadgen(args: &Args) -> i32 {
             for (status, count) in &r.by_status {
                 println!("  status {status}: {count}");
             }
-            // single greppable summary line for CI logs
+            // single greppable summary line for CI logs (new keys are
+            // appended, never reordered — scripts parse by key)
             println!(
-                "LOADGEN ok={} errors={} tok_s={:.1} p99_ms={:.1}",
-                r.ok, r.errors, r.tok_s, r.p99_ms
+                "LOADGEN ok={} errors={} tok_s={:.1} p99_ms={:.1} \
+                 retries={} giveups={}",
+                r.ok, r.errors, r.tok_s, r.p99_ms, r.retries, r.giveups
             );
             if cfg.shared_prefix_len > 0 {
                 // greppable shared-prefix summary for the CI gate

@@ -1,0 +1,206 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`Faults`] plan arms named **fault points** — fixed call sites such
+//! as `tick_decode` (scheduler decode tick), `tick_prefill` (scheduler
+//! prefill tick), `kv_alloc` (KV page extension during decode) and
+//! `socket_write` (HTTP streaming chunk write) — to fire exactly once,
+//! on the *nth* pass through the site. The spec grammar is
+//!
+//! ```text
+//! ARCQUANT_FAULTS="site:nth[:panic|err][,site:nth[:mode]...]"
+//! ```
+//!
+//! e.g. `ARCQUANT_FAULTS=tick_decode:3:panic` panics on the third decode
+//! tick of the process. `panic` (the default mode) unwinds at the site —
+//! the supervised scheduler must contain it; `err` makes the site take
+//! its native error path instead (sites without one escalate `err` to
+//! `panic`, documented per call site).
+//!
+//! Determinism is the point: the nth-hit counter makes a fault land on
+//! the same tick every run, so recovery behavior is pinned by ordinary
+//! assertions rather than stress-and-hope. Plans are *values*, not
+//! process globals: the CLI builds one from the environment
+//! ([`Faults::from_env`]) and hands it to the server config, while tests
+//! and benches construct plans with [`Faults::parse`] — concurrent tests
+//! with different plans never interfere. Cloning a plan shares its hit
+//! counters (the scheduler and connection handlers must count against
+//! the same budget), and the unarmed case is a single is-empty branch.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// What firing a fault point does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultMode {
+    /// Unwind at the site (`panic!`); the default.
+    Panic,
+    /// Make the site take its native error path.
+    Err,
+}
+
+#[derive(Debug)]
+struct PlanState {
+    site: String,
+    nth: u64,
+    mode: FaultMode,
+    hits: AtomicU64,
+}
+
+/// An armed (possibly empty) set of fault plans. See the module docs
+/// for the spec grammar and sharing semantics.
+#[derive(Clone, Debug, Default)]
+pub struct Faults {
+    plans: Arc<[PlanState]>,
+}
+
+impl Faults {
+    /// The unarmed plan: every [`Faults::point`] is a no-op.
+    pub fn none() -> Faults {
+        Faults::default()
+    }
+
+    /// Parse a `site:nth[:mode]` spec list (see module docs). `nth` is
+    /// 1-based; mode defaults to `panic`.
+    pub fn parse(spec: &str) -> Result<Faults, String> {
+        let mut plans = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = part.split(':').collect();
+            if fields.len() < 2 || fields.len() > 3 {
+                return Err(format!(
+                    "fault spec {part:?}: want site:nth[:panic|err]"
+                ));
+            }
+            let site = fields[0].trim();
+            if site.is_empty() {
+                return Err(format!("fault spec {part:?}: empty site name"));
+            }
+            let nth: u64 = fields[1]
+                .trim()
+                .parse()
+                .map_err(|_| format!("fault spec {part:?}: bad nth"))?;
+            if nth == 0 {
+                return Err(format!("fault spec {part:?}: nth is 1-based"));
+            }
+            let mode = match fields.get(2).map(|m| m.trim()) {
+                None | Some("panic") => FaultMode::Panic,
+                Some("err") => FaultMode::Err,
+                Some(other) => {
+                    return Err(format!(
+                        "fault spec {part:?}: unknown mode {other:?}"
+                    ))
+                }
+            };
+            plans.push(PlanState {
+                site: site.to_string(),
+                nth,
+                mode,
+                hits: AtomicU64::new(0),
+            });
+        }
+        Ok(Faults { plans: plans.into() })
+    }
+
+    /// The process-level plan from `ARCQUANT_FAULTS` (unset/empty =
+    /// unarmed). An invalid spec panics at startup: a silently ignored
+    /// fault plan would make a chaos run report vacuous success.
+    pub fn from_env() -> Faults {
+        match std::env::var("ARCQUANT_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => match Faults::parse(&s) {
+                Ok(f) => f,
+                Err(e) => panic!("invalid ARCQUANT_FAULTS: {e}"),
+            },
+            _ => Faults::none(),
+        }
+    }
+
+    /// Is any fault armed at all?
+    pub fn armed(&self) -> bool {
+        !self.plans.is_empty()
+    }
+
+    /// Record one pass through the named fault point. Returns `true`
+    /// when an `err`-mode fault fires here (the caller takes its error
+    /// path); panics when a `panic`-mode fault fires; `false` otherwise
+    /// — including always, when nothing is armed.
+    pub fn point(&self, site: &str) -> bool {
+        if self.plans.is_empty() {
+            return false;
+        }
+        for p in self.plans.iter() {
+            if p.site == site {
+                let hit = p.hits.fetch_add(1, Ordering::Relaxed) + 1;
+                if hit == p.nth {
+                    match p.mode {
+                        FaultMode::Panic => {
+                            panic!("injected fault: {site} (hit {hit})")
+                        }
+                        FaultMode::Err => return true,
+                    }
+                }
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_points_are_noops() {
+        let f = Faults::none();
+        assert!(!f.armed());
+        for _ in 0..1000 {
+            assert!(!f.point("tick_decode"));
+        }
+    }
+
+    #[test]
+    fn err_mode_fires_exactly_on_the_nth_hit() {
+        let f = Faults::parse("kv_alloc:3:err").unwrap();
+        assert!(f.armed());
+        assert!(!f.point("kv_alloc"));
+        assert!(!f.point("tick_decode"), "other sites never fire");
+        assert!(!f.point("kv_alloc"));
+        assert!(f.point("kv_alloc"), "third hit fires");
+        assert!(!f.point("kv_alloc"), "fires once, not every nth");
+    }
+
+    #[test]
+    #[should_panic(expected = "injected fault: tick_decode")]
+    fn panic_mode_panics_at_the_site() {
+        let f = Faults::parse("tick_decode:1").unwrap();
+        f.point("tick_decode");
+    }
+
+    #[test]
+    fn clones_share_hit_counters() {
+        let f = Faults::parse("socket_write:2:err").unwrap();
+        let g = f.clone();
+        assert!(!f.point("socket_write"));
+        assert!(g.point("socket_write"), "clone sees the first hit");
+    }
+
+    #[test]
+    fn multi_site_specs_parse() {
+        let f = Faults::parse("tick_decode:2:panic, kv_alloc:1:err").unwrap();
+        assert!(f.point("kv_alloc"));
+        assert!(!f.point("tick_decode"));
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        assert!(Faults::parse("tick_decode").is_err());
+        assert!(Faults::parse("tick_decode:zero").is_err());
+        assert!(Faults::parse("tick_decode:0").is_err());
+        assert!(Faults::parse(":1").is_err());
+        assert!(Faults::parse("a:1:b:c").is_err());
+        assert!(Faults::parse("site:1:explode").is_err());
+        assert!(Faults::parse("").unwrap().plans.is_empty());
+    }
+}

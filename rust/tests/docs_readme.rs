@@ -141,6 +141,36 @@ fn http_doc_covers_protocol_and_backpressure() {
 }
 
 #[test]
+fn docs_cover_failure_semantics_and_fault_injection() {
+    // The fault-containment surface is documented and cannot drift: the
+    // README names the chaos knob and the new serving flags, and the
+    // serving doc carries the failure-semantics contract (deadlines,
+    // disconnects, supervised restarts, draining) plus the metric
+    // families those paths export.
+    let readme = read("README.md");
+    for needle in ["ARCQUANT_FAULTS", "--request-timeout-ms", "--no-retry"] {
+        assert!(readme.contains(needle), "README must document {needle}");
+    }
+    let doc = read("docs/http_serving.md");
+    for needle in [
+        "Failure semantics",
+        "ARCQUANT_FAULTS",
+        "timeout_ms",
+        "\"timeout\"",
+        "disconnect",
+        "draining",
+        "arcquant_scheduler_restarts_total",
+        "arcquant_sessions_failed_total",
+        "arcquant_kv_pages_reclaimed_total",
+        "tick_decode",
+        "Retry-After",
+        "--no-retry",
+    ] {
+        assert!(doc.contains(needle), "docs/http_serving.md must cover {needle}");
+    }
+}
+
+#[test]
 fn http_doc_catalogs_every_exported_metric() {
     // the metrics catalog cannot drift: every family the server renders
     // must be documented (names are extracted from a live rendering)

@@ -1,0 +1,395 @@
+//! Integration: fault-contained serving, end to end over real sockets —
+//! injected scheduler panics answered as well-formed errors and contained
+//! by a supervised in-process restart (post-recovery responses bit-exact
+//! against the reference decode loop), request deadlines finishing as
+//! `"timeout"`, streaming disconnects cancelling their session and
+//! reclaiming KV pages, and the restart budget draining a crash loop
+//! into 503s.
+
+use arcquant::baselines::Method;
+use arcquant::coordinator::{
+    session_rng, shared_prefix, HttpClient, HttpServeConfig, HttpServer, Variant,
+};
+use arcquant::formats::{Format, KvFormat};
+use arcquant::model::{tiny_test_fixture, Engine, EngineMode, KvCache, Sampler};
+use arcquant::util::fault::Faults;
+use arcquant::util::json::Json;
+use std::io::{Read as _, Write as _};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Same tiny engine construction the other serving tests use, so server
+/// engines and reference engines share numerics by construction.
+fn gen_engines() -> Vec<(Variant, Engine)> {
+    let (cfg, weights, coll) = tiny_test_fixture(3, 64);
+    let method = Method::ArcQuant { fmt: Format::Nvfp4, max_s: Some(64) };
+    let fp =
+        Engine::new(cfg.clone(), weights.clone(), EngineMode::Fp32, None).unwrap();
+    let packed = Engine::new(
+        cfg,
+        weights,
+        EngineMode::QuantizedPacked(method),
+        Some(&coll),
+    )
+    .unwrap();
+    vec![(Variant::Fp32, fp), (Variant::ArcPacked, packed)]
+}
+
+fn ref_engine(variant: Variant) -> Engine {
+    gen_engines()
+        .into_iter()
+        .find(|(v, _)| *v == variant)
+        .map(|(_, e)| e)
+        .unwrap()
+}
+
+fn prompt_for(i: usize, len: usize) -> Vec<u16> {
+    (0..len).map(|k| ((k * 37 + i * 91 + 11) % 256) as u16).collect()
+}
+
+fn body_for(prompt: &[u16], max_new: usize, variant: Variant, stream: bool) -> String {
+    arcquant::coordinator::loadgen::loadgen_body(prompt, max_new, Some(variant), stream)
+}
+
+/// `body_for` + an explicit `timeout_ms` field.
+fn body_with_timeout(
+    prompt: &[u16],
+    max_new: usize,
+    variant: Variant,
+    timeout_ms: u64,
+) -> String {
+    let mut j = Json::parse(&body_for(prompt, max_new, variant, false)).unwrap();
+    j.set("timeout_ms", Json::Num(timeout_ms as f64));
+    j.dump()
+}
+
+fn tokens_of(j: &Json) -> Vec<u16> {
+    j.get("tokens")
+        .and_then(|t| t.as_arr())
+        .unwrap_or_else(|| panic!("no tokens in {}", j.dump()))
+        .iter()
+        .map(|t| t.as_f64().unwrap() as u16)
+        .collect()
+}
+
+/// Greedy single-sequence reference replay — what served tokens must be
+/// bit-equal to, before and after a contained fault.
+fn reference_tokens(
+    engine: &Engine,
+    prompt: &[u16],
+    max_new: usize,
+    kv: KvFormat,
+    seed: u64,
+    id: u64,
+) -> Vec<u16> {
+    let sampler = Sampler::Greedy;
+    let mut rng = session_rng(seed, id);
+    let mut cache = KvCache::with_format(&engine.cfg, prompt.len() + max_new, kv);
+    let mut tok = sampler.sample(&engine.prefill(prompt, &mut cache).unwrap(), &mut rng);
+    let mut out = vec![tok];
+    for _ in 1..max_new {
+        tok = sampler.sample(&engine.decode_step(tok, &mut cache).unwrap(), &mut rng);
+        out.push(tok);
+    }
+    out
+}
+
+fn metric_value(metrics_text: &str, name: &str) -> f64 {
+    metrics_text
+        .lines()
+        .find(|l| l.starts_with(name) && !l.starts_with('#'))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("metric {name} not found in:\n{metrics_text}"))
+}
+
+#[test]
+fn injected_tick_panic_is_contained_and_recovery_is_bit_identical() {
+    // The second batched decode forward panics (injected). The in-flight
+    // streaming request must get a well-formed terminal error chunk, the
+    // scheduler must restart in-process exactly once, and post-recovery
+    // shared-prefix requests must replay bit-identically against the
+    // single-sequence reference.
+    const MAX_NEW: usize = 8;
+    const TAIL: usize = 12;
+    let cfg = HttpServeConfig {
+        kv_format: KvFormat::Nvfp4,
+        kv_pages: 8,
+        faults: Faults::parse("tick_decode:2:panic").unwrap(),
+        ..Default::default()
+    };
+    let server = HttpServer::start(cfg, "127.0.0.1:0", gen_engines()).unwrap();
+    let addr = server.addr().to_string();
+    // every prompt leads with the same 214-token system prompt (= two
+    // full nvfp4 pages), the shape the prefix cache accelerates
+    let prefix = shared_prefix(214, 256, 0);
+    let prompts: Vec<Vec<u16>> = (0..3)
+        .map(|i| {
+            let mut p = prefix.clone();
+            p.extend(prompt_for(i, TAIL));
+            p
+        })
+        .collect();
+
+    // request 1 streams; its session dies to the injected panic after
+    // the prefill-sampled token and one decode tick
+    let mut cli = HttpClient::connect(&addr).unwrap();
+    let doomed = cli
+        .request(
+            "POST",
+            "/v1/generate",
+            Some(&body_for(&prompts[0], MAX_NEW, Variant::ArcPacked, true)),
+        )
+        .unwrap();
+    assert_eq!(doomed.status, 200, "streaming had already committed a 200");
+    let chunks = doomed.chunks.as_ref().expect("chunked reply");
+    assert!(chunks.len() >= 2, "expected token chunk(s) + error chunk: {chunks:?}");
+    let last = Json::parse(chunks.last().unwrap().trim()).unwrap();
+    assert_eq!(last.get("done"), Some(&Json::Bool(true)));
+    let err = last.get("error").and_then(|e| e.as_str()).unwrap_or_default();
+    assert!(
+        err.contains("scheduler fault"),
+        "terminal chunk must carry the fault: {last:?}"
+    );
+    drop(cli); // the server closes faulted connections
+
+    // requests 2 and 3 land on the rebuilt core: both bit-exact, and the
+    // third serves its prefix out of the repopulated cache
+    let engine = ref_engine(Variant::ArcPacked);
+    let mut cli = HttpClient::connect(&addr).unwrap();
+    for prompt in &prompts[1..] {
+        let reply = cli
+            .request(
+                "POST",
+                "/v1/generate",
+                Some(&body_for(prompt, MAX_NEW, Variant::ArcPacked, false)),
+            )
+            .unwrap();
+        assert_eq!(reply.status, 200, "post-recovery request failed: {}", reply.body);
+        let j = Json::parse(&reply.body).unwrap();
+        assert_eq!(j.get("finish").unwrap().as_str(), Some("length"));
+        let id = j.get("id").unwrap().as_f64().unwrap() as u64;
+        let want =
+            reference_tokens(&engine, prompt, MAX_NEW, KvFormat::Nvfp4, 0, id);
+        assert_eq!(
+            tokens_of(&j),
+            want,
+            "post-recovery generation diverged (id {id})"
+        );
+    }
+
+    let m = cli.request("GET", "/metrics", None).unwrap();
+    assert_eq!(
+        metric_value(&m.body, "arcquant_scheduler_restarts_total"),
+        1.0,
+        "exactly one supervised restart"
+    );
+    assert_eq!(
+        metric_value(&m.body, "arcquant_sessions_failed_total{reason=\"panic\"}"),
+        1.0
+    );
+    // the doomed session's pages were reclaimed on restart
+    assert!(metric_value(&m.body, "arcquant_kv_pages_reclaimed_total") >= 1.0);
+    // the rebuilt core repopulated the prefix cache: request 3 hit both
+    // of its 107-token chunks
+    assert!(
+        metric_value(&m.body, "arcquant_prefix_cache_hits_total") >= 2.0,
+        "post-recovery prefix sharing is dead:\n{}",
+        m.body
+    );
+    let h = cli.request("GET", "/healthz", None).unwrap();
+    assert_eq!(h.status, 200);
+    drop(cli);
+    server.shutdown();
+}
+
+#[test]
+fn request_deadlines_finish_as_timeout_over_http() {
+    // One server with a 1ms default deadline. An explicitly-zero budget
+    // expires in the queue (empty tokens), the server default expires a
+    // long generation mid-decode (partial tokens), and a generous
+    // per-request override outlives both and finishes normally — the
+    // request's own field always wins over the server default.
+    let cfg = HttpServeConfig {
+        request_timeout_ms: 1,
+        ..Default::default()
+    };
+    let server = HttpServer::start(cfg, "127.0.0.1:0", gen_engines()).unwrap();
+    let addr = server.addr().to_string();
+    let mut cli = HttpClient::connect(&addr).unwrap();
+    let prompt = prompt_for(0, 32);
+
+    // timeout_ms: 0 — already expired at admission
+    let reply = cli
+        .request(
+            "POST",
+            "/v1/generate",
+            Some(&body_with_timeout(&prompt, 8, Variant::Fp32, 0)),
+        )
+        .unwrap();
+    assert_eq!(reply.status, 200, "{}", reply.body);
+    let j = Json::parse(&reply.body).unwrap();
+    assert_eq!(j.get("finish").unwrap().as_str(), Some("timeout"));
+    assert!(tokens_of(&j).is_empty(), "never ran: no tokens");
+
+    // no field — the server's 1ms default reaps this 256-token decode
+    // mid-flight with whatever it had (still a 200: truncation)
+    const BIG: usize = 256;
+    let reply = cli
+        .request(
+            "POST",
+            "/v1/generate",
+            Some(&body_for(&prompt, BIG, Variant::Fp32, false)),
+        )
+        .unwrap();
+    assert_eq!(reply.status, 200, "{}", reply.body);
+    let j = Json::parse(&reply.body).unwrap();
+    assert_eq!(j.get("finish").unwrap().as_str(), Some("timeout"));
+    assert!(
+        tokens_of(&j).len() < BIG,
+        "a 1ms budget cannot fund {BIG} decode ticks"
+    );
+
+    // a generous override wins over the server default and runs to length
+    let reply = cli
+        .request(
+            "POST",
+            "/v1/generate",
+            Some(&body_with_timeout(&prompt, 8, Variant::Fp32, 60_000)),
+        )
+        .unwrap();
+    assert_eq!(reply.status, 200, "{}", reply.body);
+    let j = Json::parse(&reply.body).unwrap();
+    assert_eq!(j.get("finish").unwrap().as_str(), Some("length"));
+    let id = j.get("id").unwrap().as_f64().unwrap() as u64;
+    let engine = ref_engine(Variant::Fp32);
+    assert_eq!(
+        tokens_of(&j),
+        reference_tokens(&engine, &prompt, 8, KvFormat::Fp32, 0, id)
+    );
+
+    let m = cli.request("GET", "/metrics", None).unwrap();
+    assert_eq!(
+        metric_value(&m.body, "arcquant_sessions_failed_total{reason=\"timeout\"}"),
+        2.0
+    );
+    drop(cli);
+    server.shutdown();
+}
+
+#[test]
+fn streaming_disconnect_cancels_session_and_reclaims_kv_pages() {
+    // A streaming client that vanishes mid-generation: the failed socket
+    // write sets the session's cancel flag, the next tick reaps it as a
+    // disconnect, and its KV pages return to the pool — observed as a
+    // metrics delta (sessions_failed{disconnect}, kv_pages_used back to
+    // zero, kv_pages_reclaimed counted).
+    let cfg = HttpServeConfig {
+        share_prefix: false, // every page private ⇒ used must return to 0
+        ..Default::default()
+    };
+    let server = HttpServer::start(cfg, "127.0.0.1:0", gen_engines()).unwrap();
+    let addr = server.addr().to_string();
+
+    // raw socket: fire a long streaming generation, read up to the first
+    // token chunk, then vanish without reading the rest
+    let body = body_for(&prompt_for(0, 16), 256, Variant::Fp32, true);
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    raw.write_all(
+        format!(
+            "POST /v1/generate HTTP/1.1\r\nHost: arcquant\r\n\
+             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            body.len()
+        )
+        .as_bytes(),
+    )
+    .unwrap();
+    raw.write_all(body.as_bytes()).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut seen = Vec::new();
+    let mut buf = [0u8; 256];
+    while !String::from_utf8_lossy(&seen).contains("token") {
+        let n = raw.read(&mut buf).expect("stream head");
+        assert!(n > 0, "server closed the stream before the first token");
+        seen.extend_from_slice(&buf[..n]);
+    }
+    drop(raw); // unread buffered chunks ⇒ RST ⇒ the server's writes fail
+
+    // the reap is asynchronous (next tick after the failed write): poll
+    // the metrics endpoint briefly instead of assuming scheduling order
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let mut cli = HttpClient::connect(&addr).unwrap();
+        let m = cli.request("GET", "/metrics", None).unwrap();
+        let failed = metric_value(
+            &m.body,
+            "arcquant_sessions_failed_total{reason=\"disconnect\"}",
+        );
+        let used = metric_value(&m.body, "arcquant_kv_pages_used");
+        if failed >= 1.0 && used == 0.0 {
+            assert!(
+                metric_value(&m.body, "arcquant_kv_pages_reclaimed_total") >= 1.0,
+                "reclaimed pages must be counted:\n{}",
+                m.body
+            );
+            // a disconnect is not a completion
+            assert_eq!(
+                metric_value(&m.body, "arcquant_requests_completed_total"),
+                0.0
+            );
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "disconnected session was not reaped: failed={failed} used={used}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    server.shutdown();
+}
+
+#[test]
+fn restart_budget_exhaustion_drains_to_503() {
+    // Two plans with nth=1 on the decode site: the first decode forward
+    // after each rebuild panics again — a crash loop. With a budget of
+    // one restart per window, the second restart flips the server into
+    // draining: every subsequent request is shed as 503 while /healthz
+    // stays up (fail loudly, never flap).
+    let cfg = HttpServeConfig {
+        faults: Faults::parse("tick_decode:1,tick_decode:1").unwrap(),
+        restart_budget: 1,
+        ..Default::default()
+    };
+    let server = HttpServer::start(cfg, "127.0.0.1:0", gen_engines()).unwrap();
+    let addr = server.addr().to_string();
+    let body = body_for(&prompt_for(0, 8), 4, Variant::Fp32, false);
+
+    for round in 0..2 {
+        // unary: the contained panic surfaces as a clean 500
+        let mut cli = HttpClient::connect(&addr).unwrap();
+        let reply = cli.request("POST", "/v1/generate", Some(&body)).unwrap();
+        assert_eq!(reply.status, 500, "round {round}: {}", reply.body);
+        let j = Json::parse(&reply.body).unwrap();
+        assert!(j
+            .get("error")
+            .and_then(|e| e.as_str())
+            .is_some_and(|e| e.contains("scheduler fault")));
+        drop(cli); // 500s close the connection
+    }
+
+    // budget blown: the server drains instead of flapping
+    let mut cli = HttpClient::connect(&addr).unwrap();
+    let reply = cli.request("POST", "/v1/generate", Some(&body)).unwrap();
+    assert_eq!(reply.status, 503, "draining server must shed load");
+    assert!(reply.body.contains("shutting down"), "{}", reply.body);
+    let h = cli.request("GET", "/healthz", None).unwrap();
+    assert_eq!(h.status, 200, "health stays observable while draining");
+    let m = cli.request("GET", "/metrics", None).unwrap();
+    assert_eq!(metric_value(&m.body, "arcquant_scheduler_restarts_total"), 2.0);
+    assert_eq!(
+        metric_value(&m.body, "arcquant_sessions_failed_total{reason=\"panic\"}"),
+        2.0
+    );
+    drop(cli);
+    server.shutdown();
+}
