@@ -224,8 +224,8 @@ fn bench_kv_read(rows: &mut Vec<Json>) -> f64 {
 
 /// KV-format capacity series: max sequences a fixed page budget admits
 /// per [`KvFormat`], under the executor's worst-case admission rule
-/// (pure page accounting — exact, not timed). Returns the
-/// nvfp4-over-fp32 admitted-sequence ratio.
+/// (pure page accounting — exact, not timed). Returns the admitted
+/// count per format; `main` turns these into the per-format GATE ratios.
 fn bench_kv_capacity(
     d: usize,
     layers: usize,
@@ -233,7 +233,7 @@ fn bench_kv_capacity(
     prompt_len: usize,
     max_new: usize,
     rows: &mut Vec<Json>,
-) -> f64 {
+) -> Vec<(KvFormat, usize)> {
     let worst = prompt_len + max_new;
     let mut admitted_by: Vec<(KvFormat, usize)> = Vec::new();
     for kv in KvFormat::ALL {
@@ -265,10 +265,7 @@ fn bench_kv_capacity(
         rows.push(row);
         admitted_by.push((kv, admitted));
     }
-    let get = |kv: KvFormat| {
-        admitted_by.iter().find(|(f, _)| *f == kv).map(|(_, n)| *n).unwrap()
-    };
-    get(KvFormat::Nvfp4) as f64 / get(KvFormat::Fp32) as f64
+    admitted_by
 }
 
 fn main() {
@@ -385,9 +382,23 @@ fn main() {
     let (kv_budget, kv_prompt, kv_new) =
         if smoke_mode() { (16usize, 24usize, 8usize) } else { (64, 96, 32) };
     let mut kv_cap_rows: Vec<Json> = Vec::new();
-    let cap_ratio =
+    let admitted_by =
         bench_kv_capacity(cfg.d, cfg.l, kv_budget, kv_prompt, kv_new, &mut kv_cap_rows);
+    let admitted = |kv: KvFormat| -> f64 {
+        admitted_by.iter().find(|(f, _)| *f == kv).map(|&(_, n)| n as f64).unwrap()
+    };
+    let cap_ratio = admitted(KvFormat::Nvfp4) / admitted(KvFormat::Fp32);
     println!("#   nvfp4-KV/fp32-KV admitted-sequence ratio {cap_ratio:.2}x");
+    // per-format capacity GATE rows: deterministic page accounting, so
+    // the gate floors catch a codec whose page geometry regresses (a
+    // razer/fouroversix page must stay as dense as an nvfp4 page)
+    for kv in [KvFormat::Mxfp4, KvFormat::Razer4, KvFormat::FourOverSix] {
+        println!(
+            "GATE decode_kv_capacity_{}_over_fp32 {:.4}",
+            kv.name(),
+            admitted(kv) / admitted(KvFormat::Fp32)
+        );
+    }
 
     if smoke_mode() {
         println!("# smoke mode: BENCH_decode.json not rewritten");
@@ -415,7 +426,15 @@ fn main() {
         .set("kv_read", Json::Arr(kv_read_rows))
         .set("kv_format_rows", Json::Arr(kv_rows))
         .set("kv_capacity", Json::Arr(kv_cap_rows))
-        .set("kv_capacity_ratio_nvfp4_over_fp32", Json::Num(cap_ratio));
+        .set("kv_capacity_ratio_nvfp4_over_fp32", Json::Num(cap_ratio))
+        .set(
+            "kv_capacity_ratio_razer_over_fp32",
+            Json::Num(admitted(KvFormat::Razer4) / admitted(KvFormat::Fp32)),
+        )
+        .set(
+            "kv_capacity_ratio_fouroversix_over_fp32",
+            Json::Num(admitted(KvFormat::FourOverSix) / admitted(KvFormat::Fp32)),
+        );
     let path = "BENCH_decode.json";
     match std::fs::write(path, out.dump()) {
         Ok(()) => println!("# wrote {path}"),

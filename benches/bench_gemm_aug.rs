@@ -24,7 +24,7 @@
 //! rewrite — CI uses it to catch kernel-routing panics cheaply.
 
 use arcquant::costmodel::{gemm_us, GemmPath, Gpu};
-use arcquant::formats::Format;
+use arcquant::formats::{Format, RowQuantizer};
 use arcquant::quant::{ArcQuantLinear, LayerPlan, PackedArcLinear, Permutation};
 use arcquant::tensor::simd::{self, SimdPath};
 use arcquant::tensor::{matmul_nt, matmul_nt_packed, matmul_nt_packed_ref, Mat};
@@ -34,6 +34,58 @@ use arcquant::util::pool;
 use arcquant::util::prop::gens::outlier_mat;
 use arcquant::util::stats;
 use arcquant::util::Prng;
+
+/// Per-codec kernel series: every 4-bit element codec the packed path
+/// serves as an activation/weight format (NVFP4 baseline plus the
+/// RaZeR and Four-over-Six variants) through the v1 reference and v2
+/// tiled kernels on identical packed operands. RaZeR pins the scalar
+/// dispatch arm (`simd::path_for_encoding` — the AVX2 shuffle would
+/// decode its code 8 as `-0.0`), so its row tracks the scalar-only
+/// cost the codec pays for reclaiming the redundant zero; the other
+/// rows ride the best detected path. Prints one
+/// `GATE gemm_kernel_v2_over_v1_<fmt>` row per codec so a dispatch
+/// misroute that tanks a single format cannot hide inside the
+/// all-format geomean.
+fn bench_format_kernels(b: &Bencher) -> Vec<Json> {
+    let (n, k, m) = if smoke_mode() { (4usize, 256usize, 32usize) } else { (16usize, 4096usize, 256usize) };
+    let mut rng = Prng::new(7);
+    let x = outlier_mat(&mut rng, n, k);
+    let mut w = Mat::zeros(m, k);
+    w.fill_random_normal(&mut rng, 0.4);
+    let mut rows: Vec<Json> = Vec::new();
+    println!("# per-codec packed kernel (N={n}, K={k}, M={m})");
+    for (label, fmt) in [
+        ("nvfp4", Format::Nvfp4),
+        ("razer", Format::Razer4),
+        ("fouroversix", Format::FourOverSix),
+    ] {
+        let rq = RowQuantizer::new(fmt);
+        let qx = rq.quantize(&x);
+        let qw = rq.quantize(&w);
+        let r_v1 = b.run(&format!("kernel_v1_{label}_k{k}"), || {
+            matmul_nt_packed_ref(&qx, &qw)
+        });
+        let r_v2 = b.run(&format!("kernel_v2_{label}_k{k}"), || {
+            matmul_nt_packed(&qx, &qw)
+        });
+        let speedup = r_v1.median_us / r_v2.median_us;
+        println!(
+            "#   {label}: v1 {:.1}us v2 {:.1}us ({speedup:.2}x)",
+            r_v1.median_us, r_v2.median_us
+        );
+        println!("GATE gemm_kernel_v2_over_v1_{label} {speedup:.4}");
+        let mut row = Json::obj();
+        row.set("format", Json::Str(fmt.name().into()))
+            .set("n", Json::Num(n as f64))
+            .set("k", Json::Num(k as f64))
+            .set("m", Json::Num(m as f64))
+            .set("v1_median_us", Json::Num(r_v1.median_us))
+            .set("v2_median_us", Json::Num(r_v2.median_us))
+            .set("speedup_v2_over_v1", Json::Num(speedup));
+        rows.push(row);
+    }
+    rows
+}
 
 /// Packed-vs-QDQ forward + kernel v1-vs-v2 at paper shapes →
 /// BENCH_gemm_packed.json (skipped in smoke mode).
@@ -180,6 +232,9 @@ fn bench_packed_vs_qdq(b: &Bencher) {
     println!("GATE gemm_simd_geomean_best_over_scalar {simd_geomean:.4}");
     println!("GATE gemm_simd_best_path {best_path}");
 
+    // per-codec series prints its own GATE rows (smoke mode included)
+    let format_rows = bench_format_kernels(b);
+
     if smoke_mode() {
         println!("# smoke mode: BENCH_gemm_packed.json not rewritten");
         return;
@@ -200,7 +255,8 @@ fn bench_packed_vs_qdq(b: &Bencher) {
         .set("kernel", Json::Arr(kernel_rows))
         .set("kernel_geomean_speedup_v2_over_v1", Json::Num(geomean))
         .set("kernel_simd", Json::Arr(simd_rows))
-        .set("kernel_simd_geomean_speedup", Json::Num(simd_geomean));
+        .set("kernel_simd_geomean_speedup", Json::Num(simd_geomean))
+        .set("kernel_formats", Json::Arr(format_rows));
     let path = "BENCH_gemm_packed.json";
     match std::fs::write(path, out.dump()) {
         Ok(()) => println!("# wrote {path}"),

@@ -15,8 +15,8 @@
 //!   quantization grid without materializing codes (the fast path used by
 //!   the accuracy experiments; provably identical numerics, tested below).
 
-use super::Format;
-use crate::numerics::{codec, E8M0, INT4};
+use super::{ElementEncoding, Format};
+use crate::numerics::{codec, FpKind, E8M0, INT4};
 use crate::tensor::{simd, Mat};
 use crate::util::pool;
 
@@ -93,6 +93,63 @@ pub const E2M1_MAG_X2_I8: [i8; 16] = [
     0, 1, 2, 3, 4, 6, 8, 12,
 ];
 
+/// RaZeR decode LUT: E2M1 with the redundant `-0.0` code (8) remapped to
+/// a +5.0 magnitude, closing the 4→6 gap on the positive side. Every
+/// other code decodes exactly as [`E2M1_LUT`].
+pub const RAZER_LUT: [f32; 16] = [
+    0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0, //
+    5.0, -0.5, -1.0, -1.5, -2.0, -3.0, -4.0, -6.0,
+];
+
+/// [`RAZER_LUT`] doubled to integers (grid values are multiples of 0.5);
+/// the packed GEMM's integer inner loop uses it exactly like
+/// [`E2M1_LUT_X2`] — products stay i32-exact, factor 0.25 folds out.
+pub const RAZER_LUT_X2: [i32; 16] = [
+    0, 1, 2, 3, 4, 6, 8, 12, //
+    10, -1, -2, -3, -4, -6, -8, -12,
+];
+
+/// [`RAZER_LUT_X2`] as signed bytes. No AVX2 shuffle kernel consumes it
+/// today (RaZeR always dispatches scalar — the sign-from-bit-3 magnitude
+/// shuffle would decode code 8 as `-0.0`); it exists so the i8 LUT view
+/// is total over encodings.
+pub const RAZER_LUT_X2_I8: [i8; 16] = [
+    0, 1, 2, 3, 4, 6, 8, 12, //
+    10, -1, -2, -3, -4, -6, -8, -12,
+];
+
+/// RNE snap onto the signed RaZeR grid, saturating at ±6. The negative
+/// side is plain E2M1; the positive side gains 5.0, making {2,3,4,5,6} a
+/// uniform step-1 ladder.
+#[inline]
+pub fn razer_snap_rne(x: f32) -> f32 {
+    if x.is_sign_negative() {
+        return e2m1_snap_rne(x);
+    }
+    let a = x.min(6.0);
+    if a >= 2.0 {
+        a.round_ties_even().min(6.0)
+    } else {
+        (a * 2.0).round_ties_even() * 0.5
+    }
+}
+
+/// Exact 4-bit RaZeR code of a value already on the signed RaZeR grid.
+/// Inverse of [`RAZER_LUT`]: +5.0 takes the reclaimed code 8; both zero
+/// signs collapse to code 0 (code 8 no longer means `-0.0`).
+#[inline]
+pub fn razer_code(v: f32) -> u8 {
+    if v == 5.0 {
+        8
+    } else if v == 0.0 {
+        // must precede e2m1_code: e2m1_code(-0.0) would emit code 8,
+        // which RaZeR decodes as +5.0
+        0
+    } else {
+        e2m1_code(v)
+    }
+}
+
 /// Exact 4-bit code of a value already on the signed E2M1 grid
 /// (sign in bit 3). Inverse of [`E2M1_LUT`] — the pack fast path uses it
 /// so codes decode to *bit-identical* values to [`RowQuantizer::qdq_row`].
@@ -164,14 +221,16 @@ impl RowQuantizer {
             return 0.0;
         }
         match self.fmt {
-            Format::Nvfp4 => {
+            // Four-over-Six *defaults* to the 6-divisor candidate here;
+            // the data-dependent choice lives in `block_scale_for`.
+            Format::Nvfp4 | Format::Razer4 | Format::FourOverSix => {
                 let req = block_amax / (6.0 * tensor_scale);
                 // ceil onto the E4M3 grid → α₁ ∈ [1, 1.125]
-                let enc = codec(crate::numerics::FpKind::E4M3).round_up(req);
+                let enc = codec(FpKind::E4M3).round_up(req);
                 let enc = if enc == 0.0 {
                     // amax so small the required scale underflows E4M3:
                     // use the smallest subnormal scale.
-                    codec(crate::numerics::FpKind::E4M3).grid()[1]
+                    codec(FpKind::E4M3).grid()[1]
                 } else {
                     enc
                 };
@@ -186,6 +245,51 @@ impl RowQuantizer {
         }
     }
 
+    /// Block scale with the Four-over-Six adaptive selection: for that
+    /// format, compare the amax/6 and amax/4 E4M3-ceil candidates by
+    /// round-trip squared error over the block's valid elements (f64 sum
+    /// in element order, so the choice is deterministic) and keep the
+    /// lower-error one; ties keep the 6-divisor candidate, making this a
+    /// pure refinement of [`Self::block_scale`]. Every other format
+    /// delegates to [`Self::block_scale`] unchanged.
+    ///
+    /// `qdq_row` and `pack_row` both call this with the same valid slice,
+    /// which is what keeps the fused and packed paths bit-identical.
+    #[inline]
+    pub fn block_scale_for(&self, block: &[f32], block_amax: f32, tensor_scale: f32) -> f32 {
+        if !matches!(self.fmt, Format::FourOverSix) || block_amax == 0.0 {
+            return self.block_scale(block_amax, tensor_scale);
+        }
+        let s6 = self.block_scale(block_amax, tensor_scale);
+        let s4 = {
+            let req = block_amax / (4.0 * tensor_scale);
+            // same E4M3-ceil + subnormal-underflow rule as the 6-divisor
+            // candidate; round_up saturates at 448, so amax/s4 ≤ 6 still
+            // holds (the absmax block degenerates to s4 == s6).
+            let enc = codec(FpKind::E4M3).round_up(req);
+            let enc = if enc == 0.0 { codec(FpKind::E4M3).grid()[1] } else { enc };
+            enc * tensor_scale
+        };
+        if s4 == s6 {
+            return s6;
+        }
+        let err = |s: f32| -> f64 {
+            let inv = 1.0 / s;
+            block
+                .iter()
+                .map(|&x| {
+                    let e = (e2m1_snap_rne(x * inv) * s - x) as f64;
+                    e * e
+                })
+                .sum()
+        };
+        if err(s4) < err(s6) {
+            s4
+        } else {
+            s6
+        }
+    }
+
     /// Fused quantize-dequantize of one row slice in place.
     /// `tensor_scale` must come from [`RowQuantizer::tensor_scale`] of the
     /// matrix this row belongs to.
@@ -196,28 +300,34 @@ impl RowQuantizer {
     /// `arithmetic_snap_matches_codec`.
     pub fn qdq_row(&self, row: &mut [f32], tensor_scale: f32) {
         let g = self.fmt.group();
-        let elem = self.fmt.element();
+        let enc = self.fmt.encoding();
         for block in row.chunks_mut(g) {
             let amax = block.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-            let s = self.block_scale(amax, tensor_scale);
+            let s = self.block_scale_for(block, amax, tensor_scale);
             if s == 0.0 {
                 block.fill(0.0);
                 continue;
             }
-            match elem {
-                Some(crate::numerics::FpKind::E2M1) => {
+            match enc {
+                ElementEncoding::Minifloat(FpKind::E2M1) => {
                     let inv = 1.0 / s;
                     for v in block.iter_mut() {
                         *v = e2m1_snap_rne(*v * inv) * s;
                     }
                 }
-                Some(kind) => {
+                ElementEncoding::RazerE2M1 => {
+                    let inv = 1.0 / s;
+                    for v in block.iter_mut() {
+                        *v = razer_snap_rne(*v * inv) * s;
+                    }
+                }
+                ElementEncoding::Minifloat(kind) => {
                     let c = codec(kind);
                     for v in block.iter_mut() {
                         *v = c.quantize(*v / s) * s;
                     }
                 }
-                None => {
+                ElementEncoding::Int4 => {
                     for v in block.iter_mut() {
                         *v = INT4.qdq(*v, s);
                     }
@@ -270,7 +380,7 @@ impl RowQuantizer {
         scales_f32: &mut Vec<f32>,
     ) {
         let g = self.fmt.group();
-        let elem = self.fmt.element();
+        let enc = self.fmt.encoding();
         let four_bit = self.fmt.element_bits() == 4;
         let blocks_per_row = row.len().div_ceil(g);
         // scratch for one block's raw 4/6/8-bit codes
@@ -281,12 +391,14 @@ impl RowQuantizer {
             let hi = ((b + 1) * g).min(row.len());
             let block = &row[lo..hi];
             let amax = block.iter().fold(0.0f32, |mm, &v| mm.max(v.abs()));
-            let s = self.block_scale(amax, ts);
+            let s = self.block_scale_for(block, amax, ts);
             scales_f32.push(s);
             match self.fmt {
-                Format::Nvfp4 => {
-                    let (sc, _) = codec(crate::numerics::FpKind::E4M3)
-                        .encode(if ts == 0.0 { 0.0 } else { s / ts });
+                Format::Nvfp4 | Format::Razer4 | Format::FourOverSix => {
+                    // both Four-over-Six candidates are E4M3-exact, so the
+                    // encode is lossless for the adaptive scale too
+                    let (sc, _) =
+                        codec(FpKind::E4M3).encode(if ts == 0.0 { 0.0 } else { s / ts });
                     scale_codes.push(sc);
                 }
                 Format::Int4 { .. } => {}
@@ -296,8 +408,8 @@ impl RowQuantizer {
             }
             // Element codes (pad the last block with zeros).
             block_codes.clear();
-            match elem {
-                Some(crate::numerics::FpKind::E2M1) => {
+            match enc {
+                ElementEncoding::Minifloat(FpKind::E2M1) => {
                     if s == 0.0 {
                         block_codes.resize(g, 0);
                     } else {
@@ -308,7 +420,18 @@ impl RowQuantizer {
                         }
                     }
                 }
-                Some(kind) => {
+                ElementEncoding::RazerE2M1 => {
+                    if s == 0.0 {
+                        block_codes.resize(g, 0);
+                    } else {
+                        let inv = 1.0 / s;
+                        for i in 0..g {
+                            let x = if lo + i < hi { block[i] } else { 0.0 };
+                            block_codes.push(razer_code(razer_snap_rne(x * inv)));
+                        }
+                    }
+                }
+                ElementEncoding::Minifloat(kind) => {
                     for i in 0..g {
                         let x = if lo + i < hi { block[i] } else { 0.0 };
                         let code = if s == 0.0 {
@@ -321,7 +444,7 @@ impl RowQuantizer {
                         block_codes.push(code);
                     }
                 }
-                None => {
+                ElementEncoding::Int4 => {
                     for i in 0..g {
                         let x = if lo + i < hi { block[i] } else { 0.0 };
                         // INT4: two's-complement nibble of code in [-7, 7].
@@ -503,20 +626,21 @@ impl QuantizedMat {
     pub fn dequant_blocks(&self, r: usize, b0: usize, b1: usize, out: &mut [f32]) {
         let g = self.fmt.group();
         debug_assert_eq!(out.len(), (b1 * g).min(self.cols) - b0 * g);
-        let elem = self.fmt.element();
+        let enc = self.fmt.encoding();
         let four_bit = self.fmt.element_bits() == 4;
         // Dispatched once per call: full 4-bit blocks take the AVX2
         // shuffle decoders (bit-identical to the scalar LUT loops — see
-        // tensor::simd); the ragged tail block and the wider minifloats
-        // keep the scalar form below.
-        let simd_4bit = four_bit && simd::selected_path() == simd::SimdPath::Avx2;
+        // tensor::simd); the ragged tail block, the wider minifloats and
+        // encodings without a validated shuffle table (RaZeR) keep the
+        // scalar form below.
+        let simd_4bit = four_bit && simd::path_for_encoding(enc) == simd::SimdPath::Avx2;
         for b in b0..b1 {
             let s = self.block_scale(r, b);
             let n_valid = ((b + 1) * g).min(self.cols) - b * g;
             let dst = &mut out[(b - b0) * g..(b - b0) * g + n_valid];
             let bytes = self.block_codes(r, b);
-            match elem {
-                Some(crate::numerics::FpKind::E2M1) => {
+            match enc {
+                ElementEncoding::Minifloat(FpKind::E2M1) => {
                     if simd_4bit && n_valid == g {
                         simd::dequant_block_e2m1_avx2(bytes, &E2M1_MAG_X2_I8, s, dst);
                         continue;
@@ -527,7 +651,17 @@ impl QuantizedMat {
                         *v = E2M1_LUT[nib as usize] * s;
                     }
                 }
-                Some(kind) => {
+                ElementEncoding::RazerE2M1 => {
+                    // always scalar: the AVX2 magnitude shuffle re-applies
+                    // the sign from nibble bit 3 and would decode the
+                    // remapped code 8 as -0.0 instead of +5.0
+                    for (i, v) in dst.iter_mut().enumerate() {
+                        let byte = bytes[i / 2];
+                        let nib = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                        *v = RAZER_LUT[nib as usize] * s;
+                    }
+                }
+                ElementEncoding::Minifloat(kind) => {
                     let c = codec(kind);
                     let sign_bit = 1u8 << (kind.bits() - 1);
                     for (i, v) in dst.iter_mut().enumerate() {
@@ -537,7 +671,7 @@ impl QuantizedMat {
                         *v = c.decode(mag, neg) * s;
                     }
                 }
-                None => {
+                ElementEncoding::Int4 => {
                     debug_assert!(four_bit);
                     if simd_4bit && n_valid == g {
                         // INT4.dequantize(code, s) is `code as f32 * s` —
@@ -711,14 +845,21 @@ mod tests {
         }
     }
 
-    /// Half of the largest gap in the format's positive grid — the exact
+    /// Half of the largest gap in the format's grid — the exact
     /// worst-case per-element error for a unit-scale, non-saturating
-    /// quantization.
+    /// quantization (the conformance harness carries the shared copy;
+    /// this one keeps the unit tests self-contained).
     fn half_max_gap(fmt: Format) -> f32 {
-        let grid = codec(fmt.element().unwrap()).grid();
-        grid.windows(2)
-            .map(|w| (w[1] - w[0]) / 2.0)
-            .fold(0.0f32, f32::max)
+        match fmt.encoding() {
+            ElementEncoding::Minifloat(kind) => codec(kind)
+                .grid()
+                .windows(2)
+                .map(|w| (w[1] - w[0]) / 2.0)
+                .fold(0.0f32, f32::max),
+            // negative side keeps E2M1's 4→6 gap
+            ElementEncoding::RazerE2M1 => 1.0,
+            ElementEncoding::Int4 => 0.5,
+        }
     }
 
     #[test]
@@ -923,6 +1064,8 @@ mod tests {
             Format::Mxfp8E5M2,
             Format::Int4 { group: 16 },
             Format::Int4 { group: 128 },
+            Format::Razer4,
+            Format::FourOverSix,
         ];
         prop::forall(
             "pack_decode_bit_exact",
@@ -1008,6 +1151,135 @@ mod tests {
                 assert_eq!(c as usize, code, "value {v}");
             }
             assert_eq!(E2M1_LUT_X2[code], (v * 2.0) as i32);
+        }
+    }
+
+    #[test]
+    fn razer_code_lut_roundtrip_all_16_codes() {
+        for (code, &v) in RAZER_LUT.iter().enumerate() {
+            assert_eq!(razer_code(v) as usize, code, "value {v}");
+            assert_eq!(RAZER_LUT_X2[code], (v * 2.0) as i32);
+        }
+        // the reclaimed code decodes to the new +5.0 magnitude …
+        assert_eq!(RAZER_LUT[8], 5.0);
+        // … and both zero signs collapse onto code 0, never code 8
+        assert_eq!(razer_code(0.0), 0);
+        assert_eq!(razer_code(-0.0), 0);
+        assert!(RAZER_LUT[razer_code(-0.0) as usize] == 0.0);
+    }
+
+    #[test]
+    fn razer_snap_targets_razer_grid() {
+        // negative side is plain E2M1
+        for x in [-5.0f32, -4.7, -0.3, -2.4, -7.0] {
+            assert_eq!(razer_snap_rne(x), e2m1_snap_rne(x), "at {x}");
+        }
+        // positive side: {2,3,4,5,6} is a uniform step-1 ladder
+        for (x, want) in [
+            (5.0f32, 5.0f32),
+            (4.6, 5.0),
+            (5.4, 5.0),
+            (4.5, 4.0), // RNE tie → even
+            (5.5, 6.0), // RNE tie → even
+            (7.0, 6.0), // saturate
+            (1.1, 1.0), // sub-2 region unchanged from E2M1
+            (0.3, 0.5),
+        ] {
+            assert_eq!(razer_snap_rne(x), want, "at {x}");
+        }
+        // every snapped value round-trips through the code table
+        let mut x = -8.0f32;
+        while x <= 8.0 {
+            let v = razer_snap_rne(x);
+            assert_eq!(RAZER_LUT[razer_code(v) as usize], v, "at {x}");
+            x += 0.0137;
+        }
+    }
+
+    #[test]
+    fn razer_strictly_improves_on_e2m1_between_4_and_6() {
+        // A block whose elements sit at 5·s lands exactly on the reclaimed
+        // code under RaZeR but a full half-gap away under plain NVFP4.
+        let mut row = vec![5.0f32; 16];
+        row[0] = 6.0; // pins amax so s = 1.0 for both formats
+        let m = Mat::from_vec(1, 16, row.clone());
+        let nv = RowQuantizer::new(Format::Nvfp4).qdq_mat_rowwise(&m);
+        let rz = RowQuantizer::new(Format::Razer4).qdq_mat_rowwise(&m);
+        let max_err = |deq: &Mat| {
+            row.iter()
+                .zip(&deq.data)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max)
+        };
+        assert_eq!(max_err(&rz), 0.0, "RaZeR represents 5.0 exactly");
+        assert!(max_err(&nv) >= 1.0 - 1e-6, "NVFP4 misses 5.0 by a full gap");
+    }
+
+    #[test]
+    fn four_over_six_picks_lower_error_candidate() {
+        // Block of small values under a large tensor scale: the amax/4
+        // candidate uses more of the code range and wins.
+        let mut row = vec![0.0f32; 32];
+        row[0] = 6.0; // block 0: amax block, candidates coincide (saturated)
+        for (i, v) in row[16..].iter_mut().enumerate() {
+            *v = 0.11 + 0.013 * i as f32; // block 1: far below amax
+        }
+        let q = RowQuantizer::new(Format::FourOverSix);
+        let qm = q.quantize_rowwise(&Mat::from_vec(1, 32, row.clone()));
+        let ts = q.tensor_scale(6.0);
+        let amax1 = row[16..].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let s6 = q.block_scale(amax1, ts);
+        let chosen = qm.block_scale(0, 1);
+        // amax/4 maps the block into the denser sub-2 half of the E2M1
+        // grid, which wins on this data
+        assert!(chosen > s6, "expected the 4-divisor scale, got {chosen} vs s6={s6}");
+        // and the packed decode respects the adaptive scale bit-exactly
+        let deq = qm.dequantize();
+        let fused = q.qdq_mat_rowwise(&Mat::from_vec(1, 32, row));
+        assert_eq!(deq.data, fused.data);
+    }
+
+    #[test]
+    fn four_over_six_tie_breaks_to_six_divisor_deterministically() {
+        // Tensor absmax 2688 ⇒ ts = 1. Block 1 holds a single 24: both
+        // candidates are E4M3-exact (s6 = 24/6 = 4, s4 = 24/4 = 6) and
+        // both represent 24 exactly (24 = 6·4 = 4·6 on the E2M1 grid), so
+        // the zero-error tie must keep the 6-divisor scale — repeatably.
+        let mut row = vec![0.0f32; 32];
+        row[0] = 2688.0;
+        row[16] = 24.0;
+        let q = RowQuantizer::new(Format::FourOverSix);
+        let ts = q.tensor_scale(2688.0);
+        assert_eq!(ts, 1.0);
+        assert_eq!(q.block_scale(24.0, ts), 4.0);
+        for _ in 0..3 {
+            let qm = q.quantize_rowwise(&Mat::from_vec(1, 32, row.clone()));
+            assert_eq!(qm.block_scale(0, 1), 4.0, "tie must keep amax/6");
+            assert_eq!(qm.dequantize().at(0, 16), 24.0);
+        }
+    }
+
+    #[test]
+    fn four_over_six_never_clips_amax() {
+        // round_up saturation guarantees amax/s ≤ 6 for both candidates,
+        // so the top element of every block survives, like NVFP4.
+        let mut rng = Prng::new(98);
+        let q = RowQuantizer::new(Format::FourOverSix);
+        let m = rand_mat(&mut rng, 8, 64, true);
+        let deq = q.qdq_mat(&m);
+        let ts = q.tensor_scale(m.absmax());
+        for r in 0..m.rows {
+            for (b, block) in m.row(r).chunks(16).enumerate() {
+                let amax = block.iter().fold(0.0f32, |mm, &v| mm.max(v.abs()));
+                let s = q.block_scale_for(block, amax, ts);
+                if s > 0.0 {
+                    assert!(amax / s <= 6.0 * (1.0 + 1e-6), "amax/s = {}", amax / s);
+                }
+                for (i, &x) in block.iter().enumerate() {
+                    let y = deq.at(r, b * 16 + i);
+                    assert!((x - y).abs() <= s * 1.0 + 1e-9, "r{r} b{b} i{i}");
+                }
+            }
         }
     }
 
@@ -1166,6 +1438,8 @@ mod tests {
                 E2M1_LUT[i].abs(),
                 "mag {i}"
             );
+            assert_eq!(RAZER_LUT_X2_I8[i] as i32, RAZER_LUT_X2[i], "razer {i}");
+            assert_eq!(RAZER_LUT_X2[i] as f32 * 0.5, RAZER_LUT[i], "razer x2 {i}");
         }
     }
 
@@ -1178,7 +1452,13 @@ mod tests {
         let mut rng = Prng::new(96);
         for cols in [41usize, 64, 96] {
             let m = rand_mat(&mut rng, 5, cols, true);
-            for fmt in [Format::Nvfp4, Format::Mxfp4, Format::Int4 { group: 16 }] {
+            for fmt in [
+                Format::Nvfp4,
+                Format::Mxfp4,
+                Format::Int4 { group: 16 },
+                Format::Razer4,
+                Format::FourOverSix,
+            ] {
                 let qm = RowQuantizer::new(fmt).quantize(&m);
                 simd::set_path_override(Some(simd::SimdPath::Scalar));
                 let scalar = qm.dequantize();

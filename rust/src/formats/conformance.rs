@@ -1,0 +1,301 @@
+//! Format-conformance harness: the executable contract every registered
+//! codec must satisfy. `rust/tests/format_conformance.rs` drives each
+//! registered format through every check, so adding a format to
+//! [`registered_formats`] is what buys it the full correctness spine:
+//!
+//! 1. **Pack/decode roundtrip** — `quantize().dequantize()` is bit-exact
+//!    with the fused `qdq_mat` path, on ragged tails, `-0.0`, zero blocks
+//!    and inputs that exercise every reachable 4-bit code point.
+//! 2. **Reconstruction bound** — every element lands within
+//!    `s · half_max_gap` of its input, with `s` the codec's own decoded
+//!    per-block scale (the authoritative `scales_f32`, not a recompute).
+//! 3. **GEMM differential** — `matmul_nt_packed` on packed operands
+//!    matches the f32 GEMM of the dequantized operands.
+//! 4. **KV replay** — `append_row` streaming reproduces `quantize_rowwise`
+//!    bit-for-bit, `row_range` slices decode identically to the full
+//!    matrix, and decoding is idempotent (quantize once, replay forever).
+//!
+//! Checks return `Result<(), String>` so the test harness can label the
+//! failing format; none of them panic on their own.
+
+use super::{ElementEncoding, Format, QuantizedMat, RowQuantizer, INT4_LUT, RAZER_LUT};
+use crate::numerics::codec;
+use crate::tensor::{matmul_nt, matmul_nt_packed, Mat};
+use crate::util::prop::gens::outlier_mat;
+use crate::util::Prng;
+
+/// Every codec the conformance harness pins. New formats join here.
+pub fn registered_formats() -> Vec<Format> {
+    vec![
+        Format::Nvfp4,
+        Format::Mxfp4,
+        Format::Mxfp6E2M3,
+        Format::Mxfp6E3M2,
+        Format::Mxfp8E4M3,
+        Format::Mxfp8E5M2,
+        Format::Int4 { group: 16 },
+        Format::Int4 { group: 128 },
+        Format::Razer4,
+        Format::FourOverSix,
+    ]
+}
+
+/// Worst-case |x − decode(code(x/s))·s| / s over the codec's representable
+/// range: half the widest gap between adjacent grid points. RaZeR's widest
+/// gap survives on the negative side (4 → 6; +5.0 only densifies the
+/// positive half), INT4 is a uniform step-1 ladder.
+pub fn half_max_gap(fmt: Format) -> f32 {
+    match fmt.encoding() {
+        ElementEncoding::Minifloat(kind) => {
+            let grid = codec(kind).grid();
+            let widest = grid.windows(2).map(|w| w[1] - w[0]).fold(0.0f32, f32::max);
+            widest / 2.0
+        }
+        ElementEncoding::RazerE2M1 => 1.0,
+        ElementEncoding::Int4 => 0.5,
+    }
+}
+
+/// The 4-bit nibbles a codec can actually emit. INT4's `-8` nibble is
+/// unreachable (symmetric quantization clamps at ±7); every other 4-bit
+/// codec reaches all 16 (E2M1 keeps `-0.0` as code 8, RaZeR reassigns it
+/// to +5.0). `None` for 6/8-bit formats, whose code space is not swept.
+fn reachable_nibbles(fmt: Format) -> Option<Vec<u8>> {
+    if fmt.element_bits() != 4 {
+        return None;
+    }
+    Some(match fmt.encoding() {
+        ElementEncoding::Int4 => (0u8..16).filter(|&c| c != 8).collect(),
+        _ => (0u8..16).collect(),
+    })
+}
+
+/// A matrix whose first row decodes through every reachable code point of
+/// a 4-bit codec at a known block scale: an anchor block pins the tensor
+/// scale at 1.0 (2688 = 448·6, so NVFP4-family formats get `ts = 1`), then
+/// one block holds the decoded value of every code. Non-4-bit codecs get a
+/// generic wide-dynamic-range probe instead.
+fn code_coverage_mat(fmt: Format) -> Mat {
+    let g = fmt.group();
+    match fmt.encoding() {
+        ElementEncoding::Minifloat(crate::numerics::FpKind::E2M1)
+        | ElementEncoding::RazerE2M1 => {
+            // values of all 16 codes at scale 1; E2M1 hits code 8 via -0.0
+            let vals: [f32; 16] = match fmt.encoding() {
+                ElementEncoding::RazerE2M1 => RAZER_LUT,
+                _ => [
+                    0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0, //
+                    -0.0, -0.5, -1.0, -1.5, -2.0, -3.0, -4.0, -6.0,
+                ],
+            };
+            let cols = 2 * g.max(16);
+            Mat::from_fn(1, cols, |_, c| {
+                if c == 0 && fmt.has_tensor_scale() {
+                    2688.0 // anchors absmax so tensor_scale = 1.0
+                } else if c >= g && c < g + 16 {
+                    vals[c - g]
+                } else {
+                    0.0
+                }
+            })
+        }
+        ElementEncoding::Int4 => {
+            // INT4_LUT values at scale 1 (amax 7 → scale_for = 1); the -8
+            // entry quantizes back to -7, which is fine — coverage only
+            // demands the 15 reachable nibbles.
+            Mat::from_fn(1, g.max(16), |_, c| {
+                if c < 16 {
+                    INT4_LUT[c] as f32
+                } else {
+                    0.0
+                }
+            })
+        }
+        _ => {
+            let mut rng = Prng::new(0x4A4);
+            outlier_mat(&mut rng, 1, 2 * g)
+        }
+    }
+}
+
+/// The conformance input set: the code-coverage probe, a ragged-tail
+/// outlier matrix (41 % 16 ≠ 0, 41 % 32 ≠ 0, 41 % 128 ≠ 0), a matrix with
+/// `-0.0` entries and an all-zero block, and a plain random batch.
+fn conformance_inputs(fmt: Format) -> Vec<(&'static str, Mat)> {
+    let mut rng = Prng::new(0x4A4C0);
+    let mut signed_zeros = outlier_mat(&mut rng, 3, 41);
+    for c in 0..41 {
+        *signed_zeros.at_mut(1, c) = 0.0; // all-zero row → zero blocks
+    }
+    *signed_zeros.at_mut(0, 3) = -0.0;
+    *signed_zeros.at_mut(2, 40) = -0.0; // in the ragged tail block
+    vec![
+        ("code-coverage", code_coverage_mat(fmt)),
+        ("ragged-outliers", outlier_mat(&mut rng, 4, 41)),
+        ("signed-zeros", signed_zeros),
+        ("random-batch", outlier_mat(&mut rng, 5, 96)),
+    ]
+}
+
+fn bits(m: &Mat) -> Vec<u32> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Check 1: packed decode ≡ fused QDQ, bit-for-bit, plus full code-point
+/// coverage for 4-bit codecs and decode determinism.
+pub fn check_roundtrip(fmt: Format) -> Result<(), String> {
+    let q = RowQuantizer::new(fmt);
+    for (label, m) in conformance_inputs(fmt) {
+        let qm = q.quantize(&m);
+        let decoded = qm.dequantize();
+        let fused = q.qdq_mat(&m);
+        if bits(&decoded) != bits(&fused) {
+            return Err(format!("{label}: pack→decode differs from fused qdq_mat"));
+        }
+        if bits(&qm.dequantize()) != bits(&decoded) {
+            return Err(format!("{label}: decode is not deterministic"));
+        }
+    }
+    if let Some(expected) = reachable_nibbles(fmt) {
+        let qm = q.quantize(&code_coverage_mat(fmt));
+        let mut seen = [false; 16];
+        for &byte in &qm.codes {
+            seen[(byte & 0x0F) as usize] = true;
+            seen[(byte >> 4) as usize] = true;
+        }
+        for c in expected {
+            if !seen[c as usize] {
+                return Err(format!("code point {c:#x} never emitted by coverage probe"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Check 2: per-element reconstruction error is bounded by the codec's own
+/// decoded block scale times its half-max-gap. Uses the authoritative
+/// `scales_f32` (for Four-over-Six the adaptive choice, not a recompute).
+pub fn check_error_bound(fmt: Format) -> Result<(), String> {
+    let q = RowQuantizer::new(fmt);
+    let gap = half_max_gap(fmt);
+    let g = fmt.group();
+    for (label, m) in conformance_inputs(fmt) {
+        let qm = q.quantize(&m);
+        let decoded = qm.dequantize();
+        for r in 0..m.rows {
+            for c in 0..m.cols {
+                let s = qm.block_scale(r, c / g);
+                let (x, y) = (m.at(r, c), decoded.at(r, c));
+                let bound = s * gap + 1e-9;
+                if (x - y).abs() > bound {
+                    return Err(format!(
+                        "{label}: ({r},{c}) |{x} - {y}| > s·half_gap = {s}·{gap}"
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Check 3: the packed GEMM agrees with the f32 GEMM of the dequantized
+/// operands (same relative tolerance the kernel tests use — accumulation
+/// order differs, so exact equality is not the contract here).
+pub fn check_gemm_differential(fmt: Format) -> Result<(), String> {
+    let q = RowQuantizer::new(fmt);
+    let mut rng = Prng::new(0x4A4C1);
+    for (n, k, m_rows) in [(1usize, 41usize, 7usize), (5, 96, 9), (3, 160, 4)] {
+        let x = outlier_mat(&mut rng, n, k);
+        let mut w = Mat::zeros(m_rows, k);
+        w.fill_random_normal(&mut rng, 0.5);
+        let (qa, qb) = (q.quantize(&x), q.quantize(&w));
+        let (da, db) = (qa.dequantize(), qb.dequantize());
+        let y_packed = matmul_nt_packed(&qa, &qb);
+        let y_ref = matmul_nt(&da, &db);
+        let norm = |mm: &Mat, r: usize| {
+            mm.row(r).iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+        };
+        for i in 0..n {
+            let na = norm(&da, i);
+            for j in 0..m_rows {
+                let tol = 1e-6 * (1.0 + na * norm(&db, j));
+                let (p, r) = (y_packed.at(i, j) as f64, y_ref.at(i, j) as f64);
+                if (p - r).abs() > tol {
+                    return Err(format!(
+                        "({n},{k},{m_rows}) at ({i},{j}): packed {p} vs dequant-gemm {r} > {tol}"
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Check 4: quantize-once KV replay. Streaming `append_row` writes must
+/// reproduce the batch `quantize_rowwise` encoding bit-for-bit, and any
+/// `row_range` slice must decode bit-identically to the full decode — the
+/// invariants the KV cache's append/read paths rely on.
+pub fn check_kv_replay(fmt: Format) -> Result<(), String> {
+    let q = RowQuantizer::new(fmt);
+    let mut rng = Prng::new(0x4A4C2);
+    for cols in [41usize, 96] {
+        let m = outlier_mat(&mut rng, 6, cols);
+        let batch = q.quantize_rowwise(&m);
+        let mut streamed = QuantizedMat::empty(fmt, cols);
+        for r in 0..m.rows {
+            q.append_row(&mut streamed, m.row(r));
+        }
+        if streamed.codes != batch.codes {
+            return Err(format!("cols={cols}: streamed codes differ from batch"));
+        }
+        if streamed.scale_codes != batch.scale_codes {
+            return Err(format!("cols={cols}: streamed scale codes differ from batch"));
+        }
+        let f32_bits =
+            |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        if f32_bits(&streamed.scales_f32) != f32_bits(&batch.scales_f32) {
+            return Err(format!("cols={cols}: streamed f32 scales differ from batch"));
+        }
+        let full = batch.dequantize();
+        for r in 0..m.rows {
+            let slice = batch.row_range(r, 1).dequantize();
+            let want: Vec<u32> = full.row(r).iter().map(|v| v.to_bits()).collect();
+            if bits(&slice) != want {
+                return Err(format!("cols={cols}: row_range({r}, 1) decode differs"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_format_shape() {
+        let formats = registered_formats();
+        assert_eq!(formats.len(), 10);
+        // every element encoding is represented
+        assert!(formats.iter().any(|f| f.encoding() == ElementEncoding::RazerE2M1));
+        assert!(formats.iter().any(|f| f.encoding() == ElementEncoding::Int4));
+        // both new codecs are registered
+        assert!(formats.contains(&Format::Razer4));
+        assert!(formats.contains(&Format::FourOverSix));
+    }
+
+    #[test]
+    fn half_max_gap_pins() {
+        assert_eq!(half_max_gap(Format::Nvfp4), 1.0); // E2M1: 4→6
+        assert_eq!(half_max_gap(Format::FourOverSix), 1.0); // same element grid
+        assert_eq!(half_max_gap(Format::Razer4), 1.0); // negative 4→6 survives
+        assert_eq!(half_max_gap(Format::Int4 { group: 16 }), 0.5);
+    }
+
+    #[test]
+    fn coverage_probe_reaches_every_nibble_for_new_codecs() {
+        for fmt in [Format::Razer4, Format::FourOverSix] {
+            check_roundtrip(fmt).unwrap_or_else(|e| panic!("{fmt:?}: {e}"));
+        }
+    }
+}

@@ -7,18 +7,48 @@
 //!   exponent-only E8M0 block scale.
 //! * **INT4-g128** — symmetric integer groups (Atom-style), for the
 //!   generalizability ablation (Table 6).
+//! * **RaZeR-FP4** — NVFP4 geometry with the redundant `-0.0` code
+//!   (E2M1 code 8) remapped to a +5.0 magnitude, closing the 4→6 gap on
+//!   the positive side.
+//! * **Four-over-Six** — NVFP4 geometry with adaptive per-block scale
+//!   selection between the amax/6 and amax/4 E4M3-ceil candidates
+//!   (lower round-trip squared error wins; ties keep amax/6).
 //!
 //! Quantization is performed row-wise along the channel (reduction)
 //! dimension, matching how activations X[N, K] and weights W[M, K] are
 //! blocked for the NVFP4 GEMM.
 
 pub mod blockquant;
+pub mod conformance;
 pub mod spec;
 
-pub use blockquant::{e2m1_code, QuantizedMat, RowQuantizer, E2M1_LUT, E2M1_LUT_X2, INT4_LUT};
+pub use blockquant::{
+    e2m1_code, razer_code, QuantizedMat, RowQuantizer, E2M1_LUT, E2M1_LUT_X2, INT4_LUT, RAZER_LUT,
+    RAZER_LUT_X2,
+};
 pub use spec::{format_spec, table7_formats, FormatSpec};
 
 use crate::numerics::FpKind;
+
+/// How a format's 4/6/8-bit element codes decode to values — the key the
+/// LUT-selection and SIMD-dispatch layers switch on.
+///
+/// Distinct from [`Format::element`]: two formats can share an element
+/// minifloat but differ in scale policy (NVFP4 vs Four-over-Six), while a
+/// remapped code table (RaZeR) is *not* any [`FpKind`] at all. Pairing
+/// rules in the packed GEMM and decode-LUT choice must key on this, not
+/// on `element()`, or RaZeR's code 8 silently decodes as `-0.0` instead
+/// of `+5.0`.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum ElementEncoding {
+    /// Plain minifloat code table of the given kind.
+    Minifloat(FpKind),
+    /// E2M1 with the redundant `-0.0` code (8) remapped to `+5.0`.
+    RazerE2M1,
+    /// Symmetric integer codes in [-7, 7] (4-bit two's-complement-style
+    /// LUT, code 8 unused/zero).
+    Int4,
+}
 
 /// Storage format of the paged KV cache (the serving-side memory knob).
 ///
@@ -42,6 +72,11 @@ pub enum KvFormat {
     Nvfp4,
     /// MXFP4 K/V pages: E2M1 elements, per-32 E8M0 block scales.
     Mxfp4,
+    /// RaZeR-FP4 K/V pages: NVFP4 geometry, `-0.0` code remapped to +5.0.
+    Razer4,
+    /// Four-over-Six K/V pages: NVFP4 geometry, adaptive amax/6-vs-amax/4
+    /// block-scale selection.
+    FourOverSix,
 }
 
 impl KvFormat {
@@ -51,6 +86,8 @@ impl KvFormat {
             KvFormat::Fp32 => None,
             KvFormat::Nvfp4 => Some(Format::Nvfp4),
             KvFormat::Mxfp4 => Some(Format::Mxfp4),
+            KvFormat::Razer4 => Some(Format::Razer4),
+            KvFormat::FourOverSix => Some(Format::FourOverSix),
         }
     }
 
@@ -71,6 +108,8 @@ impl KvFormat {
             KvFormat::Fp32 => "fp32",
             KvFormat::Nvfp4 => "nvfp4",
             KvFormat::Mxfp4 => "mxfp4",
+            KvFormat::Razer4 => "razer",
+            KvFormat::FourOverSix => "fouroversix",
         }
     }
 
@@ -82,12 +121,20 @@ impl KvFormat {
             "fp32" | "f32" => Some(KvFormat::Fp32),
             "nvfp4" => Some(KvFormat::Nvfp4),
             "mxfp4" => Some(KvFormat::Mxfp4),
+            "razer" => Some(KvFormat::Razer4),
+            "fouroversix" => Some(KvFormat::FourOverSix),
             _ => None,
         }
     }
 
     /// Every KV format, reference first (report/bench iteration order).
-    pub const ALL: [KvFormat; 3] = [KvFormat::Fp32, KvFormat::Nvfp4, KvFormat::Mxfp4];
+    pub const ALL: [KvFormat; 5] = [
+        KvFormat::Fp32,
+        KvFormat::Nvfp4,
+        KvFormat::Mxfp4,
+        KvFormat::Razer4,
+        KvFormat::FourOverSix,
+    ];
 }
 
 /// Every quantization format exercised by the paper's experiments.
@@ -108,34 +155,57 @@ pub enum Format {
     Mxfp8E5M2,
     /// Symmetric INT4 with configurable group (Atom uses 128).
     Int4 { group: usize },
+    /// RaZeR-FP4: NVFP4 geometry (g=16, E4M3 block scale + FP32 tensor
+    /// scale) with the redundant `-0.0` E2M1 code remapped to +5.0.
+    Razer4,
+    /// Four-over-Six: NVFP4 geometry with adaptive per-block scale
+    /// selection between the amax/6 and amax/4 E4M3-ceil candidates.
+    FourOverSix,
 }
 
 impl Format {
     /// Block/group size g.
     pub fn group(self) -> usize {
         match self {
-            Format::Nvfp4 => 16,
+            Format::Nvfp4 | Format::Razer4 | Format::FourOverSix => 16,
             Format::Int4 { group } => group,
             _ => 32,
         }
     }
 
-    /// Element minifloat kind (None for integer formats).
+    /// Element minifloat kind (None for formats whose code table is not a
+    /// plain minifloat — integers and RaZeR's remapped table). Prefer
+    /// [`Format::encoding`] when selecting decode LUTs or pairing rules.
     pub fn element(self) -> Option<FpKind> {
         match self {
-            Format::Nvfp4 | Format::Mxfp4 => Some(FpKind::E2M1),
+            Format::Nvfp4 | Format::Mxfp4 | Format::FourOverSix => Some(FpKind::E2M1),
             Format::Mxfp6E2M3 => Some(FpKind::E2M3),
             Format::Mxfp6E3M2 => Some(FpKind::E3M2),
             Format::Mxfp8E4M3 => Some(FpKind::E4M3),
             Format::Mxfp8E5M2 => Some(FpKind::E5M2),
-            Format::Int4 { .. } => None,
+            Format::Int4 { .. } | Format::Razer4 => None,
+        }
+    }
+
+    /// The element code table this format stores — the authoritative key
+    /// for decode LUTs, GEMM operand pairing and SIMD dispatch.
+    pub fn encoding(self) -> ElementEncoding {
+        match self {
+            Format::Razer4 => ElementEncoding::RazerE2M1,
+            Format::Int4 { .. } => ElementEncoding::Int4,
+            Format::FourOverSix => ElementEncoding::Minifloat(FpKind::E2M1),
+            _ => ElementEncoding::Minifloat(self.element().expect("minifloat format")),
         }
     }
 
     /// Bits per element.
     pub fn element_bits(self) -> u32 {
         match self {
-            Format::Nvfp4 | Format::Mxfp4 | Format::Int4 { .. } => 4,
+            Format::Nvfp4
+            | Format::Mxfp4
+            | Format::Int4 { .. }
+            | Format::Razer4
+            | Format::FourOverSix => 4,
             Format::Mxfp6E2M3 | Format::Mxfp6E3M2 => 6,
             Format::Mxfp8E4M3 | Format::Mxfp8E5M2 => 8,
         }
@@ -151,14 +221,19 @@ impl Format {
 
     /// Does the format carry an additional per-tensor FP32 scale?
     pub fn has_tensor_scale(self) -> bool {
-        matches!(self, Format::Nvfp4)
+        matches!(self, Format::Nvfp4 | Format::Razer4 | Format::FourOverSix)
     }
 
     /// Max representable element magnitude (q_max in Eq. 1).
     pub fn qmax(self) -> f32 {
-        match self.element() {
-            Some(k) => k.max_normal(),
-            None => 7.0, // INT4 symmetric
+        match self {
+            // RaZeR adds +5.0 inside the E2M1 range; amax mapping is
+            // still to ±6, so q_max stays 6.
+            Format::Razer4 => 6.0,
+            _ => match self.element() {
+                Some(k) => k.max_normal(),
+                None => 7.0, // INT4 symmetric
+            },
         }
     }
 
@@ -183,6 +258,8 @@ impl Format {
             Format::Mxfp8E4M3 => "MXFP8-E4M3",
             Format::Mxfp8E5M2 => "MXFP8-E5M2",
             Format::Int4 { .. } => "INT4",
+            Format::Razer4 => "RAZER4",
+            Format::FourOverSix => "4OVER6",
         }
     }
 }
@@ -197,6 +274,36 @@ mod tests {
         assert_eq!(Format::Mxfp4.group(), 32);
         assert_eq!(Format::Mxfp8E4M3.group(), 32);
         assert_eq!(Format::Int4 { group: 128 }.group(), 128);
+    }
+
+    #[test]
+    fn new_codecs_share_nvfp4_geometry() {
+        for fmt in [Format::Razer4, Format::FourOverSix] {
+            assert_eq!(fmt.group(), 16, "{fmt:?}");
+            assert_eq!(fmt.element_bits(), 4, "{fmt:?}");
+            assert_eq!(fmt.scale_bits(), 8, "{fmt:?}");
+            assert!(fmt.has_tensor_scale(), "{fmt:?}");
+            assert_eq!(fmt.qmax(), 6.0, "{fmt:?}");
+            // identical storage footprint to NVFP4 at any shape
+            assert_eq!(
+                fmt.storage_bytes(7, 100),
+                Format::Nvfp4.storage_bytes(7, 100),
+                "{fmt:?}"
+            );
+        }
+        assert_eq!(Format::Razer4.encoding(), ElementEncoding::RazerE2M1);
+        assert_eq!(Format::Razer4.element(), None);
+        assert_eq!(
+            Format::FourOverSix.encoding(),
+            ElementEncoding::Minifloat(FpKind::E2M1)
+        );
+        assert_eq!(
+            Format::FourOverSix.encoding(),
+            Format::Nvfp4.encoding(),
+            "Four-over-Six stores plain E2M1 codes"
+        );
+        assert_ne!(Format::Razer4.encoding(), Format::Nvfp4.encoding());
+        assert_eq!(Format::Int4 { group: 16 }.encoding(), ElementEncoding::Int4);
     }
 
     #[test]
@@ -248,8 +355,16 @@ mod tests {
         assert_eq!(KvFormat::Nvfp4.bytes_per_token(128, 2), 304);
         // MXFP4 row of 128: 64 B codes + 4 B scales = 68 B → 272 B/token.
         assert_eq!(KvFormat::Mxfp4.bytes_per_token(128, 2), 272);
+        // RaZeR and Four-over-Six share NVFP4's page geometry exactly.
+        assert_eq!(KvFormat::Razer4.bytes_per_token(128, 2), 304);
+        assert_eq!(KvFormat::FourOverSix.bytes_per_token(128, 2), 304);
         // quantized KV is >4x denser than f32 at transformer widths
-        for kf in [KvFormat::Nvfp4, KvFormat::Mxfp4] {
+        for kf in [
+            KvFormat::Nvfp4,
+            KvFormat::Mxfp4,
+            KvFormat::Razer4,
+            KvFormat::FourOverSix,
+        ] {
             assert!(
                 KvFormat::Fp32.bytes_per_token(128, 2)
                     >= 4 * kf.bytes_per_token(128, 2)

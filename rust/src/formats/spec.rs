@@ -26,6 +26,8 @@ pub fn format_spec(fmt: Format) -> FormatSpec {
         Format::Mxfp8E4M3 => ("MXFP8", "FP8 (E4M3)", 7),
         Format::Mxfp8E5M2 => ("MXFP8", "FP8 (E5M2)", 15),
         Format::Int4 { .. } => ("INT4", "INT4 (sym)", 0),
+        Format::Razer4 => ("RAZER4", "FP4 (E2M1+R)", 1),
+        Format::FourOverSix => ("4OVER6", "FP4 (E2M1)", 1),
     };
     FormatSpec {
         family,
@@ -35,7 +37,7 @@ pub fn format_spec(fmt: Format) -> FormatSpec {
         max_normal: fmt.qmax(),
         block_size: fmt.group(),
         scale_type: match fmt {
-            Format::Nvfp4 => "E4M3",
+            Format::Nvfp4 | Format::Razer4 | Format::FourOverSix => "E4M3",
             Format::Int4 { .. } => "FP32",
             _ => "E8M0",
         },

@@ -72,7 +72,8 @@ USAGE: arcquant <subcommand> [--flags]
                             GET /metrics — needs --native; port 0 picks a
                             free port, printed on stdout)
             [--prompt-len 32] [--kv-pages 512] [--decode-batch 8]
-            [--kv-format fp32|nvfp4|mxfp4]  (K/V page storage: 4-bit
+            [--kv-format fp32|nvfp4|mxfp4|razer|fouroversix]
+                          (K/V page storage: 4-bit
                           formats pack ~6-7x more tokens per page, so the
                           same --kv-pages budget admits more sequences)
             [--top-k K]  (sample instead of greedy decode)
@@ -103,7 +104,7 @@ USAGE: arcquant <subcommand> [--flags]
                           p50/p99 + prefix-cache hit rate / pages saved)
   calibrate --model NAME [--windows 8] [--window-len 128] [--out FILE]
   eval      --model NAME --method fp16|rtn|smooth|quarot|atom|flatquant|w4a8|arcquant
-            [--format nvfp4|mxfp4|int4]
+            [--format nvfp4|mxfp4|int4|razer|fouroversix]
   bench-kernels [--artifacts DIR]
   info      [--artifacts DIR]",
         arcquant::VERSION
@@ -400,7 +401,9 @@ fn cmd_serve(args: &Args) -> i32 {
         };
         let kv_format_s = args.str_or("kv-format", "fp32");
         let Some(kv_format) = KvFormat::parse(&kv_format_s) else {
-            eprintln!("unknown --kv-format {kv_format_s} (fp32|nvfp4|mxfp4)");
+            eprintln!(
+                "unknown --kv-format {kv_format_s} (fp32|nvfp4|mxfp4|razer|fouroversix)"
+            );
             return 2;
         };
         if let Some(addr) = http_addr {
@@ -755,6 +758,8 @@ fn parse_method(args: &Args) -> Result<Option<Method>, String> {
         "nvfp4" => Format::Nvfp4,
         "mxfp4" => Format::Mxfp4,
         "int4" => Format::Int4 { group: 128 },
+        "razer" => Format::Razer4,
+        "fouroversix" => Format::FourOverSix,
         other => return Err(format!("unknown format {other}")),
     };
     Ok(match args.str_or("method", "arcquant").as_str() {

@@ -1401,7 +1401,12 @@ mod tests {
             rms_eps: 1e-5,
         };
         let mut rng = Prng::new(70);
-        for kv in [KvFormat::Nvfp4, KvFormat::Mxfp4] {
+        for kv in [
+            KvFormat::Nvfp4,
+            KvFormat::Mxfp4,
+            KvFormat::Razer4,
+            KvFormat::FourOverSix,
+        ] {
             for tokens in [1usize, 15, 16, 17, 32, 37] {
                 let mut cache = KvCache::with_format(&cfg, 64, kv);
                 let mut k_all = Mat::zeros(0, cfg.d);
@@ -1483,7 +1488,12 @@ mod tests {
             (all, cache.bytes())
         };
         let (fp_logits, fp_bytes) = run(KvFormat::Fp32);
-        for kv in [KvFormat::Nvfp4, KvFormat::Mxfp4] {
+        for kv in [
+            KvFormat::Nvfp4,
+            KvFormat::Mxfp4,
+            KvFormat::Razer4,
+            KvFormat::FourOverSix,
+        ] {
             let (q_logits, q_bytes) = run(kv);
             assert!(q_logits.iter().all(|v| v.is_finite()));
             let rel = crate::util::stats::rel_frob_err(&q_logits, &fp_logits);

@@ -47,8 +47,10 @@
 //! `‖a_row‖·‖b_row‖` — property-tested here and in `quant::packed`.
 
 use super::{simd, Mat};
-use crate::formats::blockquant::{E2M1_LUT_X2, E2M1_LUT_X2_I8, INT4_LUT, INT4_LUT_I8};
-use crate::formats::{Format, QuantizedMat};
+use crate::formats::blockquant::{
+    E2M1_LUT_X2, E2M1_LUT_X2_I8, INT4_LUT, INT4_LUT_I8, RAZER_LUT, RAZER_LUT_X2, RAZER_LUT_X2_I8,
+};
+use crate::formats::{ElementEncoding, Format, QuantizedMat};
 use crate::numerics::{codec, FpKind};
 use crate::util::pool;
 use std::sync::OnceLock;
@@ -102,8 +104,8 @@ pub static INT4_PROD_LUT: [i32; 256] = build_prod_lut(&INT4_LUT);
 
 fn build_lut_f32(fmt: Format) -> [f32; 256] {
     let mut lut = [0f32; 256];
-    match fmt.element() {
-        Some(kind) => {
+    match fmt.encoding() {
+        ElementEncoding::Minifloat(kind) => {
             let c = codec(kind);
             let bits = kind.bits();
             let sign_bit = 1u16 << (bits - 1);
@@ -116,7 +118,12 @@ fn build_lut_f32(fmt: Format) -> [f32; 256] {
                 }
             }
         }
-        None => {
+        ElementEncoding::RazerE2M1 => {
+            for (i, &v) in RAZER_LUT.iter().enumerate() {
+                lut[i] = v;
+            }
+        }
+        ElementEncoding::Int4 => {
             for (i, &v) in INT4_LUT.iter().enumerate() {
                 lut[i] = v as f32;
             }
@@ -125,21 +132,23 @@ fn build_lut_f32(fmt: Format) -> [f32; 256] {
     lut
 }
 
-/// One cache slot per element encoding (5 minifloat kinds + INT4): the LUT
-/// depends only on `fmt.element()`, and the pre-v2 code rebuilt it through
-/// `codec()` on every GEMM call.
+/// One cache slot per element encoding (5 minifloat kinds + INT4 + RaZeR):
+/// the LUT depends only on `fmt.encoding()`, and the pre-v2 code rebuilt it
+/// through `codec()` on every GEMM call.
 fn lut_slot(fmt: Format) -> usize {
-    match fmt.element() {
-        Some(FpKind::E2M1) => 0,
-        Some(FpKind::E2M3) => 1,
-        Some(FpKind::E3M2) => 2,
-        Some(FpKind::E4M3) => 3,
-        Some(FpKind::E5M2) => 4,
-        None => 5,
+    match fmt.encoding() {
+        ElementEncoding::Minifloat(FpKind::E2M1) => 0,
+        ElementEncoding::Minifloat(FpKind::E2M3) => 1,
+        ElementEncoding::Minifloat(FpKind::E3M2) => 2,
+        ElementEncoding::Minifloat(FpKind::E4M3) => 3,
+        ElementEncoding::Minifloat(FpKind::E5M2) => 4,
+        ElementEncoding::Int4 => 5,
+        ElementEncoding::RazerE2M1 => 6,
     }
 }
 
-static F32_LUTS: [OnceLock<[f32; 256]>; 6] = [
+static F32_LUTS: [OnceLock<[f32; 256]>; 7] = [
+    OnceLock::new(),
     OnceLock::new(),
     OnceLock::new(),
     OnceLock::new(),
@@ -154,12 +163,13 @@ fn elem_lut_f32(qm: &QuantizedMat) -> &'static [f32; 256] {
     F32_LUTS[lut_slot(qm.fmt)].get_or_init(|| build_lut_f32(qm.fmt))
 }
 
-/// Integer decode LUT of a 4-bit operand (E2M1 stored ×2 with a 0.25
-/// product factor, INT4 exact) — the integer paths' element codec.
+/// Integer decode LUT of a 4-bit operand (E2M1 and RaZeR stored ×2 with a
+/// 0.25 product factor, INT4 exact) — the integer paths' element codec.
 fn elem_lut_i32(qm: &QuantizedMat) -> Option<(&'static [i32; 16], f32)> {
-    match qm.fmt.element() {
-        Some(FpKind::E2M1) => Some((&E2M1_LUT_X2, 0.25)),
-        None => Some((&INT4_LUT, 1.0)),
+    match qm.fmt.encoding() {
+        ElementEncoding::Minifloat(FpKind::E2M1) => Some((&E2M1_LUT_X2, 0.25)),
+        ElementEncoding::RazerE2M1 => Some((&RAZER_LUT_X2, 0.25)),
+        ElementEncoding::Int4 => Some((&INT4_LUT, 1.0)),
         _ => None,
     }
 }
@@ -167,10 +177,15 @@ fn elem_lut_i32(qm: &QuantizedMat) -> Option<(&'static [i32; 16], f32)> {
 /// The same table as 16 signed bytes — the shuffle-register form the
 /// AVX2 arm's `pshufb` decode indexes. Only reachable from the integer
 /// paths, whose formats [`elem_lut_i32`] already restricted to 4-bit.
+/// The RaZeR arm exists for totality but never feeds the AVX2 kernels:
+/// `simd::path_for_encoding` pins RaZeR to the scalar dispatch arm (the
+/// AVX2 decode reconstructs sign from nibble bit 3, which would read the
+/// remapped +5.0 code as a negative).
 fn elem_lut_i8(qm: &QuantizedMat) -> &'static [i8; 16] {
-    match qm.fmt.element() {
-        Some(FpKind::E2M1) => &E2M1_LUT_X2_I8,
-        None => &INT4_LUT_I8,
+    match qm.fmt.encoding() {
+        ElementEncoding::Minifloat(FpKind::E2M1) => &E2M1_LUT_X2_I8,
+        ElementEncoding::RazerE2M1 => &RAZER_LUT_X2_I8,
+        ElementEncoding::Int4 => &INT4_LUT_I8,
         _ => unreachable!("integer kernels require a 4-bit element format"),
     }
 }
@@ -209,8 +224,10 @@ pub fn matmul_nt_packed(a: &QuantizedAct, b: &QuantizedMat) -> Mat {
     }
     let int_pair = match (elem_lut_i32(a), elem_lut_i32(b)) {
         // Integer partials are only exact when both sides use the same
-        // fixed-point shift (same element encoding).
-        (Some((lut16, factor)), Some(_)) if a.fmt.element() == b.fmt.element() => {
+        // fixed-point shift (same element encoding). RaZeR × NVFP4 pairs
+        // share E2M1's shift but not its code table, so they fall through
+        // to the f32-LUT path.
+        (Some((lut16, factor)), Some(_)) if a.fmt.encoding() == b.fmt.encoding() => {
             Some((lut16, factor))
         }
         _ => None,
@@ -247,7 +264,7 @@ pub fn matmul_nt_packed_ref(a: &QuantizedAct, b: &QuantizedMat) -> Mat {
     let int_pair = match (elem_lut_i32(a), elem_lut_i32(b)) {
         // Integer partials are only exact when both sides use the same
         // fixed-point shift (same element encoding).
-        (Some((la, fa)), Some((lb, _))) if a.fmt.element() == b.fmt.element() => {
+        (Some((la, fa)), Some((lb, _))) if a.fmt.encoding() == b.fmt.encoding() => {
             Some((la, lb, fa))
         }
         _ => None,
@@ -296,7 +313,7 @@ fn gemm_int_row(
     lut16: &'static [i32; 16],
     factor: f32,
 ) {
-    if simd::selected_path() == simd::SimdPath::Avx2 {
+    if simd::path_for_encoding(a.fmt.encoding()) == simd::SimdPath::Avx2 {
         return gemm_int_row_avx2(a, b, c, elem_lut_i8(a), factor);
     }
     let g = a.fmt.group();
@@ -455,7 +472,7 @@ fn gemm_int_tiled(
     let n = a.rows;
     let m = b.rows;
     // Resolved once per GEMM: decode and micro-kernel ride the same arm.
-    let avx2 = simd::selected_path() == simd::SimdPath::Avx2;
+    let avx2 = simd::path_for_encoding(a.fmt.encoding()) == simd::SimdPath::Avx2;
     let lut8 = elem_lut_i8(a);
     // Decoded-panel budget: the transformer linears all fit in one strip;
     // only very wide B (e.g. a large-vocab head) streams in several, which
@@ -797,7 +814,13 @@ mod tests {
     #[test]
     fn packed_matches_qdq_gemm_all_4bit_formats() {
         let mut rng = Prng::new(70);
-        for fmt in [Format::Nvfp4, Format::Mxfp4, Format::Int4 { group: 16 }] {
+        for fmt in [
+            Format::Nvfp4,
+            Format::Mxfp4,
+            Format::Int4 { group: 16 },
+            Format::Razer4,
+            Format::FourOverSix,
+        ] {
             let x = outlier_mat(&mut rng, 5, 96);
             let mut w = Mat::zeros(7, 96);
             w.fill_random_normal(&mut rng, 0.5);
@@ -821,6 +844,25 @@ mod tests {
         w.fill_random_normal(&mut rng, 0.5);
         let qa = RowQuantizer::new(Format::Mxfp8E4M3).quantize(&x);
         let qb = RowQuantizer::new(Format::Mxfp4).quantize(&w);
+        let (da, db) = (qa.dequantize(), qb.dequantize());
+        let y_packed = matmul_nt_packed(&qa, &qb);
+        let y_qdq = matmul_nt(&da, &db);
+        check_close(&y_packed, &y_qdq, &da, &db).unwrap();
+    }
+
+    #[test]
+    fn packed_supports_mixed_razer_nvfp4() {
+        // RaZeR shares E2M1's fixed-point shift but not its code table
+        // (code 8 is +5.0, not −0.0), so a RaZeR × NVFP4 pair must fall
+        // off the integer path onto the f32-LUT path and still agree with
+        // the dequantized reference.
+        let mut rng = Prng::new(77);
+        let x = outlier_mat(&mut rng, 4, 64);
+        let mut w = Mat::zeros(6, 64);
+        w.fill_random_normal(&mut rng, 0.5);
+        let qa = RowQuantizer::new(Format::Razer4).quantize(&x);
+        let qb = RowQuantizer::new(Format::Nvfp4).quantize(&w);
+        assert_ne!(qa.fmt.encoding(), qb.fmt.encoding());
         let (da, db) = (qa.dequantize(), qb.dequantize());
         let y_packed = matmul_nt_packed(&qa, &qb);
         let y_qdq = matmul_nt(&da, &db);
@@ -865,7 +907,13 @@ mod tests {
             (7, 160, 17),
             (9, 47, 1),
         ];
-        for fmt in [Format::Nvfp4, Format::Mxfp4, Format::Int4 { group: 16 }] {
+        for fmt in [
+            Format::Nvfp4,
+            Format::Mxfp4,
+            Format::Int4 { group: 16 },
+            Format::Razer4,
+            Format::FourOverSix,
+        ] {
             for &(n, k, m) in &shapes {
                 let x = outlier_mat(&mut rng, n, k);
                 let mut w = Mat::zeros(m, k);
@@ -961,7 +1009,13 @@ mod tests {
                 (x, w)
             },
             |(x, w)| {
-                for fmt in [Format::Nvfp4, Format::Mxfp4, Format::Int4 { group: 16 }] {
+                for fmt in [
+                    Format::Nvfp4,
+                    Format::Mxfp4,
+                    Format::Int4 { group: 16 },
+                    Format::Razer4,
+                    Format::FourOverSix,
+                ] {
                     let q = RowQuantizer::new(fmt);
                     let (qa, qb) = (q.quantize(x), q.quantize(w));
                     let v2 = matmul_nt_packed(&qa, &qb);
@@ -999,7 +1053,13 @@ mod tests {
             (7, 160, 17),
             (9, 47, 1),
         ];
-        for fmt in [Format::Nvfp4, Format::Mxfp4, Format::Int4 { group: 16 }] {
+        for fmt in [
+            Format::Nvfp4,
+            Format::Mxfp4,
+            Format::Int4 { group: 16 },
+            Format::Razer4,
+            Format::FourOverSix,
+        ] {
             for &(n, k, m) in &shapes {
                 let x = outlier_mat(&mut rng, n, k);
                 let mut w = Mat::zeros(m, k);

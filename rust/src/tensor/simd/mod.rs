@@ -118,6 +118,21 @@ pub fn selected_path() -> SimdPath {
     }
 }
 
+/// Per-encoding dispatch: the path kernels may take for operands of the
+/// given element encoding. This is [`selected_path`] *restricted to
+/// encodings with validated AVX2 shuffle tables* — RaZeR always resolves
+/// to scalar, because the AVX2 E2M1 dequant/decode kernels look up
+/// magnitudes and re-apply the sign from nibble bit 3, which would
+/// silently decode RaZeR's remapped code 8 as `-0.0` instead of `+5.0`.
+/// Every kernel dispatch site must key on this (not on raw
+/// [`selected_path`]) before touching a 4-bit shuffle table.
+pub fn path_for_encoding(enc: crate::formats::ElementEncoding) -> SimdPath {
+    match enc {
+        crate::formats::ElementEncoding::RazerE2M1 => SimdPath::Scalar,
+        _ => selected_path(),
+    }
+}
+
 /// Override the dispatched path at runtime (`None` restores the
 /// environment/auto default). Outputs never depend on the path — this
 /// exists so one host can run both arms of the bit-identity pins and the
@@ -308,6 +323,21 @@ mod tests {
         }
         assert_eq!(SimdPath::Scalar.name(), "scalar");
         assert_eq!(SimdPath::Avx2.name(), "avx2");
+    }
+
+    #[test]
+    fn path_for_encoding_pins_razer_to_scalar() {
+        use crate::formats::ElementEncoding;
+        use crate::numerics::FpKind;
+        // RaZeR must never reach the AVX2 shuffle tables, whatever the
+        // global dispatch resolves to (race-free: no override needed —
+        // the property holds in every dispatch state).
+        assert_eq!(path_for_encoding(ElementEncoding::RazerE2M1), SimdPath::Scalar);
+        // plain-minifloat and INT4 encodings follow the global dispatch
+        for enc in [ElementEncoding::Minifloat(FpKind::E2M1), ElementEncoding::Int4] {
+            let p = path_for_encoding(enc);
+            assert!(p == SimdPath::Scalar || avx2_available(), "{enc:?} -> {p:?}");
+        }
     }
 
     #[test]

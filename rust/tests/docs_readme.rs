@@ -68,8 +68,45 @@ fn readme_covers_every_subcommand() {
 fn readme_documents_the_kv_format_flag() {
     let readme = read("README.md");
     assert!(readme.contains("--kv-format"), "README must document --kv-format");
-    for fmt in ["fp32", "nvfp4", "mxfp4"] {
+    for fmt in ["fp32", "nvfp4", "mxfp4", "razer", "fouroversix"] {
         assert!(readme.contains(fmt), "README must name the {fmt} KV format");
+    }
+    // the CLI parse errors must advertise the same value lists
+    let main_src = read("rust/src/main.rs");
+    for fmt in ["razer", "fouroversix"] {
+        assert!(
+            main_src.contains(&format!("\"{fmt}\"")),
+            "main.rs must parse the {fmt} format value"
+        );
+    }
+}
+
+#[test]
+fn formats_doc_catalogs_every_registered_codec() {
+    // the codec catalog cannot drift: every format the conformance
+    // registry knows must appear in docs/formats.md by display name,
+    // and the doc must carry the RaZeR/Four-over-Six specifics the
+    // README points at.
+    use arcquant::formats::conformance::registered_formats;
+    let doc = read("docs/formats.md");
+    for fmt in registered_formats() {
+        assert!(
+            doc.contains(fmt.name()),
+            "docs/formats.md codec catalog is missing `{}`",
+            fmt.name()
+        );
+    }
+    for needle in [
+        "redundant-zero",
+        "+5.0",
+        "amax/4",
+        "amax/6",
+        "path_for_encoding",
+        "ElementEncoding",
+        "conformance",
+        "bytes/token",
+    ] {
+        assert!(doc.contains(needle), "docs/formats.md must cover {needle}");
     }
 }
 
@@ -98,6 +135,7 @@ fn docs_index_links_resolve() {
         "ARCHITECTURE.md",
         "packed_path.md",
         "decode_serving.md",
+        "formats.md",
         "kv_cache.md",
         "http_serving.md",
     ] {
