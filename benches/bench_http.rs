@@ -10,13 +10,19 @@
 //! continuous-batching win (shared decode ticks), since a single
 //! connection can never batch with itself.
 //!
+//! A final open-loop pass offers the same fixed Poisson arrival rate to
+//! a 1-replica and a 3-replica server and reports goodput under an SLO
+//! for each — the r3/r1 goodput ratio (`GATE http_goodput_open_loop`)
+//! is the replica-tier scaling headline (`replica_goodput_speedup`).
+//!
 //! `ARCQUANT_BENCH_SMOKE=1` shrinks the series and skips the JSON
 //! rewrite — CI uses it to exercise the full socket path (server boot,
 //! keep-alive clients, chunked streaming, drain) every push.
 
 use arcquant::baselines::Method;
 use arcquant::coordinator::{
-    run_loadgen, HttpServeConfig, HttpServer, LoadgenConfig, Variant,
+    run_loadgen, run_open_loop, HttpServeConfig, HttpServer, LoadgenConfig,
+    OpenLoopConfig, Variant,
 };
 use arcquant::formats::{Format, KvFormat};
 use arcquant::model::{tiny_test_fixture, Engine, EngineMode};
@@ -249,6 +255,85 @@ fn main() {
     );
     println!("GATE http_recovery_ms {:.1}", fr.wall_ms);
 
+    // open-loop replica-scaling pass: the same fixed Poisson offered
+    // load against a 1-replica and a 3-replica server (identical
+    // per-replica budgets), goodput = completions within the SLO per
+    // second. The r3/r1 goodput ratio is the sharding win; the smoke
+    // gate floors it (scripts/bench_gate.py, GATE
+    // http_goodput_open_loop) so a tier regression that collapses
+    // multi-replica serving fails CI even on small runners.
+    let (ol_requests, ol_rate, ol_slo_ms) = if smoke {
+        (16usize, 48.0, 500.0)
+    } else {
+        (96usize, 64.0, 500.0)
+    };
+    let open_loop_pass = |replicas: usize| {
+        let srv = HttpServer::start(
+            HttpServeConfig {
+                replicas,
+                max_decode_batch: 16,
+                kv_pages: 512,
+                pages_per_replica: 512,
+                kv_format: KvFormat::Nvfp4,
+                queue_cap: 128,
+                ..Default::default()
+            },
+            "127.0.0.1:0",
+            engines(),
+        )
+        .expect("bench server (open loop)");
+        let r = run_open_loop(&OpenLoopConfig {
+            addr: srv.addr().to_string(),
+            requests: ol_requests,
+            rate: ol_rate,
+            slo_ms: ol_slo_ms,
+            prompt_len: bc.prompt_len,
+            max_new_tokens: bc.max_new,
+            variant: Some(Variant::ArcPacked),
+            vocab: 256,
+            stream: false,
+            seed: 4,
+            shared_prefix_len: 0,
+        })
+        .expect("open-loop loadgen");
+        srv.shutdown();
+        // open loop has no retries, but the queue cap exceeds the total
+        // request count, so every request must land
+        assert_eq!(
+            r.errors, 0,
+            "{replicas}-replica open-loop traffic must be error-free: {:?}",
+            r.by_status
+        );
+        r
+    };
+    let ol_r1 = open_loop_pass(1);
+    let ol_r3 = open_loop_pass(3);
+    println!(
+        "BENCH http_openloop_r1 goodput_rps={:.2} offered_rps={:.2} \
+         within_slo={} p50_ms={:.1} p99_ms={:.1}",
+        ol_r1.goodput_rps,
+        ol_r1.offered_rps,
+        ol_r1.ok_within_slo,
+        ol_r1.p50_ms,
+        ol_r1.p99_ms
+    );
+    println!(
+        "BENCH http_openloop_r3 goodput_rps={:.2} offered_rps={:.2} \
+         within_slo={} p50_ms={:.1} p99_ms={:.1}",
+        ol_r3.goodput_rps,
+        ol_r3.offered_rps,
+        ol_r3.ok_within_slo,
+        ol_r3.p50_ms,
+        ol_r3.p99_ms
+    );
+    let goodput_ratio = if ol_r1.goodput_rps > 0.0 {
+        ol_r3.goodput_rps / ol_r1.goodput_rps
+    } else {
+        1.0
+    };
+    // the smoke gate floors this (BENCH_GATE_GOODPUT_FLOOR, default 0.7)
+    println!("GATE http_goodput_open_loop {goodput_ratio:.3}");
+
     println!(
         "BENCH http_prefix_on tok_s={:.1} ttft_p50_ms={:.2} ttft_p99_ms={:.2} \
          hit_rate={:.3} pages_saved={}",
@@ -315,6 +400,22 @@ fn main() {
         .set("connections", Json::Num(4.0))
         .set("sharing_on", prefix_row(&prefix_on))
         .set("sharing_off", prefix_row(&prefix_off));
+    let ol_row = |replicas: usize, r: &arcquant::coordinator::OpenLoopReport| {
+        let mut row = Json::obj();
+        row.set("replicas", Json::Num(replicas as f64))
+            .set("requests", Json::Num(r.requests as f64))
+            .set("offered_rps", Json::Num(r.offered_rps))
+            .set("goodput_rps", Json::Num(r.goodput_rps))
+            .set("ok_within_slo", Json::Num(r.ok_within_slo as f64))
+            .set("p50_ms", Json::Num(r.p50_ms))
+            .set("p99_ms", Json::Num(r.p99_ms));
+        row
+    };
+    let mut replica_scaling = Json::obj();
+    replica_scaling
+        .set("rate_rps", Json::Num(ol_rate))
+        .set("slo_ms", Json::Num(ol_slo_ms))
+        .set("rows", Json::Arr(vec![ol_row(1, &ol_r1), ol_row(3, &ol_r3)]));
     let mut out = Json::obj();
     out.set("bench", Json::Str("http".into()))
         .set("provenance", prov)
@@ -326,9 +427,11 @@ fn main() {
         .set("rows", Json::Arr(rows))
         .set("streaming", stream_row)
         .set("prefix_reuse", prefix_reuse)
+        .set("replica_scaling", replica_scaling)
         // headline scalars for the trajectory gate
         .set("prefix_hit_rate", Json::Num(prefix_on.prefix_hit_rate))
         .set("prefix_ttft_speedup", Json::Num(ttft_speedup))
+        .set("replica_goodput_speedup", Json::Num(goodput_ratio))
         // client-observed ride-through time of one injected tick panic
         .set("fault_recovery_ms", Json::Num(fr.wall_ms));
     let path = "BENCH_http.json";

@@ -9,17 +9,32 @@
 //!
 //! ```text
 //!   TCP clients ──► acceptor thread ──► connection-handler threads
-//!                                           │  mpsc (Job: request +
-//!                                           │        GenEvent channel)
-//!                                           ▼
-//!                                 scheduler thread (owns the engines,
-//!                                 KvPageManager and sessions; runs the
-//!                                 admission → prefill → batched-decode
-//!                                 → retire tick loop)
-//!                                           │  per-request GenEvent
-//!                                           ▼
+//!                                           │  KV-locality routing
+//!                                           │  (ReplicaPool: home by
+//!                                           │  prefix key, spill to
+//!                                           │  least-loaded)
+//!                          ┌────────────────┼────────────────┐
+//!                          ▼ mpsc           ▼                ▼
+//!                    scheduler 0      scheduler 1  …   scheduler N-1
+//!                   (each owns its own SchedCore, KvPageManager,
+//!                    page budget, restart budget and Metrics; runs
+//!                    the admission → prefill → batched-decode →
+//!                    retire tick loop over the shared engines)
+//!                          │  per-request GenEvent
+//!                          ▼
 //!                    handlers write JSON (or chunked token streams)
 //! ```
+//!
+//! With `replicas: 1` (the default) this collapses to the classic
+//! single-scheduler layout and every observable surface (metrics text,
+//! gauges, tokens) is unchanged. With N > 1 the front tier shards
+//! sessions across N independent replicas: shared-prefix requests hash
+//! to a *home* replica by the content address of their first prompt
+//! chunk (the per-replica prefix index only pays off when cache
+//! siblings land together), spilling to the least-loaded replica when
+//! the home is saturated — see [`super::router`]. Outputs stay
+//! bit-exact to the single-replica replay because sampling is keyed by
+//! the globally-assigned request id (`session_rng`), not by placement.
 //!
 //! Endpoints:
 //! - `POST /v1/generate` — JSON body `{"prompt": [ids...],
@@ -29,9 +44,11 @@
 //!   `"stream": true` the response is `Transfer-Encoding: chunked`: one
 //!   `{"token":N}` chunk per sampled token as it is produced, then a
 //!   final `{"done":true,...}` summary chunk.
-//! - `GET /healthz` — liveness + queue/page gauges.
+//! - `GET /healthz` — liveness + queue/page gauges (summed across the
+//!   replica tier).
 //! - `GET /metrics` — Prometheus text format
-//!   ([`Metrics::render_prometheus`]).
+//!   ([`Metrics::render_prometheus`]; with `replicas > 1`,
+//!   [`Metrics::render_prometheus_multi`] adds `{replica="i"}` rows).
 //!
 //! Backpressure maps onto status codes: a full scheduler queue is **429**
 //! (retryable — sequences retire and free pages), a request whose worst
@@ -49,7 +66,9 @@
 //! while the single scheduler thread does the actual batching.
 
 use super::generate::{Admit, SchedCore};
+use super::kvcache::{route_key, KvPageManager};
 use super::metrics::{FailReason, Metrics};
+use super::router::ReplicaPool;
 use super::request::{
     FinishReason, GenEvent, GenerateRequest, GenerateResponse, RejectReason, Variant,
 };
@@ -74,6 +93,12 @@ const MAX_BODY_DEPTH: usize = 16;
 /// Config of the HTTP serving frontend.
 #[derive(Clone, Debug)]
 pub struct HttpServeConfig {
+    /// engine replicas behind the front tier: each runs its own
+    /// scheduler thread with a private `SchedCore`, `KvPageManager`,
+    /// restart budget and metrics registry (0 is treated as 1)
+    pub replicas: usize,
+    /// KV page budget of *each* replica; 0 = use `kv_pages` per replica
+    pub pages_per_replica: usize,
     /// cap on concurrently decoding sequences per variant
     pub max_decode_batch: usize,
     /// total pages in the shared KV page pool
@@ -126,6 +151,8 @@ pub struct HttpServeConfig {
 impl Default for HttpServeConfig {
     fn default() -> Self {
         HttpServeConfig {
+            replicas: 1,
+            pages_per_replica: 0,
             max_decode_batch: 8,
             kv_pages: 256,
             kv_format: KvFormat::Fp32,
@@ -171,7 +198,16 @@ struct BodyLimits {
 struct ConnShared {
     cfg: HttpServeConfig,
     limits: BodyLimits,
+    /// the replica tier: one Job sender + metrics registry per replica,
+    /// plus the KV-locality routing policy (see [`super::router`])
+    pool: ReplicaPool<Job>,
+    /// replica 0's registry — where handlers record HTTP statuses (the
+    /// multi-replica exposition merges statuses across registries)
     metrics: Arc<Metrics>,
+    /// tokens per KV page under the serving `kv_format` — fixes the
+    /// prompt-prefix chunk the locality route key hashes, mirroring
+    /// each replica's page-manager geometry
+    route_page_tokens: usize,
     shutdown: Arc<AtomicBool>,
     next_id: AtomicU64,
 }
@@ -183,10 +219,18 @@ pub struct HttpServer {
     addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
     accept: Option<std::thread::JoinHandle<()>>,
-    sched: Option<std::thread::JoinHandle<()>>,
-    job_tx: Option<mpsc::Sender<Job>>,
-    /// serving metrics — the `GET /metrics` registry, readable in-process
+    scheds: Vec<std::thread::JoinHandle<()>>,
+    /// dropped on shutdown once the acceptor (and with it every handler)
+    /// has exited — the pool inside holds the last Job senders, so this
+    /// is what lets the replica schedulers drain and exit
+    shared: Option<Arc<ConnShared>>,
+    /// replica 0's serving metrics — the full `GET /metrics` registry on
+    /// a single-replica server, and the front registry (HTTP statuses)
+    /// otherwise; readable in-process
     pub metrics: Arc<Metrics>,
+    /// every replica's registry, in replica order (len 1 unless
+    /// `replicas > 1`)
+    replica_metrics: Vec<Arc<Metrics>>,
 }
 
 impl HttpServer {
@@ -208,9 +252,7 @@ impl HttpServer {
         let listener =
             TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
         let local = listener.local_addr().map_err(|e| e.to_string())?;
-        let metrics = Arc::new(Metrics::new());
         let shutdown = Arc::new(AtomicBool::new(false));
-        let (job_tx, job_rx) = mpsc::channel::<Job>();
         let limits = BodyLimits {
             max_prompt_len: cfg.max_prompt_len,
             max_new_cap: cfg.max_new_cap,
@@ -218,32 +260,79 @@ impl HttpServer {
             vocab: engines[0].1.cfg.vocab,
             default_variant: engines[0].0,
         };
+        // routing geometry: the same tokens-per-page each replica's page
+        // manager will compute, so the locality key hashes exactly the
+        // chunk `admit_shared` probes first
+        let route_page_tokens = KvPageManager::with_format(
+            1,
+            engines[0].1.cfg.d,
+            engines[0].1.cfg.l,
+            cfg.kv_format,
+        )
+        .page_tokens;
+
+        // replica tier: N scheduler threads share the (immutable) engine
+        // weights but each owns its SchedCore, page budget and registry
+        let replicas = cfg.replicas.max(1);
+        let per_replica_pages = if cfg.pages_per_replica > 0 {
+            cfg.pages_per_replica
+        } else {
+            cfg.kv_pages
+        };
+        let engines = Arc::new(engines);
+        let mut scheds = Vec::with_capacity(replicas);
+        let mut pool_entries = Vec::with_capacity(replicas);
+        for r in 0..replicas {
+            let (job_tx, job_rx) = mpsc::channel::<Job>();
+            let metrics = Arc::new(Metrics::new());
+            let mut sched_cfg = cfg.clone();
+            // per-replica budget; faults clone-share their hit counters,
+            // so an armed fault still fires once per *process*
+            sched_cfg.kv_pages = per_replica_pages;
+            let sched_engines = engines.clone();
+            let sched_metrics = metrics.clone();
+            let sched = std::thread::Builder::new()
+                .name(format!("arcquant-http-sched-{r}"))
+                .spawn(move || {
+                    run_scheduler(sched_cfg, sched_engines, job_rx, sched_metrics)
+                })
+                .map_err(|e| format!("spawn scheduler {r}: {e}"))?;
+            scheds.push(sched);
+            pool_entries.push((job_tx, metrics));
+        }
+        let pool = ReplicaPool::new(pool_entries, cfg.queue_cap);
+        let metrics = pool.metrics(0).clone();
+        let replica_metrics = pool.all_metrics();
         let shared = Arc::new(ConnShared {
             cfg: cfg.clone(),
             limits,
+            pool,
             metrics: metrics.clone(),
+            route_page_tokens,
             shutdown: shutdown.clone(),
             next_id: AtomicU64::new(0),
         });
-        let sched_metrics = metrics.clone();
-        let sched_cfg = cfg.clone();
-        let sched = std::thread::Builder::new()
-            .name("arcquant-http-sched".into())
-            .spawn(move || run_scheduler(sched_cfg, engines, job_rx, sched_metrics))
-            .map_err(|e| format!("spawn scheduler: {e}"))?;
-        let acc_tx = job_tx.clone();
+        let acc_shared = shared.clone();
         let accept = std::thread::Builder::new()
             .name("arcquant-http-accept".into())
-            .spawn(move || run_acceptor(listener, acc_tx, shared))
+            .spawn(move || run_acceptor(listener, acc_shared))
             .map_err(|e| format!("spawn acceptor: {e}"))?;
         Ok(HttpServer {
             addr: local,
             shutdown,
             accept: Some(accept),
-            sched: Some(sched),
-            job_tx: Some(job_tx),
+            scheds,
+            shared: Some(shared),
             metrics,
+            replica_metrics,
         })
+    }
+
+    /// Per-replica metrics registries, in replica order (length 1 on a
+    /// single-replica server). Registry 0 additionally carries the
+    /// HTTP-status counts the connection handlers record.
+    pub fn replica_metrics(&self) -> &[Arc<Metrics>] {
+        &self.replica_metrics
     }
 
     /// The bound address (resolves port 0).
@@ -258,7 +347,7 @@ impl HttpServer {
     }
 
     fn shutdown_impl(&mut self) {
-        if self.accept.is_none() && self.sched.is_none() {
+        if self.accept.is_none() && self.scheds.is_empty() {
             return;
         }
         self.shutdown.store(true, Ordering::Relaxed);
@@ -269,10 +358,11 @@ impl HttpServer {
             let _ = h.join();
         }
         // the acceptor joins every connection handler before exiting, so
-        // at this point ours is the last Job sender — dropping it lets
-        // the scheduler finish its sessions and exit
-        self.job_tx = None;
-        if let Some(h) = self.sched.take() {
+        // at this point ours is the last reference to the pool — dropping
+        // it drops every replica's Job sender, letting each scheduler
+        // finish its sessions and exit
+        drop(self.shared.take());
+        for h in self.scheds.drain(..) {
             let _ = h.join();
         }
     }
@@ -345,7 +435,7 @@ fn enqueue(
 /// fails loudly instead of flapping.
 fn run_scheduler(
     cfg: HttpServeConfig,
-    engines: Vec<(Variant, Engine)>,
+    engines: Arc<Vec<(Variant, Engine)>>,
     rx: mpsc::Receiver<Job>,
     metrics: Arc<Metrics>,
 ) {
@@ -525,11 +615,7 @@ fn run_scheduler(
 // acceptor + connection handlers
 // ---------------------------------------------------------------------
 
-fn run_acceptor(
-    listener: TcpListener,
-    job_tx: mpsc::Sender<Job>,
-    shared: Arc<ConnShared>,
-) {
+fn run_acceptor(listener: TcpListener, shared: Arc<ConnShared>) {
     let mut handles = Vec::new();
     loop {
         match listener.accept() {
@@ -537,9 +623,8 @@ fn run_acceptor(
                 if shared.shutdown.load(Ordering::Relaxed) {
                     break;
                 }
-                let tx = job_tx.clone();
                 let sh = shared.clone();
-                handles.push(std::thread::spawn(move || handle_conn(stream, tx, sh)));
+                handles.push(std::thread::spawn(move || handle_conn(stream, sh)));
                 // reap exited handlers so a long-lived server holds one
                 // handle per *live* connection, not per connection ever
                 // served (dropping a finished handle just detaches it)
@@ -558,7 +643,7 @@ fn run_acceptor(
     }
 }
 
-fn handle_conn(stream: TcpStream, job_tx: mpsc::Sender<Job>, sh: Arc<ConnShared>) {
+fn handle_conn(stream: TcpStream, sh: Arc<ConnShared>) {
     let _ = stream.set_nodelay(true);
     let _ = stream
         .set_read_timeout(Some(Duration::from_millis(sh.cfg.read_timeout_ms)));
@@ -598,7 +683,7 @@ fn handle_conn(stream: TcpStream, job_tx: mpsc::Sender<Job>, sh: Arc<ConnShared>
             }
         };
         let keep = req.keep_alive && !sh.shutdown.load(Ordering::Relaxed);
-        let usable = route_request(&mut writer, &req, keep, &job_tx, &sh);
+        let usable = route_request(&mut writer, &req, keep, &sh);
         if !usable || !keep {
             return;
         }
@@ -609,36 +694,33 @@ fn route_request(
     w: &mut TcpStream,
     req: &HttpRequest,
     keep: bool,
-    job_tx: &mpsc::Sender<Job>,
     sh: &ConnShared,
 ) -> bool {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
+            // gauges summed across the replica tier (single replica:
+            // identical to reading its registry directly)
+            let loads = sh.pool.loads();
+            let queued: u64 = loads.iter().map(|l| l.queued).sum();
+            let used: u64 = loads.iter().map(|l| l.pages_used).sum();
+            let total: u64 = loads.iter().map(|l| l.pages_total).sum();
             let mut j = Json::obj();
             j.set("status", Json::Str("ok".into()))
-                .set(
-                    "queue_depth",
-                    Json::Num(Metrics::get(&sh.metrics.queue_depth) as f64),
-                )
-                .set(
-                    "kv_pages_used",
-                    Json::Num(Metrics::get(&sh.metrics.kv_pages_used) as f64),
-                )
-                .set(
-                    "kv_pages_total",
-                    Json::Num(Metrics::get(&sh.metrics.kv_pages_total) as f64),
-                );
+                .set("replicas", Json::Num(sh.pool.len() as f64))
+                .set("queue_depth", Json::Num(queued as f64))
+                .set("kv_pages_used", Json::Num(used as f64))
+                .set("kv_pages_total", Json::Num(total as f64));
             send(w, 200, "application/json", &j.dump(), keep, &sh.metrics)
         }
         ("GET", "/metrics") => send(
             w,
             200,
             "text/plain; version=0.0.4",
-            &sh.metrics.render_prometheus(),
+            &Metrics::render_prometheus_multi(&sh.pool.all_metrics()),
             keep,
             &sh.metrics,
         ),
-        ("POST", "/v1/generate") => handle_generate(w, req, keep, job_tx, sh),
+        ("POST", "/v1/generate") => handle_generate(w, req, keep, sh),
         (_, "/healthz" | "/metrics" | "/v1/generate") => send(
             w,
             405,
@@ -662,7 +744,6 @@ fn handle_generate(
     w: &mut TcpStream,
     req: &HttpRequest,
     keep: bool,
-    job_tx: &mpsc::Sender<Job>,
     sh: &ConnShared,
 ) -> bool {
     let parsed = std::str::from_utf8(&req.body)
@@ -681,6 +762,9 @@ fn handle_generate(
             )
         }
     };
+    // the id is assigned globally, *before* placement: sampling streams
+    // are keyed by (seed, id), so outputs are bit-exact to a
+    // single-replica replay no matter which replica serves the session
     let id = sh.next_id.fetch_add(1, Ordering::Relaxed) + 1;
     let (tx_ev, rx_ev) = mpsc::channel::<GenEvent>();
     let mut greq =
@@ -692,8 +776,18 @@ fn handle_generate(
     if let Some(ms) = timeout {
         greq = greq.with_timeout_ms(ms);
     }
+    // KV-locality placement: home replica by prefix-chunk content
+    // address, least-loaded spill when the home is saturated
+    let key = route_key(
+        greq.variant.index() as u32,
+        &greq.prompt,
+        sh.route_page_tokens,
+    );
+    let replica = sh.pool.route(key);
     let cancel = Arc::new(AtomicBool::new(false));
-    if job_tx
+    if sh
+        .pool
+        .sender(replica)
         .send(Job {
             req: greq,
             watch: tx_ev,

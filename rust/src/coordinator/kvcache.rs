@@ -120,6 +120,22 @@ fn chain_key(parent: u64, chunk: &[u16]) -> u64 {
     h
 }
 
+/// Locality-routing key of a prompt: the content address of its first
+/// matchable prefix chunk — exactly the key [`KvPageManager::admit_shared`]
+/// probes first, so two prompts that could share KV pages always map to
+/// the same key. Prompts too short to have a matchable chunk (under one
+/// full page + 1 token) are keyed by their own tokens instead, so the
+/// mapping stays total and deterministic for every prompt.
+pub fn route_key(class: u32, prompt: &[u16], page_tokens: usize) -> u64 {
+    let root = root_key(class);
+    let chunk = if prompt.len() > page_tokens {
+        &prompt[..page_tokens]
+    } else {
+        prompt
+    };
+    chain_key(root, chunk)
+}
+
 pub struct KvPageManager {
     total_pages: usize,
     free: Vec<usize>,

@@ -1,5 +1,6 @@
-//! Closed-loop HTTP load generator + the minimal HTTP/1.1 client it
-//! (and the integration tests) drive the serving frontend with.
+//! HTTP load generator (closed- and open-loop) + the minimal HTTP/1.1
+//! client it (and the integration tests) drive the serving frontend
+//! with.
 //!
 //! `arcquant loadgen` runs N keep-alive connections against a
 //! [`super::http::HttpServer`]; each connection issues requests
@@ -9,6 +10,17 @@
 //! connections into shared decode ticks. The report carries end-to-end
 //! tokens/s plus latency percentiles — the series committed in
 //! `BENCH_http.json` at connection counts {1, 4, 16}.
+//!
+//! `loadgen --arrival poisson --rate R` instead runs the **open-loop**
+//! workload ([`run_open_loop`]): request arrival times are sampled from
+//! a deterministic Poisson process (exponential inter-arrival gaps off
+//! the xoshiro PRNG) and dispatched on schedule *regardless of whether
+//! earlier requests have completed* — the arrival process never
+//! self-throttles, so queueing collapse shows up as latency and missed
+//! SLOs instead of being hidden by a slowing client. The headline
+//! number is **goodput**: responses that completed within `--slo-ms`,
+//! per second. Open-loop requests get exactly one attempt (no retries —
+//! a retry would turn the arrival process back into a closed loop).
 //!
 //! With [`LoadgenConfig::shared_prefix_len`] > 0 the generator runs the
 //! **shared-prefix scenario**: every request carries the same
@@ -649,6 +661,218 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
     })
 }
 
+// ---------------------------------------------------------------------
+// open-loop mode (Poisson arrivals, goodput under SLO)
+// ---------------------------------------------------------------------
+
+/// Config of an open-loop load-generation run.
+#[derive(Clone, Debug)]
+pub struct OpenLoopConfig {
+    /// server address, `host:port`
+    pub addr: String,
+    /// total requests to dispatch
+    pub requests: usize,
+    /// mean arrival rate of the Poisson process, requests/second
+    pub rate: f64,
+    /// end-to-end latency SLO, milliseconds: a 200 slower than this
+    /// still completes but does not count toward goodput
+    pub slo_ms: f64,
+    /// prompt length in tokens (client-synthesized, deterministic)
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    /// `None` = let the server apply its default variant
+    pub variant: Option<Variant>,
+    /// token-id range for synthesized prompts (must be ≤ server vocab)
+    pub vocab: usize,
+    /// request token streaming — gives real client-side TTFT samples
+    pub stream: bool,
+    /// seed of both the arrival process and the prompt content
+    pub seed: u64,
+    /// shared-prefix scenario, as in [`LoadgenConfig::shared_prefix_len`]
+    pub shared_prefix_len: usize,
+}
+
+impl Default for OpenLoopConfig {
+    fn default() -> Self {
+        OpenLoopConfig {
+            addr: String::new(),
+            requests: 64,
+            rate: 32.0,
+            slo_ms: 1000.0,
+            prompt_len: 16,
+            max_new_tokens: 8,
+            variant: None,
+            vocab: 256,
+            stream: false,
+            seed: 0,
+            shared_prefix_len: 0,
+        }
+    }
+}
+
+/// Outcome of an open-loop run.
+#[derive(Clone, Debug)]
+pub struct OpenLoopReport {
+    /// requests dispatched
+    pub requests: usize,
+    /// 200-status responses
+    pub ok: usize,
+    /// 200-status responses that landed within the SLO
+    pub ok_within_slo: usize,
+    /// transport failures + non-200 responses (single attempt each)
+    pub errors: usize,
+    pub by_status: BTreeMap<u16, usize>,
+    /// tokens received across all 200 responses
+    pub generated_tokens: usize,
+    pub wall_ms: f64,
+    /// realized arrival rate, requests/s (≈ `rate` unless dispatch fell
+    /// behind the schedule)
+    pub offered_rps: f64,
+    /// the headline: SLO-met completions per second
+    pub goodput_rps: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// client-side time-to-first-token percentiles over 200 responses
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+}
+
+/// One exponential inter-arrival gap (seconds) of a Poisson process at
+/// `rate` requests/s — inverse-CDF sampling off the deterministic
+/// xoshiro stream (`1 - u` keeps the log argument strictly positive).
+pub fn poisson_gap_s(rng: &mut Prng, rate: f64) -> f64 {
+    -(1.0 - rng.f64()).ln() / rate
+}
+
+/// Run the open-loop workload: requests fire at pre-sampled Poisson
+/// arrival times, each on its own connection with exactly one attempt.
+/// Fails only on setup errors; per-request failures are counted in the
+/// report.
+pub fn run_open_loop(cfg: &OpenLoopConfig) -> Result<OpenLoopReport, String> {
+    if cfg.requests == 0 {
+        return Err("loadgen: requests must be ≥ 1".into());
+    }
+    if !(cfg.rate.is_finite() && cfg.rate > 0.0) {
+        return Err("loadgen: --rate must be a positive requests/s".into());
+    }
+    if !(cfg.slo_ms.is_finite() && cfg.slo_ms > 0.0) {
+        return Err("loadgen: --slo-ms must be positive".into());
+    }
+    if cfg.prompt_len == 0 {
+        return Err("loadgen: prompt_len must be ≥ 1".into());
+    }
+    // the whole arrival schedule is sampled up front: deterministic in
+    // (seed, rate, requests), independent of server timing
+    let mut rng = Prng::new(cfg.seed ^ 0x09E2_7C44_A11A_70B5);
+    let mut at = 0.0f64;
+    let arrivals: Vec<f64> = (0..cfg.requests)
+        .map(|_| {
+            at += poisson_gap_s(&mut rng, cfg.rate);
+            at
+        })
+        .collect();
+
+    let latencies = Mutex::new(Vec::<f64>::new());
+    let ttfts = Mutex::new(Vec::<f64>::new());
+    let by_status = Mutex::new(BTreeMap::<u16, usize>::new());
+    let tokens = Mutex::new(0usize);
+    let transport_errors = Mutex::new(0usize);
+    let ok_within_slo = Mutex::new(0usize);
+    let prefix = shared_prefix(cfg.shared_prefix_len, cfg.vocab, cfg.seed);
+
+    let wall = Timer::start();
+    std::thread::scope(|scope| {
+        for (i, &at_s) in arrivals.iter().enumerate() {
+            // dispatch waits for the *schedule*, never for completions
+            let now_s = wall.ms() / 1e3;
+            if at_s > now_s {
+                std::thread::sleep(Duration::from_secs_f64(at_s - now_s));
+            }
+            let latencies = &latencies;
+            let ttfts = &ttfts;
+            let by_status = &by_status;
+            let tokens = &tokens;
+            let transport_errors = &transport_errors;
+            let ok_within_slo = &ok_within_slo;
+            let prefix = &prefix;
+            scope.spawn(move || {
+                let mut prompt = prefix.clone();
+                prompt.extend(loadgen_prompt(
+                    0,
+                    i,
+                    cfg.prompt_len,
+                    cfg.vocab,
+                    cfg.seed,
+                ));
+                let body = loadgen_body(
+                    &prompt,
+                    cfg.max_new_tokens,
+                    cfg.variant,
+                    cfg.stream,
+                );
+                // the latency clock starts at dispatch, so connect time
+                // and server queueing are both client-visible
+                let t = Timer::start();
+                let Ok(mut client) = HttpClient::connect(&cfg.addr) else {
+                    *locked(transport_errors) += 1;
+                    return;
+                };
+                match client.request_timed("POST", "/v1/generate", Some(&body), &t)
+                {
+                    Ok((reply, ttft_ms)) => {
+                        let ms = t.ms();
+                        locked(latencies).push(ms);
+                        *locked(by_status).entry(reply.status).or_insert(0) += 1;
+                        if reply.status == 200 {
+                            locked(ttfts).push(ttft_ms);
+                            *locked(tokens) += count_tokens(&reply);
+                            if ms <= cfg.slo_ms {
+                                *locked(ok_within_slo) += 1;
+                            }
+                        }
+                    }
+                    Err(_) => *locked(transport_errors) += 1,
+                }
+            });
+        }
+    });
+    let wall_ms = wall.ms();
+
+    let latencies = latencies.into_inner().unwrap_or_else(|e| e.into_inner());
+    let ttfts = ttfts.into_inner().unwrap_or_else(|e| e.into_inner());
+    let by_status = by_status.into_inner().unwrap_or_else(|e| e.into_inner());
+    let generated_tokens = tokens.into_inner().unwrap_or_else(|e| e.into_inner());
+    let transport_errors = transport_errors
+        .into_inner()
+        .unwrap_or_else(|e| e.into_inner());
+    let ok_within_slo = ok_within_slo
+        .into_inner()
+        .unwrap_or_else(|e| e.into_inner());
+    let ok = by_status.get(&200).copied().unwrap_or(0);
+    let errors = transport_errors
+        + by_status
+            .iter()
+            .filter(|(s, _)| **s != 200)
+            .map(|(_, n)| n)
+            .sum::<usize>();
+    let wall_s = wall_ms / 1e3;
+    Ok(OpenLoopReport {
+        requests: cfg.requests,
+        ok,
+        ok_within_slo,
+        errors,
+        by_status,
+        generated_tokens,
+        wall_ms,
+        offered_rps: cfg.requests as f64 / wall_s,
+        goodput_rps: ok_within_slo as f64 / wall_s,
+        p50_ms: stats::percentile(&latencies, 50.0),
+        p99_ms: stats::percentile(&latencies, 99.0),
+        ttft_p50_ms: stats::percentile(&ttfts, 50.0),
+        ttft_p99_ms: stats::percentile(&ttfts, 99.0),
+    })
+}
+
 /// Tokens in a 200 reply — the `tokens` array of the unary (or final
 /// streamed) response object.
 fn count_tokens(reply: &HttpReply) -> usize {
@@ -790,6 +1014,43 @@ mod tests {
         // The cap holds even for huge Retry-After bases and attempts.
         let mut rng = Prng::new(1);
         assert!(retry_delay_ms(u64::MAX, 60, &mut rng) <= RETRY_CAP_MS * 5 / 4);
+    }
+
+    #[test]
+    fn poisson_gaps_are_deterministic_positive_and_mean_correct() {
+        let seq = |seed: u64| -> Vec<f64> {
+            let mut rng = Prng::new(seed);
+            (0..64).map(|_| poisson_gap_s(&mut rng, 10.0)).collect()
+        };
+        assert_eq!(seq(3), seq(3), "arrival schedule must be reproducible");
+        let gaps = seq(3);
+        assert!(gaps.iter().all(|&g| g.is_finite() && g >= 0.0));
+        // law of large numbers at a loose tolerance: mean gap ≈ 1/rate
+        let mut rng = Prng::new(9);
+        let n = 20_000;
+        let mean: f64 =
+            (0..n).map(|_| poisson_gap_s(&mut rng, 10.0)).sum::<f64>() / n as f64;
+        assert!(
+            (mean - 0.1).abs() < 0.005,
+            "mean inter-arrival {mean} should be ~0.1s at rate 10"
+        );
+    }
+
+    #[test]
+    fn open_loop_config_is_validated() {
+        let base = OpenLoopConfig {
+            addr: "127.0.0.1:9".into(),
+            ..OpenLoopConfig::default()
+        };
+        for (why, cfg) in [
+            ("zero requests", OpenLoopConfig { requests: 0, ..base.clone() }),
+            ("zero rate", OpenLoopConfig { rate: 0.0, ..base.clone() }),
+            ("nan rate", OpenLoopConfig { rate: f64::NAN, ..base.clone() }),
+            ("zero slo", OpenLoopConfig { slo_ms: 0.0, ..base.clone() }),
+            ("zero prompt", OpenLoopConfig { prompt_len: 0, ..base.clone() }),
+        ] {
+            assert!(run_open_loop(&cfg).is_err(), "should reject {why}");
+        }
     }
 
     #[test]

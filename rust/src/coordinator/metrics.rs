@@ -12,7 +12,7 @@
 use super::request::Variant;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 /// Why a session was failed/cancelled by the scheduler after admission
 /// — the label set of `arcquant_sessions_failed_total`.
@@ -468,6 +468,251 @@ impl Metrics {
         }
         o
     }
+
+    /// Render N replicas' registries as one exposition — the body of
+    /// `GET /metrics` on a multi-replica server. Every unlabeled
+    /// counter/gauge family keeps its unlabeled line, now carrying the
+    /// sum across replicas (single-replica scrape consumers and the CI
+    /// chaos grep keep working unchanged), and gains one
+    /// `{replica="i"}` row per replica so a dead or starving replica is
+    /// visible from the outside. Families that already carry labels
+    /// (failure reasons, variants, HTTP statuses), the latency
+    /// histogram and the stage accumulators are merged sums. With a
+    /// single replica the output is byte-identical to
+    /// [`Metrics::render_prometheus`].
+    pub fn render_prometheus_multi(replicas: &[Arc<Metrics>]) -> String {
+        use std::fmt::Write as _;
+        if replicas.len() == 1 {
+            return replicas[0].render_prometheus();
+        }
+        assert!(!replicas.is_empty(), "need at least one replica to render");
+        let mut o = String::with_capacity(8192);
+
+        type Get = fn(&Metrics) -> u64;
+        let sharded = |o: &mut String, name: &str, help: &str, kind: &str, get: Get| {
+            let _ = writeln!(o, "# HELP {name} {help}");
+            let _ = writeln!(o, "# TYPE {name} {kind}");
+            let sum: u64 = replicas.iter().map(|m| get(m)).sum();
+            let _ = writeln!(o, "{name} {sum}");
+            for (i, m) in replicas.iter().enumerate() {
+                let _ = writeln!(o, "{name}{{replica=\"{i}\"}} {}", get(m));
+            }
+        };
+
+        let counters: [(&str, &str, Get); 11] = [
+            (
+                "arcquant_requests_submitted_total",
+                "Generation requests accepted into the scheduler queue.",
+                |m| Metrics::get(&m.submitted),
+            ),
+            (
+                "arcquant_requests_completed_total",
+                "Generation requests completed (including OutOfPages truncations).",
+                |m| Metrics::get(&m.completed),
+            ),
+            (
+                "arcquant_requests_rejected_total",
+                "Requests rejected before any forward ran.",
+                |m| Metrics::get(&m.rejected),
+            ),
+            (
+                "arcquant_decode_ticks_total",
+                "Batched decode steps executed by the scheduler.",
+                |m| Metrics::get(&m.decode_ticks),
+            ),
+            (
+                "arcquant_decode_tokens_total",
+                "Tokens sampled from batched decode steps.",
+                |m| Metrics::get(&m.decode_tokens),
+            ),
+            (
+                "arcquant_prefill_chunks_total",
+                "Chunked-prefill forwards executed (Sarathi-style admission).",
+                |m| Metrics::get(&m.prefill_chunks),
+            ),
+            (
+                "arcquant_prefix_cache_lookups_total",
+                "Matchable prompt chunks probed against the shared-prefix index.",
+                |m| Metrics::get(&m.prefix_lookups),
+            ),
+            (
+                "arcquant_prefix_cache_hits_total",
+                "Prompt chunks served from the shared-prefix index (refcount bumps).",
+                |m| Metrics::get(&m.prefix_hits),
+            ),
+            (
+                "arcquant_kv_pages_saved_total",
+                "KV pages (and their prefill recomputation) saved by prefix sharing.",
+                |m| Metrics::get(&m.kv_pages_saved),
+            ),
+            (
+                "arcquant_scheduler_restarts_total",
+                "Supervised scheduler restarts after a contained panic.",
+                |m| Metrics::get(&m.scheduler_restarts),
+            ),
+            (
+                "arcquant_kv_pages_reclaimed_total",
+                "KV pages reclaimed from failed, expired or disconnected sessions.",
+                |m| Metrics::get(&m.kv_pages_reclaimed),
+            ),
+        ];
+        for (name, help, get) in counters {
+            sharded(&mut o, name, help, "counter", get);
+        }
+
+        let _ = writeln!(
+            o,
+            "# HELP arcquant_sessions_failed_total Sessions failed after \
+             admission, by reason."
+        );
+        let _ = writeln!(o, "# TYPE arcquant_sessions_failed_total counter");
+        for r in FailReason::ALL {
+            let n: u64 = replicas
+                .iter()
+                .map(|m| m.sessions_failed[r.index()].load(Ordering::Relaxed))
+                .sum();
+            let _ = writeln!(
+                o,
+                "arcquant_sessions_failed_total{{reason=\"{}\"}} {n}",
+                r.name()
+            );
+        }
+
+        let _ = writeln!(
+            o,
+            "# HELP arcquant_generated_tokens_total Generated tokens per model variant."
+        );
+        let _ = writeln!(o, "# TYPE arcquant_generated_tokens_total counter");
+        for v in Variant::ALL {
+            let n: u64 = replicas
+                .iter()
+                .map(|m| m.tokens_by_variant[v.index()].load(Ordering::Relaxed))
+                .sum();
+            let _ = writeln!(
+                o,
+                "arcquant_generated_tokens_total{{variant=\"{}\"}} {n}",
+                v.artifact_key()
+            );
+        }
+
+        let _ = writeln!(
+            o,
+            "# HELP arcquant_http_responses_total HTTP responses by status code."
+        );
+        let _ = writeln!(o, "# TYPE arcquant_http_responses_total counter");
+        let mut by_status: BTreeMap<u16, u64> = BTreeMap::new();
+        for m in replicas {
+            for (status, n) in m.http_statuses() {
+                *by_status.entry(status).or_insert(0) += n;
+            }
+        }
+        for (status, n) in by_status {
+            let _ =
+                writeln!(o, "arcquant_http_responses_total{{status=\"{status}\"}} {n}");
+        }
+
+        let gauges: [(&str, &str, Get); 4] = [
+            (
+                "arcquant_queue_depth",
+                "Scheduler backlog: pending + running generation requests.",
+                |m| Metrics::get(&m.queue_depth),
+            ),
+            (
+                "arcquant_kv_pages_used",
+                "KV cache pages currently allocated to running sequences.",
+                |m| Metrics::get(&m.kv_pages_used),
+            ),
+            (
+                "arcquant_kv_pages_total",
+                "Total pages in the KV page pool.",
+                |m| Metrics::get(&m.kv_pages_total),
+            ),
+            (
+                "arcquant_kv_shared_pages",
+                "Pages currently owned by the shared prefix index.",
+                |m| Metrics::get(&m.kv_shared_pages),
+            ),
+        ];
+        for (name, help, get) in gauges {
+            sharded(&mut o, name, help, "gauge", get);
+        }
+
+        {
+            let lookups: u64 =
+                replicas.iter().map(|m| Metrics::get(&m.prefix_lookups)).sum();
+            let hits: u64 =
+                replicas.iter().map(|m| Metrics::get(&m.prefix_hits)).sum();
+            let rate = if lookups > 0 {
+                hits as f64 / lookups as f64
+            } else {
+                0.0
+            };
+            let _ = writeln!(
+                o,
+                "# HELP arcquant_prefix_cache_hit_rate Prefix-cache hit rate \
+                 (hits / lookups since start)."
+            );
+            let _ = writeln!(o, "# TYPE arcquant_prefix_cache_hit_rate gauge");
+            let _ = writeln!(o, "arcquant_prefix_cache_hit_rate {rate}");
+        }
+
+        let _ = writeln!(
+            o,
+            "# HELP arcquant_simd_path Kernel path the packed GEMM/dequant dispatch selected."
+        );
+        let _ = writeln!(o, "# TYPE arcquant_simd_path gauge");
+        let _ = writeln!(
+            o,
+            "arcquant_simd_path{{selected_simd_path=\"{}\"}} 1",
+            crate::tensor::selected_path().name()
+        );
+
+        let _ = writeln!(
+            o,
+            "# HELP arcquant_request_latency_ms End-to-end request latency \
+             (submit to completion), milliseconds."
+        );
+        let _ = writeln!(o, "# TYPE arcquant_request_latency_ms histogram");
+        let mut cum: Vec<(f64, u64)> = replicas[0].request_latency.cumulative();
+        for m in &replicas[1..] {
+            for (slot, (_, n)) in cum.iter_mut().zip(m.request_latency.cumulative()) {
+                slot.1 += n;
+            }
+        }
+        for (le, n) in cum {
+            if le.is_finite() {
+                let _ = writeln!(
+                    o,
+                    "arcquant_request_latency_ms_bucket{{le=\"{le}\"}} {n}"
+                );
+            } else {
+                let _ = writeln!(
+                    o,
+                    "arcquant_request_latency_ms_bucket{{le=\"+Inf\"}} {n}"
+                );
+            }
+        }
+        let sum_ms: f64 = replicas.iter().map(|m| m.request_latency.sum_ms()).sum();
+        let count: u64 = replicas.iter().map(|m| m.request_latency.count()).sum();
+        let _ = writeln!(o, "arcquant_request_latency_ms_sum {sum_ms}");
+        let _ = writeln!(o, "arcquant_request_latency_ms_count {count}");
+
+        let _ = writeln!(
+            o,
+            "# HELP arcquant_stage_ms_total Accumulated wall time per pipeline stage."
+        );
+        let _ = writeln!(o, "# TYPE arcquant_stage_ms_total counter");
+        let mut stages: BTreeMap<String, f64> = BTreeMap::new();
+        for m in replicas {
+            for (stage, (ms, _)) in m.stage_totals() {
+                *stages.entry(stage).or_insert(0.0) += ms;
+            }
+        }
+        for (stage, ms) in stages {
+            let _ = writeln!(o, "arcquant_stage_ms_total{{stage=\"{stage}\"}} {ms}");
+        }
+        o
+    }
 }
 
 #[cfg(test)]
@@ -637,6 +882,51 @@ mod tests {
         let (p50, _, _) = m.latency_percentiles();
         assert!(p50 > 0.0);
         assert!(!m.render_prometheus().is_empty());
+    }
+
+    #[test]
+    fn multi_replica_rendering_sums_and_labels() {
+        let a = Arc::new(Metrics::new());
+        let b = Arc::new(Metrics::new());
+        Metrics::add(&a.decode_tokens, 5);
+        Metrics::add(&b.decode_tokens, 7);
+        Metrics::inc(&b.scheduler_restarts);
+        Metrics::set_gauge(&a.kv_pages_total, 16);
+        Metrics::set_gauge(&b.kv_pages_total, 16);
+        a.record_http_status(200);
+        b.record_http_status(200);
+        a.record_latency(3.0);
+        b.record_latency(4.0);
+        a.record_stage("decode:fp32", 1.0);
+        b.record_stage("decode:fp32", 2.0);
+        a.record_session_failed(FailReason::Panic);
+        let text = Metrics::render_prometheus_multi(&[a.clone(), b.clone()]);
+        for needle in [
+            // unlabeled lines are cross-replica sums (the CI chaos grep
+            // `^arcquant_scheduler_restarts_total 1` keeps matching when
+            // exactly one replica restarted)
+            "\narcquant_decode_tokens_total 12",
+            "\narcquant_scheduler_restarts_total 1",
+            "\narcquant_kv_pages_total 32",
+            // ... and every unlabeled family gains per-replica rows
+            "arcquant_decode_tokens_total{replica=\"0\"} 5",
+            "arcquant_decode_tokens_total{replica=\"1\"} 7",
+            "arcquant_scheduler_restarts_total{replica=\"0\"} 0",
+            "arcquant_scheduler_restarts_total{replica=\"1\"} 1",
+            "arcquant_kv_pages_total{replica=\"0\"} 16",
+            // labeled families, histogram and stages merge as sums
+            "arcquant_sessions_failed_total{reason=\"panic\"} 1",
+            "arcquant_http_responses_total{status=\"200\"} 2",
+            "arcquant_request_latency_ms_count 2",
+            "arcquant_stage_ms_total{stage=\"decode:fp32\"} 3",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // one replica renders byte-identically to the single-replica path
+        assert_eq!(
+            Metrics::render_prometheus_multi(&[a.clone()]),
+            a.render_prometheus()
+        );
     }
 
     #[test]

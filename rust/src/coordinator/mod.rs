@@ -33,10 +33,14 @@
 //! The **network frontend** ([`http`]) exposes that generation path over
 //! a dependency-free HTTP/1.1 server: concurrent TCP clients POST
 //! `/v1/generate` (optionally token-streaming via chunked transfer
-//! encoding) and are batched into shared decode ticks by a single
-//! scheduler thread; `/healthz` and `/metrics` (Prometheus text format)
-//! cover operations. [`loadgen`] is the matching closed-loop
-//! client/benchmark. See `docs/http_serving.md`.
+//! encoding) and are batched into shared decode ticks by per-replica
+//! scheduler threads — the replica tier ([`router::ReplicaPool`]) shards
+//! sessions across N independent `SchedCore`s with KV-locality-aware
+//! routing; `/healthz` and `/metrics` (Prometheus text format, with
+//! `{replica="i"}` rows when sharded) cover operations. [`loadgen`] is
+//! the matching client/benchmark, closed-loop (`run_loadgen`) or
+//! open-loop with Poisson arrivals and goodput-under-SLO accounting
+//! (`run_open_loop`). See `docs/http_serving.md`.
 
 pub mod batcher;
 pub mod generate;
@@ -56,15 +60,18 @@ pub use generate::{
 pub use http::{HttpServeConfig, HttpServer};
 pub use kvcache::{KvPageManager, PageError, SharedAdmit};
 pub use loadgen::{
-    run_loadgen, scrape_metric, shared_prefix, HttpClient, HttpReply,
-    LoadgenConfig, LoadgenReport,
+    run_loadgen, run_open_loop, scrape_metric, shared_prefix, HttpClient,
+    HttpReply, LoadgenConfig, LoadgenReport, OpenLoopConfig, OpenLoopReport,
 };
 pub use metrics::Metrics;
 pub use request::{
     FinishReason, GenEvent, GenerateRequest, GenerateResponse, PrefillRequest,
     PrefillResponse, RejectReason, Variant,
 };
-pub use router::{Router, RouterConfig, RouterDecision};
+pub use router::{
+    home_replica, route_replica, ReplicaLoad, ReplicaPool, Router, RouterConfig,
+    RouterDecision,
+};
 pub use server::{
     serve_workload, serve_workload_native, NativeServeConfig, ServeConfig, ServeReport,
 };

@@ -1,5 +1,6 @@
-//! Admission router: variant selection, length validation, and
-//! queue-depth backpressure — the front door of the serving stack.
+//! Admission router and replica front tier: variant selection, length
+//! validation, queue-depth backpressure, and KV-locality-aware replica
+//! dispatch — the front door of the serving stack.
 //!
 //! There is exactly **one** page/batch admission codepath, and it is not
 //! here: the `Router` only performs stateless front-door checks (empty or
@@ -9,9 +10,28 @@
 //! (see [`super::generate`]), which owns the page manager and the running
 //! batch. Keeping the router free of page math means the two layers can
 //! never disagree about whether a request fits.
+//!
+//! # Replica tier
+//!
+//! [`ReplicaPool`] fronts N independent scheduler replicas (each its own
+//! `SchedCore` + `KvPageManager` + page budget — see `super::http`).
+//! Dispatch is **KV-locality-aware**: the content-addressed prefix index
+//! is per-replica, so a shared-prefix request only reuses cached KV pages
+//! if it lands where its prefix was published. [`home_replica`] maps a
+//! prompt's route key ([`super::kvcache::route_key`] — the content
+//! address of its first shareable chunk) to a home replica by rendezvous
+//! (highest-random-weight) hashing, which is stable under membership
+//! change: removing a replica remaps only the keys it owned.
+//! [`route_replica`] falls back to the least-loaded replica (queued
+//! sessions + occupied pages, from the per-replica metrics gauges) when
+//! the home replica is saturated, so a hot prefix cannot blackhole a
+//! single replica. Routing never admits anything — the chosen replica's
+//! `SchedCore::admission` still has the only say.
 
 use super::batcher::BatcherConfig;
+use super::metrics::Metrics;
 use super::request::{GenerateRequest, PrefillRequest, Variant};
+use std::sync::{mpsc, Arc};
 
 #[derive(Clone, Debug)]
 pub struct RouterConfig {
@@ -101,6 +121,142 @@ impl Router {
     }
 }
 
+// ===================== replica tier =====================
+
+/// One replica's load, as read from its metrics gauges at routing time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReplicaLoad {
+    /// stable replica identity (index at pool construction)
+    pub id: u32,
+    /// scheduler backlog: pending + running sessions (`queue_depth`)
+    pub queued: u64,
+    /// KV pages currently allocated on the replica
+    pub pages_used: u64,
+    /// the replica's page budget
+    pub pages_total: u64,
+}
+
+impl ReplicaLoad {
+    /// The load scalar the fallback minimizes: queued sessions plus
+    /// occupied pages (both are claims on the replica's capacity).
+    pub fn load(&self) -> u64 {
+        self.queued + self.pages_used
+    }
+
+    /// Saturated = no room for another session right now: the queue is
+    /// at capacity or every KV page is occupied. A saturated home still
+    /// serves — routing just stops *preferring* it.
+    pub fn saturated(&self, queue_cap: usize) -> bool {
+        (queue_cap > 0 && self.queued >= queue_cap as u64)
+            || (self.pages_total > 0 && self.pages_used >= self.pages_total)
+    }
+}
+
+/// Rendezvous weight of `(key, replica)`: a splitmix64-style finalizer
+/// over the pair, so each replica draws an independent uniform weight
+/// per key and the argmax is stable under membership changes.
+fn rendezvous_weight(key: u64, replica: u32) -> u64 {
+    let mut z = key ^ (replica as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Home replica of a route key over the live set: highest rendezvous
+/// weight wins (ties broken by id, so the mapping is total and
+/// deterministic). Removing a replica from `live` remaps only the keys
+/// whose home it was — every other key keeps its argmax.
+pub fn home_replica(key: u64, live: &[u32]) -> Option<u32> {
+    live.iter()
+        .copied()
+        .max_by_key(|&r| (rendezvous_weight(key, r), r))
+}
+
+/// Locality-aware dispatch: the home replica unless it is saturated, in
+/// which case the least-loaded unsaturated replica (ties broken by id)
+/// takes the session; if *every* replica is saturated the home keeps it
+/// (its queue applies the real backpressure). Pure in `(key, loads)` —
+/// deterministic and total for every non-empty load vector.
+pub fn route_replica(
+    key: u64,
+    loads: &[ReplicaLoad],
+    queue_cap: usize,
+) -> Option<u32> {
+    let home = home_replica(key, &loads.iter().map(|l| l.id).collect::<Vec<_>>())?;
+    let home_load = loads.iter().find(|l| l.id == home).expect("home is live");
+    if !home_load.saturated(queue_cap) {
+        return Some(home);
+    }
+    loads
+        .iter()
+        .filter(|l| !l.saturated(queue_cap))
+        .min_by_key(|l| (l.load(), l.id))
+        .map(|l| l.id)
+        .or(Some(home))
+}
+
+/// The replica front tier: per-replica job senders plus the metrics
+/// handles their load is read from. `T` is the scheduler's job type —
+/// the pool owns dispatch, never admission (see the module docs).
+pub struct ReplicaPool<T> {
+    replicas: Vec<(mpsc::Sender<T>, Arc<Metrics>)>,
+    queue_cap: usize,
+}
+
+impl<T> ReplicaPool<T> {
+    pub fn new(
+        replicas: Vec<(mpsc::Sender<T>, Arc<Metrics>)>,
+        queue_cap: usize,
+    ) -> ReplicaPool<T> {
+        assert!(!replicas.is_empty(), "replica pool needs ≥ 1 replica");
+        ReplicaPool {
+            replicas,
+            queue_cap,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    pub fn sender(&self, replica: usize) -> &mpsc::Sender<T> {
+        &self.replicas[replica].0
+    }
+
+    pub fn metrics(&self, replica: usize) -> &Arc<Metrics> {
+        &self.replicas[replica].1
+    }
+
+    /// Metrics handles of every replica, in id order (for aggregation).
+    pub fn all_metrics(&self) -> Vec<Arc<Metrics>> {
+        self.replicas.iter().map(|(_, m)| m.clone()).collect()
+    }
+
+    /// Live-load snapshot from the per-replica gauges.
+    pub fn loads(&self) -> Vec<ReplicaLoad> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .map(|(i, (_, m))| ReplicaLoad {
+                id: i as u32,
+                queued: Metrics::get(&m.queue_depth),
+                pages_used: Metrics::get(&m.kv_pages_used),
+                pages_total: Metrics::get(&m.kv_pages_total),
+            })
+            .collect()
+    }
+
+    /// Pick the replica for a route key under the current load.
+    pub fn route(&self, key: u64) -> usize {
+        route_replica(key, &self.loads(), self.queue_cap).expect("pool is non-empty")
+            as usize
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -156,5 +312,130 @@ mod tests {
         let r = Router::new(RouterConfig::default());
         assert_eq!(r.resolve_variant(None), Variant::ArcQuant);
         assert_eq!(r.resolve_variant(Some(Variant::Fp32)), Variant::Fp32);
+    }
+
+    fn load(id: u32, queued: u64, used: u64, total: u64) -> ReplicaLoad {
+        ReplicaLoad {
+            id,
+            queued,
+            pages_used: used,
+            pages_total: total,
+        }
+    }
+
+    #[test]
+    fn unsaturated_home_always_wins() {
+        let loads: Vec<ReplicaLoad> =
+            (0..3).map(|i| load(i, i as u64 * 10, 0, 64)).collect();
+        for key in 0..64u64 {
+            let ids: Vec<u32> = loads.iter().map(|l| l.id).collect();
+            let home = home_replica(key, &ids).unwrap();
+            // load differences are irrelevant while the home has room
+            assert_eq!(route_replica(key, &loads, 64), Some(home));
+        }
+    }
+
+    #[test]
+    fn saturated_home_falls_back_to_least_loaded() {
+        // find a key homed on replica 1, then saturate replica 1
+        let ids = [0u32, 1, 2];
+        let key = (0..).find(|&k| home_replica(k, &ids) == Some(1)).unwrap();
+        let loads = vec![load(0, 3, 9, 64), load(1, 8, 0, 64), load(2, 2, 4, 64)];
+        // queue_cap 8: replica 1 is saturated; replica 2 has load 6 < 12
+        assert_eq!(route_replica(key, &loads, 8), Some(2));
+        // all saturated: the home keeps the session (real backpressure)
+        let jammed: Vec<ReplicaLoad> = (0..3).map(|i| load(i, 8, 64, 64)).collect();
+        assert_eq!(route_replica(key, &jammed, 8), Some(1));
+        // page exhaustion saturates too, queue room notwithstanding
+        let paged = vec![load(0, 0, 64, 64), load(1, 0, 64, 64), load(2, 0, 0, 64)];
+        assert_eq!(route_replica(key, &paged, 8), Some(2));
+    }
+
+    #[test]
+    fn rendezvous_spreads_keys_across_replicas() {
+        let ids = [0u32, 1, 2];
+        let mut hits = [0usize; 3];
+        for key in 0..300u64 {
+            hits[home_replica(key, &ids).unwrap() as usize] += 1;
+        }
+        for (i, &h) in hits.iter().enumerate() {
+            assert!(
+                (40..=160).contains(&h),
+                "replica {i} got {h}/300 keys — rendezvous weights are skewed"
+            );
+        }
+    }
+
+    /// Satellite: the locality router is deterministic and total — every
+    /// (prefix-key, load-vector) maps to exactly one live replica — and
+    /// rendezvous-stable: removing a replica remaps only its own keys.
+    #[test]
+    fn prop_locality_router_deterministic_total_and_stable() {
+        use crate::util::prop::{self, Config};
+
+        #[derive(Debug)]
+        struct Case {
+            keys: Vec<u64>,
+            n: usize,
+            drop: usize,
+            loads: Vec<(u64, u64)>,
+            queue_cap: usize,
+        }
+
+        prop::forall(
+            "locality_router_total_and_stable",
+            Config { cases: 64, seed: 0x0C7_10 },
+            |rng| {
+                let n = rng.below(5) + 2; // 2..=6 replicas
+                Case {
+                    keys: (0..48).map(|_| rng.next_u64()).collect(),
+                    n,
+                    drop: rng.below(n),
+                    loads: (0..n)
+                        .map(|_| (rng.below(12) as u64, rng.below(70) as u64))
+                        .collect(),
+                    queue_cap: rng.below(10) + 1,
+                }
+            },
+            |c| {
+                let ids: Vec<u32> = (0..c.n as u32).collect();
+                let loads: Vec<ReplicaLoad> = c
+                    .loads
+                    .iter()
+                    .zip(&ids)
+                    .map(|(&(q, u), &id)| load(id, q, u, 64))
+                    .collect();
+                for &key in &c.keys {
+                    // total: exactly one live replica, twice over (pure)
+                    let a = route_replica(key, &loads, c.queue_cap)
+                        .ok_or("route returned None on a live pool")?;
+                    let b = route_replica(key, &loads, c.queue_cap).unwrap();
+                    if a != b {
+                        return Err(format!("key {key:#x}: {a} vs {b} on re-route"));
+                    }
+                    if !ids.contains(&a) {
+                        return Err(format!("key {key:#x} routed to dead id {a}"));
+                    }
+                    // stability: dropping one replica remaps only its keys
+                    let dropped = c.drop as u32;
+                    let survivors: Vec<u32> =
+                        ids.iter().copied().filter(|&i| i != dropped).collect();
+                    let before = home_replica(key, &ids).unwrap();
+                    let after = home_replica(key, &survivors).unwrap();
+                    if before != dropped && after != before {
+                        return Err(format!(
+                            "key {key:#x} was homed on {before}, but removing \
+                             {dropped} moved it to {after}"
+                        ));
+                    }
+                    if after == dropped {
+                        return Err(format!(
+                            "key {key:#x} routed to the removed replica {dropped}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

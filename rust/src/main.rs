@@ -6,7 +6,9 @@
 //!   serve      run the serving coordinator on the AOT artifacts, the
 //!              Rust-native engines (`--native`), or as a networked
 //!              HTTP frontend (`--http ADDR`)
-//!   loadgen    closed-loop HTTP client against a `serve --http` server
+//!   loadgen    HTTP client against a `serve --http` server — closed-loop
+//!              by default, open-loop (Poisson arrivals, goodput under an
+//!              SLO) with `--arrival poisson --rate R`
 //!   calibrate  run the Rust calibration pipeline and save plans
 //!   eval      evaluate one (model, method) pair
 //!   bench-kernels  PJRT kernel-latency sweep (Fig. 8a measured rows)
@@ -14,9 +16,10 @@
 
 use arcquant::baselines::Method;
 use arcquant::coordinator::{
-    run_loadgen, serve_generate_native, serve_workload, serve_workload_native,
-    BatcherConfig, GenerateReport, GenerateServeConfig, HttpServeConfig, HttpServer,
-    LoadgenConfig, NativeServeConfig, RouterConfig, ServeConfig, ServeReport, Variant,
+    run_loadgen, run_open_loop, serve_generate_native, serve_workload,
+    serve_workload_native, BatcherConfig, GenerateReport, GenerateServeConfig,
+    HttpServeConfig, HttpServer, LoadgenConfig, NativeServeConfig, OpenLoopConfig,
+    RouterConfig, ServeConfig, ServeReport, Variant,
 };
 use arcquant::formats::{Format, KvFormat};
 use arcquant::model::{tiny_test_fixture, Engine, EngineMode, Sampler};
@@ -71,6 +74,13 @@ USAGE: arcquant <subcommand> [--flags]
                             engine: POST /v1/generate, GET /healthz,
                             GET /metrics — needs --native; port 0 picks a
                             free port, printed on stdout)
+            [--replicas N]  (HTTP replica tier: N engine replicas, each
+                          with its own scheduler, KV pool and restart
+                          budget; sessions are routed by KV locality —
+                          shared prefixes home to one replica, spilling
+                          to the least-loaded when it saturates)
+            [--pages-per-replica N]  (KV page budget of each replica;
+                          0 = every replica gets the --kv-pages budget)
             [--prompt-len 32] [--kv-pages 512] [--decode-batch 8]
             [--kv-format fp32|nvfp4|mxfp4|razer|fouroversix]
                           (K/V page storage: 4-bit
@@ -102,6 +112,13 @@ USAGE: arcquant <subcommand> [--flags]
                           carries the same N-token system prompt plus a
                           distinct tail; implies --stream and reports TTFT
                           p50/p99 + prefix-cache hit rate / pages saved)
+            [--arrival poisson --rate R]  (open-loop mode: dispatch
+                          --requests total requests at deterministic
+                          Poisson arrival times of R req/s, one attempt
+                          each, never throttled by completions; reports
+                          goodput — responses within --slo-ms, per
+                          second — plus p50/p99 latency and TTFT)
+            [--slo-ms T]  (open-loop latency SLO, default 1000)
   calibrate --model NAME [--windows 8] [--window-len 128] [--out FILE]
   eval      --model NAME --method fp16|rtn|smooth|quarot|atom|flatquant|w4a8|arcquant
             [--format nvfp4|mxfp4|int4|razer|fouroversix]
@@ -520,7 +537,7 @@ fn cmd_serve_http(
     use std::io::Write as _;
     #[allow(clippy::type_complexity)]
     let parsed = (|| -> Result<
-        (usize, usize, usize, usize, usize, u64, usize, u64),
+        (usize, usize, usize, usize, usize, u64, usize, u64, usize, usize),
         String,
     > {
         Ok((
@@ -532,6 +549,8 @@ fn cmd_serve_http(
             args.u64_or("seed", 0)?,
             args.usize_or("prefill-chunk", 64)?,
             args.u64_or("request-timeout-ms", 0)?,
+            args.usize_or("replicas", 1)?,
+            args.usize_or("pages-per-replica", 0)?,
         ))
     })();
     let (
@@ -543,6 +562,8 @@ fn cmd_serve_http(
         seed,
         prefill_chunk,
         request_timeout_ms,
+        replicas,
+        pages_per_replica,
     ) = match parsed {
         Ok(v) => v,
         Err(e) => {
@@ -550,11 +571,17 @@ fn cmd_serve_http(
             return 2;
         }
     };
+    if replicas == 0 {
+        eprintln!("--replicas must be ≥ 1");
+        return 2;
+    }
     let faults = arcquant::util::fault::Faults::from_env();
     if faults.armed() {
         println!("arcquant http: fault injection armed (ARCQUANT_FAULTS)");
     }
     let hcfg = HttpServeConfig {
+        replicas,
+        pages_per_replica,
         max_decode_batch: decode_batch,
         kv_pages,
         kv_format,
@@ -581,10 +608,16 @@ fn cmd_serve_http(
     println!("arcquant http: listening on http://{}", server.addr());
     println!(
         "arcquant http: POST /v1/generate | GET /healthz | GET /metrics  \
-         (variants: {}, kv-format {}, {} pages)",
+         (variants: {}, kv-format {}, {} replica{} x {} pages)",
         variants.join(","),
         kv_format.name(),
-        kv_pages
+        replicas,
+        if replicas == 1 { "" } else { "s" },
+        if pages_per_replica > 0 {
+            pages_per_replica
+        } else {
+            kv_pages
+        }
     );
     // the port line must reach pipes/files promptly — CI greps for it
     let _ = std::io::stdout().flush();
@@ -599,12 +632,16 @@ fn cmd_serve_http(
     }
 }
 
-/// `loadgen`: closed-loop HTTP client workload against `serve --http`.
+/// `loadgen`: HTTP client workload against `serve --http` — closed-loop
+/// by default, open-loop with `--arrival poisson --rate R`.
 fn cmd_loadgen(args: &Args) -> i32 {
     let Some(addr) = args.str_flag("addr") else {
         eprintln!("loadgen needs --addr HOST:PORT (the serve --http address)");
         return 2;
     };
+    if let Some(arrival) = args.str_flag("arrival") {
+        return cmd_loadgen_open_loop(args, addr, arrival);
+    }
     let smoke = args.bool_flag("smoke");
     let d = |full: usize, small: usize| if smoke { small } else { full };
     let parsed =
@@ -699,6 +736,123 @@ fn cmd_loadgen(args: &Args) -> i32 {
                     r.prefix_hit_rate, r.pages_saved, r.ttft_p50_ms, r.ttft_p99_ms
                 );
             }
+            if r.errors == 0 && r.ok == r.requests {
+                0
+            } else {
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("loadgen failed: {e}");
+            1
+        }
+    }
+}
+
+/// `loadgen --arrival poisson --rate R`: the open-loop workload —
+/// goodput under `--slo-ms` at a fixed offered arrival rate.
+fn cmd_loadgen_open_loop(args: &Args, addr: &str, arrival: &str) -> i32 {
+    if arrival != "poisson" {
+        eprintln!("unknown --arrival {arrival} (only 'poisson' is supported)");
+        return 2;
+    }
+    let smoke = args.bool_flag("smoke");
+    let d = |full: usize, small: usize| if smoke { small } else { full };
+    let parsed = (|| -> Result<(usize, usize, usize, usize, u64), String> {
+        Ok((
+            args.usize_or("requests", d(64, 16))?,
+            args.usize_or("prompt-len", d(16, 8))?,
+            args.usize_or("max-new", d(8, 4))?,
+            args.usize_or("vocab", 256)?,
+            args.u64_or("seed", 0)?,
+        ))
+    })();
+    let (requests, prompt_len, max_new, vocab, seed) = match parsed {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    // rates and deadlines are fractional by nature — parsed as f64
+    let f64_or = |flag: &str, default: f64| -> Result<f64, String> {
+        match args.str_flag(flag) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<f64>()
+                .map_err(|_| format!("--{flag} needs a number, got '{s}'")),
+        }
+    };
+    let (rate, slo_ms) = match (|| -> Result<(f64, f64), String> {
+        Ok((f64_or("rate", d(32, 8) as f64)?, f64_or("slo-ms", 1000.0)?))
+    })() {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let variant = match args.str_flag("variant") {
+        None => None,
+        Some(v) => match Variant::parse(v) {
+            Some(v) => Some(v),
+            None => {
+                eprintln!("unknown variant {v}");
+                return 2;
+            }
+        },
+    };
+    let shared_prefix = args.usize_or("shared-prefix", 0).unwrap_or(0);
+    let cfg = OpenLoopConfig {
+        addr: addr.to_string(),
+        requests,
+        rate,
+        slo_ms,
+        prompt_len,
+        max_new_tokens: max_new,
+        variant,
+        vocab,
+        stream: args.bool_flag("stream") || shared_prefix > 0,
+        seed,
+        shared_prefix_len: shared_prefix,
+    };
+    match run_open_loop(&cfg) {
+        Ok(r) => {
+            println!(
+                "loadgen: {requests} requests at {rate} req/s Poisson against \
+                 http://{addr} (open loop, slo {slo_ms}ms)"
+            );
+            println!(
+                "  ok {}/{}  within slo {}  errors {}  wall {:.1}ms",
+                r.ok, r.requests, r.ok_within_slo, r.errors, r.wall_ms
+            );
+            println!(
+                "  goodput {:.2} req/s  offered {:.2} req/s  ({} tokens)",
+                r.goodput_rps, r.offered_rps, r.generated_tokens
+            );
+            println!(
+                "  latency p50 {:.1}ms  p99 {:.1}ms  ttft p50 {:.1}ms  p99 {:.1}ms",
+                r.p50_ms, r.p99_ms, r.ttft_p50_ms, r.ttft_p99_ms
+            );
+            for (status, count) in &r.by_status {
+                println!("  status {status}: {count}");
+            }
+            // greppable open-loop summary line for CI logs (new keys are
+            // appended, never reordered — scripts parse by key)
+            println!(
+                "LOADGEN_OPENLOOP ok={} errors={} within_slo={} \
+                 goodput_rps={:.2} offered_rps={:.2} slo_ms={:.0} \
+                 p50_ms={:.1} p99_ms={:.1} ttft_p99_ms={:.1}",
+                r.ok,
+                r.errors,
+                r.ok_within_slo,
+                r.goodput_rps,
+                r.offered_rps,
+                slo_ms,
+                r.p50_ms,
+                r.p99_ms,
+                r.ttft_p99_ms
+            );
             if r.errors == 0 && r.ok == r.requests {
                 0
             } else {

@@ -209,6 +209,46 @@ fn docs_cover_failure_semantics_and_fault_injection() {
 }
 
 #[test]
+fn docs_cover_the_replica_tier_and_open_loop_loadgen() {
+    // The sharded serving tier and the open-loop goodput loadgen are
+    // documented and cannot drift: the README names every new flag, and
+    // the serving doc carries the routing policy, the per-replica
+    // budget/restart story, the `replica` metric label and the
+    // open-loop/goodput vocabulary the CI gate asserts on.
+    let readme = read("README.md");
+    for needle in [
+        "--replicas",
+        "--pages-per-replica",
+        "--arrival poisson",
+        "--rate",
+        "--slo-ms",
+        "LOADGEN_OPENLOOP",
+    ] {
+        assert!(readme.contains(needle), "README must document {needle}");
+    }
+    let doc = read("docs/http_serving.md");
+    for needle in [
+        "Replica tier",
+        "--replicas",
+        "--pages-per-replica",
+        "rendezvous",
+        "home replica",
+        "least-loaded",
+        "route_key",
+        "{replica=\"i\"}",
+        "--arrival poisson",
+        "--rate",
+        "--slo-ms",
+        "goodput",
+        "LOADGEN_OPENLOOP",
+        "GATE http_goodput_open_loop",
+        "replica_goodput_speedup",
+    ] {
+        assert!(doc.contains(needle), "docs/http_serving.md must cover {needle}");
+    }
+}
+
+#[test]
 fn http_doc_catalogs_every_exported_metric() {
     // the metrics catalog cannot drift: every family the server renders
     // must be documented (names are extracted from a live rendering)

@@ -6,7 +6,7 @@
 
 use arcquant::baselines::Method;
 use arcquant::coordinator::{
-    session_rng, HttpClient, HttpServeConfig, HttpServer, Variant,
+    session_rng, HttpClient, HttpServeConfig, HttpServer, Metrics, Variant,
 };
 use arcquant::formats::{Format, KvFormat};
 use arcquant::model::{tiny_test_fixture, Engine, EngineMode, KvCache, Sampler};
@@ -598,6 +598,84 @@ fn shared_prefix_requests_hit_cache_and_match_sharing_off() {
         );
         assert_eq!(tok_on, &want, "sharing-on diverged from reference ({i})");
         assert_eq!(tok_on, tok_off, "sharing on/off disagree on request {i}");
+    }
+}
+
+#[test]
+fn replica_tier_colocates_shared_prefix_and_spreads_distinct_prompts() {
+    // 3-replica tier: two sessions carrying the same 214-token system
+    // prompt must hash to the same home replica (the second serves its
+    // prefix chunks from the first's cached pages), distinct prompts
+    // must spread across replicas, and every response must stay
+    // bit-exact to the single-sequence reference replay.
+    const MAX_NEW: usize = 4;
+    const TAIL: usize = 12;
+    const DISTINCT: usize = 12;
+    let cfg = HttpServeConfig {
+        replicas: 3,
+        kv_format: KvFormat::Nvfp4,
+        kv_pages: 8,
+        ..Default::default()
+    };
+    let server = HttpServer::start(cfg, "127.0.0.1:0", gen_engines()).unwrap();
+    let addr = server.addr().to_string();
+    let mut cli = HttpClient::connect(&addr).unwrap();
+
+    let prefix = arcquant::coordinator::shared_prefix(214, 256, 0);
+    let mut replay: Vec<(Vec<u16>, Vec<u16>, u64)> = Vec::new();
+    let mut run = |prompt: Vec<u16>, cli: &mut HttpClient| {
+        let body = body_for(&prompt, MAX_NEW, Variant::ArcPacked, false);
+        let reply = cli.request("POST", "/v1/generate", Some(&body)).unwrap();
+        assert_eq!(reply.status, 200, "{}", reply.body);
+        let j = Json::parse(&reply.body).unwrap();
+        let id = j.get("id").unwrap().as_f64().unwrap() as u64;
+        replay.push((prompt, tokens_of(&reply.body), id));
+    };
+    for i in 0..2 {
+        let mut p = prefix.clone();
+        p.extend(prompt_for(i, TAIL));
+        run(p, &mut cli);
+    }
+
+    // co-location: both shared-prefix sessions landed on one replica —
+    // it probed the index twice per admission (2 matchable chunks) and
+    // the second session hit both; no other replica saw a lookup
+    let probed: Vec<usize> = server
+        .replica_metrics()
+        .iter()
+        .enumerate()
+        .filter(|(_, m)| Metrics::get(&m.prefix_lookups) > 0)
+        .map(|(r, _)| r)
+        .collect();
+    assert_eq!(probed.len(), 1, "prefix traffic on replicas {probed:?}");
+    let home = &server.replica_metrics()[probed[0]];
+    assert_eq!(Metrics::get(&home.prefix_lookups), 4);
+    assert_eq!(Metrics::get(&home.prefix_hits), 2);
+    assert_eq!(Metrics::get(&home.completed), 2);
+
+    // spread: distinct prompts (no shared prefix) hash across replicas
+    for i in 0..DISTINCT {
+        run(prompt_for(i + 10, 16), &mut cli);
+    }
+    let serving = server
+        .replica_metrics()
+        .iter()
+        .filter(|m| Metrics::get(&m.completed) > 0)
+        .count();
+    assert!(
+        serving >= 2,
+        "12 distinct prompts all routed to one replica of three"
+    );
+
+    drop(cli);
+    server.shutdown();
+
+    // bit-exactness across the whole tier, shared and distinct alike
+    let engine = ref_engine(Variant::ArcPacked);
+    for (prompt, served, id) in &replay {
+        let want =
+            reference_tokens(&engine, prompt, MAX_NEW, KvFormat::Nvfp4, 0, *id);
+        assert_eq!(served, &want, "replica-tier generation diverged (id {id})");
     }
 }
 
